@@ -1,0 +1,159 @@
+//! Ablations of the paper's §II design choices:
+//!
+//! 1. **FCFS two-level election** vs direct global contention (DES).
+//! 2. **Wait-free limbo list** (one exchange) vs a mutex-protected list
+//!    (real substrate, concurrent pushers).
+//! 3. **Pointer compression** vs the 128-bit DCAS fallback for plain
+//!    AtomicObject operations (real substrate).
+//! 4. **Reclaim policy**: conservative three-stale vs the paper's
+//!    two-stale drain (real substrate, churn workload).
+//! 5. **PJRT kernel quiescence scan** vs the scalar per-token scan
+//!    (real runtime, requires `make artifacts`).
+
+use pgas_nb::atomics::{AtomicObject, StorageMode};
+use pgas_nb::coordinator::figures::{ablation_election, Scale};
+use pgas_nb::epoch::{EpochManager, LimboList, NodePool, ReclaimPolicy};
+use pgas_nb::pgas::{LocaleId, Machine, NicModel, Pgas};
+use pgas_nb::runtime::SharedReclaimScan;
+use pgas_nb::util::bench::BenchRunner;
+use std::sync::{Arc, Mutex};
+
+fn main() {
+    let scale = Scale::from_env();
+
+    // --- 1. election ablation (DES) ---
+    let t = ablation_election(scale);
+    println!("\n=== Ablation: FCFS election vs direct global contention ({scale:?}) ===");
+    println!("{}", t.render());
+
+    let mut b = BenchRunner::new("substrate ablations");
+    let n: u64 = if b.quick() { 20_000 } else { 200_000 };
+
+    // --- 2. wait-free limbo list vs mutex list ---
+    let pgas = Pgas::smp();
+    {
+        let pool = NodePool::new();
+        let list = LimboList::new();
+        b.case("limbo: wait-free push+drain (4 threads)", 4 * n, || {
+            std::thread::scope(|s| {
+                for _ in 0..4 {
+                    let (pool, list, pgas) = (&pool, &list, &pgas);
+                    s.spawn(move || {
+                        for i in 0..n {
+                            list.push(pool, pgas.alloc(LocaleId(0), i).erase());
+                        }
+                    });
+                }
+            });
+            list.pop_all().drain(&pool, |e| unsafe { pgas.free_erased(e) });
+        });
+        let mlist: Mutex<Vec<pgas_nb::pgas::ErasedPtr>> = Mutex::new(Vec::new());
+        b.case("limbo: mutex push+drain (4 threads)", 4 * n, || {
+            std::thread::scope(|s| {
+                for _ in 0..4 {
+                    let (mlist, pgas) = (&mlist, &pgas);
+                    s.spawn(move || {
+                        for i in 0..n {
+                            mlist.lock().unwrap().push(pgas.alloc(LocaleId(0), i).erase());
+                        }
+                    });
+                }
+            });
+            for e in mlist.lock().unwrap().drain(..) {
+                unsafe { pgas.free_erased(e) };
+            }
+        });
+    }
+
+    // --- 3. compression vs DCAS storage mode ---
+    {
+        let p = Pgas::new(Machine::new(2, 1), NicModel::aries_no_network_atomics());
+        let x = p.alloc(LocaleId(0), 1u64);
+        let y = p.alloc(LocaleId(1), 2u64);
+        let compressed: AtomicObject<u64> =
+            AtomicObject::with_mode(Arc::clone(&p), LocaleId(0), StorageMode::Compressed);
+        let dcas: AtomicObject<u64> =
+            AtomicObject::with_mode(Arc::clone(&p), LocaleId(0), StorageMode::Dcas);
+        compressed.write(x);
+        dcas.write(x);
+        b.case("AtomicObject compressed: read+cas", 2 * n, || {
+            for _ in 0..n {
+                let cur = compressed.read();
+                let next = if cur == x { y } else { x };
+                compressed.compare_and_swap(cur, next);
+            }
+        });
+        b.case("AtomicObject dcas-mode: read+cas", 2 * n, || {
+            for _ in 0..n {
+                let cur = dcas.read();
+                let next = if cur == x { y } else { x };
+                dcas.compare_and_swap(cur, next);
+            }
+        });
+        unsafe {
+            p.free(x);
+            p.free(y);
+        }
+    }
+
+    // --- 4. reclaim policy ---
+    for (label, policy) in [
+        ("policy conservative (3-stale)", ReclaimPolicy::Conservative),
+        ("policy paper (2-stale)", ReclaimPolicy::PaperTwoStale),
+    ] {
+        let p = Pgas::new(Machine::new(2, 2), NicModel::aries_no_network_atomics());
+        let em = EpochManager::with_policy(Arc::clone(&p), policy);
+        let churn = n / 4;
+        b.case(label, churn, || {
+            let tok = em.register();
+            for i in 0..churn {
+                tok.pin();
+                tok.defer_delete(p.alloc(LocaleId((i % 2) as u16), i));
+                tok.unpin();
+                if i % 256 == 0 {
+                    tok.try_reclaim();
+                }
+            }
+        });
+        em.clear();
+        assert_eq!(p.live_objects(), 0);
+    }
+
+    // --- 5. PJRT kernel scan vs scalar scan ---
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        let p = Pgas::new(Machine::new(8, 2), NicModel::aries_no_network_atomics());
+        let em_scalar = EpochManager::new(Arc::clone(&p));
+        let em_kernel = EpochManager::new(Arc::clone(&p));
+        em_kernel
+            .set_scanner(SharedReclaimScan::load_fitting(&dir, 8, 16, 512).unwrap())
+            .ok()
+            .unwrap();
+        // Register a realistic token population on every locale.
+        let mut toks_scalar = Vec::new();
+        let mut toks_kernel = Vec::new();
+        for l in 0..8u16 {
+            for _ in 0..8 {
+                toks_scalar.push(pgas_nb::pgas::with_locale(LocaleId(l), || em_scalar.register()));
+                toks_kernel.push(pgas_nb::pgas::with_locale(LocaleId(l), || em_kernel.register()));
+            }
+        }
+        let reps = if b.quick() { 50 } else { 500 };
+        b.case("tryReclaim scalar scan (64 tokens, 8 locales)", reps, || {
+            for _ in 0..reps {
+                em_scalar.try_reclaim();
+            }
+        });
+        b.case("tryReclaim PJRT kernel scan (64 tokens, 8 locales)", reps, || {
+            for _ in 0..reps {
+                em_kernel.try_reclaim();
+            }
+        });
+        drop(toks_scalar);
+        drop(toks_kernel);
+    } else {
+        eprintln!("(skipping PJRT scan ablation: run `make artifacts`)");
+    }
+
+    b.finish();
+}

@@ -1,0 +1,17 @@
+//! Regenerates the paper's **Fig. 3**: `AtomicObject` (with and without
+//! ABA protection) vs Chapel's `atomic int`, in shared and distributed
+//! memory, with and without RDMA network atomics.
+//!
+//! Expected shape (paper §III-A): AtomicObject == atomic int everywhere;
+//! AtomicObject(ABA) pays a constant overhead locally and matches the
+//! no-network-atomics baseline remotely; all series scale linearly.
+
+use pgas_nb::coordinator::figures::{fig3, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = fig3(scale);
+    println!("\n=== Fig 3: AtomicObject vs atomic int ({scale:?}) ===");
+    println!("{}", t.render());
+    println!("[csv]\n{}", t.to_csv());
+}

@@ -1,0 +1,15 @@
+//! Regenerates the paper's **Fig. 4**: EpochManager deletion workload with
+//! `tryReclaim` invoked once per 1024 iterations, ±network atomics.
+//!
+//! Expected shape: throughput scales with locales in both modes; the FCFS
+//! election keeps the global-epoch locale un-swamped.
+
+use pgas_nb::coordinator::figures::{fig4, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = fig4(scale);
+    println!("\n=== Fig 4: deletion, tryReclaim per 1024 iterations ({scale:?}) ===");
+    println!("{}", t.render());
+    println!("[csv]\n{}", t.to_csv());
+}

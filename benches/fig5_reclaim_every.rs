@@ -1,0 +1,15 @@
+//! Regenerates the paper's **Fig. 5**: EpochManager deletion workload with
+//! `tryReclaim` on *every* iteration, ±network atomics.
+//!
+//! Expected shape: still scales with locales — losers shed on the local
+//! flag long before reaching the global one.
+
+use pgas_nb::coordinator::figures::{fig5, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = fig5(scale);
+    println!("\n=== Fig 5: deletion, tryReclaim every iteration ({scale:?}) ===");
+    println!("{}", t.render());
+    println!("[csv]\n{}", t.to_csv());
+}

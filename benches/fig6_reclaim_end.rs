@@ -1,0 +1,16 @@
+//! Regenerates the paper's **Fig. 6**: deletion with reclamation only at
+//! the very end, with 0 / 50 / 100 % of objects owned by remote locales.
+//!
+//! Expected shape: remote objects cost more to reclaim, but the scatter
+//! lists turn per-object RPCs into one bulk transfer per destination, so
+//! the penalty stays a modest constant factor.
+
+use pgas_nb::coordinator::figures::{fig6, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = fig6(scale);
+    println!("\n=== Fig 6: deletion, reclamation at end, remote ratio sweep ({scale:?}) ===");
+    println!("{}", t.render());
+    println!("[csv]\n{}", t.to_csv());
+}

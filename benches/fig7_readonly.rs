@@ -1,0 +1,16 @@
+//! Regenerates the paper's **Fig. 7**: read-only pin/unpin workload (no
+//! deletion), ±network atomics.
+//!
+//! Expected shape: privatization makes every access locale-local, so
+//! performance is flat per locale and aggregate throughput scales
+//! linearly; network atomics tax the (local) pin/unpin atomics heavily.
+
+use pgas_nb::coordinator::figures::{fig7, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = fig7(scale);
+    println!("\n=== Fig 7: read-only workload ({scale:?}) ===");
+    println!("{}", t.render());
+    println!("[csv]\n{}", t.to_csv());
+}

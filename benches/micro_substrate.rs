@@ -1,0 +1,192 @@
+//! Raw per-operation cost of every substrate primitive on the *real*
+//! in-process implementation (wall clock, single host core). These are
+//! the "raw overhead of both constructs" microbenchmarks of §III, and
+//! the numbers the §Perf optimization pass tracks.
+
+use pgas_nb::atomics::{AtomicObject, LocalAtomicObject};
+use pgas_nb::collections::{InterlockedHashTable, LockFreeQueue, LockFreeStack};
+use pgas_nb::epoch::{EpochManager, LocalEpochManager};
+use pgas_nb::pgas::{GlobalPtr, LocaleId, Machine, NicModel, Pgas};
+use pgas_nb::util::bench::BenchRunner;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = BenchRunner::new("substrate micro-costs (real implementation, wall clock)");
+    let n: u64 = if b.quick() { 100_000 } else { 1_000_000 };
+
+    let p = Pgas::new(Machine::new(4, 2), NicModel::aries_no_network_atomics());
+
+    // --- atomics ---
+    {
+        let x = p.alloc(LocaleId(0), 1u64);
+        let y = p.alloc(LocaleId(1), 2u64);
+        let a: AtomicObject<u64> = AtomicObject::new(Arc::clone(&p), LocaleId(0));
+        a.write(x);
+        b.case("AtomicObject.read", n, || {
+            for _ in 0..n {
+                std::hint::black_box(a.read());
+            }
+        });
+        b.case("AtomicObject.write", n, || {
+            for _ in 0..n {
+                a.write(x);
+            }
+        });
+        b.case("AtomicObject.exchange", n, || {
+            for _ in 0..n {
+                std::hint::black_box(a.exchange(y));
+            }
+        });
+        b.case("AtomicObject.cas (uncontended)", n, || {
+            a.write(x);
+            for _ in 0..n {
+                let cur = a.read();
+                a.compare_and_swap(cur, if cur == x { y } else { x });
+            }
+        });
+        b.case("AtomicObject.read_aba", n, || {
+            for _ in 0..n {
+                std::hint::black_box(a.read_aba());
+            }
+        });
+        b.case("AtomicObject.cas_aba (uncontended)", n, || {
+            a.write_aba(x);
+            for _ in 0..n {
+                let cur = a.read_aba();
+                a.compare_and_swap_aba(cur, if cur.get_object() == x { y } else { x });
+            }
+        });
+        let la: LocalAtomicObject<u64> = LocalAtomicObject::new();
+        la.write(x);
+        b.case("LocalAtomicObject.read", n, || {
+            for _ in 0..n {
+                std::hint::black_box(la.read());
+            }
+        });
+        b.case("LocalAtomicObject.cas", n, || {
+            for _ in 0..n {
+                let cur = la.read();
+                la.compare_and_swap(cur, if cur == x { y } else { x });
+            }
+        });
+        unsafe {
+            p.free(x);
+            p.free(y);
+        }
+    }
+
+    // --- pointer compression ---
+    {
+        let w = pgas_nb::pgas::WidePtr::new(LocaleId(3), 0x7FFF_1234_5678);
+        b.case("WidePtr.compress+decompress", n, || {
+            for _ in 0..n {
+                let c = std::hint::black_box(w).compress_exact();
+                std::hint::black_box(pgas_nb::pgas::WidePtr::decompress(c));
+            }
+        });
+    }
+
+    // --- epoch manager ---
+    {
+        let em = EpochManager::new(Arc::clone(&p));
+        let tok = em.register();
+        b.case("EpochManager pin+unpin", n, || {
+            for _ in 0..n {
+                tok.pin();
+                tok.unpin();
+            }
+        });
+        let churn = n / 8;
+        b.case("EpochManager defer_delete (incl. alloc)", churn, || {
+            tok.pin();
+            for i in 0..churn {
+                tok.defer_delete(p.alloc(LocaleId(0), i));
+            }
+            tok.unpin();
+            em.clear();
+        });
+        b.case("EpochManager try_reclaim (idle, 4 locales)", n / 64, || {
+            for _ in 0..n / 64 {
+                em.try_reclaim();
+            }
+        });
+        drop(tok);
+
+        let lem = LocalEpochManager::with_pgas(Arc::clone(&p));
+        let ltok = lem.register();
+        b.case("LocalEpochManager pin+unpin", n, || {
+            for _ in 0..n {
+                ltok.pin();
+                ltok.unpin();
+            }
+        });
+        b.case("LocalEpochManager try_reclaim (idle)", n / 16, || {
+            for _ in 0..n / 16 {
+                lem.try_reclaim();
+            }
+        });
+    }
+
+    // --- collections (single-task path) ---
+    {
+        let em = EpochManager::new(Arc::clone(&p));
+        let stack = LockFreeStack::new(Arc::clone(&p), em.clone());
+        let tok = stack.register();
+        let ops = n / 8;
+        b.case("LockFreeStack push+pop", 2 * ops, || {
+            for i in 0..ops {
+                stack.push(&tok, i);
+            }
+            for _ in 0..ops {
+                stack.pop(&tok);
+            }
+            em.clear();
+        });
+        let q = LockFreeQueue::new(Arc::clone(&p), em.clone());
+        b.case("LockFreeQueue enq+deq", 2 * ops, || {
+            for i in 0..ops {
+                q.enqueue(&tok, i);
+            }
+            for _ in 0..ops {
+                q.dequeue(&tok);
+            }
+            em.clear();
+        });
+        let h: InterlockedHashTable<u64> = InterlockedHashTable::new(Arc::clone(&p), em.clone(), 256);
+        b.case("InterlockedHashTable insert+get+remove", 3 * ops / 4, || {
+            for k in 1..=ops / 4 {
+                h.insert(&tok, k, k);
+            }
+            for k in 1..=ops / 4 {
+                std::hint::black_box(h.get(&tok, k));
+            }
+            for k in 1..=ops / 4 {
+                h.remove(&tok, k);
+            }
+            em.clear();
+        });
+        drop(tok);
+    }
+
+    // --- one-sided comm ---
+    {
+        let g = p.alloc(LocaleId(2), 0u64);
+        b.case("pgas.get (remote, modeled)", n / 4, || {
+            for _ in 0..n / 4 {
+                std::hint::black_box(p.get(g));
+            }
+        });
+        b.case("pgas.put (remote, modeled)", n / 4, || {
+            for i in 0..n / 4 {
+                p.put(g, i);
+            }
+        });
+        unsafe { p.free(g) };
+    }
+
+    // GlobalPtr compression sanity so the optimizer can't elide types.
+    let gp: GlobalPtr<u64> = GlobalPtr::nil();
+    assert!(gp.is_nil());
+
+    b.finish();
+}

@@ -1,0 +1,96 @@
+//! The interlocked hash table (paper future work, ref [16]) served across
+//! locales: a mixed get/put/remove workload with skewed keys, bucket
+//! locality stats, and EBR churn.
+//!
+//! ```bash
+//! cargo run --release --example distributed_hashtable -- --locales 8 --ops 30000
+//! ```
+
+use pgas_nb::collections::InterlockedHashTable;
+use pgas_nb::epoch::EpochManager;
+use pgas_nb::pgas::{coforall_locales, coforall_tasks, here, Machine, NicModel, Pgas};
+use pgas_nb::util::cli::Args;
+use pgas_nb::util::rng::Xoshiro256pp;
+use pgas_nb::util::table::{fmt_ops, Table};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::from_env();
+    let locales = args.get_usize("locales", 8);
+    let tasks = args.get_usize("tasks", 2);
+    let ops = args.get_usize("ops", 30_000);
+    let keyspace = args.get_u64("keys", 4096);
+
+    let pgas = Pgas::new(Machine::new(locales, tasks), NicModel::aries_no_network_atomics());
+    let em = EpochManager::new(Arc::clone(&pgas));
+    let table: InterlockedHashTable<u64> =
+        InterlockedHashTable::new(Arc::clone(&pgas), em.clone(), locales * 32);
+
+    let hits = AtomicU64::new(0);
+    let misses = AtomicU64::new(0);
+    let local_ops = AtomicU64::new(0);
+    let t0 = Instant::now();
+    coforall_locales(pgas.machine(), |loc| {
+        coforall_tasks(tasks, |tid| {
+            let tok = table.register();
+            let mut rng = Xoshiro256pp::new((loc.index() * tasks + tid) as u64 + 99);
+            for i in 0..ops {
+                // Zipf-ish skew: square the uniform sample.
+                let u = rng.next_f64();
+                let k = 1 + ((u * u) * (keyspace - 1) as f64) as u64;
+                if table.home_of(k) == here() {
+                    local_ops.fetch_add(1, Ordering::Relaxed);
+                }
+                match rng.next_below(10) {
+                    0..=1 => {
+                        table.insert(&tok, k, k * 7);
+                    }
+                    2 => {
+                        table.remove(&tok, k);
+                    }
+                    _ => match table.get(&tok, k) {
+                        Some(v) => {
+                            assert_eq!(v, k * 7, "value integrity");
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => {
+                            misses.fetch_add(1, Ordering::Relaxed);
+                        }
+                    },
+                }
+                if i % 2048 == 0 {
+                    tok.try_reclaim();
+                }
+            }
+        });
+    });
+    let wall = t0.elapsed();
+
+    let tok = table.register();
+    let final_size = table.len(&tok);
+    drop(tok);
+    em.clear();
+    let s = em.stats();
+    assert_eq!(s.deferred, s.freed);
+
+    let total = (locales * tasks * ops) as f64;
+    println!("distributed_hashtable: {} buckets over {locales} locales", table.num_buckets());
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["ops/s (wall)".into(), fmt_ops(total / wall.as_secs_f64())]);
+    t.row(&["lookup hit rate".into(), format!(
+        "{:.1}%",
+        100.0 * hits.load(Ordering::Relaxed) as f64
+            / (hits.load(Ordering::Relaxed) + misses.load(Ordering::Relaxed)).max(1) as f64
+    )]);
+    t.row(&["bucket-local ops".into(), format!(
+        "{:.1}%",
+        100.0 * local_ops.load(Ordering::Relaxed) as f64 / total
+    )]);
+    t.row(&["final size".into(), final_size.to_string()]);
+    t.row(&["epoch advances".into(), s.advances.to_string()]);
+    t.row(&["entries reclaimed".into(), s.freed.to_string()]);
+    println!("{}", t.render());
+    println!("distributed_hashtable OK");
+}

@@ -1,0 +1,83 @@
+"""AOT bridge: lower the L2 graph to HLO *text* artifacts for the Rust
+runtime.
+
+HLO text — NOT a serialized HloModuleProto — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.
+
+Usage:  cd python && python -m compile.aot [--out-dir ../artifacts]
+
+Emits one artifact per supported shape plus a manifest the Rust side
+reads to pick/pad buffers:
+
+  reclaim_scan_L{L}xT{T}_N{N}.hlo.txt
+  manifest.json
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import reclaim_scan
+
+# Shapes compiled ahead of time: (locales, max_tokens_per_locale, owners_pad).
+# Rust pads its inputs up to the smallest artifact that fits.
+SHAPES = [
+    (8, 16, 512),    # small: unit tests, quickstart example
+    (64, 64, 4096),  # the paper's testbed: 64-locale XC-50
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(locales: int, tokens: int, owners_pad: int) -> str:
+    epochs = jax.ShapeDtypeStruct((locales, tokens), jnp.int32)
+    ge = jax.ShapeDtypeStruct((), jnp.int32)
+    owners = jax.ShapeDtypeStruct((owners_pad,), jnp.int32)
+    lowered = jax.jit(reclaim_scan).lower(epochs, ge, owners)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"artifacts": []}
+    for locales, tokens, owners_pad in SHAPES:
+        name = f"reclaim_scan_L{locales}xT{tokens}_N{owners_pad}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        text = lower_one(locales, tokens, owners_pad)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "kind": "reclaim_scan",
+                "locales": locales,
+                "tokens": tokens,
+                "owners_pad": owners_pad,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: the tryReclaim quiescence scan.
+
+One grid step per locale: the (1, T) tile of token epochs is staged into
+VMEM, compared against the (broadcast) global epoch, and reduced to that
+locale's stale-token count. This is the data-parallel heart of Listing 4's
+``coforall loc ... for tok in allocated_list`` loop.
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): the paper's scan is
+a pointer-chase per locale; on an accelerator we lay the token table out
+as a dense [L, T] i32 matrix (0-padded), tile it by locale so each block
+fits VMEM, and use the VPU for the masked reduction — the MXU is not
+involved. interpret=True everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(ge_ref, epochs_ref, stale_ref):
+    """One locale's tile: stale count = #(e != 0 and e != global)."""
+    e = epochs_ref[...]  # (1, T) i32
+    ge = ge_ref[0, 0]
+    bad = jnp.logical_and(e != 0, e != ge)
+    stale_ref[...] = jnp.sum(bad.astype(jnp.int32), axis=1, keepdims=True)
+
+
+def epoch_scan(epochs, global_epoch):
+    """Pallas version of :func:`..kernels.ref.epoch_scan_ref`.
+
+    Args:
+      epochs: i32[L, T] token-epoch table (0 = quiescent/padding).
+      global_epoch: i32[] scalar.
+
+    Returns:
+      stale: i32[L].
+    """
+    locales, tokens = epochs.shape
+    ge = jnp.reshape(global_epoch.astype(jnp.int32), (1, 1))
+    stale = pl.pallas_call(
+        _scan_kernel,
+        grid=(locales,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),       # global epoch, replicated
+            pl.BlockSpec((1, tokens), lambda i: (i, 0)),  # locale i's token tile
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((locales, 1), jnp.int32),
+        interpret=True,
+    )(ge, epochs.astype(jnp.int32))
+    return jnp.reshape(stale, (locales,))

@@ -1,0 +1,48 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: pytest asserts the Pallas kernels
+(interpret=True) match these references bit-exactly across shape sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def epoch_scan_ref(epochs, global_epoch):
+    """Quiescence scan (tryReclaim, Listing 4 lines 10-21).
+
+    Args:
+      epochs: i32[L, T] token epochs per locale; 0 = quiescent / padding.
+      global_epoch: i32[] the current global epoch.
+
+    Returns:
+      stale: i32[L] — per-locale count of tokens pinned in a *different*
+        epoch than ``global_epoch`` (nonzero anywhere => unsafe to advance).
+    """
+    epochs = epochs.astype(jnp.int32)
+    bad = jnp.logical_and(epochs != 0, epochs != global_epoch)
+    return jnp.sum(bad.astype(jnp.int32), axis=1)
+
+
+def scatter_hist_ref(owners, num_locales):
+    """Scatter-list histogram (tryReclaim, Listing 4 lines 33-43).
+
+    Args:
+      owners: i32[N] owning locale of each drained object; -1 = padding.
+      num_locales: static L.
+
+    Returns:
+      counts: i32[L] — objects bound for each destination locale, i.e. the
+        sizes of the per-locale bulk-free transfers.
+    """
+    owners = owners.astype(jnp.int32)
+    onehot = owners[:, None] == jnp.arange(num_locales, dtype=jnp.int32)[None, :]
+    valid = (owners >= 0)[:, None]
+    return jnp.sum(jnp.logical_and(onehot, valid).astype(jnp.int32), axis=0)
+
+
+def reclaim_scan_ref(epochs, global_epoch, owners):
+    """The full L2 graph: scan + histogram + derived scalars."""
+    stale = epoch_scan_ref(epochs, global_epoch)
+    safe = (jnp.sum(stale) == 0).astype(jnp.int32)
+    hist = scatter_hist_ref(owners, epochs.shape[0])
+    return safe, stale, hist

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: the scatter-list histogram.
+
+tryReclaim sorts drained objects by owning locale before bulk-freeing
+(Listing 4's ``objsToDelete[obj.locale.id].append(obj)``). Sizing those
+per-destination transfers is a histogram over the owner array — computed
+here as a tiled one-hot reduction, accumulating into the same (1, L)
+output block across grid steps (the canonical Pallas accumulation
+pattern).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(owners_ref, hist_ref):
+    step = pl.program_id(0)
+    o = owners_ref[...]  # (1, TILE) i32
+    locales = hist_ref.shape[1]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (o.shape[1], locales), 1)
+    onehot = jnp.logical_and(o[0, :, None] == lanes, o[0, :, None] >= 0)
+    partial = jnp.sum(onehot.astype(jnp.int32), axis=0, keepdims=True)
+
+    @pl.when(step == 0)
+    def _init():
+        hist_ref[...] = partial
+
+    @pl.when(step != 0)
+    def _acc():
+        hist_ref[...] += partial
+
+
+def scatter_hist(owners, num_locales, tile=512):
+    """Pallas version of :func:`..kernels.ref.scatter_hist_ref`.
+
+    Args:
+      owners: i32[N] owner locale per object, -1 padding. N must be a
+        multiple of ``tile`` (the AOT wrapper pads).
+      num_locales: static destination count L.
+
+    Returns:
+      counts: i32[L].
+    """
+    n = owners.shape[0]
+    assert n % tile == 0, f"N={n} not a multiple of tile={tile}"
+    o2 = jnp.reshape(owners.astype(jnp.int32), (1, n))
+    hist = pl.pallas_call(
+        _hist_kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, num_locales), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, num_locales), jnp.int32),
+        interpret=True,
+    )(o2)
+    return jnp.reshape(hist, (num_locales,))

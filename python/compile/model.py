@@ -1,0 +1,34 @@
+"""L2: the jax compute graph the Rust coordinator executes via PJRT.
+
+``reclaim_scan`` composes the two L1 Pallas kernels into the decision the
+elected tryReclaim task needs: *is it safe to advance* (plus the stale
+breakdown for diagnostics) and *how large is each locale's bulk-free
+transfer*. Python runs only at build time — ``aot.py`` lowers this
+function once to HLO text; the request path is pure Rust.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.epoch_scan import epoch_scan
+from .kernels.scatter_hist import scatter_hist
+
+
+def reclaim_scan(epochs, global_epoch, owners):
+    """The reclamation-scan graph.
+
+    Args:
+      epochs: i32[L, T] token-epoch table (0 = quiescent / padding).
+      global_epoch: i32[] scalar current epoch.
+      owners: i32[N] owner locale per drained object (-1 padding).
+
+    Returns:
+      (safe, stale, hist):
+        safe: i32[] 1 iff no token is pinned in a previous epoch;
+        stale: i32[L] stale-token count per locale;
+        hist: i32[L] scatter-list sizes per destination locale.
+    """
+    locales = epochs.shape[0]
+    stale = epoch_scan(epochs, global_epoch)
+    safe = (jnp.sum(stale) == 0).astype(jnp.int32)
+    hist = scatter_hist(owners, locales)
+    return safe, stale, hist

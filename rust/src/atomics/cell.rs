@@ -1,0 +1,201 @@
+//! The shared storage cell behind `AtomicObject` and `LocalAtomicObject`.
+//!
+//! Layout mirrors the paper's Chapel implementation: a 16-byte-aligned pair
+//! of 64-bit words — the (compressed) object pointer and the ABA counter.
+//! Non-ABA operations are plain 64-bit atomics on the pointer word (and so
+//! are RDMA-capable); ABA operations are `CMPXCHG16B` over the whole cell.
+//! Both kinds may be used interchangeably on the same cell, exactly as the
+//! paper allows ("the advanced user is free to use both ABA and normal
+//! variants interchangeably").
+
+use super::dcas::{dcas_raw, load_raw};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// 128-bit cell: `[ptr_word, aba_count]`, 16-byte aligned so the DCAS path
+/// can treat it as one `u128` (low half = pointer, high half = counter).
+#[repr(C, align(16))]
+#[derive(Debug, Default)]
+pub struct AbaCell {
+    ptr_word: AtomicU64,
+    count: AtomicU64,
+}
+
+/// A snapshot of the full cell: pointer word + counter. This is the
+/// paper's `ABA` record (sans type sugar); `*ABA` operations take and
+/// return it.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub struct AbaSnapshot {
+    pub word: u64,
+    pub count: u64,
+}
+
+impl AbaSnapshot {
+    #[inline]
+    fn to_u128(self) -> u128 {
+        ((self.count as u128) << 64) | self.word as u128
+    }
+
+    #[inline]
+    fn from_u128(v: u128) -> AbaSnapshot {
+        AbaSnapshot { word: v as u64, count: (v >> 64) as u64 }
+    }
+}
+
+impl AbaCell {
+    pub fn new(word: u64) -> AbaCell {
+        AbaCell { ptr_word: AtomicU64::new(word), count: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    fn as_u128_ptr(&self) -> *mut u128 {
+        self as *const AbaCell as *mut u128
+    }
+
+    // ---- non-ABA (single-word, RDMA-capable) ----
+
+    #[inline]
+    pub fn read(&self) -> u64 {
+        self.ptr_word.load(Ordering::SeqCst)
+    }
+
+    #[inline]
+    pub fn write(&self, word: u64) {
+        self.ptr_word.store(word, Ordering::SeqCst)
+    }
+
+    #[inline]
+    pub fn exchange(&self, word: u64) -> u64 {
+        self.ptr_word.swap(word, Ordering::SeqCst)
+    }
+
+    #[inline]
+    pub fn compare_exchange(&self, expected: u64, new: u64) -> Result<u64, u64> {
+        self.ptr_word
+            .compare_exchange(expected, new, Ordering::SeqCst, Ordering::SeqCst)
+    }
+
+    // ---- ABA (double-word) ----
+
+    /// 128-bit atomic read of pointer + counter.
+    #[inline]
+    pub fn read_aba(&self) -> AbaSnapshot {
+        AbaSnapshot::from_u128(unsafe { load_raw(self.as_u128_ptr()) })
+    }
+
+    /// Store a new pointer, bumping the counter (DCAS loop).
+    #[inline]
+    pub fn write_aba(&self, word: u64) {
+        self.exchange_aba(word);
+    }
+
+    /// Swap in a new pointer, bumping the counter; returns prior snapshot.
+    #[inline]
+    pub fn exchange_aba(&self, word: u64) -> AbaSnapshot {
+        let mut cur = self.read_aba();
+        loop {
+            let next = AbaSnapshot { word, count: cur.count.wrapping_add(1) };
+            match unsafe { dcas_raw(self.as_u128_ptr(), cur.to_u128(), next.to_u128()) } {
+                Ok(_) => return cur,
+                Err(now) => cur = AbaSnapshot::from_u128(now),
+            }
+        }
+    }
+
+    /// DCAS: succeeds only if *both* pointer and counter still match
+    /// `expected` — the ABA-problem killer. On success the counter is
+    /// bumped. Returns the observed snapshot on failure.
+    #[inline]
+    pub fn compare_exchange_aba(&self, expected: AbaSnapshot, new_word: u64) -> Result<(), AbaSnapshot> {
+        let next = AbaSnapshot { word: new_word, count: expected.count.wrapping_add(1) };
+        match unsafe { dcas_raw(self.as_u128_ptr(), expected.to_u128(), next.to_u128()) } {
+            Ok(_) => Ok(()),
+            Err(now) => Err(AbaSnapshot::from_u128(now)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_ops_roundtrip() {
+        let c = AbaCell::new(10);
+        assert_eq!(c.read(), 10);
+        c.write(20);
+        assert_eq!(c.exchange(30), 20);
+        assert_eq!(c.compare_exchange(30, 40), Ok(30));
+        assert_eq!(c.compare_exchange(30, 50), Err(40));
+    }
+
+    #[test]
+    fn aba_counter_bumps_on_every_aba_mutation() {
+        let c = AbaCell::new(1);
+        assert_eq!(c.read_aba().count, 0);
+        c.write_aba(2);
+        assert_eq!(c.read_aba().count, 1);
+        c.exchange_aba(3);
+        assert_eq!(c.read_aba().count, 2);
+        let snap = c.read_aba();
+        assert!(c.compare_exchange_aba(snap, 4).is_ok());
+        assert_eq!(c.read_aba(), AbaSnapshot { word: 4, count: 3 });
+    }
+
+    #[test]
+    fn dcas_detects_aba() {
+        // Classic ABA: value goes 1 -> 2 -> 1; a stale snapshot must fail.
+        let c = AbaCell::new(1);
+        let stale = c.read_aba();
+        c.write_aba(2);
+        c.write_aba(1); // value back to 1, but counter advanced
+        assert_eq!(c.read(), 1, "plain read cannot see the difference");
+        let err = c.compare_exchange_aba(stale, 99).unwrap_err();
+        assert_eq!(err.word, 1);
+        assert_eq!(err.count, 2);
+        assert_eq!(c.read(), 1, "stale DCAS must not take effect");
+    }
+
+    #[test]
+    fn single_word_cas_is_fooled_by_aba() {
+        // The contrast case motivating the whole design: the plain CAS
+        // *succeeds* after an A->B->A excursion.
+        let c = AbaCell::new(1);
+        let stale = c.read();
+        c.write(2);
+        c.write(1);
+        assert!(c.compare_exchange(stale, 99).is_ok(), "plain CAS cannot detect ABA");
+    }
+
+    #[test]
+    fn mixed_plain_and_aba_ops_share_storage() {
+        let c = AbaCell::new(5);
+        c.write(6); // plain write: no counter bump
+        assert_eq!(c.read_aba(), AbaSnapshot { word: 6, count: 0 });
+        c.write_aba(7);
+        assert_eq!(c.read(), 7, "plain read sees ABA write");
+    }
+
+    #[test]
+    fn concurrent_aba_push_pop_conserves() {
+        // Two threads doing counter-protected increments: total must hold.
+        let c = AbaCell::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = &c;
+                s.spawn(move || {
+                    for _ in 0..1_000 {
+                        loop {
+                            let snap = c.read_aba();
+                            if c.compare_exchange_aba(snap, snap.word + 1).is_ok() {
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let fin = c.read_aba();
+        assert_eq!(fin.word, 4_000);
+        assert_eq!(fin.count, 4_000);
+    }
+}

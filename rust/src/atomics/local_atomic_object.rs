@@ -1,0 +1,208 @@
+//! `LocalAtomicObject` — the shared-memory-optimized variant (§II-A).
+//!
+//! The initial prototype in the paper: locality information is *ignored*
+//! and the cell holds only the 64-bit virtual address, so it is correct
+//! only when every referenced object lives on the one locale using it. In
+//! exchange it pays no communication charges and no compression/decode
+//! work on reads. ABA-protected variants are provided just like the global
+//! version.
+
+use super::cell::{AbaCell, AbaSnapshot};
+use crate::pgas::{here, GlobalPtr, WidePtr};
+use std::marker::PhantomData;
+
+/// Atomic object reference, shared-memory only: stores the raw 64-bit VA.
+#[derive(Default)]
+pub struct LocalAtomicObject<T> {
+    cell: AbaCell,
+    _pd: PhantomData<T>,
+}
+
+unsafe impl<T: Send + Sync> Send for LocalAtomicObject<T> {}
+unsafe impl<T: Send + Sync> Sync for LocalAtomicObject<T> {}
+
+/// ABA read result for the local variant.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub struct LocalAba<T> {
+    addr: u64,
+    count: u64,
+    _pd: PhantomData<T>,
+}
+
+impl<T> LocalAba<T> {
+    /// The wrapped reference, re-widened onto the current locale.
+    #[inline]
+    pub fn get_object(&self) -> GlobalPtr<T> {
+        GlobalPtr::from_wide(WidePtr::new(here(), self.addr))
+    }
+
+    #[inline]
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    #[inline]
+    pub fn is_nil(&self) -> bool {
+        self.addr == 0
+    }
+
+    fn snapshot(&self) -> AbaSnapshot {
+        AbaSnapshot { word: self.addr, count: self.count }
+    }
+}
+
+impl<T> LocalAtomicObject<T> {
+    pub fn new() -> LocalAtomicObject<T> {
+        LocalAtomicObject { cell: AbaCell::new(0), _pd: PhantomData }
+    }
+
+    /// Locality is dropped on write — the documented contract of the local
+    /// variant (debug builds verify the object is indeed local).
+    #[inline]
+    fn addr_of(p: GlobalPtr<T>) -> u64 {
+        debug_assert!(
+            p.is_nil() || p.locale() == here(),
+            "LocalAtomicObject used with a remote reference ({:?} from {:?})",
+            p.locale(),
+            here()
+        );
+        p.addr()
+    }
+
+    #[inline]
+    fn widen(addr: u64) -> GlobalPtr<T> {
+        GlobalPtr::from_wide(WidePtr::new(here(), addr))
+    }
+
+    // ---- plain ----
+
+    #[inline]
+    pub fn read(&self) -> GlobalPtr<T> {
+        Self::widen(self.cell.read())
+    }
+
+    #[inline]
+    pub fn write(&self, p: GlobalPtr<T>) {
+        self.cell.write(Self::addr_of(p));
+    }
+
+    #[inline]
+    pub fn exchange(&self, p: GlobalPtr<T>) -> GlobalPtr<T> {
+        Self::widen(self.cell.exchange(Self::addr_of(p)))
+    }
+
+    #[inline]
+    pub fn compare_exchange(&self, expected: GlobalPtr<T>, new: GlobalPtr<T>) -> Result<(), GlobalPtr<T>> {
+        self.cell
+            .compare_exchange(Self::addr_of(expected), Self::addr_of(new))
+            .map(|_| ())
+            .map_err(Self::widen)
+    }
+
+    #[inline]
+    pub fn compare_and_swap(&self, expected: GlobalPtr<T>, new: GlobalPtr<T>) -> bool {
+        self.compare_exchange(expected, new).is_ok()
+    }
+
+    // ---- ABA ----
+
+    #[inline]
+    pub fn read_aba(&self) -> LocalAba<T> {
+        let s = self.cell.read_aba();
+        LocalAba { addr: s.word, count: s.count, _pd: PhantomData }
+    }
+
+    #[inline]
+    pub fn write_aba(&self, p: GlobalPtr<T>) {
+        self.cell.write_aba(Self::addr_of(p));
+    }
+
+    #[inline]
+    pub fn exchange_aba(&self, p: GlobalPtr<T>) -> LocalAba<T> {
+        let s = self.cell.exchange_aba(Self::addr_of(p));
+        LocalAba { addr: s.word, count: s.count, _pd: PhantomData }
+    }
+
+    #[inline]
+    pub fn compare_exchange_aba(&self, expected: LocalAba<T>, new: GlobalPtr<T>) -> Result<(), LocalAba<T>> {
+        self.cell
+            .compare_exchange_aba(expected.snapshot(), Self::addr_of(new))
+            .map_err(|s| LocalAba { addr: s.word, count: s.count, _pd: PhantomData })
+    }
+
+    #[inline]
+    pub fn compare_and_swap_aba(&self, expected: LocalAba<T>, new: GlobalPtr<T>) -> bool {
+        self.compare_exchange_aba(expected, new).is_ok()
+    }
+}
+
+impl<T> std::fmt::Debug for LocalAtomicObject<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "LocalAtomicObject({:#x})", self.cell.read())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pgas::{LocaleId, Pgas};
+
+    #[test]
+    fn roundtrip_without_charges() {
+        let p = Pgas::smp();
+        let a: LocalAtomicObject<u64> = LocalAtomicObject::new();
+        let x = p.alloc(LocaleId(0), 42u64);
+        a.write(x);
+        assert_eq!(a.read(), x);
+        assert_eq!(unsafe { *a.read().deref() }, 42);
+        // No NIC traffic at all — that's the point of the local variant.
+        assert_eq!(p.comm_totals().total_comm_ops(), 0);
+        unsafe { p.free(x) };
+    }
+
+    #[test]
+    fn cas_and_exchange() {
+        let p = Pgas::smp();
+        let a: LocalAtomicObject<u64> = LocalAtomicObject::new();
+        let x = p.alloc(LocaleId(0), 1u64);
+        let y = p.alloc(LocaleId(0), 2u64);
+        assert!(a.compare_and_swap(GlobalPtr::nil(), x));
+        assert_eq!(a.exchange(y), x);
+        assert!(!a.compare_and_swap(x, y));
+        unsafe {
+            p.free(x);
+            p.free(y);
+        }
+    }
+
+    #[test]
+    fn aba_detection_local() {
+        let p = Pgas::smp();
+        let a: LocalAtomicObject<u64> = LocalAtomicObject::new();
+        let x = p.alloc(LocaleId(0), 1u64);
+        let y = p.alloc(LocaleId(0), 2u64);
+        a.write_aba(x);
+        let stale = a.read_aba();
+        a.write_aba(y);
+        a.write_aba(x);
+        assert!(!a.compare_and_swap_aba(stale, y));
+        let fresh = a.read_aba();
+        assert!(a.compare_and_swap_aba(fresh, y));
+        assert_eq!(a.read(), y);
+        unsafe {
+            p.free(x);
+            p.free(y);
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn remote_reference_asserts_in_debug() {
+        let p = Pgas::new(crate::pgas::Machine::new(2, 1), crate::pgas::NicModel::aries_no_network_atomics());
+        let a: LocalAtomicObject<u64> = LocalAtomicObject::new();
+        let remote = p.alloc(LocaleId(1), 3u64);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| a.write(remote)));
+        assert!(r.is_err(), "debug build must reject remote refs");
+        unsafe { p.free(remote) };
+    }
+}

@@ -1,0 +1,14 @@
+//! Atomic operations on object references (paper §II-A): the 128-bit DCAS
+//! substrate, the shared storage cell, and the two user-facing types —
+//! [`AtomicObject`] (global, compression + RDMA-aware) and
+//! [`LocalAtomicObject`] (shared-memory optimized).
+
+pub mod atomic_object;
+pub mod cell;
+pub mod dcas;
+pub mod local_atomic_object;
+
+pub use atomic_object::{Aba, AtomicObject, StorageMode};
+pub use cell::{AbaCell, AbaSnapshot};
+pub use dcas::{dcas_is_lock_free, AtomicU128};
+pub use local_atomic_object::{LocalAba, LocalAtomicObject};

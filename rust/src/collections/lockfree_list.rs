@@ -1,0 +1,331 @@
+//! A Harris-style lock-free sorted linked list (set of `u64` keys) over
+//! the PGAS substrate — the "linked list" from the paper's list of
+//! primitive non-blocking structures, and the building block of the
+//! interlocked hash table.
+//!
+//! Logical deletion sets a *mark bit* in the successor pointer (we borrow
+//! bit 0 of the 48-bit address — node allocations are ≥ 8-byte aligned);
+//! physical unlinking happens during traversal, and unlinked nodes retire
+//! through the `EpochManager`. This is precisely the two-phase
+//! logical/physical removal the paper's §II-B describes.
+
+use crate::atomics::AtomicObject;
+use crate::epoch::{EpochManager, EpochToken};
+use crate::pgas::{GlobalPtr, LocaleId, Pgas, WidePtr};
+use std::sync::Arc;
+
+/// Mark bit: addresses are ≥ 8-byte aligned so bit 0 is free.
+const MARK: u64 = 1;
+
+fn is_marked<T>(p: GlobalPtr<T>) -> bool {
+    p.addr() & MARK != 0
+}
+
+fn marked<T>(p: GlobalPtr<T>) -> GlobalPtr<T> {
+    GlobalPtr::from_wide(WidePtr::new(p.locale(), p.addr() | MARK))
+}
+
+fn unmarked<T>(p: GlobalPtr<T>) -> GlobalPtr<T> {
+    GlobalPtr::from_wide(WidePtr::new(p.locale(), p.addr() & !MARK))
+}
+
+pub struct Node {
+    key: u64,
+    next: AtomicObject<Node>,
+}
+
+/// Lock-free sorted set of `u64` keys.
+pub struct LockFreeList {
+    pgas: Arc<Pgas>,
+    em: EpochManager,
+    /// Sentinel head node (key = MIN, never removed).
+    head: GlobalPtr<Node>,
+    home: LocaleId,
+}
+
+impl LockFreeList {
+    pub fn new(pgas: Arc<Pgas>, em: EpochManager) -> LockFreeList {
+        let home = crate::pgas::here();
+        Self::on(pgas, em, home)
+    }
+
+    pub fn on(pgas: Arc<Pgas>, em: EpochManager, home: LocaleId) -> LockFreeList {
+        let head = pgas.alloc(
+            home,
+            Node { key: 0, next: AtomicObject::new(Arc::clone(&pgas), home) },
+        );
+        LockFreeList { pgas, em, head, home }
+    }
+
+    pub fn register(&self) -> EpochToken {
+        self.em.register()
+    }
+
+    pub fn epoch_manager(&self) -> &EpochManager {
+        &self.em
+    }
+
+    /// Find the window `(pred, curr)` such that `pred.key < key <=
+    /// curr.key`, physically unlinking marked nodes along the way
+    /// (Harris/Michael search). Caller must be pinned.
+    fn search(&self, tok: &EpochToken, key: u64) -> (GlobalPtr<Node>, GlobalPtr<Node>) {
+        'retry: loop {
+            let mut pred = self.head;
+            let mut curr = unsafe { pred.deref().next.read() };
+            loop {
+                if curr.is_nil() {
+                    return (pred, curr);
+                }
+                let curr_node = unsafe { unmarked(curr).deref() };
+                let succ = curr_node.next.read();
+                if is_marked(succ) {
+                    // curr is logically deleted: unlink it.
+                    if unsafe { !pred.deref().next.compare_and_swap(curr, unmarked(succ)) } {
+                        continue 'retry; // pred changed under us
+                    }
+                    tok.defer_delete(unmarked(curr));
+                    curr = unmarked(succ);
+                    continue;
+                }
+                if curr_node.key >= key {
+                    return (pred, curr);
+                }
+                pred = unmarked(curr);
+                curr = succ;
+            }
+        }
+    }
+
+    /// Insert `key`; false if already present.
+    pub fn insert(&self, tok: &EpochToken, key: u64) -> bool {
+        assert!(key > 0, "key 0 is the head sentinel");
+        tok.pin();
+        let result = loop {
+            let (pred, curr) = self.search(tok, key);
+            if !curr.is_nil() && unsafe { unmarked(curr).deref().key } == key {
+                break false;
+            }
+            let node = self.pgas.alloc_here(Node {
+                key,
+                next: AtomicObject::new(Arc::clone(&self.pgas), self.home),
+            });
+            unsafe { node.deref().next.write(curr) };
+            if unsafe { pred.deref().next.compare_and_swap(curr, node) } {
+                break true;
+            }
+            // CAS failed: free the speculative node (never published).
+            unsafe { self.pgas.free(node) };
+        };
+        tok.unpin();
+        result
+    }
+
+    /// Remove `key`; false if absent. Two-phase: mark (logical), then
+    /// unlink (physical, possibly helped by other tasks' searches).
+    pub fn remove(&self, tok: &EpochToken, key: u64) -> bool {
+        tok.pin();
+        let result = loop {
+            let (pred, curr) = self.search(tok, key);
+            if curr.is_nil() || unsafe { unmarked(curr).deref().key } != key {
+                break false;
+            }
+            let curr_node = unsafe { unmarked(curr).deref() };
+            let succ = curr_node.next.read();
+            if is_marked(succ) {
+                continue; // someone else is removing it; retry to settle
+            }
+            // Logical removal: mark the successor pointer.
+            if !curr_node.next.compare_and_swap(succ, marked(succ)) {
+                continue;
+            }
+            // Physical removal (best effort; search() helps if we fail).
+            if unsafe { pred.deref().next.compare_and_swap(curr, succ) } {
+                tok.defer_delete(unmarked(curr));
+            }
+            break true;
+        };
+        tok.unpin();
+        result
+    }
+
+    /// Membership test (wait-free traversal, no unlinking).
+    pub fn contains(&self, tok: &EpochToken, key: u64) -> bool {
+        tok.pin();
+        let mut curr = unsafe { self.head.deref().next.read() };
+        let mut found = false;
+        while !curr.is_nil() {
+            let node = unsafe { unmarked(curr).deref() };
+            if node.key >= key {
+                found = node.key == key && !is_marked(node.next.read());
+                break;
+            }
+            curr = node.next.read();
+        }
+        tok.unpin();
+        found
+    }
+
+    /// Number of unmarked nodes (O(n), racy; for tests/diagnostics).
+    pub fn len(&self, tok: &EpochToken) -> usize {
+        tok.pin();
+        let mut n = 0;
+        let mut curr = unsafe { self.head.deref().next.read() };
+        while !curr.is_nil() {
+            let node = unsafe { unmarked(curr).deref() };
+            if !is_marked(node.next.read()) {
+                n += 1;
+            }
+            curr = node.next.read();
+        }
+        tok.unpin();
+        n
+    }
+
+    pub fn is_empty(&self, tok: &EpochToken) -> bool {
+        self.len(tok) == 0
+    }
+}
+
+impl Drop for LockFreeList {
+    fn drop(&mut self) {
+        let mut cur = self.head;
+        while !cur.is_nil() {
+            let next = unsafe { unmarked(cur).deref().next.read() };
+            unsafe { self.pgas.free(unmarked(cur)) };
+            cur = unmarked(next);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pgas::{coforall_locales, Machine, NicModel};
+
+    fn setup(locales: usize) -> (Arc<Pgas>, EpochManager) {
+        let p = Pgas::new(Machine::new(locales, 2), NicModel::aries_no_network_atomics());
+        let em = EpochManager::new(Arc::clone(&p));
+        (p, em)
+    }
+
+    #[test]
+    fn insert_contains_remove() {
+        let (p, em) = setup(1);
+        let l = LockFreeList::new(Arc::clone(&p), em.clone());
+        let tok = l.register();
+        assert!(l.insert(&tok, 5));
+        assert!(l.insert(&tok, 3));
+        assert!(l.insert(&tok, 8));
+        assert!(!l.insert(&tok, 5), "duplicate rejected");
+        assert!(l.contains(&tok, 3));
+        assert!(l.contains(&tok, 5));
+        assert!(!l.contains(&tok, 4));
+        assert!(l.remove(&tok, 5));
+        assert!(!l.remove(&tok, 5), "double remove rejected");
+        assert!(!l.contains(&tok, 5));
+        assert_eq!(l.len(&tok), 2);
+    }
+
+    #[test]
+    fn sorted_window_semantics() {
+        let (p, em) = setup(1);
+        let l = LockFreeList::new(Arc::clone(&p), em.clone());
+        let tok = l.register();
+        for k in [10u64, 2, 7, 30, 21] {
+            assert!(l.insert(&tok, k));
+        }
+        // Traverse and check ordering.
+        tok.pin();
+        let mut prev = 0;
+        let mut curr = unsafe { l.head.deref().next.read() };
+        while !curr.is_nil() {
+            let node = unsafe { curr.deref() };
+            assert!(node.key > prev, "keys must be sorted");
+            prev = node.key;
+            curr = node.next.read();
+        }
+        tok.unpin();
+    }
+
+    #[test]
+    fn concurrent_disjoint_inserts_all_present() {
+        let (p, em) = setup(2);
+        let l = LockFreeList::new(Arc::clone(&p), em.clone());
+        coforall_locales(p.machine(), |loc| {
+            crate::pgas::coforall_tasks(2, |tid| {
+                let tok = l.register();
+                let base = (loc.index() * 2 + tid) as u64 * 500;
+                for i in 1..=500u64 {
+                    assert!(l.insert(&tok, base + i));
+                }
+            });
+        });
+        let tok = l.register();
+        assert_eq!(l.len(&tok), 2000);
+        for k in 1..=2000u64 {
+            assert!(l.contains(&tok, k), "missing {k}");
+        }
+    }
+
+    #[test]
+    fn concurrent_insert_remove_churn_is_consistent() {
+        let (p, em) = setup(2);
+        let l = LockFreeList::new(Arc::clone(&p), em.clone());
+        // Tasks fight over the same small key space; at the end, re-check
+        // set semantics (each key present or absent, no duplicates/ghosts).
+        coforall_locales(p.machine(), |loc| {
+            crate::pgas::coforall_tasks(2, |tid| {
+                let tok = l.register();
+                let mut rng = crate::util::rng::Xoshiro256pp::new((loc.index() * 2 + tid) as u64);
+                for i in 0..1_500 {
+                    let k = 1 + rng.next_below(64);
+                    if rng.chance(0.5) {
+                        l.insert(&tok, k);
+                    } else {
+                        l.remove(&tok, k);
+                    }
+                    if i % 200 == 0 {
+                        tok.try_reclaim();
+                    }
+                }
+            });
+        });
+        let tok = l.register();
+        // Structural invariants: sorted, unique.
+        tok.pin();
+        let mut prev = 0u64;
+        let mut curr = unsafe { l.head.deref().next.read() };
+        while !curr.is_nil() {
+            let node = unsafe { unmarked(curr).deref() };
+            if !is_marked(node.next.read()) {
+                assert!(node.key > prev, "sorted+unique violated: {} after {}", node.key, prev);
+                prev = node.key;
+            }
+            curr = unmarked(node.next.read());
+        }
+        tok.unpin();
+        drop(tok);
+        em.clear();
+        let s = em.stats();
+        assert_eq!(s.deferred, s.freed, "every retired node reclaimed");
+    }
+
+    #[test]
+    fn no_leaks_after_drop() {
+        let (p, em) = setup(1);
+        {
+            let l = LockFreeList::new(Arc::clone(&p), em.clone());
+            let tok = l.register();
+            for k in 1..=100u64 {
+                l.insert(&tok, k);
+            }
+            for k in (1..=100u64).step_by(2) {
+                l.remove(&tok, k);
+            }
+            drop(tok);
+            em.clear();
+        }
+        drop(em);
+        assert_eq!(p.live_objects(), 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Non-blocking data structures built on [`crate::atomics::AtomicObject`]
+//! and [`crate::epoch::EpochManager`] — the structures the paper's
+//! introduction motivates (stack, queue, linked list) plus the interlocked
+//! hash table its future work ports.
+
+pub mod hash_table;
+pub mod lockfree_list;
+pub mod ms_queue;
+pub mod rcu_array;
+pub mod treiber_stack;
+
+pub use hash_table::InterlockedHashTable;
+pub use lockfree_list::LockFreeList;
+pub use ms_queue::LockFreeQueue;
+pub use rcu_array::RcuArray;
+pub use treiber_stack::LockFreeStack;

@@ -1,0 +1,278 @@
+//! A distributed Michael–Scott queue: lock-free FIFO on `AtomicObject`
+//! (ABA-protected head/tail) with `EpochManager` reclamation — one of the
+//! "most primitive of non-blocking data structures" the paper's
+//! introduction motivates.
+
+use crate::atomics::AtomicObject;
+use crate::epoch::{EpochManager, EpochToken};
+use crate::pgas::{here, GlobalPtr, LocaleId, Pgas};
+use std::mem::{ManuallyDrop, MaybeUninit};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub struct Node<T> {
+    /// Uninitialized in the dummy node; moved out by the winning dequeuer.
+    val: ManuallyDrop<MaybeUninit<T>>,
+    /// True once the value has been moved out (or never written: dummy).
+    val_consumed: AtomicBool,
+    next: AtomicObject<Node<T>>,
+}
+
+/// Lock-free FIFO queue usable from any locale.
+pub struct LockFreeQueue<T> {
+    pgas: Arc<Pgas>,
+    em: EpochManager,
+    head: AtomicObject<Node<T>>,
+    tail: AtomicObject<Node<T>>,
+}
+
+impl<T: Send + Sync> LockFreeQueue<T> {
+    pub fn new(pgas: Arc<Pgas>, em: EpochManager) -> LockFreeQueue<T> {
+        let home = here();
+        Self::on(pgas, em, home)
+    }
+
+    pub fn on(pgas: Arc<Pgas>, em: EpochManager, home: LocaleId) -> LockFreeQueue<T> {
+        let dummy = pgas.alloc(
+            home,
+            Node {
+                val: ManuallyDrop::new(MaybeUninit::uninit()),
+                val_consumed: AtomicBool::new(true), // dummy has no value
+                next: AtomicObject::new(Arc::clone(&pgas), home),
+            },
+        );
+        let head = AtomicObject::new(Arc::clone(&pgas), home);
+        let tail = AtomicObject::new(Arc::clone(&pgas), home);
+        head.write(dummy);
+        tail.write(dummy);
+        LockFreeQueue { pgas, em, head, tail }
+    }
+
+    pub fn register(&self) -> EpochToken {
+        self.em.register()
+    }
+
+    pub fn epoch_manager(&self) -> &EpochManager {
+        &self.em
+    }
+
+    /// Enqueue at the tail (Michael–Scott two-step with tail swing help).
+    pub fn enqueue(&self, tok: &EpochToken, val: T) {
+        tok.pin();
+        let node = self.pgas.alloc_here(Node {
+            val: ManuallyDrop::new(MaybeUninit::new(val)),
+            val_consumed: AtomicBool::new(false),
+            next: AtomicObject::new(Arc::clone(&self.pgas), here()),
+        });
+        loop {
+            let tail = self.tail.read_aba();
+            let tail_node = tail.get_object();
+            let next = unsafe { tail_node.deref().next.read() };
+            if !next.is_nil() {
+                // Tail is lagging: help swing it forward.
+                let _ = self.tail.compare_and_swap_aba(tail, next);
+                continue;
+            }
+            if unsafe { tail_node.deref().next.compare_and_swap(GlobalPtr::nil(), node) } {
+                // Linearized. Swing tail (failure is fine: someone helped).
+                let _ = self.tail.compare_and_swap_aba(tail, node);
+                break;
+            }
+        }
+        tok.unpin();
+    }
+
+    /// Dequeue from the head; `None` when empty.
+    pub fn dequeue(&self, tok: &EpochToken) -> Option<T> {
+        tok.pin();
+        let result = loop {
+            let head = self.head.read_aba();
+            let head_node = head.get_object();
+            let next = unsafe { head_node.deref().next.read() };
+            if next.is_nil() {
+                break None; // empty (head == dummy with no successor)
+            }
+            // `next` becomes the new dummy; its value is ours if we win.
+            if self.head.compare_and_swap_aba(head, next) {
+                let val = unsafe {
+                    let n = next.deref();
+                    let already = n.val_consumed.swap(true, Ordering::SeqCst);
+                    debug_assert!(!already, "value consumed twice");
+                    std::ptr::read(n.val.assume_init_ref())
+                };
+                tok.defer_delete(head_node); // retire the old dummy
+                break Some(val);
+            }
+        };
+        tok.unpin();
+        result
+    }
+
+    pub fn is_empty(&self) -> bool {
+        let head = self.head.read();
+        unsafe { head.deref().next.read().is_nil() }
+    }
+}
+
+impl<T> Drop for LockFreeQueue<T> {
+    fn drop(&mut self) {
+        // Walk from the dummy, dropping unconsumed values and all nodes.
+        let mut cur = self.head.exchange(GlobalPtr::nil());
+        while !cur.is_nil() {
+            let next = unsafe { cur.deref().next.read() };
+            unsafe {
+                let n = cur.deref() as *const Node<T> as *mut Node<T>;
+                if !(*n).val_consumed.load(Ordering::SeqCst) {
+                    (*n).val.assume_init_drop();
+                }
+                self.pgas.free(cur);
+            }
+            cur = next;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pgas::{coforall_locales, Machine, NicModel};
+
+    fn setup(locales: usize) -> (Arc<Pgas>, EpochManager) {
+        let p = Pgas::new(Machine::new(locales, 2), NicModel::aries_no_network_atomics());
+        let em = EpochManager::new(Arc::clone(&p));
+        (p, em)
+    }
+
+    #[test]
+    fn fifo_order_single_task() {
+        let (p, em) = setup(1);
+        let q = LockFreeQueue::new(Arc::clone(&p), em.clone());
+        let tok = q.register();
+        assert!(q.is_empty());
+        for i in 0..10 {
+            q.enqueue(&tok, i);
+        }
+        for i in 0..10 {
+            assert_eq!(q.dequeue(&tok), Some(i));
+        }
+        assert_eq!(q.dequeue(&tok), None);
+    }
+
+    #[test]
+    fn interleaved_enq_deq() {
+        let (p, em) = setup(1);
+        let q = LockFreeQueue::new(Arc::clone(&p), em.clone());
+        let tok = q.register();
+        q.enqueue(&tok, 1);
+        q.enqueue(&tok, 2);
+        assert_eq!(q.dequeue(&tok), Some(1));
+        q.enqueue(&tok, 3);
+        assert_eq!(q.dequeue(&tok), Some(2));
+        assert_eq!(q.dequeue(&tok), Some(3));
+        assert_eq!(q.dequeue(&tok), None);
+    }
+
+    #[test]
+    fn values_dropped_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let (p, em) = setup(1);
+        {
+            let q = LockFreeQueue::new(Arc::clone(&p), em.clone());
+            let tok = q.register();
+            for _ in 0..4 {
+                q.enqueue(&tok, D);
+            }
+            drop(q.dequeue(&tok).unwrap()); // 1 drop
+            drop(tok);
+            em.clear();
+        } // queue drop: 3 unconsumed values dropped
+        drop(em);
+        assert_eq!(DROPS.load(Ordering::SeqCst), 4);
+        assert_eq!(p.live_objects(), 0);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_conserve() {
+        let (p, em) = setup(2);
+        let q = LockFreeQueue::new(Arc::clone(&p), em.clone());
+        let consumed = std::sync::atomic::AtomicUsize::new(0);
+        let sum = std::sync::atomic::AtomicUsize::new(0);
+        let n_per = 1_000usize;
+        coforall_locales(p.machine(), |loc| {
+            crate::pgas::coforall_tasks(2, |tid| {
+                let tok = q.register();
+                if tid == 0 {
+                    // producer
+                    for i in 0..n_per {
+                        q.enqueue(&tok, loc.index() * n_per + i + 1);
+                        if i % 128 == 0 {
+                            tok.try_reclaim();
+                        }
+                    }
+                } else {
+                    // consumer
+                    let mut got = 0;
+                    while got < n_per / 2 {
+                        if let Some(v) = q.dequeue(&tok) {
+                            sum.fetch_add(v, Ordering::Relaxed);
+                            got += 1;
+                        }
+                    }
+                    consumed.fetch_add(got, Ordering::Relaxed);
+                }
+            });
+        });
+        // Drain the rest.
+        let tok = q.register();
+        let mut drained = 0;
+        while let Some(v) = q.dequeue(&tok) {
+            sum.fetch_add(v, Ordering::Relaxed);
+            drained += 1;
+        }
+        let total = consumed.load(Ordering::Relaxed) + drained;
+        assert_eq!(total, 2 * n_per, "every enqueued element dequeued exactly once");
+        let expect: usize = (1..=n_per).sum::<usize>() + (n_per + 1..=2 * n_per).sum::<usize>();
+        assert_eq!(sum.load(Ordering::Relaxed), expect, "value multiset conserved");
+        drop(tok);
+        em.clear();
+        assert_eq!(p.live_objects(), 1, "only the final dummy remains before queue drop");
+    }
+
+    #[test]
+    fn fifo_per_producer_order_preserved() {
+        // Single producer, single consumer: strict FIFO must hold even
+        // with reclamation churn.
+        let (p, em) = setup(1);
+        let q = LockFreeQueue::new(Arc::clone(&p), em.clone());
+        std::thread::scope(|s| {
+            let q1 = &q;
+            s.spawn(move || {
+                let tok = q1.register();
+                for i in 0..2_000 {
+                    q1.enqueue(&tok, i);
+                }
+            });
+            let q2 = &q;
+            s.spawn(move || {
+                let tok = q2.register();
+                let mut expect = 0;
+                while expect < 2_000 {
+                    if let Some(v) = q2.dequeue(&tok) {
+                        assert_eq!(v, expect);
+                        expect += 1;
+                        if expect % 512 == 0 {
+                            tok.try_reclaim();
+                        }
+                    }
+                }
+            });
+        });
+    }
+}

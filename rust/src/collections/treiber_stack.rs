@@ -1,0 +1,258 @@
+//! A distributed Treiber stack — the paper's running example (Listing 1):
+//! `AtomicObject` with ABA protection for the head, `EpochManager` for
+//! node reclamation.
+//!
+//! `push` is the exact shape of Listing 1: read head (ABA), link, CAS-ABA.
+//! `pop` retires the popped node through `defer_delete`, which is what
+//! makes the concurrent traversal in other tasks safe.
+
+use crate::atomics::AtomicObject;
+use crate::epoch::{EpochManager, EpochToken};
+use crate::pgas::{here, GlobalPtr, LocaleId, Pgas};
+use std::mem::ManuallyDrop;
+use std::sync::Arc;
+
+pub struct Node<T> {
+    val: ManuallyDrop<T>,
+    next: GlobalPtr<Node<T>>,
+}
+
+/// Lock-free stack usable from any locale. Nodes are allocated on the
+/// pushing task's locale; the head atomic lives on `home`.
+pub struct LockFreeStack<T> {
+    pgas: Arc<Pgas>,
+    em: EpochManager,
+    head: AtomicObject<Node<T>>,
+}
+
+impl<T: Send + Sync> LockFreeStack<T> {
+    /// Create a stack whose head lives on the current locale, sharing the
+    /// given epoch manager (one manager typically protects many structures).
+    pub fn new(pgas: Arc<Pgas>, em: EpochManager) -> LockFreeStack<T> {
+        let home = here();
+        Self::on(pgas, em, home)
+    }
+
+    pub fn on(pgas: Arc<Pgas>, em: EpochManager, home: LocaleId) -> LockFreeStack<T> {
+        LockFreeStack { head: AtomicObject::new(Arc::clone(&pgas), home), pgas, em }
+    }
+
+    pub fn epoch_manager(&self) -> &EpochManager {
+        &self.em
+    }
+
+    /// Register a token for subsequent operations.
+    pub fn register(&self) -> EpochToken {
+        self.em.register()
+    }
+
+    /// Listing 1: `push` via readABA / compareAndSwapABA.
+    pub fn push(&self, tok: &EpochToken, val: T) {
+        tok.pin();
+        let node = self.pgas.alloc_here(Node { val: ManuallyDrop::new(val), next: GlobalPtr::nil() });
+        loop {
+            let old_head = self.head.read_aba();
+            unsafe {
+                // Sound: `node` is unpublished until the CAS succeeds.
+                let n = node.deref() as *const Node<T> as *mut Node<T>;
+                (*n).next = old_head.get_object();
+            }
+            if self.head.compare_and_swap_aba(old_head, node) {
+                break;
+            }
+        }
+        tok.unpin();
+    }
+
+    /// Pop the top element. The node is retired through the epoch manager;
+    /// its value is moved out (only the winning popper touches it).
+    pub fn pop(&self, tok: &EpochToken) -> Option<T> {
+        tok.pin();
+        let result = loop {
+            let old_head = self.head.read_aba();
+            let node = old_head.get_object();
+            if node.is_nil() {
+                break None;
+            }
+            // Safe to deref: we are pinned, so the node cannot be freed
+            // under us even if it is popped concurrently.
+            let next = unsafe { node.deref().next };
+            if self.head.compare_and_swap_aba(old_head, next) {
+                // We own the node now. Move the value out; the deferred
+                // destructor will not touch it (ManuallyDrop).
+                let val = unsafe { std::ptr::read(&*node.deref().val) };
+                tok.defer_delete(node);
+                break Some(val);
+            }
+        };
+        tok.unpin();
+        result
+    }
+
+    /// Approximate emptiness (racy, like any concurrent size probe).
+    pub fn is_empty(&self) -> bool {
+        self.head.read().is_nil()
+    }
+
+    /// Drain remaining nodes (single-task teardown path).
+    pub fn drain(&self, tok: &EpochToken) -> usize {
+        let mut n = 0;
+        while self.pop(tok).is_some() {
+            n += 1;
+        }
+        n
+    }
+}
+
+impl<T> Drop for LockFreeStack<T> {
+    fn drop(&mut self) {
+        // Free any nodes still in the stack, dropping their values.
+        let mut cur = self.head.exchange(GlobalPtr::nil());
+        while !cur.is_nil() {
+            let next = unsafe { cur.deref().next };
+            unsafe {
+                let n = cur.deref() as *const Node<T> as *mut Node<T>;
+                ManuallyDrop::drop(&mut (*n).val);
+                self.pgas.free(cur);
+            }
+            cur = next;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pgas::{coforall_locales, Machine, NicModel};
+
+    fn setup(locales: usize) -> (Arc<Pgas>, EpochManager) {
+        let p = Pgas::new(Machine::new(locales, 2), NicModel::aries_no_network_atomics());
+        let em = EpochManager::new(Arc::clone(&p));
+        (p, em)
+    }
+
+    #[test]
+    fn lifo_order_single_task() {
+        let (p, em) = setup(1);
+        let s = LockFreeStack::new(Arc::clone(&p), em.clone());
+        let tok = s.register();
+        for i in 0..10 {
+            s.push(&tok, i);
+        }
+        for i in (0..10).rev() {
+            assert_eq!(s.pop(&tok), Some(i));
+        }
+        assert_eq!(s.pop(&tok), None);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn drop_frees_remaining_values() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let (p, em) = setup(1);
+        {
+            let s = LockFreeStack::new(Arc::clone(&p), em.clone());
+            let tok = s.register();
+            for _ in 0..5 {
+                s.push(&tok, D);
+            }
+            drop(tok);
+        }
+        drop(em);
+        assert_eq!(DROPS.load(Ordering::SeqCst), 5);
+        assert_eq!(p.live_objects(), 0);
+    }
+
+    #[test]
+    fn popped_value_dropped_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let (p, em) = setup(1);
+        {
+            let s = LockFreeStack::new(Arc::clone(&p), em.clone());
+            let tok = s.register();
+            s.push(&tok, D);
+            let v = s.pop(&tok).unwrap();
+            drop(v);
+            assert_eq!(DROPS.load(Ordering::SeqCst), 1);
+            drop(tok);
+            em.clear();
+        }
+        drop(em);
+        assert_eq!(DROPS.load(Ordering::SeqCst), 1, "node retirement must not double-drop");
+        assert_eq!(p.live_objects(), 0);
+    }
+
+    #[test]
+    fn concurrent_push_pop_conserves_elements() {
+        let (p, em) = setup(2);
+        let s = LockFreeStack::new(Arc::clone(&p), em.clone());
+        let total = std::sync::atomic::AtomicUsize::new(0);
+        coforall_locales(p.machine(), |loc| {
+            crate::pgas::coforall_tasks(2, |tid| {
+                let tok = s.register();
+                let base = (loc.index() * 2 + tid) * 1_000;
+                let mut popped = 0;
+                for i in 0..1_000 {
+                    s.push(&tok, base + i);
+                    if i % 3 == 0 {
+                        if s.pop(&tok).is_some() {
+                            popped += 1;
+                        }
+                    }
+                    if i % 256 == 0 {
+                        tok.try_reclaim();
+                    }
+                }
+                total.fetch_add(popped, std::sync::atomic::Ordering::Relaxed);
+            });
+        });
+        // Drain the remainder and check conservation: pushes == pops.
+        let tok = s.register();
+        let drained = s.drain(&tok);
+        let popped = total.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(popped + drained, 4 * 1_000);
+        drop(tok);
+        em.clear();
+        assert_eq!(em.stats().deferred, em.stats().freed);
+    }
+
+    #[test]
+    fn distributed_nodes_retain_owner_locale() {
+        let (p, em) = setup(4);
+        let s = LockFreeStack::on(Arc::clone(&p), em.clone(), LocaleId(0));
+        coforall_locales(p.machine(), |loc| {
+            let tok = s.register();
+            s.push(&tok, loc.index());
+        });
+        // Stack now holds one node per locale; heads-of-list locales vary.
+        let mut locales_seen = std::collections::BTreeSet::new();
+        let tok = s.register();
+        while let Some(_v) = {
+            let head = s.head.read();
+            if head.is_nil() {
+                None
+            } else {
+                locales_seen.insert(head.locale().index());
+                s.pop(&tok)
+            }
+        } {}
+        assert_eq!(locales_seen.len(), 4, "nodes allocated on all pushing locales");
+        drop(tok);
+        em.clear();
+        assert_eq!(p.live_objects(), 0);
+    }
+}

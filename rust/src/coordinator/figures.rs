@@ -1,0 +1,277 @@
+//! Drivers that regenerate every figure in the paper's evaluation
+//! (§III, Figs. 3–7) plus the design-choice ablations. Shared by the
+//! `cargo bench` targets and the `pgas-nb bench` CLI subcommands.
+//!
+//! Absolute numbers come from the DES testbed's cost model (we do not
+//! have a Cray XC-50); the *shape* — who wins, scaling slopes, crossover
+//! points — is the reproduction target. See EXPERIMENTS.md.
+
+use crate::pgas::NicModel;
+use crate::sim::{
+    run_atomics, run_epoch, AtomicVariant, AtomicsConfig, EpochConfig, EpochResult, EpochWorkload,
+};
+use crate::util::table::Table;
+
+/// Sweep scale: `quick` for CI, `full` for the paper-size testbed.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        if std::env::var("PGAS_NB_BENCH_QUICK").is_ok() {
+            Scale::Quick
+        } else {
+            Scale::Full
+        }
+    }
+
+    fn locale_sweep(self) -> Vec<usize> {
+        match self {
+            Scale::Quick => vec![2, 4, 8],
+            Scale::Full => vec![2, 4, 8, 16, 32, 64],
+        }
+    }
+
+    fn task_sweep(self) -> Vec<usize> {
+        match self {
+            Scale::Quick => vec![1, 4, 11],
+            Scale::Full => vec![1, 2, 4, 8, 16, 22, 44],
+        }
+    }
+
+    fn tasks_per_locale(self) -> usize {
+        match self {
+            Scale::Quick => 8,
+            // 44-core Broadwell nodes; leave a couple of cores for the
+            // runtime as Chapel does in practice.
+            Scale::Full => 22,
+        }
+    }
+
+    fn objs_per_task(self) -> usize {
+        match self {
+            Scale::Quick => 2_048,
+            Scale::Full => 8_192,
+        }
+    }
+}
+
+fn model(network_atomics: bool) -> NicModel {
+    if network_atomics {
+        NicModel::aries()
+    } else {
+        NicModel::aries_no_network_atomics()
+    }
+}
+
+fn na_label(on: bool) -> &'static str {
+    if on {
+        "rdma"
+    } else {
+        "no-rdma"
+    }
+}
+
+/// Fig. 3 — AtomicObject vs atomic int, shared + distributed memory,
+/// with/without network atomics. Strong scaling of a fixed op count.
+pub fn fig3(scale: Scale) -> Table {
+    let mut t = Table::new(&[
+        "memory", "variant", "atomics", "tasks", "locales", "ns_per_op", "mops", "cas_retries",
+    ]);
+    let variants =
+        [AtomicVariant::AtomicInt, AtomicVariant::AtomicObject, AtomicVariant::AtomicObjectAba];
+    // Shared memory: one locale, sweep task count; network atomics are
+    // irrelevant locally only when disabled, so use the no-rdma model.
+    let total_ops = 1 << 18;
+    for variant in variants {
+        for &tasks in &scale.task_sweep() {
+            let cfg = AtomicsConfig {
+                variant,
+                model: model(false),
+                locales: 1,
+                tasks_per_locale: tasks,
+                ops_per_task: total_ops / tasks,
+                vars_per_locale: 4096,
+                seed: 42,
+            };
+            let r = run_atomics(cfg);
+            t.row(&[
+                "shared".into(),
+                variant.label().into(),
+                "cpu".into(),
+                tasks.to_string(),
+                "1".into(),
+                format!("{:.1}", r.makespan_ns as f64 * tasks as f64 / total_ops as f64),
+                format!("{:.2}", r.throughput_mops),
+                r.cas_retries.to_string(),
+            ]);
+        }
+    }
+    // Distributed: sweep locales, both atomics modes.
+    for variant in variants {
+        for na in [true, false] {
+            for &locales in &scale.locale_sweep() {
+                let tpl = scale.tasks_per_locale();
+                let cfg = AtomicsConfig {
+                    variant,
+                    model: model(na),
+                    locales,
+                    tasks_per_locale: tpl,
+                    ops_per_task: (total_ops / (locales * tpl)).max(64),
+                    vars_per_locale: 1024,
+                    seed: 42,
+                };
+                let r = run_atomics(cfg);
+                t.row(&[
+                    "distributed".into(),
+                    variant.label().into(),
+                    na_label(na).into(),
+                    tpl.to_string(),
+                    locales.to_string(),
+                    format!("{:.1}", (locales * tpl) as f64 * 1e3 / r.throughput_mops.max(1e-12)),
+                    format!("{:.2}", r.throughput_mops),
+                    r.cas_retries.to_string(),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+fn epoch_row(t: &mut Table, series: &str, na: bool, locales: usize, r: &EpochResult) {
+    t.row(&[
+        series.into(),
+        na_label(na).into(),
+        locales.to_string(),
+        format!("{:.2}", r.throughput_mops),
+        r.advances.to_string(),
+        r.lost_local.to_string(),
+        r.lost_global.to_string(),
+        r.not_quiescent.to_string(),
+        r.freed.to_string(),
+        r.freed_remote.to_string(),
+    ]);
+}
+
+fn epoch_header() -> Table {
+    Table::new(&[
+        "series", "atomics", "locales", "mops", "advances", "lost_local", "lost_global",
+        "not_quiescent", "freed", "freed_remote",
+    ])
+}
+
+fn epoch_cfg(scale: Scale, workload: EpochWorkload, na: bool, locales: usize) -> EpochConfig {
+    EpochConfig {
+        workload,
+        model: model(na),
+        locales,
+        tasks_per_locale: scale.tasks_per_locale(),
+        objs_per_task: scale.objs_per_task(),
+        remote_ratio: 0.0,
+        fcfs_local_election: true,
+        slow_locale: None,
+        slow_factor: 8,
+        seed: 7,
+    }
+}
+
+/// Fig. 4 — deletion with `tryReclaim` once per 1024 iterations.
+pub fn fig4(scale: Scale) -> Table {
+    let mut t = epoch_header();
+    for na in [true, false] {
+        for &locales in &scale.locale_sweep() {
+            let cfg = epoch_cfg(scale, EpochWorkload::DeleteReclaimEvery(1024), na, locales);
+            let r = run_epoch(cfg);
+            epoch_row(&mut t, "reclaim/1024", na, locales, &r);
+        }
+    }
+    t
+}
+
+/// Fig. 5 — deletion with `tryReclaim` every iteration.
+pub fn fig5(scale: Scale) -> Table {
+    let mut t = epoch_header();
+    for na in [true, false] {
+        for &locales in &scale.locale_sweep() {
+            let cfg = epoch_cfg(scale, EpochWorkload::DeleteReclaimEvery(1), na, locales);
+            let r = run_epoch(cfg);
+            epoch_row(&mut t, "reclaim/1", na, locales, &r);
+        }
+    }
+    t
+}
+
+/// Fig. 6 — deletion, reclamation only at the end; remote-object ratio
+/// 0 / 50 / 100 %.
+pub fn fig6(scale: Scale) -> Table {
+    let mut t = epoch_header();
+    for ratio in [0.0, 0.5, 1.0] {
+        for &locales in &scale.locale_sweep() {
+            let mut cfg = epoch_cfg(scale, EpochWorkload::DeleteReclaimAtEnd, false, locales);
+            cfg.remote_ratio = ratio;
+            let r = run_epoch(cfg);
+            epoch_row(&mut t, &format!("remote{}%", (ratio * 100.0) as u32), false, locales, &r);
+        }
+    }
+    t
+}
+
+/// Fig. 7 — read-only pin/unpin workload.
+pub fn fig7(scale: Scale) -> Table {
+    let mut t = epoch_header();
+    for na in [true, false] {
+        for &locales in &scale.locale_sweep() {
+            let cfg = epoch_cfg(scale, EpochWorkload::ReadOnly, na, locales);
+            let r = run_epoch(cfg);
+            epoch_row(&mut t, "read-only", na, locales, &r);
+        }
+    }
+    t
+}
+
+/// Ablation: two-level FCFS election vs direct global contention.
+pub fn ablation_election(scale: Scale) -> Table {
+    let mut t = epoch_header();
+    for fcfs in [true, false] {
+        for &locales in &scale.locale_sweep() {
+            let mut cfg = epoch_cfg(scale, EpochWorkload::DeleteReclaimEvery(1), false, locales);
+            cfg.fcfs_local_election = fcfs;
+            let r = run_epoch(cfg);
+            epoch_row(&mut t, if fcfs { "fcfs" } else { "no-local-election" }, false, locales, &r);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_quick_produces_all_series() {
+        let t = fig3(Scale::Quick);
+        // 3 variants × 3 task points (shared) + 3 × 2 modes × 3 locales (dist).
+        assert_eq!(t.len(), 9 + 18);
+    }
+
+    #[test]
+    fn fig7_quick_shape() {
+        let t = fig7(Scale::Quick);
+        assert_eq!(t.len(), 2 * 3);
+        let csv = t.to_csv();
+        assert!(csv.contains("read-only"));
+        assert!(csv.contains("rdma"));
+    }
+
+    #[test]
+    fn fig6_ratios_present() {
+        let t = fig6(Scale::Quick);
+        let csv = t.to_csv();
+        assert!(csv.contains("remote0%"));
+        assert!(csv.contains("remote50%"));
+        assert!(csv.contains("remote100%"));
+    }
+}

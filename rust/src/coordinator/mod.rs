@@ -1,0 +1,283 @@
+//! L3 coordinator: the CLI entry points (figure benches, demos, the PJRT
+//! scan path, custom sim points) and shared figure drivers.
+
+pub mod figures;
+
+use crate::collections::{InterlockedHashTable, LockFreeQueue, LockFreeStack};
+use crate::epoch::EpochManager;
+use crate::pgas::{coforall_locales, coforall_tasks, Machine, NicModel, Pgas};
+use crate::runtime::SharedReclaimScan;
+use crate::sim::{run_epoch, EpochConfig, EpochWorkload};
+use crate::util::cli::Args;
+use crate::util::table::{fmt_ops, Table};
+use anyhow::{bail, Result};
+use figures::Scale;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub const USAGE: &str = "pgas-nb — distributed non-blocking building blocks in a PGAS model
+
+Usage: pgas-nb <subcommand> [--opts]
+
+Subcommands:
+  bench <fig3|fig4|fig5|fig6|fig7|election>   regenerate a paper figure
+        [--quick] [--csv]
+  demo  [--locales N] [--tasks N]             real-substrate collections demo
+  scan  [--locales N] [--tokens N]            PJRT reclaim-scan vs scalar oracle
+  sim   [--workload readonly|delete-end|reclaim-every] [--every K]
+        [--locales A,B,..] [--tasks N] [--objs N] [--remote-ratio F]
+        [--no-network-atomics]                custom DES testbed point
+  info                                        environment / model summary
+";
+
+/// Dispatch the CLI. Returns the process exit code.
+pub fn run_cli(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("bench") => cmd_bench(args),
+        Some("demo") => cmd_demo(args),
+        Some("scan") => cmd_scan(args),
+        Some("sim") => cmd_sim(args),
+        Some("info") => cmd_info(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn emit(args: &Args, title: &str, t: &Table) {
+    println!("\n=== {title} ===");
+    if args.flag("csv") {
+        println!("{}", t.to_csv());
+    } else {
+        println!("{}", t.render());
+    }
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let scale = if args.flag("quick") { Scale::Quick } else { Scale::from_env() };
+    let which = args.positional().get(1).map(|s| s.as_str()).unwrap_or("all");
+    let t0 = Instant::now();
+    match which {
+        "fig3" => emit(args, "Fig 3: AtomicObject vs atomic int", &figures::fig3(scale)),
+        "fig4" => emit(args, "Fig 4: deletion, tryReclaim per 1024", &figures::fig4(scale)),
+        "fig5" => emit(args, "Fig 5: deletion, tryReclaim every iteration", &figures::fig5(scale)),
+        "fig6" => emit(args, "Fig 6: deletion, reclaim at end (remote ratio)", &figures::fig6(scale)),
+        "fig7" => emit(args, "Fig 7: read-only", &figures::fig7(scale)),
+        "election" => emit(args, "Ablation: FCFS election", &figures::ablation_election(scale)),
+        "all" => {
+            emit(args, "Fig 3", &figures::fig3(scale));
+            emit(args, "Fig 4", &figures::fig4(scale));
+            emit(args, "Fig 5", &figures::fig5(scale));
+            emit(args, "Fig 6", &figures::fig6(scale));
+            emit(args, "Fig 7", &figures::fig7(scale));
+        }
+        other => bail!("unknown figure '{other}'"),
+    }
+    eprintln!("[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Exercise the real substrate end to end: stack, queue and hash table
+/// under concurrent churn with EBR reclamation, then report counters.
+fn cmd_demo(args: &Args) -> Result<()> {
+    let locales = args.get_usize("locales", 4);
+    let tasks = args.get_usize("tasks", 2);
+    let ops = args.get_usize("ops", 2_000);
+    let pgas = Pgas::new(Machine::new(locales, tasks), NicModel::aries_no_network_atomics());
+    let em = EpochManager::new(Arc::clone(&pgas));
+
+    let stack = LockFreeStack::new(Arc::clone(&pgas), em.clone());
+    let queue = LockFreeQueue::new(Arc::clone(&pgas), em.clone());
+    let table: InterlockedHashTable<u64> =
+        InterlockedHashTable::new(Arc::clone(&pgas), em.clone(), locales * 16);
+
+    let t0 = Instant::now();
+    coforall_locales(pgas.machine(), |loc| {
+        coforall_tasks(tasks, |tid| {
+            let tok = em.register();
+            let mut rng = crate::util::rng::Xoshiro256pp::new((loc.index() * tasks + tid) as u64);
+            for i in 0..ops {
+                let k = 1 + rng.next_below(512);
+                match rng.next_below(6) {
+                    0 => stack.push(&tok, k),
+                    1 => {
+                        stack.pop(&tok);
+                    }
+                    2 => queue.enqueue(&tok, k),
+                    3 => {
+                        queue.dequeue(&tok);
+                    }
+                    4 => {
+                        table.insert(&tok, k, k * 2);
+                    }
+                    _ => {
+                        if let Some(v) = table.get(&tok, k) {
+                            assert_eq!(v, k * 2);
+                        }
+                        table.remove(&tok, k);
+                    }
+                }
+                if i % 512 == 0 {
+                    tok.try_reclaim();
+                }
+            }
+        });
+    });
+    let wall = t0.elapsed();
+
+    // Teardown: reclaim whatever is still deferred.
+    em.clear();
+    let s = em.stats();
+    let comm = pgas.comm_totals();
+    let total_ops = (locales * tasks * ops) as u64;
+    println!("demo: {} ops across {} locales x {} tasks in {:.2?}", total_ops, locales, tasks, wall);
+    println!("  throughput          {} ops/s", fmt_ops(total_ops as f64 / wall.as_secs_f64()));
+    println!("  epoch advances      {}", s.advances);
+    println!("  deferred/freed      {}/{}", s.deferred, s.freed);
+    println!("  comm: rdma={} local={} ams={} puts={} gets={}",
+        comm.atomics_rdma, comm.atomics_local, comm.ams, comm.puts, comm.gets);
+    println!("  modeled comm time   {:.2} ms", comm.virtual_ns as f64 / 1e6);
+    Ok(())
+}
+
+/// Load the reclaim-scan artifact, run it against random token tables and
+/// verify against the scalar oracle; report latencies for both paths.
+fn cmd_scan(args: &Args) -> Result<()> {
+    let locales = args.get_usize("locales", 8);
+    let tokens = args.get_usize("tokens", 16);
+    let reps = args.get_usize("reps", 100);
+    let dir = args.get_or("artifacts", "artifacts");
+    let scan = SharedReclaimScan::load_fitting(dir, locales, tokens, 512)?;
+    println!("loaded artifact shape {:?}", scan.shape());
+
+    let mut rng = crate::util::rng::Xoshiro256pp::new(3);
+    let mut kernel_ns = 0u128;
+    let mut scalar_ns = 0u128;
+    let mut mismatches = 0;
+    for _ in 0..reps {
+        let ge = 1 + rng.next_below(3) as i32;
+        let epochs: Vec<Vec<i32>> = (0..locales)
+            .map(|_| (0..tokens).map(|_| rng.next_below(4) as i32).collect())
+            .collect();
+        let t0 = Instant::now();
+        let out = scan.scan(&epochs, ge, &[])?;
+        kernel_ns += t0.elapsed().as_nanos();
+
+        let t1 = Instant::now();
+        let safe = epochs.iter().flatten().all(|&e| e == 0 || e == ge);
+        scalar_ns += t1.elapsed().as_nanos();
+        if out.safe != safe {
+            mismatches += 1;
+        }
+    }
+    println!("reps={reps} mismatches={mismatches}");
+    println!("  PJRT kernel scan   {:.1} us/scan", kernel_ns as f64 / reps as f64 / 1e3);
+    println!("  scalar scan        {:.3} us/scan", scalar_ns as f64 / reps as f64 / 1e3);
+    if mismatches > 0 {
+        bail!("kernel scan diverged from the scalar oracle");
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let workload = match args.get_or("workload", "reclaim-every") {
+        "readonly" => EpochWorkload::ReadOnly,
+        "delete-end" => EpochWorkload::DeleteReclaimAtEnd,
+        "reclaim-every" => EpochWorkload::DeleteReclaimEvery(args.get_usize("every", 1024)),
+        other => bail!("unknown workload '{other}'"),
+    };
+    let model = if args.flag("no-network-atomics") {
+        NicModel::aries_no_network_atomics()
+    } else {
+        NicModel::aries()
+    };
+    let mut t = Table::new(&["locales", "mops", "advances", "lost_local", "lost_global", "freed"]);
+    for locales in args.get_usize_list("locales", &[2, 4, 8, 16]) {
+        let cfg = EpochConfig {
+            workload,
+            model,
+            locales,
+            tasks_per_locale: args.get_usize("tasks", 8),
+            objs_per_task: args.get_usize("objs", 4096),
+            remote_ratio: args.get_f64("remote-ratio", 0.0),
+            fcfs_local_election: !args.flag("no-fcfs"),
+            slow_locale: args.get("slow-locale").and_then(|v| v.parse().ok()),
+            slow_factor: args.get_u64("slow-factor", 8),
+            seed: args.get_u64("seed", 7),
+        };
+        let r = run_epoch(cfg);
+        t.row_display(&[
+            locales.to_string(),
+            format!("{:.2}", r.throughput_mops),
+            r.advances.to_string(),
+            r.lost_local.to_string(),
+            r.lost_global.to_string(),
+            r.freed.to_string(),
+        ]);
+    }
+    emit(args, "custom sim sweep", &t);
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("pgas-nb — reproduction of Dewan & Jenkins, IPDPSW 2020");
+    println!("  DCAS lock-free: {}", crate::atomics::dcas_is_lock_free());
+    println!("  host cores: {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    for (name, m) in [
+        ("aries(rdma)", NicModel::aries()),
+        ("aries(no-rdma)", NicModel::aries_no_network_atomics()),
+        ("infiniband", NicModel::infiniband()),
+    ] {
+        println!(
+            "  model {name}: local={}ns dcas={}ns rdma={}ns am={}ns handlers={}",
+            m.local_atomic_ns, m.local_dcas_ns, m.rdma_atomic_ns, m.am_ns, m.am_handlers
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        let v: Vec<String> =
+            std::iter::once("pgas-nb".into()).chain(s.split_whitespace().map(String::from)).collect();
+        Args::parse(&v)
+    }
+
+    #[test]
+    fn no_subcommand_prints_usage() {
+        run_cli(&argv("")).unwrap();
+    }
+
+    #[test]
+    fn info_runs() {
+        run_cli(&argv("info")).unwrap();
+    }
+
+    #[test]
+    fn demo_small_runs_clean() {
+        run_cli(&argv("demo --locales 2 --tasks 2 --ops 300")).unwrap();
+    }
+
+    #[test]
+    fn sim_custom_point() {
+        run_cli(&argv("sim --workload readonly --locales 2 --tasks 2 --objs 512")).unwrap();
+    }
+
+    #[test]
+    fn bench_unknown_fig_errors() {
+        assert!(run_cli(&argv("bench fig99")).is_err());
+    }
+
+    #[test]
+    fn scan_runs_when_artifacts_present() {
+        let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+        if !std::path::Path::new(&dir).join("manifest.json").exists() {
+            return;
+        }
+        run_cli(&argv(&format!("scan --locales 4 --tokens 8 --reps 5 --artifacts {dir}"))).unwrap();
+    }
+}

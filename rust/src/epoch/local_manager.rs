@@ -1,0 +1,319 @@
+//! `LocalEpochManager` — the shared-memory-optimized variant (§II-C).
+//!
+//! Functions like [`super::EpochManager`] but has **no global epoch** and
+//! never considers remote objects: no election against other locales, no
+//! cluster scan, no scatter lists — just the local token registry, three
+//! limbo lists and a locale-private epoch. This speeds up computations
+//! that don't need reclamation support across locales.
+
+use super::limbo::{LimboList, NodePool};
+use super::manager::{ReclaimOutcome, ReclaimPolicy, NUM_EPOCHS};
+use super::token::{Token, TokenRegistry, QUIESCENT};
+use crate::pgas::{ErasedPtr, GlobalPtr, Pgas};
+use std::ptr::NonNull;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+struct LemShared {
+    /// When present, frees are routed through the substrate so heap
+    /// accounting (leak detection) stays balanced.
+    pgas: Option<Arc<Pgas>>,
+    epoch: AtomicU64,
+    is_setting_epoch: AtomicBool,
+    limbo: [LimboList; NUM_EPOCHS as usize],
+    pool: NodePool,
+    tokens: TokenRegistry,
+    policy: ReclaimPolicy,
+    freed: AtomicU64,
+    deferred: AtomicU64,
+    advances: AtomicU64,
+}
+
+impl LemShared {
+    #[inline]
+    unsafe fn free(&self, e: ErasedPtr) {
+        match &self.pgas {
+            Some(p) => unsafe { p.free_erased(e) },
+            None => unsafe { e.drop_in_place() },
+        }
+    }
+}
+
+impl Drop for LemShared {
+    fn drop(&mut self) {
+        for list in &self.limbo {
+            let pool = &self.pool;
+            let chain = list.pop_all();
+            let mut objs = Vec::new();
+            chain.drain(pool, |e| objs.push(e));
+            for e in objs {
+                unsafe { self.free(e) };
+            }
+        }
+    }
+}
+
+/// Shared-memory epoch-based reclamation manager. Cheap to clone.
+#[derive(Clone)]
+pub struct LocalEpochManager {
+    sh: Arc<LemShared>,
+}
+
+impl Default for LocalEpochManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LocalEpochManager {
+    pub fn new() -> LocalEpochManager {
+        Self::with_policy(ReclaimPolicy::default())
+    }
+
+    /// Standalone, but routes frees through `pgas` so the substrate's
+    /// heap accounting (leak detector) stays balanced.
+    pub fn with_pgas(pgas: Arc<Pgas>) -> LocalEpochManager {
+        let mut m = Self::new();
+        Arc::get_mut(&mut m.sh).unwrap().pgas = Some(pgas);
+        m
+    }
+
+    pub fn with_policy(policy: ReclaimPolicy) -> LocalEpochManager {
+        LocalEpochManager {
+            sh: Arc::new(LemShared {
+                pgas: None,
+                epoch: AtomicU64::new(1),
+                is_setting_epoch: AtomicBool::new(false),
+                limbo: [LimboList::new(), LimboList::new(), LimboList::new()],
+                pool: NodePool::new(),
+                tokens: TokenRegistry::new(),
+                policy,
+                freed: AtomicU64::new(0),
+                deferred: AtomicU64::new(0),
+                advances: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn register(&self) -> LocalEpochToken {
+        LocalEpochToken { mgr: self.clone(), tok: NonNull::from(self.sh.tokens.register()) }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.sh.epoch.load(Ordering::SeqCst)
+    }
+
+    pub fn advances(&self) -> u64 {
+        self.sh.advances.load(Ordering::Relaxed)
+    }
+
+    pub fn freed(&self) -> u64 {
+        self.sh.freed.load(Ordering::Relaxed)
+    }
+
+    pub fn deferred(&self) -> u64 {
+        self.sh.deferred.load(Ordering::Relaxed)
+    }
+
+    /// Single-locale `tryReclaim`: one election flag, one scan, advance,
+    /// drain. Lock-free: losers return immediately.
+    pub fn try_reclaim(&self) -> ReclaimOutcome {
+        let sh = &self.sh;
+        if sh.is_setting_epoch.swap(true, Ordering::SeqCst) {
+            return ReclaimOutcome::LostLocalElection;
+        }
+        let outcome = self.reclaim_elected();
+        sh.is_setting_epoch.store(false, Ordering::SeqCst);
+        outcome
+    }
+
+    fn reclaim_elected(&self) -> ReclaimOutcome {
+        let sh = &self.sh;
+        let this_epoch = sh.epoch.load(Ordering::SeqCst);
+        let safe = sh.tokens.scan(|t: &Token| {
+            let le = t.local_epoch.load(Ordering::SeqCst);
+            !(le != QUIESCENT && le != this_epoch)
+        });
+        if !safe {
+            return ReclaimOutcome::NotQuiescent;
+        }
+        let new_epoch = this_epoch % NUM_EPOCHS + 1;
+        let idx = sh.policy.reclaim_index(new_epoch);
+        let freed = sh.limbo[idx].pop_all().drain(&sh.pool, |e| unsafe { sh.free(e) });
+        sh.epoch.store(new_epoch, Ordering::SeqCst);
+        sh.advances.fetch_add(1, Ordering::Relaxed);
+        sh.freed.fetch_add(freed as u64, Ordering::Relaxed);
+        ReclaimOutcome::Advanced { freed, remote: 0 }
+    }
+
+    /// Reclaim all three lists. Caller guarantees quiescence.
+    pub fn clear(&self) -> usize {
+        let sh = &self.sh;
+        let mut n = 0;
+        for list in &sh.limbo {
+            n += list.pop_all().drain(&sh.pool, |e| unsafe { sh.free(e) });
+        }
+        sh.freed.fetch_add(n as u64, Ordering::Relaxed);
+        n
+    }
+}
+
+/// RAII token for the local manager.
+pub struct LocalEpochToken {
+    mgr: LocalEpochManager,
+    tok: NonNull<Token>,
+}
+
+unsafe impl Send for LocalEpochToken {}
+
+impl LocalEpochToken {
+    #[inline]
+    fn token(&self) -> &Token {
+        unsafe { self.tok.as_ref() }
+    }
+
+    pub fn pin(&self) {
+        let sh = &self.mgr.sh;
+        let tok = self.token();
+        if tok.local_epoch.load(Ordering::SeqCst) != QUIESCENT {
+            return;
+        }
+        loop {
+            let e = sh.epoch.load(Ordering::SeqCst);
+            tok.local_epoch.store(e, Ordering::SeqCst);
+            if sh.epoch.load(Ordering::SeqCst) == e {
+                return;
+            }
+        }
+    }
+
+    pub fn unpin(&self) {
+        self.token().local_epoch.store(QUIESCENT, Ordering::SeqCst);
+    }
+
+    pub fn is_pinned(&self) -> bool {
+        self.token().is_pinned()
+    }
+
+    pub fn defer_delete<T>(&self, p: GlobalPtr<T>) {
+        self.defer_delete_erased(p.erase());
+    }
+
+    pub fn defer_delete_erased(&self, e: ErasedPtr) {
+        let sh = &self.mgr.sh;
+        let epoch = self.token().local_epoch.load(Ordering::SeqCst);
+        assert_ne!(epoch, QUIESCENT, "defer_delete requires a pinned token");
+        sh.limbo[(epoch - 1) as usize].push(&sh.pool, e);
+        sh.deferred.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn try_reclaim(&self) -> ReclaimOutcome {
+        self.mgr.try_reclaim()
+    }
+}
+
+impl Drop for LocalEpochToken {
+    fn drop(&mut self) {
+        self.mgr.sh.tokens.unregister(self.token());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pgas::{LocaleId, Pgas};
+
+    #[test]
+    fn lifecycle_and_advance() {
+        let lem = LocalEpochManager::new();
+        assert_eq!(lem.epoch(), 1);
+        let tok = lem.register();
+        tok.pin();
+        assert!(lem.try_reclaim().advanced());
+        assert_eq!(lem.epoch(), 2);
+        assert_eq!(lem.try_reclaim(), ReclaimOutcome::NotQuiescent, "stale pin blocks");
+        tok.unpin();
+        assert!(lem.try_reclaim().advanced());
+    }
+
+    #[test]
+    fn defer_and_reclaim_frees() {
+        let p = Pgas::smp();
+        let lem = LocalEpochManager::with_pgas(Arc::clone(&p));
+        let tok = lem.register();
+        tok.pin();
+        for i in 0..10u64 {
+            tok.defer_delete(p.alloc(LocaleId(0), i));
+        }
+        tok.unpin();
+        assert_eq!(p.live_objects(), 10);
+        for _ in 0..3 {
+            assert!(lem.try_reclaim().advanced());
+        }
+        assert_eq!(p.live_objects(), 0, "all freed within one full epoch cycle");
+        assert_eq!(lem.freed(), 10);
+    }
+
+    #[test]
+    fn clear_drains_everything() {
+        let p = Pgas::smp();
+        let lem = LocalEpochManager::with_pgas(Arc::clone(&p));
+        let tok = lem.register();
+        tok.pin();
+        for i in 0..7u64 {
+            tok.defer_delete(p.alloc(LocaleId(0), i));
+        }
+        tok.unpin();
+        assert_eq!(lem.clear(), 7);
+        assert_eq!(lem.clear(), 0);
+        assert_eq!(p.live_objects(), 0);
+    }
+
+    #[test]
+    fn concurrent_stress_counts_balance() {
+        let p = Pgas::smp();
+        let lem = LocalEpochManager::with_pgas(Arc::clone(&p));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let p = &p;
+                let lem = lem.clone();
+                s.spawn(move || {
+                    let tok = lem.register();
+                    for i in 0..1_000u64 {
+                        tok.pin();
+                        tok.defer_delete(p.alloc(LocaleId(0), i));
+                        tok.unpin();
+                        if i % 100 == 0 {
+                            tok.try_reclaim();
+                        }
+                    }
+                });
+            }
+        });
+        lem.clear();
+        assert_eq!(lem.deferred(), 4_000);
+        assert_eq!(lem.freed(), 4_000);
+        assert_eq!(p.live_objects(), 0);
+    }
+
+    #[test]
+    fn drop_reclaims_pending() {
+        use std::sync::atomic::AtomicUsize;
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let p = Pgas::smp();
+        {
+            let lem = LocalEpochManager::new();
+            let tok = lem.register();
+            tok.pin();
+            tok.defer_delete(p.alloc(LocaleId(0), D));
+            tok.unpin();
+        }
+        assert_eq!(DROPS.load(Ordering::SeqCst), 1, "manager drop must run destructors");
+    }
+}

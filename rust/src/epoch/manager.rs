@@ -1,0 +1,867 @@
+//! The distributed `EpochManager` (paper §II-B/§II-C, Listing 4).
+//!
+//! A privatized, lock-free, epoch-based memory-reclamation manager:
+//!
+//! * one [`LocaleInstance`] per locale (zero-communication access via
+//!   [`Privatized`]), each holding a cached epoch, a local election flag,
+//!   three limbo lists, a node pool and a token registry;
+//! * a single *global epoch* object (living on locale 0) that all locales
+//!   reach consensus on;
+//! * `try_reclaim`: first-come-first-served election (local flag, then
+//!   global flag), a cluster-wide quiescence scan, epoch advance, and
+//!   reclamation of the expired limbo list with **scatter lists** that
+//!   group objects by owning locale so remote frees are one bulk transfer
+//!   per locale instead of one RPC per object.
+//!
+//! ## Reclaim policy
+//!
+//! The paper (Fig. 2) reclaims the list two epochs stale at each advance.
+//! A laggard task that pins one epoch behind (possible in the window
+//! between the global advance and its locale's cache update) and *defers a
+//! deletion* from that stale epoch can make the two-stale list unsafe for
+//! a concurrent same-epoch reader. We therefore default to reclaiming the
+//! **three-stale** list (the one about to become current — provably clear
+//! of any reader that could predate the deferral) and provide
+//! [`ReclaimPolicy::PaperTwoStale`] for exact-paper behaviour; the
+//! `ablations` bench compares them. With either policy a list is always
+//! drained before it becomes current again.
+
+use super::limbo::{LimboList, NodePool};
+use super::token::{Token, TokenRegistry, QUIESCENT};
+use crate::pgas::{here, ErasedPtr, GlobalPtr, LocaleId, NicOp, Pgas, Privatized};
+use crate::runtime::SharedReclaimScan;
+use once_cell::sync::OnceCell;
+use std::ptr::NonNull;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Number of rotating epochs/limbo lists (paper: e-1, e, e+1).
+pub const NUM_EPOCHS: u64 = 3;
+
+/// Which stale limbo list an advance reclaims (see module docs).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum ReclaimPolicy {
+    /// Reclaim the three-stale list (the one about to become current).
+    #[default]
+    Conservative,
+    /// Reclaim the two-stale list, exactly as in the paper's Fig. 2.
+    PaperTwoStale,
+}
+
+impl ReclaimPolicy {
+    /// Index of the limbo list to drain when advancing *to* `new_epoch`.
+    #[inline]
+    pub fn reclaim_index(self, new_epoch: u64) -> usize {
+        match self {
+            // The list that is about to become current (3 epochs stale).
+            ReclaimPolicy::Conservative => (new_epoch - 1) as usize,
+            // The e-1 list relative to the epoch being left (2 stale).
+            ReclaimPolicy::PaperTwoStale => (new_epoch % NUM_EPOCHS) as usize,
+        }
+    }
+}
+
+/// Outcome of one `try_reclaim` attempt.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum ReclaimOutcome {
+    /// Another task on this locale is already attempting (FCFS election).
+    LostLocalElection,
+    /// Another locale holds the global election flag.
+    LostGlobalElection,
+    /// A token was pinned in a previous epoch; no advance possible.
+    NotQuiescent,
+    /// Epoch advanced; `freed` objects reclaimed, `remote` of them on
+    /// other locales than the one that deferred them.
+    Advanced { freed: usize, remote: usize },
+}
+
+impl ReclaimOutcome {
+    pub fn advanced(&self) -> bool {
+        matches!(self, ReclaimOutcome::Advanced { .. })
+    }
+}
+
+/// Cumulative manager statistics (all locales).
+#[derive(Debug, Default)]
+pub struct ManagerStats {
+    pub attempts: AtomicU64,
+    pub lost_local: AtomicU64,
+    pub lost_global: AtomicU64,
+    pub not_quiescent: AtomicU64,
+    pub advances: AtomicU64,
+    pub freed: AtomicU64,
+    pub freed_remote: AtomicU64,
+}
+
+/// A snapshot of [`ManagerStats`].
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub attempts: u64,
+    pub lost_local: u64,
+    pub lost_global: u64,
+    pub not_quiescent: u64,
+    pub advances: u64,
+    pub freed: u64,
+    pub freed_remote: u64,
+    pub deferred: u64,
+    pub pins: u64,
+}
+
+/// Per-locale privatized state.
+pub(crate) struct LocaleInstance {
+    locale: LocaleId,
+    /// Locale-private cache of the global epoch.
+    locale_epoch: AtomicU64,
+    /// FCFS local election flag for `try_reclaim`.
+    is_setting_epoch: AtomicBool,
+    limbo: [LimboList; NUM_EPOCHS as usize],
+    pool: NodePool,
+    tokens: TokenRegistry,
+    /// Hot-path counters kept locale-private (privatization applies to
+    /// the manager's own bookkeeping too — a single global counter would
+    /// be a contended cache line on every pin).
+    pins: AtomicU64,
+    deferred: AtomicU64,
+}
+
+impl LocaleInstance {
+    fn new(locale: LocaleId) -> LocaleInstance {
+        LocaleInstance {
+            locale,
+            locale_epoch: AtomicU64::new(1),
+            is_setting_epoch: AtomicBool::new(false),
+            limbo: [LimboList::new(), LimboList::new(), LimboList::new()],
+            pool: NodePool::new(),
+            tokens: TokenRegistry::new(),
+            pins: AtomicU64::new(0),
+            deferred: AtomicU64::new(0),
+        }
+    }
+}
+
+struct EmShared {
+    pgas: Arc<Pgas>,
+    policy: ReclaimPolicy,
+    /// Locale hosting the global epoch object ("a class instance wraps the
+    /// global epoch itself so that there is a single centralized and
+    /// coherent epoch").
+    global_home: LocaleId,
+    global_epoch: AtomicU64,
+    global_flag: AtomicBool,
+    inst: Privatized<LocaleInstance>,
+    stats: ManagerStats,
+    /// Optional PJRT reclaim-scan executable: when set (and the token
+    /// population fits its shape), the quiescence scan runs as one bulk
+    /// GET per locale + a fused XLA reduction instead of per-token
+    /// atomic reads. See `runtime::reclaim_scan`.
+    scanner: OnceCell<SharedReclaimScan>,
+}
+
+impl Drop for EmShared {
+    fn drop(&mut self) {
+        // Reclaim everything still deferred so teardown never leaks. The
+        // last handle going away implies no user tasks remain.
+        for (_, inst) in self.inst.iter() {
+            for list in &inst.limbo {
+                list.pop_all().drain(&inst.pool, |e| unsafe { self.pgas.free_erased(e) });
+            }
+        }
+    }
+}
+
+/// The distributed epoch manager handle. Cheap to clone; all clones share
+/// one manager (record-wrapping semantics).
+#[derive(Clone)]
+pub struct EpochManager {
+    sh: Arc<EmShared>,
+}
+
+impl EpochManager {
+    pub fn new(pgas: Arc<Pgas>) -> EpochManager {
+        Self::with_policy(pgas, ReclaimPolicy::default())
+    }
+
+    pub fn with_policy(pgas: Arc<Pgas>, policy: ReclaimPolicy) -> EpochManager {
+        let machine = pgas.machine();
+        EpochManager {
+            sh: Arc::new(EmShared {
+                pgas: Arc::clone(&pgas),
+                policy,
+                global_home: LocaleId(0),
+                global_epoch: AtomicU64::new(1),
+                global_flag: AtomicBool::new(false),
+                inst: Privatized::new(machine, LocaleInstance::new),
+                stats: ManagerStats::default(),
+                scanner: OnceCell::new(),
+            }),
+        }
+    }
+
+    pub fn pgas(&self) -> &Arc<Pgas> {
+        &self.sh.pgas
+    }
+
+    pub fn policy(&self) -> ReclaimPolicy {
+        self.sh.policy
+    }
+
+    /// Register the calling task, returning an RAII token (auto-unregister
+    /// on drop — the paper wraps tokens in a managed class for the same
+    /// effect in `forall` task intents).
+    pub fn register(&self) -> EpochToken {
+        let inst = self.sh.inst.here_instance();
+        // Token pop/push on the ABA-protected free stack: one DCAS.
+        self.sh.pgas.charge(NicOp::Atomic128, inst.locale);
+        let tok = inst.tokens.register();
+        EpochToken {
+            mgr: self.clone(),
+            tok: NonNull::from(tok),
+            locale: inst.locale,
+        }
+    }
+
+    /// Current global epoch (communicates with the global-epoch locale).
+    pub fn global_epoch(&self) -> u64 {
+        self.sh.pgas.charge(NicOp::Atomic64, self.sh.global_home);
+        self.sh.global_epoch.load(Ordering::SeqCst)
+    }
+
+    /// The calling locale's cached epoch (zero communication).
+    pub fn local_epoch(&self) -> u64 {
+        self.sh.pgas.charge(NicOp::Atomic64, here());
+        self.sh.inst.here_instance().locale_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Attach a PJRT reclaim-scan executable (once). Subsequent
+    /// `try_reclaim` calls use it for the quiescence scan when the live
+    /// token population fits its compiled shape.
+    pub fn set_scanner(&self, scanner: SharedReclaimScan) -> Result<(), SharedReclaimScan> {
+        self.sh.scanner.set(scanner)
+    }
+
+    pub fn has_scanner(&self) -> bool {
+        self.sh.scanner.get().is_some()
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        let s = &self.sh.stats;
+        let (mut pins, mut deferred) = (0, 0);
+        for (_, inst) in self.sh.inst.iter() {
+            pins += inst.pins.load(Ordering::Relaxed);
+            deferred += inst.deferred.load(Ordering::Relaxed);
+        }
+        StatsSnapshot {
+            attempts: s.attempts.load(Ordering::Relaxed),
+            lost_local: s.lost_local.load(Ordering::Relaxed),
+            lost_global: s.lost_global.load(Ordering::Relaxed),
+            not_quiescent: s.not_quiescent.load(Ordering::Relaxed),
+            advances: s.advances.load(Ordering::Relaxed),
+            freed: s.freed.load(Ordering::Relaxed),
+            freed_remote: s.freed_remote.load(Ordering::Relaxed),
+            deferred,
+            pins,
+        }
+    }
+
+    /// Attempt to advance the global epoch and reclaim the expired limbo
+    /// lists — Listing 4, faithfully: FCFS two-level election, cluster
+    /// quiescence scan, advance, per-locale drain with scatter lists.
+    pub fn try_reclaim(&self) -> ReclaimOutcome {
+        let sh = &self.sh;
+        let my = sh.inst.here_instance();
+        sh.stats.attempts.fetch_add(1, Ordering::Relaxed);
+
+        // (1) Local FCFS election: `if is_setting_epoch.testAndSet() return`.
+        sh.pgas.charge(NicOp::Atomic64, my.locale);
+        if my.is_setting_epoch.swap(true, Ordering::SeqCst) {
+            sh.stats.lost_local.fetch_add(1, Ordering::Relaxed);
+            return ReclaimOutcome::LostLocalElection;
+        }
+        // (2) Global election.
+        sh.pgas.charge(NicOp::Atomic64, sh.global_home);
+        if sh.global_flag.swap(true, Ordering::SeqCst) {
+            sh.pgas.charge(NicOp::Atomic64, my.locale);
+            my.is_setting_epoch.store(false, Ordering::SeqCst);
+            sh.stats.lost_global.fetch_add(1, Ordering::Relaxed);
+            return ReclaimOutcome::LostGlobalElection;
+        }
+
+        let outcome = self.advance_and_reclaim_elected();
+
+        // Release in reverse order.
+        sh.pgas.charge(NicOp::Atomic64, sh.global_home);
+        sh.global_flag.store(false, Ordering::SeqCst);
+        sh.pgas.charge(NicOp::Atomic64, my.locale);
+        my.is_setting_epoch.store(false, Ordering::SeqCst);
+        outcome
+    }
+
+    /// The elected task's body: scan, advance, reclaim.
+    fn advance_and_reclaim_elected(&self) -> ReclaimOutcome {
+        let sh = &self.sh;
+        let machine = sh.pgas.machine();
+
+        // (3) Quiescence scan across all locales (`coforall loc do on loc`).
+        sh.pgas.charge(NicOp::Atomic64, sh.global_home);
+        let this_epoch = sh.global_epoch.load(Ordering::SeqCst);
+        if !self.quiescence_scan(this_epoch) {
+            sh.stats.not_quiescent.fetch_add(1, Ordering::Relaxed);
+            return ReclaimOutcome::NotQuiescent;
+        }
+
+        // (4) Advance the global epoch.
+        let new_epoch = this_epoch % NUM_EPOCHS + 1;
+        sh.pgas.charge(NicOp::Atomic64, sh.global_home);
+        sh.global_epoch.store(new_epoch, Ordering::SeqCst);
+
+        // (5) Per-locale: drain the expired list, scatter objects by owner,
+        // bulk-free, then update the cached epoch. The drain happens
+        // *before* the cache update so no task on this locale can pin into
+        // `new_epoch` and push into the list while it is being drained
+        // (matters for the Conservative policy, where the drained list is
+        // the one about to become current).
+        let reclaim_idx = sh.policy.reclaim_index(new_epoch);
+        let (mut freed, mut remote) = (0usize, 0usize);
+        for loc in machine.locale_ids() {
+            let (f, r) = sh.pgas.on(loc, || {
+                let inst = sh.inst.on_locale(loc);
+                let drained = self.drain_and_scatter(inst, reclaim_idx);
+                sh.pgas.charge(NicOp::Atomic64, loc);
+                inst.locale_epoch.store(new_epoch, Ordering::SeqCst);
+                drained
+            });
+            freed += f;
+            remote += r;
+        }
+        sh.stats.advances.fetch_add(1, Ordering::Relaxed);
+        sh.stats.freed.fetch_add(freed as u64, Ordering::Relaxed);
+        sh.stats.freed_remote.fetch_add(remote as u64, Ordering::Relaxed);
+        ReclaimOutcome::Advanced { freed, remote }
+    }
+
+    /// Cluster-wide quiescence check: true iff every registered token is
+    /// quiescent or pinned in `this_epoch`. Uses the PJRT kernel scan when
+    /// attached and applicable; otherwise the scalar per-token read path.
+    fn quiescence_scan(&self, this_epoch: u64) -> bool {
+        let sh = &self.sh;
+        let machine = sh.pgas.machine();
+        if let Some(scanner) = sh.scanner.get() {
+            let shape = scanner.shape();
+            if machine.locales <= shape.locales {
+                // Gather each locale's token-epoch row with ONE bulk GET
+                // (instead of one atomic read per token), then run the
+                // fused reduction.
+                let mut rows: Vec<Vec<i32>> = Vec::with_capacity(machine.locales);
+                let mut fits = true;
+                for loc in machine.locale_ids() {
+                    let inst = sh.inst.on_locale(loc);
+                    let mut row = Vec::new();
+                    inst.tokens.scan(|t: &Token| {
+                        row.push(t.local_epoch.load(Ordering::SeqCst) as i32);
+                        true
+                    });
+                    if row.len() > shape.tokens {
+                        fits = false;
+                        break;
+                    }
+                    sh.pgas.charge(NicOp::Get(row.len().max(1) * 4), loc);
+                    rows.push(row);
+                }
+                if fits {
+                    if let Ok(out) = scanner.scan(&rows, this_epoch as i32, &[]) {
+                        return out.safe;
+                    }
+                }
+                // Artifact mismatch/failure: fall through to scalar scan.
+            }
+        }
+        for loc in machine.locale_ids() {
+            let safe = sh.pgas.on(loc, || {
+                let inst = sh.inst.on_locale(loc);
+                inst.tokens.scan(|t: &Token| {
+                    // One atomic read per token, charged locally on `loc`.
+                    sh.pgas.charge(NicOp::Atomic64, loc);
+                    let le = t.local_epoch.load(Ordering::SeqCst);
+                    !(le != QUIESCENT && le != this_epoch)
+                })
+            });
+            if !safe {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Drain one limbo list on `inst`'s locale, sorting objects into
+    /// per-destination scatter lists, then free each destination's batch
+    /// with one bulk transfer (Listing 4 lines 33–50).
+    fn drain_and_scatter(&self, inst: &LocaleInstance, idx: usize) -> (usize, usize) {
+        let sh = &self.sh;
+        let locales = sh.pgas.machine().locales;
+        // One atomic exchange drains the list (wait-free deletion phase).
+        sh.pgas.charge(NicOp::Atomic64, inst.locale);
+        let chain = inst.limbo[idx].pop_all();
+        if chain.is_empty() {
+            // Consume the (empty) chain to satisfy its drop contract.
+            chain.drain(&inst.pool, |_| unreachable!());
+            return (0, 0);
+        }
+        let mut scatter: Vec<Vec<ErasedPtr>> = vec![Vec::new(); locales];
+        let n = chain.drain(&inst.pool, |e| scatter[e.locale().index()].push(e));
+        let mut remote = 0usize;
+        for (dest_idx, objs) in scatter.into_iter().enumerate() {
+            if objs.is_empty() {
+                continue;
+            }
+            let dest = LocaleId(dest_idx as u16);
+            if dest != inst.locale {
+                remote += objs.len();
+                // Bulk transfer of the scatter list + one AM to delete.
+                sh.pgas.charge(NicOp::Put(objs.len() * 16), dest);
+            }
+            sh.pgas.on(dest, || {
+                for e in objs {
+                    unsafe { sh.pgas.free_erased(e) };
+                }
+            });
+        }
+        (n, remote)
+    }
+
+    /// Reclaim **everything** across all epochs and locales. Caller must
+    /// guarantee no task is interacting with the manager (paper `clear`).
+    pub fn clear(&self) -> usize {
+        let sh = &self.sh;
+        let (mut freed, mut remote) = (0usize, 0usize);
+        for loc in sh.pgas.machine().locale_ids() {
+            let (f, r) = sh.pgas.on(loc, || {
+                let inst = sh.inst.on_locale(loc);
+                let (mut n, mut rem) = (0, 0);
+                for idx in 0..NUM_EPOCHS as usize {
+                    let (f, r) = self.drain_and_scatter(inst, idx);
+                    n += f;
+                    rem += r;
+                }
+                (n, rem)
+            });
+            freed += f;
+            remote += r;
+        }
+        sh.stats.freed.fetch_add(freed as u64, Ordering::Relaxed);
+        sh.stats.freed_remote.fetch_add(remote as u64, Ordering::Relaxed);
+        freed
+    }
+
+    /// Total live deferred-but-unreclaimed pushes (diagnostics).
+    pub fn pending_deferred(&self) -> u64 {
+        self.stats().deferred - self.sh.stats.freed.load(Ordering::Relaxed)
+    }
+
+    #[allow(dead_code)]
+    pub(crate) fn instance_for(&self, loc: LocaleId) -> &LocaleInstance {
+        self.sh.inst.on_locale(loc)
+    }
+}
+
+/// RAII epoch token: the paper's managed-class token wrapper. `pin` enters
+/// the current epoch, `unpin` leaves it, `defer_delete` adds to the pinned
+/// epoch's limbo list; dropping the handle unregisters.
+pub struct EpochToken {
+    mgr: EpochManager,
+    tok: NonNull<Token>,
+    locale: LocaleId,
+}
+
+unsafe impl Send for EpochToken {}
+
+impl EpochToken {
+    #[inline]
+    fn token(&self) -> &Token {
+        // Tokens live until manager teardown; the handle holds the manager.
+        unsafe { self.tok.as_ref() }
+    }
+
+    #[inline]
+    pub fn locale(&self) -> LocaleId {
+        self.locale
+    }
+
+    /// Enter the current epoch. Idempotent while pinned (re-pinning must
+    /// not migrate the token forward, or a reader could lose protection).
+    pub fn pin(&self) {
+        let sh = &self.mgr.sh;
+        let tok = self.token();
+        if tok.local_epoch.load(Ordering::SeqCst) != QUIESCENT {
+            return;
+        }
+        let inst = sh.inst.on_locale(self.locale);
+        inst.pins.fetch_add(1, Ordering::Relaxed);
+        // Read the locale-cached epoch, publish it on the token, and
+        // re-validate: if the cache moved underneath us the token would
+        // otherwise be pinned in a stale epoch without the scanner knowing.
+        // One batched charge per attempt (3 local atomics).
+        sh.pgas.charge_n(NicOp::Atomic64, self.locale, 3);
+        loop {
+            let e = inst.locale_epoch.load(Ordering::SeqCst);
+            tok.local_epoch.store(e, Ordering::SeqCst);
+            if inst.locale_epoch.load(Ordering::SeqCst) == e {
+                return;
+            }
+            // Retry pays the re-read + re-publish.
+            sh.pgas.charge_n(NicOp::Atomic64, self.locale, 2);
+        }
+    }
+
+    /// Leave the epoch (become quiescent).
+    pub fn unpin(&self) {
+        let sh = &self.mgr.sh;
+        sh.pgas.charge(NicOp::Atomic64, self.locale);
+        // Release is sufficient: a scanner that misses this store merely
+        // sees the token still pinned and aborts conservatively; safety
+        // never depends on observing an unpin promptly.
+        self.token().local_epoch.store(QUIESCENT, Ordering::Release);
+    }
+
+    pub fn is_pinned(&self) -> bool {
+        self.token().is_pinned()
+    }
+
+    /// Defer deletion of `p` until the epoch protocol proves it safe.
+    /// Must be pinned. Takes ownership: `p` must already be logically
+    /// removed and never dereferenced by new readers.
+    pub fn defer_delete<T>(&self, p: GlobalPtr<T>) {
+        self.defer_delete_erased(p.erase());
+    }
+
+    pub fn defer_delete_erased(&self, e: ErasedPtr) {
+        let sh = &self.mgr.sh;
+        let tok = self.token();
+        let epoch = tok.local_epoch.load(Ordering::SeqCst);
+        assert_ne!(epoch, QUIESCENT, "defer_delete requires a pinned token");
+        let inst = sh.inst.on_locale(self.locale);
+        // Wait-free push: pool recycle (one DCAS) + one exchange.
+        sh.pgas.charge(NicOp::Atomic128, self.locale);
+        sh.pgas.charge(NicOp::Atomic64, self.locale);
+        inst.limbo[(epoch - 1) as usize].push(&inst.pool, e);
+        inst.deferred.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// RAII pin: pins now, unpins when the guard drops — the idiomatic
+    /// way to protect a read-side critical section (panic-safe, mirrors
+    /// the paper's managed-class token semantics at the pin level).
+    pub fn pin_guard(&self) -> PinGuard<'_> {
+        self.pin();
+        PinGuard { tok: self }
+    }
+
+    /// `tryReclaim` is also exposed on the token, as in the paper.
+    pub fn try_reclaim(&self) -> ReclaimOutcome {
+        self.mgr.try_reclaim()
+    }
+
+    pub fn manager(&self) -> &EpochManager {
+        &self.mgr
+    }
+}
+
+/// RAII guard holding an epoch pin (see [`EpochToken::pin_guard`]).
+pub struct PinGuard<'a> {
+    tok: &'a EpochToken,
+}
+
+impl Drop for PinGuard<'_> {
+    fn drop(&mut self) {
+        self.tok.unpin();
+    }
+}
+
+impl Drop for EpochToken {
+    fn drop(&mut self) {
+        let sh = &self.mgr.sh;
+        let inst = sh.inst.on_locale(self.locale);
+        sh.pgas.charge(NicOp::Atomic128, self.locale);
+        inst.tokens.unregister(self.token());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pgas::{coforall_locales, with_locale, Machine, NicModel};
+
+    fn pgas(locales: usize) -> Arc<Pgas> {
+        Pgas::new(Machine::new(locales, 2), NicModel::aries_no_network_atomics())
+    }
+
+    #[test]
+    fn kernel_scan_agrees_with_scalar_path() {
+        let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+        if !std::path::Path::new(&dir).join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let p = pgas(4);
+        let em = EpochManager::new(Arc::clone(&p));
+        let scanner = SharedReclaimScan::load_fitting(&dir, 4, 16, 16).unwrap();
+        em.set_scanner(scanner).ok().unwrap();
+        assert!(em.has_scanner());
+        // Same protocol behaviour as the scalar path: advance blocked by a
+        // stale pin, unblocked after unpin.
+        let tok = em.register();
+        tok.pin();
+        assert!(em.try_reclaim().advanced());
+        assert_eq!(em.try_reclaim(), ReclaimOutcome::NotQuiescent);
+        tok.unpin();
+        assert!(em.try_reclaim().advanced());
+        // And deferred objects still reclaim correctly through it.
+        tok.pin();
+        tok.defer_delete(p.alloc(LocaleId(2), 5u64));
+        tok.unpin();
+        for _ in 0..3 {
+            assert!(em.try_reclaim().advanced());
+        }
+        assert_eq!(p.live_objects(), 0);
+    }
+
+    #[test]
+    fn pin_guard_unpins_on_drop_and_panic() {
+        let em = EpochManager::new(pgas(1));
+        let tok = em.register();
+        {
+            let _g = tok.pin_guard();
+            assert!(tok.is_pinned());
+        }
+        assert!(!tok.is_pinned());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = tok.pin_guard();
+            panic!("boom");
+        }));
+        assert!(r.is_err());
+        assert!(!tok.is_pinned(), "guard must unpin on unwind");
+    }
+
+    #[test]
+    fn register_pin_unpin_lifecycle() {
+        let em = EpochManager::new(pgas(1));
+        let tok = em.register();
+        assert!(!tok.is_pinned());
+        tok.pin();
+        assert!(tok.is_pinned());
+        tok.pin(); // idempotent
+        assert!(tok.is_pinned());
+        tok.unpin();
+        assert!(!tok.is_pinned());
+        drop(tok);
+        let s = em.stats();
+        assert_eq!(s.pins, 1, "re-pin while pinned must not count");
+    }
+
+    #[test]
+    fn epoch_starts_at_one_and_cycles() {
+        let em = EpochManager::new(pgas(1));
+        assert_eq!(em.global_epoch(), 1);
+        for expected in [2, 3, 1, 2, 3, 1] {
+            assert!(em.try_reclaim().advanced());
+            assert_eq!(em.global_epoch(), expected);
+            assert_eq!(em.local_epoch(), expected, "locale cache must follow");
+        }
+    }
+
+    #[test]
+    fn pinned_token_in_old_epoch_blocks_advance() {
+        let em = EpochManager::new(pgas(1));
+        let tok = em.register();
+        tok.pin(); // pinned in epoch 1
+        assert!(em.try_reclaim().advanced(), "same-epoch pin does not block");
+        // tok still pinned in epoch 1, global now 2 -> next advance blocked.
+        assert_eq!(em.try_reclaim(), ReclaimOutcome::NotQuiescent);
+        tok.unpin();
+        assert!(em.try_reclaim().advanced(), "quiescent token unblocks");
+    }
+
+    #[test]
+    fn deferred_objects_survive_until_safe() {
+        let p = pgas(1);
+        let em = EpochManager::new(Arc::clone(&p));
+        let tok = em.register();
+        tok.pin();
+        let obj = p.alloc(LocaleId(0), 7u64);
+        tok.defer_delete(obj);
+        tok.unpin();
+        assert_eq!(p.live_objects(), 1, "deferred object still live");
+        // Conservative policy: object (epoch-1 list) freed when list 0
+        // is drained again, i.e. on the advance *to* epoch 1 (two more).
+        let mut advances_until_free = 0;
+        while p.live_objects() > 0 {
+            assert!(em.try_reclaim().advanced());
+            advances_until_free += 1;
+            assert!(advances_until_free <= 3, "object must be freed within one full cycle");
+        }
+        assert_eq!(advances_until_free, 3, "conservative: freed on re-entry of its list");
+    }
+
+    #[test]
+    fn paper_policy_frees_after_two_advances() {
+        let p = pgas(1);
+        let em = EpochManager::with_policy(Arc::clone(&p), ReclaimPolicy::PaperTwoStale);
+        let tok = em.register();
+        tok.pin();
+        tok.defer_delete(p.alloc(LocaleId(0), 1u64));
+        tok.unpin();
+        assert!(em.try_reclaim().advanced());
+        assert_eq!(p.live_objects(), 1, "not freed after one advance (paper: 'must advance once more')");
+        assert!(em.try_reclaim().advanced());
+        assert_eq!(p.live_objects(), 0, "freed after the second advance");
+    }
+
+    #[test]
+    fn clear_reclaims_everything_at_once() {
+        let p = pgas(2);
+        let em = EpochManager::new(Arc::clone(&p));
+        let tok = em.register();
+        tok.pin();
+        for i in 0..10u64 {
+            tok.defer_delete(p.alloc(LocaleId((i % 2) as u16), i));
+        }
+        tok.unpin();
+        assert_eq!(p.live_objects(), 10);
+        assert_eq!(em.clear(), 10);
+        assert_eq!(p.live_objects(), 0);
+    }
+
+    #[test]
+    fn scatter_frees_remote_objects_with_bulk_transfer() {
+        let p = pgas(4);
+        let em = EpochManager::new(Arc::clone(&p));
+        let tok = em.register(); // registers on locale 0
+        tok.pin();
+        // Defer objects living on locales 1..3 from locale 0.
+        for i in 0..9u64 {
+            tok.defer_delete(p.alloc(LocaleId((1 + i % 3) as u16), i));
+        }
+        tok.unpin();
+        let puts_before = p.comm_totals().puts;
+        for _ in 0..3 {
+            assert!(em.try_reclaim().advanced());
+        }
+        assert_eq!(p.live_objects(), 0);
+        let s = em.stats();
+        assert_eq!(s.freed, 9);
+        assert_eq!(s.freed_remote, 9, "all were remote to the deferring locale");
+        // Scatter list: exactly one bulk PUT per destination locale, not
+        // one per object.
+        let puts = p.comm_totals().puts - puts_before;
+        assert_eq!(puts, 3, "one bulk transfer per remote destination");
+    }
+
+    #[test]
+    fn election_is_fcfs_under_contention() {
+        let p = pgas(2);
+        let em = EpochManager::new(Arc::clone(&p));
+        let winners = std::sync::atomic::AtomicU64::new(0);
+        let losers = std::sync::atomic::AtomicU64::new(0);
+        coforall_locales(p.machine(), |_loc| {
+            for _ in 0..50 {
+                match em.try_reclaim() {
+                    ReclaimOutcome::Advanced { .. } => {
+                        winners.fetch_add(1, Ordering::Relaxed);
+                    }
+                    _ => {
+                        losers.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        });
+        assert_eq!(winners.load(Ordering::Relaxed) + losers.load(Ordering::Relaxed), 100);
+        assert!(winners.load(Ordering::Relaxed) >= 1);
+        let s = em.stats();
+        assert_eq!(s.attempts, 100);
+    }
+
+    #[test]
+    fn distributed_defer_from_every_locale() {
+        let p = pgas(4);
+        let em = EpochManager::new(Arc::clone(&p));
+        coforall_locales(p.machine(), |loc| {
+            let tok = em.register();
+            assert_eq!(tok.locale(), loc, "token registers on its locale");
+            tok.pin();
+            for i in 0..20u64 {
+                // Objects owned by a rotating locale: exercises scatter.
+                let owner = LocaleId(((loc.index() as u64 + i) % 4) as u16);
+                tok.defer_delete(p.alloc(owner, i));
+            }
+            tok.unpin();
+        });
+        assert_eq!(p.live_objects(), 80);
+        em.clear();
+        assert_eq!(p.live_objects(), 0);
+        assert_eq!(em.stats().deferred, 80);
+    }
+
+    #[test]
+    fn manager_drop_reclaims_leftovers() {
+        let p = pgas(2);
+        {
+            let em = EpochManager::new(Arc::clone(&p));
+            let tok = em.register();
+            tok.pin();
+            tok.defer_delete(p.alloc(LocaleId(1), 3u64));
+            tok.unpin();
+            drop(tok);
+        } // manager dropped with a pending deferral
+        assert_eq!(p.live_objects(), 0, "teardown must not leak");
+    }
+
+    #[test]
+    fn token_registration_is_per_locale() {
+        let p = pgas(2);
+        let em = EpochManager::new(Arc::clone(&p));
+        let t0 = em.register();
+        let t1 = with_locale(LocaleId(1), || em.register());
+        assert_eq!(t0.locale(), LocaleId(0));
+        assert_eq!(t1.locale(), LocaleId(1));
+        // Pinned token on locale 1 must block advances initiated anywhere.
+        t1.pin();
+        assert!(em.try_reclaim().advanced());
+        assert_eq!(em.try_reclaim(), ReclaimOutcome::NotQuiescent);
+        t1.unpin();
+        assert!(em.try_reclaim().advanced());
+    }
+
+    #[test]
+    #[should_panic(expected = "pinned")]
+    fn defer_without_pin_panics() {
+        let p = pgas(1);
+        let em = EpochManager::new(Arc::clone(&p));
+        let tok = em.register();
+        tok.defer_delete(p.alloc(LocaleId(0), 1u64));
+    }
+
+    #[test]
+    fn concurrent_churn_no_use_after_free_or_leak() {
+        // 4 tasks allocate, defer, and reclaim concurrently; at the end
+        // everything must be freed exactly once (heap accounting balances).
+        let p = pgas(2);
+        let em = EpochManager::new(Arc::clone(&p));
+        coforall_locales(p.machine(), |loc| {
+            crate::pgas::coforall_tasks(2, |_tid| {
+                let tok = em.register();
+                for i in 0..500u64 {
+                    tok.pin();
+                    let owner = LocaleId(((loc.index() as u64 + i) % 2) as u16);
+                    tok.defer_delete(p.alloc(owner, i));
+                    tok.unpin();
+                    if i % 64 == 0 {
+                        tok.try_reclaim();
+                    }
+                }
+            });
+        });
+        em.clear();
+        assert_eq!(p.live_objects(), 0);
+        let s = em.stats();
+        assert_eq!(s.deferred, 4 * 500);
+        assert_eq!(s.freed, 4 * 500);
+    }
+}

@@ -1,0 +1,17 @@
+//! Epoch-based memory reclamation for shared and distributed memory
+//! (paper §II-B/§II-C): the wait-free limbo list, the token registry, the
+//! distributed [`EpochManager`] and the shared-memory
+//! [`LocalEpochManager`].
+
+pub mod limbo;
+pub mod local_manager;
+pub mod manager;
+pub mod token;
+
+pub use limbo::{LimboChain, LimboList, NodePool};
+pub use local_manager::{LocalEpochManager, LocalEpochToken};
+pub use manager::{
+    EpochManager, EpochToken, ManagerStats, PinGuard, ReclaimOutcome, ReclaimPolicy,
+    StatsSnapshot, NUM_EPOCHS,
+};
+pub use token::{Token, TokenRegistry, QUIESCENT};

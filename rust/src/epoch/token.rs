@@ -1,0 +1,234 @@
+//! Epoch tokens and their per-locale registry (paper §II-C).
+//!
+//! A task must `register` with the `EpochManager` before touching protected
+//! data, obtaining a *token*; `pin` enters the current epoch, `unpin`
+//! leaves it (0 = quiescent). Two structures track tokens on each locale:
+//! a **free stack** (ABA-protected Treiber stack) serving register/
+//! unregister, and an insert-only **allocated list** that the reclamation
+//! scan walks to find the minimum epoch. Tokens are recycled through the
+//! free stack and only deallocated when the manager itself is torn down —
+//! so the allocated list never shrinks and scanning it is safe lock-free.
+
+use crate::atomics::AbaCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Epoch value meaning "not in any epoch" (quiescent).
+pub const QUIESCENT: u64 = 0;
+
+/// A reclamation token. One task holds it at a time; it records the epoch
+/// that task is engaged in.
+pub struct Token {
+    /// 0 = quiescent; otherwise the epoch (1..=3) the holder is pinned in.
+    pub local_epoch: AtomicU64,
+    /// Link in the insert-only allocated list (never changes once set).
+    alloc_next: AtomicUsize,
+    /// Link in the free stack (valid only while the token is free).
+    free_next: AtomicUsize,
+}
+
+impl Token {
+    fn new() -> Token {
+        Token {
+            local_epoch: AtomicU64::new(QUIESCENT),
+            alloc_next: AtomicUsize::new(0),
+            free_next: AtomicUsize::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn is_pinned(&self) -> bool {
+        self.local_epoch.load(Ordering::SeqCst) != QUIESCENT
+    }
+}
+
+/// Per-locale token registry: free stack + allocated list.
+#[derive(Default)]
+pub struct TokenRegistry {
+    /// ABA-protected Treiber stack of free tokens (recycling ⇒ ABA risk).
+    free_head: AbaCell,
+    /// Insert-only list of every token ever created on this locale.
+    alloc_head: AtomicUsize,
+    /// Diagnostics.
+    created: AtomicU64,
+    registrations: AtomicU64,
+}
+
+unsafe impl Send for TokenRegistry {}
+unsafe impl Sync for TokenRegistry {}
+
+impl TokenRegistry {
+    pub fn new() -> TokenRegistry {
+        TokenRegistry::default()
+    }
+
+    /// Register: pop a free token or create one. Lock-free.
+    pub fn register(&self) -> &Token {
+        self.registrations.fetch_add(1, Ordering::Relaxed);
+        // Try the free stack first (ABA-protected pop).
+        loop {
+            let snap = self.free_head.read_aba();
+            let top = snap.word as usize;
+            if top == 0 {
+                break;
+            }
+            let tok = top as *const Token;
+            let next = unsafe { (*tok).free_next.load(Ordering::Acquire) };
+            if self.free_head.compare_exchange_aba(snap, next as u64).is_ok() {
+                return unsafe { &*tok };
+            }
+        }
+        // None free: create and insert into the allocated list (CAS push).
+        let tok = Box::into_raw(Box::new(Token::new()));
+        self.created.fetch_add(1, Ordering::Relaxed);
+        loop {
+            let head = self.alloc_head.load(Ordering::Acquire);
+            unsafe { (*tok).alloc_next.store(head, Ordering::Release) };
+            if self
+                .alloc_head
+                .compare_exchange(head, tok as usize, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return unsafe { &*tok };
+            }
+        }
+    }
+
+    /// Unregister: unpin if needed and push back onto the free stack.
+    pub fn unregister(&self, tok: &Token) {
+        tok.local_epoch.store(QUIESCENT, Ordering::SeqCst);
+        loop {
+            let snap = self.free_head.read_aba();
+            tok.free_next.store(snap.word as usize, Ordering::Release);
+            if self
+                .free_head
+                .compare_exchange_aba(snap, tok as *const Token as u64)
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+
+    /// Scan every token ever allocated on this locale. The list is
+    /// insert-only, so the walk is safe against concurrent registers.
+    pub fn scan(&self, mut f: impl FnMut(&Token) -> bool) -> bool {
+        let mut cur = self.alloc_head.load(Ordering::Acquire);
+        while cur != 0 {
+            let tok = unsafe { &*(cur as *const Token) };
+            if !f(tok) {
+                return false;
+            }
+            cur = tok.alloc_next.load(Ordering::Acquire);
+        }
+        true
+    }
+
+    /// Number of tokens ever created on this locale.
+    pub fn created(&self) -> u64 {
+        self.created.load(Ordering::Relaxed)
+    }
+
+    pub fn registrations(&self) -> u64 {
+        self.registrations.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for TokenRegistry {
+    fn drop(&mut self) {
+        // All tokens live in the allocated list; free them exactly once.
+        let mut cur = self.alloc_head.load(Ordering::Acquire);
+        while cur != 0 {
+            let tok = cur as *mut Token;
+            cur = unsafe { (*tok).alloc_next.load(Ordering::Acquire) };
+            drop(unsafe { Box::from_raw(tok) });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_creates_then_recycles() {
+        let reg = TokenRegistry::new();
+        let t1 = reg.register() as *const Token;
+        assert_eq!(reg.created(), 1);
+        reg.unregister(unsafe { &*t1 });
+        let t2 = reg.register() as *const Token;
+        assert_eq!(t1, t2, "freed token must be recycled");
+        assert_eq!(reg.created(), 1);
+        assert_eq!(reg.registrations(), 2);
+    }
+
+    #[test]
+    fn distinct_concurrent_registrations() {
+        let reg = TokenRegistry::new();
+        let a = reg.register() as *const Token as usize;
+        let b = reg.register() as *const Token as usize;
+        assert_ne!(a, b, "two live registrations need two tokens");
+        assert_eq!(reg.created(), 2);
+    }
+
+    #[test]
+    fn unregister_clears_pin() {
+        let reg = TokenRegistry::new();
+        let t = reg.register();
+        t.local_epoch.store(2, Ordering::SeqCst);
+        assert!(t.is_pinned());
+        reg.unregister(t);
+        let t2 = reg.register();
+        assert!(!t2.is_pinned(), "recycled token must come back quiescent");
+    }
+
+    #[test]
+    fn scan_sees_all_allocated_even_freed() {
+        let reg = TokenRegistry::new();
+        let t1 = reg.register();
+        let _t2 = reg.register();
+        reg.unregister(t1);
+        let mut n = 0;
+        reg.scan(|_| {
+            n += 1;
+            true
+        });
+        assert_eq!(n, 2, "allocated list never shrinks");
+    }
+
+    #[test]
+    fn scan_early_exit() {
+        let reg = TokenRegistry::new();
+        for _ in 0..5 {
+            reg.register();
+        }
+        let mut n = 0;
+        let complete = reg.scan(|_| {
+            n += 1;
+            n < 2
+        });
+        assert!(!complete);
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn concurrent_register_unregister_stress() {
+        let reg = TokenRegistry::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let reg = &reg;
+                s.spawn(move || {
+                    for _ in 0..1_000 {
+                        let t = reg.register();
+                        t.local_epoch.store(1, Ordering::SeqCst);
+                        t.local_epoch.store(QUIESCENT, Ordering::SeqCst);
+                        reg.unregister(t);
+                    }
+                });
+            }
+        });
+        // At most 4 tokens should ever exist (one per concurrent holder) —
+        // allow slack for races between pop and push.
+        assert!(reg.created() <= 8, "created {} tokens for 4 threads", reg.created());
+        assert_eq!(reg.registrations(), 4_000);
+    }
+}

@@ -1,0 +1,10 @@
+//! pgas-nb: distributed non-blocking algorithms and data structures in the
+//! Partitioned Global Address Space model.
+pub mod atomics;
+pub mod collections;
+pub mod coordinator;
+pub mod epoch;
+pub mod pgas;
+pub mod runtime;
+pub mod sim;
+pub mod util;

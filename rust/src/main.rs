@@ -1,0 +1,12 @@
+//! `pgas-nb` — the L3 coordinator binary. See `coordinator::USAGE`.
+
+use pgas_nb::coordinator;
+use pgas_nb::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = coordinator::run_cli(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

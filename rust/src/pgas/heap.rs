@@ -1,0 +1,216 @@
+//! The global heap: typed global pointers and per-locale allocation
+//! accounting.
+//!
+//! Objects live on the host heap (whose addresses are 48-bit canonical, see
+//! [`crate::pgas::wide_ptr::heap_is_compressible`]); *which locale owns an
+//! object* is substrate bookkeeping carried in the [`WidePtr`]. This is
+//! exactly the information a Chapel wide pointer carries, and it is what
+//! the scatter lists in `tryReclaim` sort by.
+
+use super::topology::LocaleId;
+use super::wide_ptr::{WidePtr, ADDR_MASK};
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A typed pointer into the global address space. `Copy`, 128 bits of
+/// information (address + locality), compressible to 64 bits.
+pub struct GlobalPtr<T> {
+    wide: WidePtr,
+    _pd: PhantomData<*mut T>,
+}
+
+// GlobalPtr is a capability to *find* a T, not a reference; sharing it
+// across tasks is the whole point of PGAS. Dereference stays unsafe.
+unsafe impl<T: Send + Sync> Send for GlobalPtr<T> {}
+unsafe impl<T: Send + Sync> Sync for GlobalPtr<T> {}
+
+impl<T> Clone for GlobalPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for GlobalPtr<T> {}
+
+impl<T> PartialEq for GlobalPtr<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.wide == other.wide
+    }
+}
+impl<T> Eq for GlobalPtr<T> {}
+
+impl<T> std::fmt::Debug for GlobalPtr<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "GlobalPtr({:?}, {:#x})", self.wide.locale, self.wide.addr)
+    }
+}
+
+impl<T> GlobalPtr<T> {
+    /// The nil pointer.
+    pub fn nil() -> GlobalPtr<T> {
+        GlobalPtr { wide: WidePtr::NIL, _pd: PhantomData }
+    }
+
+    /// Wrap an existing wide pointer. The caller asserts it addresses a
+    /// live `T` (or is nil).
+    pub fn from_wide(wide: WidePtr) -> GlobalPtr<T> {
+        GlobalPtr { wide, _pd: PhantomData }
+    }
+
+    #[inline]
+    pub fn wide(self) -> WidePtr {
+        self.wide
+    }
+
+    #[inline]
+    pub fn locale(self) -> LocaleId {
+        self.wide.locale
+    }
+
+    #[inline]
+    pub fn addr(self) -> u64 {
+        self.wide.addr
+    }
+
+    #[inline]
+    pub fn is_nil(self) -> bool {
+        self.wide.is_nil()
+    }
+
+    /// Compressed 64-bit form (locale ≪ 48 | addr). Panics if the address
+    /// is not canonical — impossible for pointers from [`super::Pgas::alloc`].
+    #[inline]
+    pub fn compress(self) -> u64 {
+        self.wide.compress_exact()
+    }
+
+    #[inline]
+    pub fn decompress(word: u64) -> GlobalPtr<T> {
+        GlobalPtr::from_wide(WidePtr::decompress(word))
+    }
+
+    /// Dereference. Safety: the object must still be live (not reclaimed)
+    /// and `T` must be the allocation's true type — the same contract a
+    /// Chapel `unmanaged` class reference carries.
+    #[inline]
+    pub unsafe fn deref<'a>(self) -> &'a T {
+        debug_assert!(!self.is_nil(), "deref of nil GlobalPtr");
+        &*(self.wide.addr as *const T)
+    }
+
+    /// Type-erase for the limbo lists: keeps the wide pointer plus a
+    /// monomorphized dropper so reclamation can free without knowing `T`.
+    pub fn erase(self) -> ErasedPtr {
+        unsafe fn drop_impl<T>(addr: u64) {
+            drop(unsafe { Box::from_raw(addr as *mut T) });
+        }
+        ErasedPtr { wide: self.wide, dropper: drop_impl::<T> }
+    }
+}
+
+/// A type-erased global pointer with its destructor; what limbo lists and
+/// scatter lists carry.
+#[derive(Copy, Clone)]
+pub struct ErasedPtr {
+    pub wide: WidePtr,
+    dropper: unsafe fn(u64),
+}
+
+unsafe impl Send for ErasedPtr {}
+unsafe impl Sync for ErasedPtr {}
+
+impl std::fmt::Debug for ErasedPtr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ErasedPtr({:?}, {:#x})", self.wide.locale, self.wide.addr)
+    }
+}
+
+impl ErasedPtr {
+    pub fn locale(&self) -> LocaleId {
+        self.wide.locale
+    }
+
+    /// Run the destructor. Safety: object live, not aliased, correct type
+    /// (guaranteed by construction via [`GlobalPtr::erase`]); must be
+    /// called at most once.
+    pub unsafe fn drop_in_place(self) {
+        unsafe { (self.dropper)(self.wide.addr) }
+    }
+}
+
+/// Per-locale heap statistics.
+#[derive(Debug, Default)]
+pub struct HeapStats {
+    pub allocs: AtomicU64,
+    pub frees: AtomicU64,
+}
+
+impl HeapStats {
+    pub fn live(&self) -> i64 {
+        self.allocs.load(Ordering::Relaxed) as i64 - self.frees.load(Ordering::Relaxed) as i64
+    }
+}
+
+/// Allocate `value` as an owned heap object and return its raw 48-bit
+/// address. Panics if the host heap hands out non-canonical addresses.
+pub(crate) fn raw_alloc<T>(value: T) -> u64 {
+    let addr = Box::into_raw(Box::new(value)) as u64;
+    assert_eq!(addr & !ADDR_MASK, 0, "host allocation exceeds 48-bit address space");
+    addr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nil_properties() {
+        let p: GlobalPtr<u64> = GlobalPtr::nil();
+        assert!(p.is_nil());
+        assert_eq!(p.compress(), 0);
+        assert_eq!(GlobalPtr::<u64>::decompress(0), p);
+    }
+
+    #[test]
+    fn compress_roundtrip_through_typed_ptr() {
+        let w = WidePtr::new(LocaleId(9), 0xABCD_EF01);
+        let p: GlobalPtr<i32> = GlobalPtr::from_wide(w);
+        let c = p.compress();
+        let q = GlobalPtr::<i32>::decompress(c);
+        assert_eq!(p, q);
+        assert_eq!(q.locale(), LocaleId(9));
+    }
+
+    #[test]
+    fn erase_and_drop_runs_destructor() {
+        use std::sync::atomic::AtomicUsize;
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let addr = raw_alloc(D);
+        let p: GlobalPtr<D> = GlobalPtr::from_wide(WidePtr::new(LocaleId(2), addr));
+        let e = p.erase();
+        assert_eq!(e.locale(), LocaleId(2));
+        unsafe { e.drop_in_place() };
+        assert_eq!(DROPS.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn deref_reads_value() {
+        let addr = raw_alloc(0xFEEDu64);
+        let p: GlobalPtr<u64> = GlobalPtr::from_wide(WidePtr::new(LocaleId(0), addr));
+        assert_eq!(unsafe { *p.deref() }, 0xFEED);
+        unsafe { p.erase().drop_in_place() };
+    }
+
+    #[test]
+    fn heap_stats_live() {
+        let h = HeapStats::default();
+        h.allocs.fetch_add(3, Ordering::Relaxed);
+        h.frees.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(h.live(), 2);
+    }
+}

@@ -1,0 +1,235 @@
+//! The in-process PGAS substrate.
+//!
+//! Hosts N logical locales inside one address space with the semantics the
+//! paper's constructs rely on: wide pointers with locality, pointer
+//! compression, per-locale heaps, one-sided PUT/GET, active messages
+//! (`on`-statements) and a modeled NIC implementing the Aries/Gemini/
+//! InfiniBand cost hierarchy (see `DESIGN.md` §2 for why this substitution
+//! preserves the paper's behaviour).
+
+pub mod heap;
+pub mod nic;
+pub mod privatized;
+pub mod task;
+pub mod topology;
+pub mod wide_ptr;
+
+pub use heap::{ErasedPtr, GlobalPtr, HeapStats};
+pub use nic::{Fabric, Nic, NicModel, NicOp, NicSnapshot};
+pub use privatized::Privatized;
+pub use task::{coforall_locales, coforall_tasks, forall_cyclic, here, with_locale};
+pub use topology::{LocaleId, Machine};
+pub use wide_ptr::WidePtr;
+
+use crossbeam_utils::CachePadded;
+use std::sync::Arc;
+
+/// One PGAS "job": a machine shape, a NIC per locale, heap accounting per
+/// locale, and the communication primitives. Cheap to share (`Arc`).
+pub struct Pgas {
+    machine: Machine,
+    model: NicModel,
+    nics: Vec<CachePadded<Nic>>,
+    heaps: Vec<CachePadded<HeapStats>>,
+}
+
+impl Pgas {
+    pub fn new(machine: Machine, model: NicModel) -> Arc<Pgas> {
+        Arc::new(Pgas {
+            machine,
+            model,
+            nics: machine.locale_ids().map(|_| CachePadded::new(Nic::new())).collect(),
+            heaps: machine.locale_ids().map(|_| CachePadded::new(HeapStats::default())).collect(),
+        })
+    }
+
+    /// Single-locale substrate with zero modeled latency — the default for
+    /// unit tests and the `Local*` (shared-memory) variants.
+    pub fn smp() -> Arc<Pgas> {
+        Pgas::new(Machine::smp(4), NicModel::aries_no_network_atomics())
+    }
+
+    #[inline]
+    pub fn machine(&self) -> Machine {
+        self.machine
+    }
+
+    #[inline]
+    pub fn model(&self) -> &NicModel {
+        &self.model
+    }
+
+    #[inline]
+    pub fn nic(&self, loc: LocaleId) -> &Nic {
+        &self.nics[loc.index()]
+    }
+
+    #[inline]
+    pub fn heap(&self, loc: LocaleId) -> &HeapStats {
+        &self.heaps[loc.index()]
+    }
+
+    /// Charge `op`, issued by the current task, targeting `target`.
+    /// Returns the modeled nanoseconds.
+    #[inline]
+    pub fn charge(&self, op: NicOp, target: LocaleId) -> u64 {
+        let from = here();
+        self.nics[from.index().min(self.nics.len() - 1)].charge(&self.model, op, from != target)
+    }
+
+    /// Charge `n` identical operations with one counter update (hot-path
+    /// bursts like `pin`'s three local atomics).
+    #[inline]
+    pub fn charge_n(&self, op: NicOp, target: LocaleId, n: u64) -> u64 {
+        let from = here();
+        self.nics[from.index().min(self.nics.len() - 1)].charge_n(&self.model, op, from != target, n)
+    }
+
+    /// Allocate `value` on locale `loc` (Chapel `on loc { new unmanaged T }`).
+    pub fn alloc<T>(&self, loc: LocaleId, value: T) -> GlobalPtr<T> {
+        assert!(loc.index() < self.machine.locales, "allocation on unknown locale");
+        let addr = heap::raw_alloc(value);
+        self.heaps[loc.index()].allocs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        GlobalPtr::from_wide(WidePtr::new(loc, addr))
+    }
+
+    /// Allocate on the current locale.
+    pub fn alloc_here<T>(&self, value: T) -> GlobalPtr<T> {
+        self.alloc(here(), value)
+    }
+
+    /// Free an object. Safety: `p` must be live, of true type `T`, and
+    /// never used again — the exact contract `delete` has in Chapel.
+    pub unsafe fn free<T>(&self, p: GlobalPtr<T>) {
+        unsafe { self.free_erased(p.erase()) }
+    }
+
+    /// Free a type-erased object (reclamation path). Safety: as [`Self::free`].
+    pub unsafe fn free_erased(&self, e: ErasedPtr) {
+        debug_assert!(!e.wide.is_nil(), "free of nil");
+        self.heaps[e.locale().index()].frees.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        unsafe { e.drop_in_place() }
+    }
+
+    /// One-sided GET of a `Copy` value.
+    pub fn get<T: Copy>(&self, src: GlobalPtr<T>) -> T {
+        self.charge(NicOp::Get(std::mem::size_of::<T>()), src.locale());
+        unsafe { std::ptr::read_volatile(src.addr() as *const T) }
+    }
+
+    /// One-sided PUT of a `Copy` value.
+    pub fn put<T: Copy>(&self, dst: GlobalPtr<T>, value: T) {
+        self.charge(NicOp::Put(std::mem::size_of::<T>()), dst.locale());
+        unsafe { std::ptr::write_volatile(dst.addr() as *mut T, value) }
+    }
+
+    /// Execute `f` "on" locale `loc` (Chapel `on` statement / active
+    /// message): charged as an AM, run with the locale context switched —
+    /// the substrate analogue of the target's progress thread running it.
+    pub fn on<R>(&self, loc: LocaleId, f: impl FnOnce() -> R) -> R {
+        self.charge(NicOp::ActiveMessage, loc);
+        with_locale(loc, f)
+    }
+
+    /// Sum of all locales' NIC snapshots.
+    pub fn comm_totals(&self) -> NicSnapshot {
+        let mut total = NicSnapshot::default();
+        for nic in &self.nics {
+            let s = nic.snapshot();
+            total.atomics_rdma += s.atomics_rdma;
+            total.atomics_local += s.atomics_local;
+            total.ams += s.ams;
+            total.puts += s.puts;
+            total.gets += s.gets;
+            total.bytes += s.bytes;
+            total.virtual_ns += s.virtual_ns;
+        }
+        total
+    }
+
+    /// Total live objects across all locale heaps (leak detector).
+    pub fn live_objects(&self) -> i64 {
+        self.heaps.iter().map(|h| h.live()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pgas4() -> Arc<Pgas> {
+        Pgas::new(Machine::new(4, 2), NicModel::aries_no_network_atomics())
+    }
+
+    #[test]
+    fn alloc_free_accounting() {
+        let p = pgas4();
+        let g = p.alloc(LocaleId(2), 99u64);
+        assert_eq!(g.locale(), LocaleId(2));
+        assert_eq!(p.heap(LocaleId(2)).live(), 1);
+        assert_eq!(p.live_objects(), 1);
+        unsafe { p.free(g) };
+        assert_eq!(p.live_objects(), 0);
+    }
+
+    #[test]
+    fn get_put_roundtrip_and_charges() {
+        let p = pgas4();
+        let g = p.alloc(LocaleId(3), 7u64);
+        assert_eq!(p.get(g), 7);
+        p.put(g, 21);
+        assert_eq!(p.get(g), 21);
+        let t = p.comm_totals();
+        assert_eq!(t.gets, 2);
+        assert_eq!(t.puts, 1);
+        assert!(t.virtual_ns > 0);
+        unsafe { p.free(g) };
+    }
+
+    #[test]
+    fn on_switches_locale_and_charges_am() {
+        let p = pgas4();
+        let observed = p.on(LocaleId(1), here);
+        assert_eq!(observed, LocaleId(1));
+        assert_eq!(p.comm_totals().ams, 1);
+    }
+
+    #[test]
+    fn on_same_locale_is_cheap() {
+        let p = pgas4();
+        let base = NicModel::aries_no_network_atomics();
+        let ns = with_locale(LocaleId(2), || p.charge(NicOp::ActiveMessage, LocaleId(2)));
+        assert_eq!(ns, base.local_atomic_ns);
+    }
+
+    #[test]
+    fn alloc_addresses_are_compressible() {
+        let p = pgas4();
+        let ptrs: Vec<GlobalPtr<u64>> = (0..100).map(|i| p.alloc(LocaleId((i % 4) as u16), i)).collect();
+        for g in &ptrs {
+            let c = g.compress();
+            assert_eq!(GlobalPtr::<u64>::decompress(c), *g);
+        }
+        for g in ptrs {
+            unsafe { p.free(g) };
+        }
+        assert_eq!(p.live_objects(), 0);
+    }
+
+    #[test]
+    fn charge_is_attributed_to_issuing_locale() {
+        let p = pgas4();
+        with_locale(LocaleId(1), || {
+            p.charge(NicOp::Get(8), LocaleId(3));
+        });
+        assert_eq!(p.nic(LocaleId(1)).snapshot().gets, 1);
+        assert_eq!(p.nic(LocaleId(3)).snapshot().gets, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown locale")]
+    fn alloc_on_bogus_locale_rejected() {
+        let p = pgas4();
+        p.alloc(LocaleId(99), 1u8);
+    }
+}

@@ -1,0 +1,445 @@
+//! Simulated network interface controller.
+//!
+//! The paper's performance story is driven entirely by a three-level cost
+//! hierarchy: processor atomics (~ns) ≪ NIC-side RDMA atomics (~1 µs on
+//! Gemini/Aries) ≪ active messages (several µs, handled by the target's
+//! progress thread). The real Cray hardware is unavailable, so this module
+//! models that hierarchy: every remote (and, with network atomics enabled,
+//! local) operation is *charged* against a cost model, optionally enforced
+//! by spinning the calling thread, and always tallied into per-locale
+//! counters and virtual-time accumulators that the benches report.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Which fabric is being modeled. Numbers are representative published
+/// figures, not measurements of this host.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Fabric {
+    /// Cray Aries (XC series): RDMA atomics available.
+    Aries,
+    /// Cray Gemini (XE/XK): RDMA atomics available, higher latency.
+    Gemini,
+    /// InfiniBand: Chapel does not use IB RDMA atomics (paper fn. 1), so
+    /// every remote atomic demotes to an active message.
+    InfiniBand,
+}
+
+/// The latency/cost model. All values are *modeled nanoseconds*.
+#[derive(Copy, Clone, Debug)]
+pub struct NicModel {
+    pub fabric: Fabric,
+    /// Processor atomic op on the local core (uncontended).
+    pub local_atomic_ns: u64,
+    /// 128-bit CMPXCHG16B on the local core (uncontended).
+    pub local_dcas_ns: u64,
+    /// NIC-side RDMA atomic (remote or — if `network_atomics` — local too).
+    pub rdma_atomic_ns: u64,
+    /// Active-message round trip (request + progress-thread execution + reply).
+    pub am_ns: u64,
+    /// One-sided PUT/GET base latency.
+    pub rma_base_ns: u64,
+    /// Additional cost per 64 bytes of payload for PUT/GET and bulk ops.
+    pub rma_per_cacheline_ns: u64,
+    /// CHPL_NETWORK_ATOMICS: when true, *all* 64-bit atomics — including
+    /// those whose target is local — are processed by the NIC (Aries
+    /// network atomics are not coherent with processor atomics). The paper
+    /// measured this local-op penalty at up to an order of magnitude.
+    pub network_atomics: bool,
+    /// Wall-clock enforcement factor: each charge spins
+    /// `modeled_ns * latency_scale` on the calling thread. 0.0 disables
+    /// spinning (unit tests); 1.0 approximates the modeled fabric.
+    pub latency_scale: f64,
+    /// NIC pipeline occupancy of one RDMA atomic (the NIC is pipelined:
+    /// issuers wait the full latency, but the NIC accepts a new atomic
+    /// every `rdma_occupancy_ns`). Used by the DES testbed.
+    pub rdma_occupancy_ns: u64,
+    /// Progress-thread occupancy of one active message (each handler
+    /// thread processes AMs serially). Used by the DES testbed.
+    pub am_occupancy_ns: u64,
+    /// Concurrent AM handler threads per locale (Chapel's ugni comm layer
+    /// runs several comm domains / AM handlers). Used by the DES testbed.
+    pub am_handlers: usize,
+}
+
+impl NicModel {
+    /// Aries with RDMA atomics enabled (the paper's primary configuration).
+    pub fn aries() -> NicModel {
+        NicModel {
+            fabric: Fabric::Aries,
+            local_atomic_ns: 7,
+            local_dcas_ns: 18,
+            rdma_atomic_ns: 1_100,
+            am_ns: 3_800,
+            rma_base_ns: 1_400,
+            rma_per_cacheline_ns: 12,
+            network_atomics: true,
+            latency_scale: 0.0,
+            rdma_occupancy_ns: 55,
+            am_occupancy_ns: 650,
+            am_handlers: 16,
+        }
+    }
+
+    /// Aries with CHPL_NETWORK_ATOMICS unset: remote atomics demote to AMs.
+    pub fn aries_no_network_atomics() -> NicModel {
+        NicModel { network_atomics: false, ..NicModel::aries() }
+    }
+
+    /// Gemini: same structure, slower fabric.
+    pub fn gemini() -> NicModel {
+        NicModel {
+            fabric: Fabric::Gemini,
+            rdma_atomic_ns: 1_700,
+            am_ns: 5_200,
+            rma_base_ns: 1_900,
+            ..NicModel::aries()
+        }
+    }
+
+    /// InfiniBand: no usable RDMA atomics from Chapel; AMs carry everything.
+    pub fn infiniband() -> NicModel {
+        NicModel {
+            fabric: Fabric::InfiniBand,
+            rdma_atomic_ns: 2_000, // unused: network_atomics is forced off
+            am_ns: 4_500,
+            rma_base_ns: 1_600,
+            network_atomics: false,
+            ..NicModel::aries()
+        }
+    }
+
+    pub fn with_scale(mut self, scale: f64) -> NicModel {
+        self.latency_scale = scale;
+        self
+    }
+
+    pub fn with_network_atomics(mut self, on: bool) -> NicModel {
+        assert!(
+            !(on && self.fabric == Fabric::InfiniBand),
+            "Chapel cannot use InfiniBand RDMA atomics (paper fn. 1)"
+        );
+        self.network_atomics = on;
+        self
+    }
+}
+
+impl NicModel {
+    /// Pure cost of `op` (issued toward a `remote` or local target) under
+    /// this model, in modeled nanoseconds. Shared by the live substrate
+    /// ([`Nic::charge`]) and the discrete-event testbed simulator.
+    pub fn cost(&self, op: NicOp, remote: bool) -> u64 {
+        match op {
+            NicOp::Atomic64 => {
+                if self.network_atomics {
+                    self.rdma_atomic_ns
+                } else if remote {
+                    self.am_ns
+                } else {
+                    self.local_atomic_ns
+                }
+            }
+            NicOp::Atomic128 => {
+                if remote {
+                    self.am_ns
+                } else {
+                    self.local_dcas_ns
+                }
+            }
+            NicOp::Put(n) | NicOp::Get(n) => {
+                if remote {
+                    self.rma_base_ns + self.rma_per_cacheline_ns * (n as u64).div_ceil(64)
+                } else {
+                    self.local_atomic_ns
+                }
+            }
+            NicOp::ActiveMessage => {
+                if remote {
+                    self.am_ns
+                } else {
+                    self.local_atomic_ns
+                }
+            }
+        }
+    }
+}
+
+impl Default for NicModel {
+    fn default() -> Self {
+        NicModel::aries()
+    }
+}
+
+/// The operation classes the model distinguishes.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum NicOp {
+    /// 64-bit atomic (read/write/exchange/CAS/fetch-add).
+    Atomic64,
+    /// 128-bit DCAS (never RDMA; local CMPXCHG16B or remote AM).
+    Atomic128,
+    /// One-sided PUT of `n` bytes.
+    Put(usize),
+    /// One-sided GET of `n` bytes.
+    Get(usize),
+    /// Explicit active message (e.g. `on`-statement body).
+    ActiveMessage,
+}
+
+/// Per-locale NIC state: counters + virtual-time accumulator.
+#[derive(Debug, Default)]
+pub struct Nic {
+    pub atomics_rdma: AtomicU64,
+    pub atomics_local: AtomicU64,
+    pub ams: AtomicU64,
+    pub puts: AtomicU64,
+    pub gets: AtomicU64,
+    pub bytes: AtomicU64,
+    /// Sum of modeled nanoseconds charged through this NIC.
+    pub virtual_ns: AtomicU64,
+}
+
+/// A snapshot of NIC counters (for reporting / deltas).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct NicSnapshot {
+    pub atomics_rdma: u64,
+    pub atomics_local: u64,
+    pub ams: u64,
+    pub puts: u64,
+    pub gets: u64,
+    pub bytes: u64,
+    pub virtual_ns: u64,
+}
+
+impl Nic {
+    pub fn new() -> Nic {
+        Nic::default()
+    }
+
+    /// Compute the modeled cost of `op` issued from this locale toward a
+    /// target that is (`remote`) or is not on another locale, update the
+    /// counters, optionally spin, and return the modeled nanoseconds.
+    pub fn charge(&self, model: &NicModel, op: NicOp, remote: bool) -> u64 {
+        // Counter attribution mirrors the cost rules in `NicModel::cost`.
+        match op {
+            NicOp::Atomic64 => {
+                if model.network_atomics {
+                    // All 64-bit atomics go through the NIC, even local ones
+                    // (Aries network atomics are not coherent with the CPU).
+                    self.atomics_rdma.fetch_add(1, Ordering::Relaxed);
+                } else if remote {
+                    // No network atomics => remote atomic is an AM.
+                    self.ams.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.atomics_local.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            NicOp::Atomic128 => {
+                // DCAS has no RDMA form on any modeled fabric: local runs
+                // CMPXCHG16B, remote demotes to an active message (§II-A).
+                if remote {
+                    self.ams.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.atomics_local.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            NicOp::Put(n) => {
+                self.puts.fetch_add(1, Ordering::Relaxed);
+                self.bytes.fetch_add(n as u64, Ordering::Relaxed);
+            }
+            NicOp::Get(n) => {
+                self.gets.fetch_add(1, Ordering::Relaxed);
+                self.bytes.fetch_add(n as u64, Ordering::Relaxed);
+            }
+            NicOp::ActiveMessage => {
+                self.ams.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let ns = model.cost(op, remote);
+        self.virtual_ns.fetch_add(ns, Ordering::Relaxed);
+        if model.latency_scale > 0.0 {
+            spin_for_ns((ns as f64 * model.latency_scale) as u64);
+        }
+        ns
+    }
+
+    /// Charge `n` identical operations at once (hot paths that issue a
+    /// known-shape burst, e.g. `pin` = 3 local atomics). Equivalent to
+    /// calling [`Nic::charge`] `n` times but with one counter update.
+    pub fn charge_n(&self, model: &NicModel, op: NicOp, remote: bool, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        match op {
+            NicOp::Atomic64 => {
+                if model.network_atomics {
+                    self.atomics_rdma.fetch_add(n, Ordering::Relaxed);
+                } else if remote {
+                    self.ams.fetch_add(n, Ordering::Relaxed);
+                } else {
+                    self.atomics_local.fetch_add(n, Ordering::Relaxed);
+                }
+            }
+            NicOp::Atomic128 => {
+                if remote {
+                    self.ams.fetch_add(n, Ordering::Relaxed);
+                } else {
+                    self.atomics_local.fetch_add(n, Ordering::Relaxed);
+                }
+            }
+            NicOp::Put(sz) => {
+                self.puts.fetch_add(n, Ordering::Relaxed);
+                self.bytes.fetch_add(n * sz as u64, Ordering::Relaxed);
+            }
+            NicOp::Get(sz) => {
+                self.gets.fetch_add(n, Ordering::Relaxed);
+                self.bytes.fetch_add(n * sz as u64, Ordering::Relaxed);
+            }
+            NicOp::ActiveMessage => {
+                self.ams.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        let ns = model.cost(op, remote) * n;
+        self.virtual_ns.fetch_add(ns, Ordering::Relaxed);
+        if model.latency_scale > 0.0 {
+            spin_for_ns((ns as f64 * model.latency_scale) as u64);
+        }
+        ns
+    }
+
+    pub fn snapshot(&self) -> NicSnapshot {
+        NicSnapshot {
+            atomics_rdma: self.atomics_rdma.load(Ordering::Relaxed),
+            atomics_local: self.atomics_local.load(Ordering::Relaxed),
+            ams: self.ams.load(Ordering::Relaxed),
+            puts: self.puts.load(Ordering::Relaxed),
+            gets: self.gets.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            virtual_ns: self.virtual_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl NicSnapshot {
+    pub fn minus(self, earlier: NicSnapshot) -> NicSnapshot {
+        NicSnapshot {
+            atomics_rdma: self.atomics_rdma - earlier.atomics_rdma,
+            atomics_local: self.atomics_local - earlier.atomics_local,
+            ams: self.ams - earlier.ams,
+            puts: self.puts - earlier.puts,
+            gets: self.gets - earlier.gets,
+            bytes: self.bytes - earlier.bytes,
+            virtual_ns: self.virtual_ns - earlier.virtual_ns,
+        }
+    }
+
+    pub fn total_comm_ops(&self) -> u64 {
+        self.atomics_rdma + self.ams + self.puts + self.gets
+    }
+}
+
+/// Busy-wait for approximately `ns` nanoseconds. On the single-core host a
+/// sleep would deschedule the whole process; a spin both keeps timing tight
+/// and mimics a blocked NIC issue slot.
+#[inline]
+pub fn spin_for_ns(ns: u64) {
+    if ns == 0 {
+        return;
+    }
+    let start = Instant::now();
+    while (start.elapsed().as_nanos() as u64) < ns {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aries_local_atomic_goes_through_nic() {
+        let nic = Nic::new();
+        let m = NicModel::aries(); // network_atomics = true
+        let ns = nic.charge(&m, NicOp::Atomic64, false);
+        assert_eq!(ns, m.rdma_atomic_ns, "local atomics pay NIC latency with network atomics on");
+        assert_eq!(nic.snapshot().atomics_rdma, 1);
+    }
+
+    #[test]
+    fn no_network_atomics_local_is_cheap_remote_is_am() {
+        let nic = Nic::new();
+        let m = NicModel::aries_no_network_atomics();
+        assert_eq!(nic.charge(&m, NicOp::Atomic64, false), m.local_atomic_ns);
+        assert_eq!(nic.charge(&m, NicOp::Atomic64, true), m.am_ns);
+        let s = nic.snapshot();
+        assert_eq!(s.atomics_local, 1);
+        assert_eq!(s.ams, 1);
+    }
+
+    #[test]
+    fn dcas_always_demotes_remote_to_am() {
+        let nic = Nic::new();
+        for m in [NicModel::aries(), NicModel::gemini(), NicModel::infiniband()] {
+            let remote = nic.charge(&m, NicOp::Atomic128, true);
+            assert_eq!(remote, m.am_ns, "{:?}", m.fabric);
+            let local = nic.charge(&m, NicOp::Atomic128, false);
+            assert_eq!(local, m.local_dcas_ns);
+        }
+    }
+
+    #[test]
+    fn infiniband_rejects_network_atomics() {
+        let r = std::panic::catch_unwind(|| NicModel::infiniband().with_network_atomics(true));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn put_cost_scales_with_size() {
+        let nic = Nic::new();
+        let m = NicModel::aries();
+        let small = nic.charge(&m, NicOp::Put(8), true);
+        let big = nic.charge(&m, NicOp::Put(64 * 100), true);
+        assert!(big > small);
+        assert_eq!(big - m.rma_base_ns, m.rma_per_cacheline_ns * 100);
+        assert_eq!(nic.snapshot().bytes, 8 + 6400);
+    }
+
+    #[test]
+    fn cost_hierarchy_holds() {
+        // The invariant every figure relies on: local < RDMA atomic < AM.
+        for m in [NicModel::aries(), NicModel::gemini()] {
+            assert!(m.local_atomic_ns < m.rdma_atomic_ns);
+            assert!(m.rdma_atomic_ns < m.am_ns);
+            assert!(m.local_dcas_ns < m.rdma_atomic_ns);
+        }
+    }
+
+    #[test]
+    fn virtual_time_accumulates() {
+        let nic = Nic::new();
+        let m = NicModel::aries_no_network_atomics();
+        nic.charge(&m, NicOp::Atomic64, false);
+        nic.charge(&m, NicOp::Atomic64, true);
+        assert_eq!(nic.snapshot().virtual_ns, m.local_atomic_ns + m.am_ns);
+    }
+
+    #[test]
+    fn spin_enforcement_takes_time() {
+        let nic = Nic::new();
+        let m = NicModel::aries().with_scale(1.0);
+        let t0 = Instant::now();
+        nic.charge(&m, NicOp::ActiveMessage, true); // 3800 ns modeled
+        assert!(t0.elapsed().as_nanos() >= 3_000, "spin should enforce modeled latency");
+    }
+
+    #[test]
+    fn snapshot_delta() {
+        let nic = Nic::new();
+        let m = NicModel::aries_no_network_atomics();
+        nic.charge(&m, NicOp::Atomic64, true);
+        let s1 = nic.snapshot();
+        nic.charge(&m, NicOp::Atomic64, true);
+        let d = nic.snapshot().minus(s1);
+        assert_eq!(d.ams, 1);
+        assert_eq!(d.total_comm_ops(), 1);
+    }
+}

@@ -1,0 +1,166 @@
+//! Task and locale execution context — the Chapel `here` / `on` /
+//! `coforall` analogues.
+//!
+//! Every OS thread carries a *current locale* in a thread-local; remote
+//! execution (`on`-statements, active messages) and locale-spanning loops
+//! switch it. The in-process substrate shares one address space, so
+//! "running on locale L" means: the locale context is L, and any
+//! communication this task performs is charged as originating from L.
+
+use super::topology::{LocaleId, Machine};
+use std::cell::Cell;
+
+thread_local! {
+    static CURRENT_LOCALE: Cell<u16> = const { Cell::new(0) };
+}
+
+/// The locale the current task is executing on (Chapel `here.id`).
+#[inline]
+pub fn here() -> LocaleId {
+    LocaleId(CURRENT_LOCALE.with(|c| c.get()))
+}
+
+/// Run `f` with the current locale switched to `loc`, restoring afterwards.
+#[inline]
+pub fn with_locale<R>(loc: LocaleId, f: impl FnOnce() -> R) -> R {
+    CURRENT_LOCALE.with(|c| {
+        let prev = c.replace(loc.0);
+        // Restore even on unwind so a panicking task doesn't poison the
+        // thread's locale context for subsequent tests.
+        struct Restore<'a>(&'a Cell<u16>, u16);
+        impl Drop for Restore<'_> {
+            fn drop(&mut self) {
+                self.0.set(self.1);
+            }
+        }
+        let _restore = Restore(c, prev);
+        f()
+    })
+}
+
+/// Chapel `coforall loc in Locales do on loc { ... }`: one task per locale,
+/// all running concurrently; returns each task's result in locale order.
+pub fn coforall_locales<R, F>(machine: Machine, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(LocaleId) -> R + Sync,
+{
+    std::thread::scope(|s| {
+        let handles: Vec<_> = machine
+            .locale_ids()
+            .map(|loc| {
+                let f = &f;
+                s.spawn(move || with_locale(loc, || f(loc)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("locale task panicked")).collect()
+    })
+}
+
+/// `coforall tid in 0..n` on the *current* locale: n concurrent tasks.
+pub fn coforall_tasks<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let loc = here();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|tid| {
+                let f = &f;
+                s.spawn(move || with_locale(loc, || f(tid)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("task panicked")).collect()
+    })
+}
+
+/// A distributed `forall` over `0..n_items` with a cyclic distribution
+/// (Chapel `dmapped Cyclic`): item `i` is processed on locale `i % L`, by
+/// one of `tasks_per_locale` tasks there. `f(item)` runs with the owning
+/// locale as context. This is the loop shape of the paper's Listing 5.
+pub fn forall_cyclic<F>(machine: Machine, n_items: usize, tasks_per_locale: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let locales = machine.locales;
+    coforall_locales(machine, |loc| {
+        // Items owned by this locale: loc.0, loc.0 + L, loc.0 + 2L, ...
+        coforall_tasks(tasks_per_locale, |tid| {
+            let mut i = loc.index() + tid * locales;
+            let stride = locales * tasks_per_locale;
+            while i < n_items {
+                f(i);
+                i += stride;
+            }
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn here_defaults_to_locale_zero() {
+        assert_eq!(here(), LocaleId(0));
+    }
+
+    #[test]
+    fn with_locale_switches_and_restores() {
+        assert_eq!(here(), LocaleId(0));
+        let inner = with_locale(LocaleId(7), here);
+        assert_eq!(inner, LocaleId(7));
+        assert_eq!(here(), LocaleId(0));
+    }
+
+    #[test]
+    fn with_locale_restores_on_panic() {
+        let _ = std::panic::catch_unwind(|| {
+            with_locale(LocaleId(3), || panic!("boom"));
+        });
+        assert_eq!(here(), LocaleId(0));
+    }
+
+    #[test]
+    fn coforall_locales_runs_every_locale() {
+        let m = Machine::new(6, 1);
+        let got = coforall_locales(m, |loc| (loc, here()));
+        for (i, (loc, h)) in got.iter().enumerate() {
+            assert_eq!(loc.index(), i);
+            assert_eq!(h.index(), i, "task must observe its own locale");
+        }
+    }
+
+    #[test]
+    fn coforall_tasks_inherits_locale() {
+        let hs = with_locale(LocaleId(4), || coforall_tasks(3, |_tid| here()));
+        assert!(hs.iter().all(|&h| h == LocaleId(4)));
+    }
+
+    #[test]
+    fn forall_cyclic_visits_each_item_once_on_owner() {
+        let m = Machine::new(4, 1);
+        let n = 103;
+        let visits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(usize::MAX)).collect();
+        forall_cyclic(m, n, 2, |i| {
+            let prev = visits[i].swap(here().index(), Ordering::SeqCst);
+            assert_eq!(prev, usize::MAX, "item {i} visited twice");
+        });
+        for (i, v) in visits.iter().enumerate() {
+            assert_eq!(v.load(Ordering::SeqCst), i % 4, "item {i} on wrong locale");
+        }
+    }
+
+    #[test]
+    fn forall_cyclic_handles_empty_and_small() {
+        let m = Machine::new(3, 2);
+        forall_cyclic(m, 0, 2, |_| panic!("no items"));
+        let count = AtomicUsize::new(0);
+        forall_cyclic(m, 2, 2, |_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+}

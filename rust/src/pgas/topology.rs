@@ -1,0 +1,100 @@
+//! Locale topology: the shape of the (simulated) machine.
+//!
+//! The paper's testbed is a 64-node Cray XC-50 with 44-core Broadwell CPUs.
+//! Our substrate hosts N *logical locales* inside one process; each locale
+//! has its own heap accounting, NIC counters and (optionally) progress
+//! thread. `LocaleId` mirrors Chapel's `locale.id`.
+
+use std::fmt;
+
+/// Identifier of a locale (compute node). 16 bits: pointer compression
+/// supports at most 2^16 locales, exactly as in the paper.
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct LocaleId(pub u16);
+
+impl LocaleId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Debug for LocaleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "L{}", self.0)
+    }
+}
+
+impl fmt::Display for LocaleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "locale{}", self.0)
+    }
+}
+
+/// Machine shape. `cores_per_locale` only matters for the DES testbed and
+/// for choosing default task counts; the in-process substrate will happily
+/// oversubscribe the single host core.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Machine {
+    pub locales: usize,
+    pub cores_per_locale: usize,
+}
+
+impl Machine {
+    /// The paper's testbed: 64-node Cray XC-50, 44-core Broadwell.
+    pub const XC50: Machine = Machine { locales: 64, cores_per_locale: 44 };
+
+    pub fn new(locales: usize, cores_per_locale: usize) -> Machine {
+        assert!(locales >= 1, "need at least one locale");
+        assert!(
+            locales <= crate::pgas::wide_ptr::MAX_LOCALES,
+            "at most 2^16 locales are addressable"
+        );
+        assert!(cores_per_locale >= 1);
+        Machine { locales, cores_per_locale }
+    }
+
+    /// Single shared-memory node (the `Local*` variants' home turf).
+    pub fn smp(cores: usize) -> Machine {
+        Machine::new(1, cores)
+    }
+
+    pub fn locale_ids(&self) -> impl Iterator<Item = LocaleId> {
+        (0..self.locales as u16).map(LocaleId)
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.locales * self.cores_per_locale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xc50_shape() {
+        assert_eq!(Machine::XC50.locales, 64);
+        assert_eq!(Machine::XC50.cores_per_locale, 44);
+        assert_eq!(Machine::XC50.total_cores(), 2816);
+    }
+
+    #[test]
+    fn locale_ids_enumerate() {
+        let m = Machine::new(4, 2);
+        let ids: Vec<_> = m.locale_ids().collect();
+        assert_eq!(ids, vec![LocaleId(0), LocaleId(1), LocaleId(2), LocaleId(3)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one")]
+    fn zero_locales_rejected() {
+        Machine::new(0, 1);
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(format!("{:?}", LocaleId(3)), "L3");
+        assert_eq!(format!("{}", LocaleId(3)), "locale3");
+    }
+}

@@ -1,0 +1,146 @@
+//! Wide pointers and pointer compression.
+//!
+//! Chapel represents a class instance as a *widened* pointer: 64 bits of
+//! virtual address plus 64 bits of locality information — a 128-bit
+//! structure on which no native or RDMA atomic can operate. The paper's key
+//! enabler (§II-A) is **pointer compression**: on x86-64 only the low 48
+//! bits of a canonical user-space virtual address are significant, so 16
+//! bits of locale id can be packed into the top of a single 64-bit word,
+//! enabling native 64-bit atomics *and* NIC-side RDMA atomics on object
+//! references, for machines with fewer than 2^16 locales.
+
+use super::topology::LocaleId;
+
+/// Number of significant virtual-address bits on x86-64 (and the reason
+/// compression works at all).
+pub const ADDR_BITS: u32 = 48;
+
+/// Mask selecting the address part of a compressed pointer.
+pub const ADDR_MASK: u64 = (1u64 << ADDR_BITS) - 1;
+
+/// Maximum number of locales representable in the compressed form.
+pub const MAX_LOCALES: usize = 1 << 16;
+
+/// A full (uncompressed) wide pointer: 64-bit virtual address + locality.
+/// This is the 128-bit structure the DCAS fallback operates on.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub struct WidePtr {
+    pub locale: LocaleId,
+    pub addr: u64,
+}
+
+impl WidePtr {
+    /// The nil wide pointer (Chapel `nil`): address 0 on locale 0.
+    pub const NIL: WidePtr = WidePtr { locale: LocaleId(0), addr: 0 };
+
+    #[inline]
+    pub fn new(locale: LocaleId, addr: u64) -> WidePtr {
+        WidePtr { locale, addr }
+    }
+
+    #[inline]
+    pub fn is_nil(self) -> bool {
+        self.addr == 0
+    }
+
+    /// Compress into a single 64-bit word: `locale << 48 | addr`.
+    ///
+    /// Returns `None` when the address does not fit in 48 bits — the
+    /// caller must then fall back to the 128-bit (DCAS) representation,
+    /// exactly as the paper falls back when ≥ 2^16 locales are used.
+    #[inline]
+    pub fn compress(self) -> Option<u64> {
+        if self.addr & !ADDR_MASK != 0 {
+            return None;
+        }
+        Some(((self.locale.0 as u64) << ADDR_BITS) | self.addr)
+    }
+
+    /// Compress, panicking on a non-canonical address. Used on paths where
+    /// the allocator has already guaranteed 48-bit addresses.
+    #[inline]
+    pub fn compress_exact(self) -> u64 {
+        self.compress().expect("virtual address exceeds 48 bits; compression impossible")
+    }
+
+    /// Decompress a 64-bit word produced by [`WidePtr::compress`].
+    #[inline]
+    pub fn decompress(word: u64) -> WidePtr {
+        WidePtr { locale: LocaleId((word >> ADDR_BITS) as u16), addr: word & ADDR_MASK }
+    }
+
+    /// The uncompressed 128-bit form (locality in the high half), i.e. the
+    /// exact layout a Chapel wide pointer occupies and the operand of the
+    /// CMPXCHG16B fallback.
+    #[inline]
+    pub fn to_u128(self) -> u128 {
+        ((self.locale.0 as u128) << 64) | self.addr as u128
+    }
+
+    #[inline]
+    pub fn from_u128(v: u128) -> WidePtr {
+        WidePtr { locale: LocaleId((v >> 64) as u16), addr: v as u64 }
+    }
+}
+
+/// Check whether this process' heap hands out 48-bit-compressible
+/// addresses (true for canonical user-space x86-64 / aarch64 Linux).
+pub fn heap_is_compressible() -> bool {
+    let probe = Box::new(0u8);
+    let addr = &*probe as *const u8 as u64;
+    addr & !ADDR_MASK == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let w = WidePtr::new(LocaleId(5), 0xDEAD_BEEF);
+        let c = w.compress().unwrap();
+        assert_eq!(WidePtr::decompress(c), w);
+    }
+
+    #[test]
+    fn roundtrip_max_values() {
+        let w = WidePtr::new(LocaleId(u16::MAX), ADDR_MASK);
+        let c = w.compress().unwrap();
+        assert_eq!(WidePtr::decompress(c), w);
+    }
+
+    #[test]
+    fn oversized_address_rejected() {
+        let w = WidePtr::new(LocaleId(0), 1u64 << ADDR_BITS);
+        assert_eq!(w.compress(), None);
+    }
+
+    #[test]
+    fn nil_compresses_to_zero() {
+        assert_eq!(WidePtr::NIL.compress(), Some(0));
+        assert!(WidePtr::decompress(0).is_nil());
+        assert!(WidePtr::NIL.is_nil());
+    }
+
+    #[test]
+    fn u128_roundtrip() {
+        let w = WidePtr::new(LocaleId(1234), 0x7FFF_FFFF_FFFF);
+        assert_eq!(WidePtr::from_u128(w.to_u128()), w);
+        // locality occupies the high half exactly
+        assert_eq!(w.to_u128() >> 64, 1234);
+    }
+
+    #[test]
+    fn host_heap_addresses_compress() {
+        // The substrate relies on real malloc addresses fitting in 48 bits.
+        assert!(heap_is_compressible(), "host heap not 48-bit canonical");
+    }
+
+    #[test]
+    fn locale_occupies_top_16_bits() {
+        let w = WidePtr::new(LocaleId(0xABCD), 0x1234_5678_9ABC);
+        let c = w.compress().unwrap();
+        assert_eq!(c >> ADDR_BITS, 0xABCD);
+        assert_eq!(c & ADDR_MASK, 0x1234_5678_9ABC);
+    }
+}

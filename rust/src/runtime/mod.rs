@@ -1,0 +1,40 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Python (jax + pallas) runs only at build time (`make artifacts`); this
+//! module is the only place the compiled artifacts are touched at runtime.
+
+pub mod reclaim_scan;
+
+pub use reclaim_scan::{ReclaimScan, ScanOutput, ScanShape, SharedReclaimScan};
+
+use anyhow::Result;
+
+/// A compiled XLA executable loaded from an HLO text artifact.
+pub struct LoadedExecutable {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedExecutable {
+    /// Load an HLO text file (produced by `python/compile/aot.py`), compile
+    /// it on the PJRT CPU client and return an executable handle.
+    pub fn load(path: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Self { client, exe })
+    }
+
+    /// Execute with the given literals; the artifact is lowered with
+    /// `return_tuple=True`, so the single output is a tuple.
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut result = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.decompose_tuple()?)
+    }
+
+    /// Number of addressable devices on the client.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+}

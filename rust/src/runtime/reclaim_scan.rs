@@ -1,0 +1,257 @@
+//! Typed wrapper for the `reclaim_scan` AOT artifact.
+//!
+//! The artifact (see `python/compile/model.py`) computes, in one fused
+//! XLA executable: the quiescence verdict, the per-locale stale-token
+//! breakdown, and the scatter-list histogram. The Rust side pads its live
+//! token table / owner list into the artifact's static shapes and
+//! executes via PJRT. Loading happens once at startup; execution is
+//! allocation-light and sits on the reclamation path of the end-to-end
+//! example and the `scan` benches.
+
+use super::LoadedExecutable;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Shape of one compiled artifact (parsed from its file name:
+/// `reclaim_scan_L{L}xT{T}_N{N}.hlo.txt`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct ScanShape {
+    pub locales: usize,
+    pub tokens: usize,
+    pub owners_pad: usize,
+}
+
+impl ScanShape {
+    fn parse_file_name(name: &str) -> Option<ScanShape> {
+        let rest = name.strip_prefix("reclaim_scan_L")?.strip_suffix(".hlo.txt")?;
+        let (l, rest) = rest.split_once("xT")?;
+        let (t, n) = rest.split_once("_N")?;
+        Some(ScanShape {
+            locales: l.parse().ok()?,
+            tokens: t.parse().ok()?,
+            owners_pad: n.parse().ok()?,
+        })
+    }
+
+    pub fn fits(&self, locales: usize, tokens: usize, owners: usize) -> bool {
+        locales <= self.locales && tokens <= self.tokens && owners <= self.owners_pad
+    }
+}
+
+/// Output of one scan execution, truncated back to live sizes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScanOutput {
+    /// True iff no token is pinned in an epoch other than the global one.
+    pub safe: bool,
+    /// Stale-token count per locale.
+    pub stale: Vec<i32>,
+    /// Scatter-list size per destination locale.
+    pub hist: Vec<i32>,
+}
+
+/// A loaded reclaim-scan executable.
+pub struct ReclaimScan {
+    exe: LoadedExecutable,
+    shape: ScanShape,
+    /// Reused input staging buffers (the artifact shapes are static, so
+    /// per-call allocation is pure overhead on the reclamation path).
+    epoch_buf: Vec<i32>,
+    owner_buf: Vec<i32>,
+}
+
+impl ReclaimScan {
+    /// Load the smallest artifact in `dir` that fits the given live sizes.
+    pub fn load_fitting(dir: &str, locales: usize, tokens: usize, owners: usize) -> Result<ReclaimScan> {
+        let mut best: Option<(ScanShape, std::path::PathBuf)> = None;
+        for entry in std::fs::read_dir(dir).with_context(|| format!("reading artifact dir {dir}"))? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(shape) = ScanShape::parse_file_name(&name.to_string_lossy()) else {
+                continue;
+            };
+            if !shape.fits(locales, tokens, owners) {
+                continue;
+            }
+            let smaller = best
+                .as_ref()
+                .map(|(b, _)| shape.locales * shape.tokens < b.locales * b.tokens)
+                .unwrap_or(true);
+            if smaller {
+                best = Some((shape, entry.path()));
+            }
+        }
+        let (shape, path) = best.ok_or_else(|| {
+            anyhow!("no reclaim_scan artifact in {dir} fits L={locales} T={tokens} N={owners}; run `make artifacts`")
+        })?;
+        let exe = LoadedExecutable::load(path.to_str().unwrap())?;
+        Ok(ReclaimScan {
+            exe,
+            shape,
+            epoch_buf: vec![0; shape.locales * shape.tokens],
+            owner_buf: vec![-1; shape.owners_pad],
+        })
+    }
+
+    pub fn shape(&self) -> ScanShape {
+        self.shape
+    }
+
+    /// Execute the scan.
+    ///
+    /// * `epochs[l]` — the token epochs currently registered on locale `l`
+    ///   (0 = quiescent); padded with 0 up to the artifact shape.
+    /// * `owners` — owner locale of each object to be scattered; padded
+    ///   with -1.
+    pub fn scan(&mut self, epochs: &[Vec<i32>], global_epoch: i32, owners: &[i32]) -> Result<ScanOutput> {
+        let s = self.shape;
+        if epochs.len() > s.locales || owners.len() > s.owners_pad {
+            bail!("live sizes exceed artifact shape {s:?}");
+        }
+        self.epoch_buf.fill(0);
+        for (l, row) in epochs.iter().enumerate() {
+            if row.len() > s.tokens {
+                bail!("locale {l} has {} tokens; artifact supports {}", row.len(), s.tokens);
+            }
+            self.epoch_buf[l * s.tokens..l * s.tokens + row.len()].copy_from_slice(row);
+        }
+        self.owner_buf.fill(-1);
+        self.owner_buf[..owners.len()].copy_from_slice(owners);
+
+        let epochs_lit =
+            xla::Literal::vec1(&self.epoch_buf).reshape(&[s.locales as i64, s.tokens as i64])?;
+        let ge_lit = xla::Literal::scalar(global_epoch);
+        let owners_lit = xla::Literal::vec1(&self.owner_buf);
+
+        let out = self.exe.execute(&[epochs_lit, ge_lit, owners_lit])?;
+        if out.len() != 3 {
+            bail!("expected 3 outputs (safe, stale, hist); got {}", out.len());
+        }
+        let safe: i32 = out[0].get_first_element()?;
+        let stale = out[1].to_vec::<i32>()?;
+        let hist = out[2].to_vec::<i32>()?;
+        let live = epochs.len().max(1);
+        Ok(ScanOutput {
+            safe: safe != 0,
+            stale: stale[..live.min(stale.len())].to_vec(),
+            hist: hist[..live.min(hist.len())].to_vec(),
+        })
+    }
+}
+
+/// Thread-shareable wrapper. The `xla` crate's client handles are
+/// `Rc`-based and `!Send`; the underlying PJRT C API is thread-safe, but
+/// rather than rely on that we serialize every use behind a `Mutex`, so
+/// the `Rc` refcounts are never touched concurrently — making the
+/// `unsafe impl`s sound.
+pub struct SharedReclaimScan {
+    inner: std::sync::Mutex<ReclaimScan>,
+    shape: ScanShape,
+}
+
+unsafe impl Send for SharedReclaimScan {}
+unsafe impl Sync for SharedReclaimScan {}
+
+impl SharedReclaimScan {
+    pub fn new(scan: ReclaimScan) -> SharedReclaimScan {
+        let shape = scan.shape();
+        SharedReclaimScan { inner: std::sync::Mutex::new(scan), shape }
+    }
+
+    pub fn load_fitting(dir: &str, locales: usize, tokens: usize, owners: usize) -> Result<SharedReclaimScan> {
+        Ok(Self::new(ReclaimScan::load_fitting(dir, locales, tokens, owners)?))
+    }
+
+    pub fn shape(&self) -> ScanShape {
+        self.shape
+    }
+
+    pub fn scan(&self, epochs: &[Vec<i32>], global_epoch: i32, owners: &[i32]) -> Result<ScanOutput> {
+        self.inner.lock().unwrap().scan(epochs, global_epoch, owners)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
+    }
+
+    #[test]
+    fn shape_parsing() {
+        let s = ScanShape::parse_file_name("reclaim_scan_L64xT64_N4096.hlo.txt").unwrap();
+        assert_eq!(s, ScanShape { locales: 64, tokens: 64, owners_pad: 4096 });
+        assert!(ScanShape::parse_file_name("manifest.json").is_none());
+        assert!(s.fits(8, 64, 100));
+        assert!(!s.fits(65, 1, 1));
+    }
+
+    #[test]
+    fn scan_safe_and_unsafe_cases() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut scan = ReclaimScan::load_fitting(&artifacts_dir(), 4, 8, 16).unwrap();
+        // All quiescent: safe.
+        let epochs = vec![vec![0; 4]; 4];
+        let out = scan.scan(&epochs, 2, &[0, 1, 1, 3]).unwrap();
+        assert!(out.safe);
+        assert_eq!(out.stale, vec![0, 0, 0, 0]);
+        assert_eq!(out.hist, vec![1, 2, 0, 1]);
+        // One token stale: unsafe, attributed to the right locale.
+        let mut epochs = vec![vec![2, 2, 0, 0]; 4];
+        epochs[3][1] = 1;
+        let out = scan.scan(&epochs, 2, &[]).unwrap();
+        assert!(!out.safe);
+        assert_eq!(out.stale, vec![0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn scan_picks_smallest_fitting_artifact() {
+        if !have_artifacts() {
+            return;
+        }
+        let small = ReclaimScan::load_fitting(&artifacts_dir(), 4, 8, 64).unwrap();
+        assert_eq!(small.shape().locales, 8, "8x16 artifact should win for small sizes");
+        let big = ReclaimScan::load_fitting(&artifacts_dir(), 32, 32, 1000).unwrap();
+        assert_eq!(big.shape().locales, 64);
+        assert!(ReclaimScan::load_fitting(&artifacts_dir(), 100, 8, 8).is_err());
+    }
+
+    #[test]
+    fn scan_matches_scalar_oracle_random() {
+        if !have_artifacts() {
+            return;
+        }
+        use crate::util::rng::Xoshiro256pp;
+        let mut scan = ReclaimScan::load_fitting(&artifacts_dir(), 8, 16, 512).unwrap();
+        let mut rng = Xoshiro256pp::new(99);
+        for _ in 0..10 {
+            let ge = 1 + rng.next_below(3) as i32;
+            let epochs: Vec<Vec<i32>> =
+                (0..8).map(|_| (0..16).map(|_| rng.next_below(4) as i32).collect()).collect();
+            let owners: Vec<i32> = (0..100).map(|_| rng.next_below(9) as i32 - 1).collect();
+            let out = scan.scan(&epochs, ge, &owners).unwrap();
+            // scalar oracle
+            let stale: Vec<i32> = epochs
+                .iter()
+                .map(|row| row.iter().filter(|&&e| e != 0 && e != ge).count() as i32)
+                .collect();
+            let safe = stale.iter().all(|&c| c == 0);
+            let mut hist = vec![0i32; 8];
+            for &o in &owners {
+                if o >= 0 {
+                    hist[o as usize] += 1;
+                }
+            }
+            assert_eq!(out.safe, safe);
+            assert_eq!(out.stale, stale);
+            assert_eq!(out.hist, hist);
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! The discrete-event simulation engine behind the testbed.
+//!
+//! The host has a single CPU core, so the paper's strong-scaling curves
+//! (64 nodes × 44 cores) cannot be measured as wall clock. Instead the
+//! testbed executes the *same decision logic* (CAS retries, FCFS
+//! elections, quiescence scans, limbo operations) as a discrete-event
+//! simulation in **virtual time**: every simulated task is a state
+//! machine; each step performs one operation against shared simulation
+//! state and is charged its modeled cost (from [`crate::pgas::NicModel`]);
+//! the engine interleaves tasks in virtual-time order, so contention,
+//! election losses and epoch stalls *emerge* rather than being scripted.
+//!
+//! Operations on a shared serialization point (a NIC-side atomic's home, a
+//! flag cacheline) additionally queue on a [`Resource`], modeling the
+//! fact that one memory word processes one atomic at a time.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Virtual nanoseconds.
+pub type VTime = u64;
+
+/// A serialization point: one op at a time, FIFO in virtual time.
+///
+/// `acquire(now, hold)` returns the *completion* time of an operation that
+/// arrives at `now` and occupies the resource for `hold` ns.
+#[derive(Clone, Debug, Default)]
+pub struct Resource {
+    avail: VTime,
+    /// Total busy time (utilization diagnostics).
+    busy: VTime,
+    ops: u64,
+}
+
+impl Resource {
+    pub fn new() -> Resource {
+        Resource::default()
+    }
+
+    #[inline]
+    pub fn acquire(&mut self, now: VTime, hold: VTime) -> VTime {
+        let start = self.avail.max(now);
+        self.avail = start + hold;
+        self.busy += hold;
+        self.ops += 1;
+        self.avail
+    }
+
+    /// Completion time without queueing (infinite-capacity resource).
+    #[inline]
+    pub fn sample(now: VTime, hold: VTime) -> VTime {
+        now + hold
+    }
+
+    pub fn utilization(&self, total: VTime) -> f64 {
+        if total == 0 { 0.0 } else { self.busy as f64 / total as f64 }
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+}
+
+/// A k-server serialization point: up to `k` operations in service
+/// concurrently (e.g. a locale's pool of AM handler threads). Each op is
+/// dispatched to the earliest-available server.
+#[derive(Clone, Debug)]
+pub struct MultiResource {
+    servers: Vec<VTime>,
+    busy: VTime,
+    ops: u64,
+}
+
+impl MultiResource {
+    pub fn new(k: usize) -> MultiResource {
+        MultiResource { servers: vec![0; k.max(1)], busy: 0, ops: 0 }
+    }
+
+    /// Completion time of an op arriving at `now` holding a server `hold`.
+    #[inline]
+    pub fn acquire(&mut self, now: VTime, hold: VTime) -> VTime {
+        // Earliest-available server (k is small; linear scan is fastest).
+        let (mut best, mut best_t) = (0, self.servers[0]);
+        for (i, &t) in self.servers.iter().enumerate().skip(1) {
+            if t < best_t {
+                best = i;
+                best_t = t;
+            }
+        }
+        let start = best_t.max(now);
+        self.servers[best] = start + hold;
+        self.busy += hold;
+        self.ops += 1;
+        start + hold
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    pub fn utilization(&self, total: VTime) -> f64 {
+        if total == 0 { 0.0 } else { self.busy as f64 / (total * self.servers.len() as u64) as f64 }
+    }
+}
+
+/// What a task does after one step.
+pub enum Step {
+    /// Step complete: task becomes runnable again at the given time.
+    ResumeAt(VTime),
+    /// Task finished; record its completion.
+    Done,
+}
+
+/// Generic engine: `W` is the workload (shared state + per-task state).
+pub trait Workload {
+    /// Execute one step of task `tid` at virtual time `now`.
+    fn step(&mut self, tid: usize, now: VTime) -> Step;
+}
+
+/// Run `n_tasks` state machines to completion; returns the makespan (the
+/// virtual time at which the last task finished) and the number of steps.
+pub fn run<W: Workload>(workload: &mut W, n_tasks: usize) -> (VTime, u64) {
+    let mut heap: BinaryHeap<Reverse<(VTime, usize)>> = (0..n_tasks).map(|t| Reverse((0, t))).collect();
+    let mut makespan = 0;
+    let mut steps = 0u64;
+    while let Some(Reverse((now, tid))) = heap.pop() {
+        steps += 1;
+        match workload.step(tid, now) {
+            Step::ResumeAt(t) => {
+                debug_assert!(t >= now, "time cannot flow backwards");
+                heap.push(Reverse((t, tid)));
+            }
+            Step::Done => makespan = makespan.max(now),
+        }
+    }
+    (makespan, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct FixedWork {
+        remaining: Vec<u32>,
+        cost: VTime,
+    }
+
+    impl Workload for FixedWork {
+        fn step(&mut self, tid: usize, now: VTime) -> Step {
+            if self.remaining[tid] == 0 {
+                return Step::Done;
+            }
+            self.remaining[tid] -= 1;
+            Step::ResumeAt(now + self.cost)
+        }
+    }
+
+    #[test]
+    fn independent_tasks_run_in_parallel_virtual_time() {
+        // 4 tasks × 100 ops × 10ns, no shared resource: makespan = 1000,
+        // not 4000 — virtual parallelism.
+        let mut w = FixedWork { remaining: vec![100; 4], cost: 10 };
+        let (makespan, steps) = run(&mut w, 4);
+        assert_eq!(makespan, 1_000);
+        assert_eq!(steps, 4 * 101); // 100 work steps + 1 Done step each
+    }
+
+    struct SharedPoint {
+        remaining: Vec<u32>,
+        res: Resource,
+        cost: VTime,
+    }
+
+    impl Workload for SharedPoint {
+        fn step(&mut self, tid: usize, now: VTime) -> Step {
+            if self.remaining[tid] == 0 {
+                return Step::Done;
+            }
+            self.remaining[tid] -= 1;
+            Step::ResumeAt(self.res.acquire(now, self.cost))
+        }
+    }
+
+    #[test]
+    fn shared_resource_serializes() {
+        // 4 tasks × 100 ops on ONE resource: makespan = 4000 — no scaling.
+        let mut w = SharedPoint { remaining: vec![100; 4], res: Resource::new(), cost: 10 };
+        let (makespan, _) = run(&mut w, 4);
+        assert_eq!(makespan, 4_000);
+        assert_eq!(w.res.ops(), 400);
+        assert!((w.res.utilization(makespan) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resource_idle_gaps_accounted() {
+        let mut r = Resource::new();
+        assert_eq!(r.acquire(0, 10), 10);
+        assert_eq!(r.acquire(5, 10), 20, "queued behind first op");
+        assert_eq!(r.acquire(100, 10), 110, "idle gap: starts immediately");
+        assert_eq!(r.ops(), 3);
+        assert!(r.utilization(110) < 0.3);
+    }
+
+    #[test]
+    fn empty_run_is_zero() {
+        struct NoTasks;
+        impl Workload for NoTasks {
+            fn step(&mut self, _: usize, _: VTime) -> Step {
+                Step::Done
+            }
+        }
+        let (makespan, steps) = run(&mut NoTasks, 0);
+        assert_eq!(makespan, 0);
+        assert_eq!(steps, 0);
+    }
+
+    #[test]
+    fn heterogeneous_completion_makespan_is_max() {
+        struct Hetero;
+        impl Workload for Hetero {
+            fn step(&mut self, tid: usize, now: VTime) -> Step {
+                if now > 0 {
+                    return Step::Done;
+                }
+                Step::ResumeAt((tid as u64 + 1) * 100)
+            }
+        }
+        let (makespan, _) = run(&mut Hetero, 3);
+        assert_eq!(makespan, 300);
+    }
+}

@@ -1,0 +1,636 @@
+//! DES driver for the paper's Figs. 4–7: `EpochManager` scalability.
+//!
+//! Simulated tasks execute Listing 5's loop — register, then per object:
+//! pin → (defer_delete) → unpin → (every k iterations) tryReclaim — with
+//! each constituent atomic charged through the NIC cost model and
+//! serialized on its home word's [`Resource`]. The tryReclaim state
+//! machine is step-per-locale, so elections, quiescence aborts and the
+//! bulk scatter transfers all *emerge* from the interleaving exactly as in
+//! the real implementation (`crate::epoch::manager`).
+//!
+//! Workloads (one per figure):
+//! * Fig 4 — deletion, `tryReclaim` once per 1024 iterations;
+//! * Fig 5 — deletion, `tryReclaim` every iteration;
+//! * Fig 6 — deletion, reclamation only at the very end (`clear`), with a
+//!   0/50/100 % remote-object ratio;
+//! * Fig 7 — read-only: pin/unpin only.
+
+use super::engine::{run, MultiResource, Resource, Step, VTime, Workload};
+use crate::epoch::NUM_EPOCHS;
+use crate::pgas::{NicModel, NicOp};
+use crate::util::rng::Xoshiro256pp;
+
+/// Which figure's workload to run.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum EpochWorkload {
+    /// Deletion with `tryReclaim` every `k` iterations (Figs 4 & 5).
+    DeleteReclaimEvery(usize),
+    /// Deletion; reclamation only at the end (Fig 6).
+    DeleteReclaimAtEnd,
+    /// Read-only pin/unpin (Fig 7).
+    ReadOnly,
+}
+
+/// Configuration of one data point.
+#[derive(Clone, Debug)]
+pub struct EpochConfig {
+    pub workload: EpochWorkload,
+    pub model: NicModel,
+    pub locales: usize,
+    pub tasks_per_locale: usize,
+    /// Objects (iterations) per task.
+    pub objs_per_task: usize,
+    /// Fraction of deferred objects that live on a *remote* locale.
+    pub remote_ratio: f64,
+    /// The paper's two-level FCFS election. `false` = ablation: every
+    /// attempt goes straight to the global flag.
+    pub fcfs_local_election: bool,
+    /// Failure injection: this locale's AM handlers run `slow_factor`×
+    /// slower (a straggler node — thermal throttling, a noisy neighbour).
+    pub slow_locale: Option<usize>,
+    /// Slowdown multiplier for `slow_locale` (default 8).
+    pub slow_factor: u64,
+    pub seed: u64,
+}
+
+impl EpochConfig {
+    pub fn total_tasks(&self) -> usize {
+        self.locales * self.tasks_per_locale
+    }
+}
+
+/// Result of one simulated run.
+#[derive(Clone, Debug)]
+pub struct EpochResult {
+    pub makespan_ns: VTime,
+    pub total_iters: u64,
+    pub throughput_mops: f64,
+    pub advances: u64,
+    pub lost_local: u64,
+    pub lost_global: u64,
+    pub not_quiescent: u64,
+    pub freed: u64,
+    pub freed_remote: u64,
+}
+
+/// Per-locale simulated state.
+struct LocState {
+    epoch: u64,
+    flag: bool,
+    /// Serialization points: the flag word, the epoch word, the limbo
+    /// heads + node pool, and the AM progress thread.
+    flag_res: Resource,
+    epoch_res: Resource,
+    limbo_res: Resource,
+    progress_res: MultiResource,
+    /// limbo[list][owner_locale] = deferred-object count.
+    limbo: Vec<Vec<u64>>,
+}
+
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+enum Phase {
+    Pin,
+    Defer,
+    Unpin,
+    MaybeReclaim,
+    // --- tryReclaim state machine ---
+    RLocalFlag,
+    RGlobalFlag,
+    RReadEpoch,
+    RScan { this_epoch: u64 },
+    RAdvance { this_epoch: u64 },
+    RDrain { new_epoch: u64 },
+    RRelease { advanced: bool },
+    // --- end-of-run clear (last task, Fig 6) ---
+    Clear,
+    Finished,
+}
+
+struct TaskState {
+    locale: usize,
+    remaining: usize,
+    iter: usize,
+    epoch: u64, // this task's token epoch (0 = quiescent)
+    phase: Phase,
+    resume_phase: Phase, // where to go after a reclaim attempt
+    rng: Xoshiro256pp,
+}
+
+/// Multiplicative latency jitter (±12.5%): real fabrics have delivery
+/// variance; without it the deterministic simulator phase-locks (election
+/// wins resonate with advance periods) and produces chaotic scaling.
+#[inline]
+fn jitter(rng: &mut Xoshiro256pp, ns: VTime) -> VTime {
+    if ns == 0 {
+        return 0;
+    }
+    ns * (896 + rng.next_below(257)) / 1024
+}
+
+struct EpochSim {
+    cfg: EpochConfig,
+    jrng: Xoshiro256pp,
+    global_epoch: u64,
+    global_flag: bool,
+    global_res: Resource,
+    locs: Vec<LocState>,
+    tasks: Vec<TaskState>,
+    // stats
+    advances: u64,
+    lost_local: u64,
+    lost_global: u64,
+    not_quiescent: u64,
+    freed: u64,
+    freed_remote: u64,
+    iters: u64,
+    /// Tasks still in the main loop (for the final clear trigger).
+    active: usize,
+}
+
+impl EpochSim {
+    /// One 64-bit atomic issued from `from` on a word living on `target`.
+    ///
+    /// * network atomics on: NIC-side atomic — the word serializes at the
+    ///   NIC pipeline rate, issuer sees the full RDMA latency (local ops
+    ///   included: Aries network atomics are not CPU-coherent);
+    /// * off + local: processor atomic (word holds for its full cost);
+    /// * off + remote: an active message — queue on one of the target's
+    ///   AM handler threads, the handler performs a ~ns processor atomic
+    ///   on the word, and the reply completes the round trip.
+    fn op64(
+        cfg: &EpochConfig,
+        rng: &mut Xoshiro256pp,
+        word: &mut Resource,
+        pool: &mut MultiResource,
+        now: VTime,
+        from: usize,
+        target: usize,
+    ) -> VTime {
+        let remote = from != target;
+        if cfg.model.network_atomics {
+            let latency = jitter(rng, cfg.model.rdma_atomic_ns);
+            let occ = cfg.model.rdma_occupancy_ns.min(latency);
+            return word.acquire(now, occ) - occ + latency;
+        }
+        if remote {
+            let occ = cfg.model.am_occupancy_ns;
+            let handled = pool.acquire(now, occ);
+            let w = word.acquire(handled, cfg.model.local_atomic_ns);
+            return w + jitter(rng, cfg.model.am_ns.saturating_sub(occ));
+        }
+        word.acquire(now, cfg.model.local_atomic_ns)
+    }
+
+    /// One 64-bit atomic on a word local to the issuing task's locale.
+    fn op64_local(cfg: &EpochConfig, rng: &mut Xoshiro256pp, word: &mut Resource, now: VTime) -> VTime {
+        if cfg.model.network_atomics {
+            let latency = jitter(rng, cfg.model.rdma_atomic_ns);
+            let occ = cfg.model.rdma_occupancy_ns.min(latency);
+            word.acquire(now, occ) - occ + latency
+        } else {
+            word.acquire(now, cfg.model.local_atomic_ns)
+        }
+    }
+
+    /// One 128-bit (DCAS) atomic on a local word — CMPXCHG16B; there is
+    /// no RDMA form, so this never touches the NIC when local.
+    fn op128_local(cfg: &EpochConfig, word: &mut Resource, now: VTime) -> VTime {
+        word.acquire(now, cfg.model.local_dcas_ns)
+    }
+
+    /// An active message handled by one of `target`'s AM handler threads.
+    fn am(
+        cfg: &EpochConfig,
+        rng: &mut Xoshiro256pp,
+        res: &mut MultiResource,
+        now: VTime,
+        from: usize,
+        target: usize,
+    ) -> VTime {
+        let remote = from != target;
+        let slow = if cfg.slow_locale == Some(target) { cfg.slow_factor.max(1) } else { 1 };
+        let latency = jitter(rng, cfg.model.cost(NicOp::ActiveMessage, remote)) * slow;
+        let occupancy = if remote { (cfg.model.am_occupancy_ns * slow).min(latency) } else { latency };
+        res.acquire(now, occupancy) - occupancy + latency
+    }
+
+    fn deleting(&self) -> bool {
+        !matches!(self.cfg.workload, EpochWorkload::ReadOnly)
+    }
+
+    fn reclaim_every(&self) -> Option<usize> {
+        match self.cfg.workload {
+            EpochWorkload::DeleteReclaimEvery(k) => Some(k),
+            _ => None,
+        }
+    }
+
+    /// Drain one locale's expired limbo list: pop (one exchange), scatter,
+    /// bulk transfer per remote destination. Returns (completion, freed,
+    /// remote_freed). Conservative policy: list index `new_epoch - 1`.
+    fn drain(&mut self, now: VTime, _actor: usize, loc: usize, list_idx: usize) -> (VTime, u64, u64) {
+        let cfg = self.cfg.clone();
+        // pop is one exchange on the (locale-local) limbo head
+        let mut t = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[loc].limbo_res, now);
+        let counts = std::mem::replace(
+            &mut self.locs[loc].limbo[list_idx],
+            vec![0; cfg.locales],
+        );
+        let mut freed = 0u64;
+        let mut remote = 0u64;
+        for (dest, &n) in counts.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            freed += n;
+            // Node-pool recycling for the drained chain: n pool pushes.
+            t += n * cfg.model.local_dcas_ns;
+            if dest != loc {
+                remote += n;
+                // One bulk PUT of the scatter list + one AM to delete.
+                let put = cfg.model.cost(NicOp::Put(n as usize * 16), true);
+                t += put;
+                t = Self::am(&cfg, &mut self.jrng, &mut self.locs[dest].progress_res, t, loc, dest);
+                // Remote frees run on dest's progress thread.
+                t += n * cfg.model.local_atomic_ns;
+            } else {
+                t += n * cfg.model.local_atomic_ns;
+            }
+        }
+        (t, freed, remote)
+    }
+}
+
+impl Workload for EpochSim {
+    fn step(&mut self, tid: usize, now: VTime) -> Step {
+        let cfg = self.cfg.clone();
+        let me = self.tasks[tid].locale;
+        let phase = self.tasks[tid].phase;
+        match phase {
+            Phase::Pin => {
+                if self.tasks[tid].remaining == 0 {
+                    self.active -= 1;
+                    // Fig 6: last task out runs manager.clear().
+                    if self.active == 0 && matches!(cfg.workload, EpochWorkload::DeleteReclaimAtEnd) {
+                        self.tasks[tid].phase = Phase::Clear;
+                        return Step::ResumeAt(now);
+                    }
+                    self.tasks[tid].phase = Phase::Finished;
+                    return Step::Done;
+                }
+                self.tasks[tid].remaining -= 1;
+                self.tasks[tid].iter += 1;
+                self.iters += 1;
+                // pin = read locale epoch + token store + re-validate read.
+                let t1 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].epoch_res, now);
+                // token store: private word, but still a NIC op when
+                // network atomics are on.
+                let t2 = t1 + cfg.model.cost(NicOp::Atomic64, false);
+                let t3 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].epoch_res, t2);
+                self.tasks[tid].epoch = self.locs[me].epoch;
+                self.tasks[tid].phase = if self.deleting() { Phase::Defer } else { Phase::Unpin };
+                Step::ResumeAt(t3)
+            }
+            Phase::Defer => {
+                // defer_delete = pool recycle (DCAS) + limbo head exchange.
+                let t1 = Self::op128_local(&cfg, &mut self.locs[me].limbo_res, now);
+                let t2 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].limbo_res, t1);
+                let owner = if self.tasks[tid].rng.chance(cfg.remote_ratio) && cfg.locales > 1 {
+                    let r = 1 + self.tasks[tid].rng.next_usize(cfg.locales - 1);
+                    (me + r) % cfg.locales
+                } else {
+                    me
+                };
+                let epoch = self.tasks[tid].epoch;
+                let list = ((epoch - 1) % NUM_EPOCHS) as usize;
+                self.locs[me].limbo[list][owner] += 1;
+                self.tasks[tid].phase = Phase::Unpin;
+                Step::ResumeAt(t2)
+            }
+            Phase::Unpin => {
+                self.tasks[tid].epoch = 0;
+                let t = now + cfg.model.cost(NicOp::Atomic64, false); // token store
+                self.tasks[tid].phase = Phase::MaybeReclaim;
+                Step::ResumeAt(t)
+            }
+            Phase::MaybeReclaim => {
+                let do_reclaim = match self.reclaim_every() {
+                    Some(k) => self.tasks[tid].iter % k == 0,
+                    None => false,
+                };
+                self.tasks[tid].phase = if do_reclaim {
+                    self.tasks[tid].resume_phase = Phase::Pin;
+                    if cfg.fcfs_local_election {
+                        Phase::RLocalFlag
+                    } else {
+                        // Ablation: skip the local election, contend on the
+                        // global flag directly (still marking the local
+                        // flag so release stays symmetric).
+                        self.locs[me].flag = true;
+                        Phase::RGlobalFlag
+                    }
+                } else {
+                    Phase::Pin
+                };
+                Step::ResumeAt(now)
+            }
+            Phase::RLocalFlag => {
+                let t = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].flag_res, now);
+                if self.locs[me].flag {
+                    self.lost_local += 1;
+                    self.tasks[tid].phase = self.tasks[tid].resume_phase;
+                } else {
+                    self.locs[me].flag = true;
+                    self.tasks[tid].phase = Phase::RGlobalFlag;
+                }
+                Step::ResumeAt(t)
+            }
+            Phase::RGlobalFlag => {
+                let t = {
+                    let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
+                    Self::op64(&cfg, &mut self.jrng, g, l0, now, me, 0)
+                };
+                if self.global_flag {
+                    self.lost_global += 1;
+                    // clear local flag and back out
+                    let t2 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].flag_res, t);
+                    self.locs[me].flag = false;
+                    self.tasks[tid].phase = self.tasks[tid].resume_phase;
+                    return Step::ResumeAt(t2);
+                }
+                self.global_flag = true;
+                self.tasks[tid].phase = Phase::RReadEpoch;
+                Step::ResumeAt(t)
+            }
+            Phase::RReadEpoch => {
+                let t = {
+                    let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
+                    Self::op64(&cfg, &mut self.jrng, g, l0, now, me, 0)
+                };
+                self.tasks[tid].phase = Phase::RScan { this_epoch: self.global_epoch };
+                Step::ResumeAt(t)
+            }
+            Phase::RScan { this_epoch } => {
+                // `coforall loc in Locales do on loc`: the scan visits all
+                // locales in parallel; completion = the slowest locale.
+                let mut t_done = now;
+                for loc in 0..cfg.locales {
+                    let mut t =
+                        Self::am(&cfg, &mut self.jrng, &mut self.locs[loc].progress_res, now, me, loc);
+                    t += cfg.tasks_per_locale as u64 * cfg.model.local_atomic_ns;
+                    t_done = t_done.max(t);
+                }
+                let safe = self
+                    .tasks
+                    .iter()
+                    .all(|task| task.epoch == 0 || task.epoch == this_epoch);
+                if !safe {
+                    self.not_quiescent += 1;
+                    self.tasks[tid].phase = Phase::RRelease { advanced: false };
+                } else {
+                    self.tasks[tid].phase = Phase::RAdvance { this_epoch };
+                }
+                Step::ResumeAt(t_done)
+            }
+            Phase::RAdvance { this_epoch } => {
+                let t = {
+                    let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
+                    Self::op64(&cfg, &mut self.jrng, g, l0, now, me, 0)
+                };
+                let new_epoch = this_epoch % NUM_EPOCHS + 1;
+                self.global_epoch = new_epoch;
+                self.tasks[tid].phase = Phase::RDrain { new_epoch };
+                Step::ResumeAt(t)
+            }
+            Phase::RDrain { new_epoch } => {
+                // Parallel per-locale: drain the expired list, update the
+                // locale's cached epoch (coforall in Listing 4).
+                let mut t_done = now;
+                for loc in 0..cfg.locales {
+                    let t0 =
+                        Self::am(&cfg, &mut self.jrng, &mut self.locs[loc].progress_res, now, me, loc);
+                    let (mut t, freed, remote) = self.drain(t0, loc, loc, (new_epoch - 1) as usize);
+                    t = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[loc].epoch_res, t);
+                    self.locs[loc].epoch = new_epoch;
+                    self.freed += freed;
+                    self.freed_remote += remote;
+                    t_done = t_done.max(t);
+                }
+                self.advances += 1;
+                self.tasks[tid].phase = Phase::RRelease { advanced: true };
+                Step::ResumeAt(t_done)
+            }
+            Phase::RRelease { advanced: _ } => {
+                let t1 = {
+                    let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
+                    Self::op64(&cfg, &mut self.jrng, g, l0, now, me, 0)
+                };
+                self.global_flag = false;
+                let t2 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].flag_res, t1);
+                self.locs[me].flag = false;
+                self.tasks[tid].phase = self.tasks[tid].resume_phase;
+                Step::ResumeAt(t2)
+            }
+            Phase::Clear => {
+                // manager.clear(): parallel over locales, all three lists.
+                let mut t_done = now;
+                for loc in 0..cfg.locales {
+                    let mut t =
+                        Self::am(&cfg, &mut self.jrng, &mut self.locs[loc].progress_res, now, me, loc);
+                    for list in 0..NUM_EPOCHS as usize {
+                        let (t2, freed, remote) = self.drain(t, loc, loc, list);
+                        t = t2;
+                        self.freed += freed;
+                        self.freed_remote += remote;
+                    }
+                    t_done = t_done.max(t);
+                }
+                self.tasks[tid].phase = Phase::Finished;
+                // One final no-op step so the makespan includes the clear.
+                Step::ResumeAt(t_done)
+            }
+            Phase::Finished => Step::Done,
+        }
+    }
+}
+
+/// Run one Figs-4–7 data point.
+pub fn run_epoch(cfg: EpochConfig) -> EpochResult {
+    let n_tasks = cfg.total_tasks();
+    let tasks = (0..n_tasks)
+        .map(|t| TaskState {
+            locale: t / cfg.tasks_per_locale,
+            remaining: cfg.objs_per_task,
+            iter: 0,
+            epoch: 0,
+            phase: Phase::Pin,
+            resume_phase: Phase::Pin,
+            rng: Xoshiro256pp::new(cfg.seed ^ (t as u64).wrapping_mul(0xA5A5)),
+        })
+        .collect();
+    let locs = (0..cfg.locales)
+        .map(|_| LocState {
+            epoch: 1,
+            flag: false,
+            flag_res: Resource::new(),
+            epoch_res: Resource::new(),
+            limbo_res: Resource::new(),
+            progress_res: MultiResource::new(cfg.model.am_handlers),
+            limbo: vec![vec![0; cfg.locales]; NUM_EPOCHS as usize],
+        })
+        .collect();
+    let mut sim = EpochSim {
+        jrng: Xoshiro256pp::new(cfg.seed ^ 0xBEEF),
+        global_epoch: 1,
+        global_flag: false,
+        global_res: Resource::new(),
+        locs,
+        tasks,
+        advances: 0,
+        lost_local: 0,
+        lost_global: 0,
+        not_quiescent: 0,
+        freed: 0,
+        freed_remote: 0,
+        iters: 0,
+        active: n_tasks,
+        cfg,
+    };
+    let (makespan, _) = run(&mut sim, n_tasks);
+    EpochResult {
+        makespan_ns: makespan,
+        total_iters: sim.iters,
+        throughput_mops: if makespan == 0 { 0.0 } else { sim.iters as f64 * 1e3 / makespan as f64 },
+        advances: sim.advances,
+        lost_local: sim.lost_local,
+        lost_global: sim.lost_global,
+        not_quiescent: sim.not_quiescent,
+        freed: sim.freed,
+        freed_remote: sim.freed_remote,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(workload: EpochWorkload, locales: usize) -> EpochConfig {
+        EpochConfig {
+            workload,
+            model: NicModel::aries_no_network_atomics(),
+            locales,
+            tasks_per_locale: 4,
+            objs_per_task: 2_048,
+            remote_ratio: 0.0,
+            fcfs_local_election: true,
+            slow_locale: None,
+            slow_factor: 8,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn readonly_scales_with_locales() {
+        // Fig 7: weak scaling (same per-task work) — throughput grows with
+        // locales, per-task time ~flat.
+        let t1 = run_epoch(cfg(EpochWorkload::ReadOnly, 1));
+        let t8 = run_epoch(cfg(EpochWorkload::ReadOnly, 8));
+        assert!(t8.total_iters == 8 * t1.total_iters);
+        let ratio = t8.makespan_ns as f64 / t1.makespan_ns as f64;
+        assert!(ratio < 1.5, "read-only must scale ~perfectly, ratio={ratio}");
+        assert_eq!(t8.advances, 0);
+        assert_eq!(t8.freed, 0);
+    }
+
+    #[test]
+    fn delete_at_end_reclaims_everything() {
+        let r = run_epoch(cfg(EpochWorkload::DeleteReclaimAtEnd, 4));
+        assert_eq!(r.freed, r.total_iters, "clear() must free every deferred object");
+        assert_eq!(r.advances, 0);
+    }
+
+    #[test]
+    fn remote_ratio_increases_cost_and_remote_frees() {
+        let mut c0 = cfg(EpochWorkload::DeleteReclaimAtEnd, 4);
+        c0.remote_ratio = 0.0;
+        let mut c100 = c0.clone();
+        c100.remote_ratio = 1.0;
+        let r0 = run_epoch(c0);
+        let r100 = run_epoch(c100);
+        assert_eq!(r0.freed_remote, 0);
+        assert_eq!(r100.freed_remote, r100.freed);
+        assert!(
+            r100.makespan_ns > r0.makespan_ns,
+            "remote objects must cost more to reclaim"
+        );
+        // ... but not catastrophically: the scatter list amortizes.
+        let ratio = r100.makespan_ns as f64 / r0.makespan_ns as f64;
+        assert!(ratio < 2.0, "bulk transfer keeps remote reclamation cheap, ratio={ratio}");
+    }
+
+    #[test]
+    fn reclaim_every_iteration_still_scales() {
+        // Fig 5: the FCFS election sheds redundant attempts; throughput
+        // should still grow with locales. Needs a realistic task count
+        // per locale (the paper runs 44) — with very few tasks one
+        // straggler's per-iteration reclaim tail dominates the makespan.
+        let mut c2 = cfg(EpochWorkload::DeleteReclaimEvery(1), 2);
+        c2.tasks_per_locale = 16;
+        let mut c8 = cfg(EpochWorkload::DeleteReclaimEvery(1), 8);
+        c8.tasks_per_locale = 16;
+        let t2 = run_epoch(c2);
+        let t8 = run_epoch(c8);
+        assert!(t8.throughput_mops > t2.throughput_mops * 1.2,
+            "t2={} t8={}", t2.throughput_mops, t8.throughput_mops);
+        // Elections mostly lose (only one winner at a time).
+        assert!(t8.lost_local + t8.lost_global > t8.advances);
+    }
+
+    #[test]
+    fn periodic_reclaim_advances_and_frees() {
+        let r = run_epoch(cfg(EpochWorkload::DeleteReclaimEvery(256), 2));
+        assert!(r.advances > 0, "periodic tryReclaim must advance");
+        assert!(r.freed > 0, "advances must free");
+        // Everything not freed stays in limbo (no final clear in Fig 4/5).
+        assert!(r.freed <= r.total_iters);
+    }
+
+    #[test]
+    fn election_sheds_global_contention() {
+        // Most losers must lose LOCALLY (cheap), not globally: the paper's
+        // "not even the global-epoch locale is bogged down".
+        let mut c = cfg(EpochWorkload::DeleteReclaimEvery(1), 8);
+        c.tasks_per_locale = 8;
+        c.objs_per_task = 1_024;
+        let r = run_epoch(c);
+        assert!(
+            r.lost_local > r.lost_global,
+            "local FCFS must shed most attempts: local={} global={}",
+            r.lost_local,
+            r.lost_global
+        );
+    }
+
+    #[test]
+    fn network_atomics_hurt_local_heavy_epoch_ops() {
+        // Pin/unpin are local atomics; with network atomics they pay NIC
+        // latency (paper: up to an order of magnitude on local ops).
+        let mut with = cfg(EpochWorkload::ReadOnly, 4);
+        with.model = NicModel::aries();
+        let mut without = cfg(EpochWorkload::ReadOnly, 4);
+        without.model = NicModel::aries_no_network_atomics();
+        let rw = run_epoch(with);
+        let rwo = run_epoch(without);
+        let gap = rw.makespan_ns as f64 / rwo.makespan_ns as f64;
+        assert!(gap > 3.0, "network atomics should slow local-op workloads, gap={gap:.1}");
+    }
+
+    #[test]
+    fn determinism() {
+        let a = run_epoch(cfg(EpochWorkload::DeleteReclaimEvery(64), 4));
+        let b = run_epoch(cfg(EpochWorkload::DeleteReclaimEvery(64), 4));
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+        assert_eq!(a.advances, b.advances);
+        assert_eq!(a.freed, b.freed);
+    }
+}

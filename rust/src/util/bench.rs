@@ -1,0 +1,177 @@
+//! A small benchmark runner (criterion is unavailable offline). The cargo
+//! benches use `harness = false` and drive this runner directly; it does
+//! warmup, repeated timed samples, and reports mean ± stddev with
+//! throughput, in both human and CSV form.
+
+use crate::util::stats::Summary;
+use crate::util::table::{fmt_nanos, fmt_ops, Table};
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// nanoseconds per sample (one sample = `ops_per_sample` operations)
+    pub per_sample_ns: Summary,
+    pub ops_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn ns_per_op(&self) -> f64 {
+        self.per_sample_ns.mean / self.ops_per_sample.max(1) as f64
+    }
+
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.per_sample_ns.mean == 0.0 {
+            0.0
+        } else {
+            self.ops_per_sample as f64 * 1e9 / self.per_sample_ns.mean
+        }
+    }
+}
+
+/// The runner. Construct once per bench binary; `case` for every
+/// configuration point; `finish` to print the summary table.
+pub struct BenchRunner {
+    title: String,
+    warmup: usize,
+    samples: usize,
+    results: Vec<BenchResult>,
+    csv: bool,
+    quick: bool,
+}
+
+impl BenchRunner {
+    pub fn new(title: &str) -> BenchRunner {
+        // `cargo bench` passes `--bench`; honor PGAS_NB_BENCH_QUICK to keep
+        // CI fast and `--csv`-style env for machine output.
+        let quick = std::env::var("PGAS_NB_BENCH_QUICK").is_ok();
+        BenchRunner {
+            title: title.to_string(),
+            warmup: if quick { 1 } else { 3 },
+            samples: if quick { 3 } else { 10 },
+            results: Vec::new(),
+            csv: std::env::var("PGAS_NB_BENCH_CSV").is_ok(),
+            quick,
+        }
+    }
+
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        if !self.quick {
+            self.samples = n;
+        }
+        self
+    }
+
+    /// Time `f`, which performs `ops` operations per call, and record it
+    /// under `name`. Returns the result for immediate inspection.
+    pub fn case(&mut self, name: &str, ops: u64, mut f: impl FnMut()) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            per_sample_ns: Summary::of(&samples_ns),
+            ops_per_sample: ops,
+        };
+        eprintln!(
+            "  {:<52} {:>12}/op  {:>12} ops/s  (±{:.1}%)",
+            r.name,
+            fmt_nanos(r.ns_per_op()),
+            fmt_ops(r.ops_per_sec()),
+            if r.per_sample_ns.mean > 0.0 {
+                100.0 * r.per_sample_ns.stddev / r.per_sample_ns.mean
+            } else {
+                0.0
+            }
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally-measured result (used by the DES drivers, where
+    /// "time" is virtual nanoseconds rather than wall clock).
+    pub fn record_virtual(&mut self, name: &str, ops: u64, virtual_ns: f64) -> &BenchResult {
+        let r = BenchResult {
+            name: name.to_string(),
+            per_sample_ns: Summary::of(&[virtual_ns]),
+            ops_per_sample: ops,
+        };
+        eprintln!(
+            "  {:<52} {:>12}/op  {:>12} ops/s  [virtual time]",
+            r.name,
+            fmt_nanos(r.ns_per_op()),
+            fmt_ops(r.ops_per_sec()),
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Print the final table; returns it for tests.
+    pub fn finish(&self) -> Table {
+        let mut t = Table::new(&["case", "ns_per_op", "ops_per_sec", "stddev_pct"]);
+        for r in &self.results {
+            let sd = if r.per_sample_ns.mean > 0.0 {
+                100.0 * r.per_sample_ns.stddev / r.per_sample_ns.mean
+            } else {
+                0.0
+            };
+            t.row(&[
+                r.name.clone(),
+                format!("{:.1}", r.ns_per_op()),
+                format!("{:.0}", r.ops_per_sec()),
+                format!("{sd:.1}"),
+            ]);
+        }
+        println!("\n=== {} ===", self.title);
+        if self.csv {
+            println!("{}", t.to_csv());
+        } else {
+            println!("{}", t.render());
+        }
+        t
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_measures_something() {
+        std::env::set_var("PGAS_NB_BENCH_QUICK", "1");
+        let mut b = BenchRunner::new("t");
+        let mut acc = 0u64;
+        b.case("spin", 1000, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].ns_per_op() >= 0.0);
+        let t = b.finish();
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn virtual_record() {
+        let mut b = BenchRunner::new("t");
+        let r = b.record_virtual("sim", 1_000, 2_000_000.0);
+        assert!((r.ns_per_op() - 2000.0).abs() < 1e-9);
+        assert!((r.ops_per_sec() - 500_000.0).abs() < 1.0);
+    }
+}

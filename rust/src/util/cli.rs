@@ -1,0 +1,190 @@
+//! Minimal command-line parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and a generated usage string. Enough for the
+//! coordinator binary, the benches and the examples.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative description of one option, used for `usage()`.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+    program: String,
+}
+
+impl Args {
+    /// Parse from `std::env::args()`.
+    pub fn from_env() -> Args {
+        let v: Vec<String> = std::env::args().collect();
+        Args::parse(&v)
+    }
+
+    /// Parse from an explicit vector (index 0 = program name).
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args {
+            program: argv.first().cloned().unwrap_or_default(),
+            ..Args::default()
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.opts.insert(body.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    /// Register option metadata (for `usage()`); returns self for chaining.
+    pub fn describe(mut self, specs: &[OptSpec]) -> Self {
+        self.specs = specs.to_vec();
+        self
+    }
+
+    pub fn usage(&self, about: &str) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{about}\n\nUsage: {} [subcommand] [--opts]\n", self.program);
+        for spec in &self.specs {
+            let d = spec.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
+            let _ = writeln!(s, "  --{:<24} {}{}", spec.name, spec.help, d);
+        }
+        s
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get_parse(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get_parse(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get_parse(name).unwrap_or(default)
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.get(name).and_then(|v| {
+            v.parse().map_err(|_| {
+                eprintln!("warning: could not parse --{name}={v}; using default");
+            }).ok()
+        })
+    }
+
+    /// Parse a comma-separated list of integers, e.g. `--locales 2,4,8,16`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(s.split_whitespace().map(|t| t.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_forms() {
+        let a = Args::parse(&argv("--locales 8 --tasks=44"));
+        assert_eq!(a.get_usize("locales", 0), 8);
+        assert_eq!(a.get_usize("tasks", 0), 44);
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        let a = Args::parse(&argv("bench fig3 --verbose --csv"));
+        assert_eq!(a.subcommand(), Some("bench"));
+        assert_eq!(a.positional(), &["bench".to_string(), "fig3".to_string()]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("csv"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(""));
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_or("name", "dflt"), "dflt");
+        assert_eq!(a.get_f64("ratio", 0.5), 0.5);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&argv("--locales 2,4,8"));
+        assert_eq!(a.get_usize_list("locales", &[1]), vec![2, 4, 8]);
+        assert_eq!(a.get_usize_list("other", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = Args::parse(&argv("--fast --locales 4"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_usize("locales", 0), 4);
+    }
+
+    #[test]
+    fn usage_contains_specs() {
+        let a = Args::parse(&argv("")).describe(&[OptSpec {
+            name: "locales",
+            help: "number of locales",
+            default: Some("8"),
+        }]);
+        let u = a.usage("test tool");
+        assert!(u.contains("--locales"));
+        assert!(u.contains("default: 8"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared infrastructure: RNG, CLI parsing, statistics, table output, a
+//! benchmark runner, and a mini property-testing framework. All hand-rolled
+//! because the offline environment ships no `rand`/`clap`/`criterion`/
+//! `proptest`.
+
+pub mod bench;
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

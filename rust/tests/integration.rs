@@ -1,0 +1,235 @@
+//! Cross-module integration: substrate + atomics + epoch + collections +
+//! runtime composed, as a downstream user would.
+
+use pgas_nb::collections::{InterlockedHashTable, LockFreeList, LockFreeQueue, LockFreeStack};
+use pgas_nb::epoch::{EpochManager, ReclaimOutcome};
+use pgas_nb::pgas::{coforall_locales, coforall_tasks, LocaleId, Machine, NicModel, Pgas};
+use pgas_nb::runtime::SharedReclaimScan;
+use pgas_nb::util::rng::Xoshiro256pp;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+fn setup(locales: usize, tasks: usize) -> (Arc<Pgas>, EpochManager) {
+    let p = Pgas::new(Machine::new(locales, tasks), NicModel::aries_no_network_atomics());
+    let em = EpochManager::new(Arc::clone(&p));
+    (p, em)
+}
+
+#[test]
+fn one_manager_protects_many_structures() {
+    // The intended usage: a single privatized EpochManager shared by a
+    // stack, a queue, a list and a hash table, churned from every locale.
+    let (p, em) = setup(4, 2);
+    let stack: LockFreeStack<u64> = LockFreeStack::new(Arc::clone(&p), em.clone());
+    let queue: LockFreeQueue<u64> = LockFreeQueue::new(Arc::clone(&p), em.clone());
+    let list = LockFreeList::new(Arc::clone(&p), em.clone());
+    let table: InterlockedHashTable<u64> = InterlockedHashTable::new(Arc::clone(&p), em.clone(), 64);
+
+    coforall_locales(p.machine(), |loc| {
+        coforall_tasks(2, |tid| {
+            let tok = em.register();
+            let mut rng = Xoshiro256pp::new((loc.index() * 2 + tid) as u64 + 1);
+            for i in 0..800u64 {
+                let k = 1 + rng.next_below(96);
+                match rng.next_below(8) {
+                    0 => stack.push(&tok, k),
+                    1 => {
+                        stack.pop(&tok);
+                    }
+                    2 => queue.enqueue(&tok, k),
+                    3 => {
+                        queue.dequeue(&tok);
+                    }
+                    4 => {
+                        list.insert(&tok, k);
+                    }
+                    5 => {
+                        list.remove(&tok, k);
+                    }
+                    6 => {
+                        table.insert(&tok, k, k * 3);
+                    }
+                    _ => {
+                        if let Some(v) = table.get(&tok, k) {
+                            assert_eq!(v, k * 3);
+                        }
+                    }
+                }
+                if i % 128 == 0 {
+                    tok.try_reclaim();
+                }
+            }
+        });
+    });
+
+    // Teardown in dependency order; everything must balance.
+    drop(stack);
+    drop(queue);
+    drop(list);
+    drop(table);
+    em.clear();
+    let s = em.stats();
+    assert_eq!(s.deferred, s.freed);
+    assert_eq!(p.live_objects(), 0);
+}
+
+#[test]
+fn epoch_advance_is_globally_consistent_across_structures() {
+    let (p, em) = setup(2, 1);
+    // A token pinned via one structure blocks reclamation triggered via
+    // another — the manager is a single consensus domain.
+    let stack: LockFreeStack<u64> = LockFreeStack::new(Arc::clone(&p), em.clone());
+    let holder = em.register();
+    holder.pin();
+    assert!(em.try_reclaim().advanced(), "first advance ok (all in current epoch)");
+    // holder is now one epoch behind: further advances must abort...
+    assert_eq!(em.try_reclaim(), ReclaimOutcome::NotQuiescent);
+    // ...including attempts made through a structure's token.
+    let tok = stack.register();
+    assert_eq!(tok.try_reclaim(), ReclaimOutcome::NotQuiescent);
+    holder.unpin();
+    assert!(tok.try_reclaim().advanced());
+}
+
+#[test]
+fn network_atomics_mode_changes_comm_mix_not_results() {
+    // Same workload under both fabric modes: identical logical results,
+    // different NIC counter mix (rdma vs local+am).
+    let run = |model: NicModel| {
+        let p = Pgas::new(Machine::new(2, 2), model);
+        let em = EpochManager::new(Arc::clone(&p));
+        let stack: LockFreeStack<u64> = LockFreeStack::new(Arc::clone(&p), em.clone());
+        let popped = AtomicU64::new(0);
+        coforall_locales(p.machine(), |loc| {
+            coforall_tasks(2, |tid| {
+                let tok = stack.register();
+                for i in 0..300u64 {
+                    stack.push(&tok, loc.index() as u64 * 1000 + tid as u64 * 500 + i);
+                    if i % 2 == 0 && stack.pop(&tok).is_some() {
+                        popped.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        });
+        let tok = stack.register();
+        let drained = stack.drain(&tok) as u64;
+        drop(tok);
+        em.clear();
+        let total = popped.load(Ordering::Relaxed) + drained;
+        (total, p.comm_totals())
+    };
+    let (n_rdma, comm_rdma) = run(NicModel::aries());
+    let (n_am, comm_am) = run(NicModel::aries_no_network_atomics());
+    assert_eq!(n_rdma, 4 * 300);
+    assert_eq!(n_am, 4 * 300);
+    assert!(comm_rdma.atomics_rdma > 0, "network-atomics mode must use the NIC");
+    assert_eq!(comm_am.atomics_rdma, 0, "no NIC atomics without network atomics");
+    assert!(comm_am.atomics_local > 0);
+}
+
+#[test]
+fn kernel_scan_full_protocol_under_churn() {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (p, em) = setup(8, 2);
+    em.set_scanner(SharedReclaimScan::load_fitting(&dir, 8, 16, 512).unwrap()).ok().unwrap();
+    let stack: LockFreeStack<u64> = LockFreeStack::new(Arc::clone(&p), em.clone());
+    coforall_locales(p.machine(), |loc| {
+        coforall_tasks(2, |tid| {
+            let tok = stack.register();
+            for i in 0..400u64 {
+                stack.push(&tok, loc.index() as u64 * 800 + tid as u64 * 400 + i);
+                if i % 3 == 0 {
+                    stack.pop(&tok);
+                }
+                if i % 64 == 0 {
+                    tok.try_reclaim(); // exercises the PJRT path
+                }
+            }
+        });
+    });
+    let tok = stack.register();
+    stack.drain(&tok);
+    drop(tok);
+    em.clear();
+    let s = em.stats();
+    assert!(s.advances > 0, "kernel-scan reclaims must advance");
+    assert_eq!(s.deferred, s.freed);
+    assert_eq!(p.live_objects(), 0);
+}
+
+#[test]
+fn bulk_gets_replace_per_token_reads_with_kernel_scan() {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        return;
+    }
+    let (p_scalar, em_scalar) = setup(4, 1);
+    let (p_kernel, em_kernel) = setup(4, 1);
+    em_kernel.set_scanner(SharedReclaimScan::load_fitting(&dir, 4, 16, 512).unwrap()).ok().unwrap();
+    // Same population, same reclaim count.
+    let toks_s: Vec<_> = (0..4u16)
+        .map(|l| pgas_nb::pgas::with_locale(LocaleId(l), || em_scalar.register()))
+        .collect();
+    let toks_k: Vec<_> = (0..4u16)
+        .map(|l| pgas_nb::pgas::with_locale(LocaleId(l), || em_kernel.register()))
+        .collect();
+    for _ in 0..10 {
+        assert!(em_scalar.try_reclaim().advanced());
+        assert!(em_kernel.try_reclaim().advanced());
+    }
+    let cs = p_scalar.comm_totals();
+    let ck = p_kernel.comm_totals();
+    assert_eq!(ck.gets, 40, "kernel scan: one bulk GET per locale per reclaim");
+    assert_eq!(cs.gets, 0, "scalar scan does no GETs");
+    drop(toks_s);
+    drop(toks_k);
+}
+
+#[test]
+fn forall_cyclic_microbenchmark_shape() {
+    // Listing 5's loop shape end-to-end on the real substrate.
+    let (p, em) = setup(4, 2);
+    let num_objects = 1_000;
+    // Pre-allocate objects with randomized owner locales (randomizeObjs).
+    let mut rng = Xoshiro256pp::new(5);
+    let objs: Vec<_> = (0..num_objects)
+        .map(|i| p.alloc(LocaleId(rng.next_usize(4) as u16), i as u64))
+        .collect();
+    let objs = Arc::new(std::sync::Mutex::new(
+        objs.into_iter().map(Some).collect::<Vec<_>>(),
+    ));
+    pgas_nb::pgas::forall_cyclic(p.machine(), num_objects, 2, |i| {
+        let tok = em.register();
+        tok.pin();
+        let obj = objs.lock().unwrap()[i].take().unwrap();
+        tok.defer_delete(obj);
+        tok.unpin();
+        if i % 100 == 0 {
+            tok.try_reclaim();
+        }
+    });
+    em.clear();
+    assert_eq!(em.stats().deferred, num_objects as u64);
+    assert_eq!(em.stats().freed, num_objects as u64);
+    assert_eq!(p.live_objects(), 0);
+}
+
+#[test]
+fn sixtyfour_locale_smoke() {
+    // The paper's full machine shape on the real substrate (few tasks).
+    let (p, em) = setup(64, 1);
+    coforall_locales(p.machine(), |loc| {
+        let tok = em.register();
+        tok.pin();
+        tok.defer_delete(p.alloc(LocaleId(((loc.index() + 1) % 64) as u16), loc.index() as u64));
+        tok.unpin();
+    });
+    assert_eq!(p.live_objects(), 64);
+    em.clear();
+    assert_eq!(p.live_objects(), 0);
+    assert_eq!(em.stats().freed_remote, 64, "every object was remote to its deferrer");
+}

@@ -1,0 +1,330 @@
+//! Property-based tests over the crate's core invariants, using the
+//! in-crate mini framework (`util::proptest`).
+
+use pgas_nb::atomics::{AbaCell, AtomicObject, AtomicU128, LocalAtomicObject};
+use pgas_nb::epoch::{EpochManager, LimboList, NodePool, ReclaimPolicy};
+use pgas_nb::pgas::{GlobalPtr, LocaleId, Machine, NicModel, Pgas, WidePtr};
+use pgas_nb::util::proptest::{shrink_u64, shrink_vec, Prop};
+use pgas_nb::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+#[test]
+fn prop_compression_roundtrip() {
+    // ∀ locale ≤ 16 bit, addr ≤ 48 bit: decompress(compress(w)) == w.
+    Prop::new("wide pointer compression roundtrip").cases(2_000).check(
+        |rng| (rng.next_below(1 << 16) as u16, rng.next_below(1 << 48)),
+        |&(locale, addr)| {
+            let w = WidePtr::new(LocaleId(locale), addr);
+            let c = w.compress().ok_or("uncompressible")?;
+            if WidePtr::decompress(c) == w {
+                Ok(())
+            } else {
+                Err(format!("roundtrip mismatch for {w:?}"))
+            }
+        },
+        |&(l, a)| {
+            shrink_u64(a).into_iter().map(|a2| (l, a2)).collect()
+        },
+    );
+}
+
+#[test]
+fn prop_compression_rejects_oversized() {
+    // ∀ addr with any bit above 47 set: compress() is None (never silent).
+    Prop::new("oversized addresses rejected").cases(500).check_noshrink(
+        |rng| rng.next_u64() | (1 << 48),
+        |&addr| {
+            match WidePtr::new(LocaleId(0), addr).compress() {
+                None => Ok(()),
+                Some(c) => Err(format!("{addr:#x} compressed to {c:#x}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_aba_counter_strictly_monotonic() {
+    // Any sequence of ABA mutations leaves count == #mutations.
+    Prop::new("ABA counter == mutation count").cases(200).check(
+        |rng| {
+            let n = rng.next_usize(64);
+            (0..n).map(|_| rng.next_below(3) as u8).collect::<Vec<u8>>()
+        },
+        |ops| {
+            let cell = AbaCell::new(0);
+            for (i, op) in ops.iter().enumerate() {
+                match op {
+                    0 => cell.write_aba(i as u64),
+                    1 => {
+                        cell.exchange_aba(i as u64);
+                    }
+                    _ => {
+                        let snap = cell.read_aba();
+                        cell.compare_exchange_aba(snap, i as u64).map_err(|e| format!("{e:?}"))?;
+                    }
+                }
+            }
+            let count = cell.read_aba().count;
+            if count == ops.len() as u64 {
+                Ok(())
+            } else {
+                Err(format!("count={count} after {} mutations", ops.len()))
+            }
+        },
+        |ops| shrink_vec(ops, |_| Vec::new()),
+    );
+}
+
+#[test]
+fn prop_dcas_linearizable_vs_mutex_oracle() {
+    // Random single-threaded op sequences on AtomicU128 match a plain u128
+    // reference exactly (sequential correctness of the asm path).
+    Prop::new("AtomicU128 matches u128 oracle").cases(300).check_noshrink(
+        |rng| {
+            let n = 1 + rng.next_usize(100);
+            (0..n)
+                .map(|_| (rng.next_below(4), rng.next_u64() as u128 | ((rng.next_u64() as u128) << 64)))
+                .collect::<Vec<_>>()
+        },
+        |ops| {
+            let a = AtomicU128::new(0);
+            let mut oracle: u128 = 0;
+            for &(kind, v) in ops {
+                match kind {
+                    0 => {
+                        if a.load() != oracle {
+                            return Err("load mismatch".into());
+                        }
+                    }
+                    1 => {
+                        a.store(v);
+                        oracle = v;
+                    }
+                    2 => {
+                        if a.swap(v) != oracle {
+                            return Err("swap returned wrong previous".into());
+                        }
+                        oracle = v;
+                    }
+                    _ => {
+                        let expected = if v % 2 == 0 { oracle } else { v };
+                        let r = a.compare_exchange(expected, v);
+                        if expected == oracle {
+                            if r != Ok(oracle) {
+                                return Err("cas should have succeeded".into());
+                            }
+                            oracle = v;
+                        } else if r != Err(oracle) {
+                            return Err("cas should have failed with current".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_limbo_multiset_conservation() {
+    // Whatever multiset of values is pushed (from however many threads),
+    // exactly that multiset drains.
+    Prop::new("limbo list conserves multiset").cases(50).check_noshrink(
+        |rng| (1 + rng.next_usize(4), 1 + rng.next_usize(400)),
+        |&(threads, per)| {
+            let p = Pgas::smp();
+            let pool = NodePool::new();
+            let list = LimboList::new();
+            std::thread::scope(|s| {
+                for t in 0..threads {
+                    let (p, pool, list) = (&p, &pool, &list);
+                    s.spawn(move || {
+                        for i in 0..per {
+                            list.push(pool, p.alloc(LocaleId(0), (t * per + i) as u64).erase());
+                        }
+                    });
+                }
+            });
+            let mut seen = vec![false; threads * per];
+            list.pop_all().drain(&pool, |e| {
+                let v = unsafe { *GlobalPtr::<u64>::from_wide(e.wide).deref() } as usize;
+                assert!(!seen[v]);
+                seen[v] = true;
+                unsafe { p.free_erased(e) };
+            });
+            if seen.iter().all(|&b| b) && p.live_objects() == 0 {
+                Ok(())
+            } else {
+                Err("lost or duplicated elements".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_epoch_advance_never_skips_pinned_old_epoch() {
+    // Under any interleaving of pin/unpin/defer/tryReclaim from one task,
+    // the protocol never frees an object while a token could reach it:
+    // proxy invariant — heap accounting only reaches zero after clear().
+    Prop::new("epoch protocol frees exactly once, never early").cases(60).check_noshrink(
+        |rng| {
+            let n = rng.next_usize(120);
+            (0..n).map(|_| rng.next_below(5) as u8).collect::<Vec<u8>>()
+        },
+        |ops| {
+            let p = Pgas::new(Machine::new(2, 1), NicModel::aries_no_network_atomics());
+            let em = EpochManager::new(Arc::clone(&p));
+            let tok = em.register();
+            let mut deferred: u64 = 0;
+            for (i, op) in ops.iter().enumerate() {
+                match op {
+                    0 => tok.pin(),
+                    1 => tok.unpin(),
+                    2 => {
+                        if tok.is_pinned() {
+                            tok.defer_delete(p.alloc(LocaleId((i % 2) as u16), i as u64));
+                            deferred += 1;
+                        }
+                    }
+                    _ => {
+                        tok.try_reclaim();
+                    }
+                }
+            }
+            tok.unpin();
+            drop(tok);
+            em.clear();
+            let s = em.stats();
+            if s.deferred != deferred {
+                return Err(format!("deferred {} != {}", s.deferred, deferred));
+            }
+            if s.freed != deferred {
+                return Err(format!("freed {} != deferred {}", s.freed, deferred));
+            }
+            if p.live_objects() != 0 {
+                return Err(format!("{} leaked objects", p.live_objects()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_both_policies_never_double_free() {
+    for policy in [ReclaimPolicy::Conservative, ReclaimPolicy::PaperTwoStale] {
+        let p = Pgas::new(Machine::new(2, 1), NicModel::aries_no_network_atomics());
+        let em = EpochManager::with_policy(Arc::clone(&p), policy);
+        let tok = em.register();
+        let mut rng = Xoshiro256pp::new(17);
+        for i in 0..2_000u64 {
+            tok.pin();
+            tok.defer_delete(p.alloc(LocaleId((i % 2) as u16), i));
+            tok.unpin();
+            if rng.chance(0.05) {
+                tok.try_reclaim();
+            }
+        }
+        drop(tok);
+        em.clear();
+        // alloc/free accounting is the double-free detector: a double free
+        // would underflow `live` below zero.
+        assert_eq!(p.live_objects(), 0, "{policy:?}");
+        assert_eq!(em.stats().freed, 2_000, "{policy:?}");
+    }
+}
+
+#[test]
+fn prop_atomic_object_sequential_oracle() {
+    // Random read/write/exchange/CAS sequences on AtomicObject match a
+    // plain Option<usize> "which pointer" oracle.
+    Prop::new("AtomicObject matches pointer oracle").cases(100).check_noshrink(
+        |rng| {
+            let n = 1 + rng.next_usize(60);
+            (0..n).map(|_| (rng.next_below(4) as u8, rng.next_usize(4))).collect::<Vec<_>>()
+        },
+        |ops| {
+            let p = Pgas::new(Machine::new(4, 1), NicModel::aries_no_network_atomics());
+            let objs: Vec<GlobalPtr<u64>> =
+                (0..4).map(|i| p.alloc(LocaleId(i as u16), i as u64)).collect();
+            let a: AtomicObject<u64> = AtomicObject::new(Arc::clone(&p), LocaleId(0));
+            let mut cur: GlobalPtr<u64> = GlobalPtr::nil();
+            for &(kind, which) in ops {
+                let x = objs[which];
+                match kind {
+                    0 => {
+                        if a.read() != cur {
+                            return Err("read mismatch".into());
+                        }
+                    }
+                    1 => {
+                        a.write(x);
+                        cur = x;
+                    }
+                    2 => {
+                        if a.exchange(x) != cur {
+                            return Err("exchange returned wrong prev".into());
+                        }
+                        cur = x;
+                    }
+                    _ => {
+                        let expect = if which % 2 == 0 { cur } else { objs[(which + 1) % 4] };
+                        let ok = a.compare_and_swap(expect, x);
+                        if expect == cur {
+                            if !ok {
+                                return Err("cas should succeed".into());
+                            }
+                            cur = x;
+                        } else if ok && expect != cur {
+                            return Err("cas should fail".into());
+                        }
+                    }
+                }
+            }
+            for o in objs {
+                unsafe { p.free(o) };
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_local_atomic_object_matches_global_semantics() {
+    // On a single locale, LocalAtomicObject and AtomicObject must agree
+    // op-for-op on any sequence.
+    Prop::new("local == global on one locale").cases(100).check_noshrink(
+        |rng| {
+            let n = 1 + rng.next_usize(50);
+            (0..n).map(|_| (rng.next_below(3) as u8, rng.next_usize(3))).collect::<Vec<_>>()
+        },
+        |ops| {
+            let p = Pgas::smp();
+            let objs: Vec<GlobalPtr<u64>> = (0..3).map(|i| p.alloc(LocaleId(0), i as u64)).collect();
+            let g: AtomicObject<u64> = AtomicObject::new(Arc::clone(&p), LocaleId(0));
+            let l: LocalAtomicObject<u64> = LocalAtomicObject::new();
+            for &(kind, which) in ops {
+                let x = objs[which];
+                match kind {
+                    0 => {
+                        if g.read() != l.read() {
+                            return Err("divergence on read".into());
+                        }
+                    }
+                    1 => {
+                        g.write(x);
+                        l.write(x);
+                    }
+                    _ => {
+                        if g.exchange(x) != l.exchange(x) {
+                            return Err("divergence on exchange".into());
+                        }
+                    }
+                }
+            }
+            for o in objs {
+                unsafe { p.free(o) };
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,207 @@
+//! Testbed-simulator invariants and figure-shape assertions: the DES must
+//! reproduce the qualitative claims of §III under perturbation, stay
+//! deterministic, and degrade sanely under failure injection.
+
+use pgas_nb::pgas::NicModel;
+use pgas_nb::sim::{
+    run_atomics, run_epoch, AtomicVariant, AtomicsConfig, EpochConfig, EpochWorkload,
+};
+
+fn acfg(variant: AtomicVariant, model: NicModel, locales: usize) -> AtomicsConfig {
+    AtomicsConfig {
+        variant,
+        model,
+        locales,
+        tasks_per_locale: 8,
+        ops_per_task: 1_500,
+        vars_per_locale: 512,
+        seed: 11,
+    }
+}
+
+fn ecfg(workload: EpochWorkload, locales: usize) -> EpochConfig {
+    EpochConfig {
+        workload,
+        model: NicModel::aries_no_network_atomics(),
+        locales,
+        tasks_per_locale: 8,
+        objs_per_task: 2_048,
+        remote_ratio: 0.0,
+        fcfs_local_election: true,
+        slow_locale: None,
+        slow_factor: 8,
+        seed: 11,
+    }
+}
+
+// ---- figure shapes under different seeds (robustness of the claims) ----
+
+#[test]
+fn fig3_shape_robust_across_seeds() {
+    for seed in [1u64, 99, 12345] {
+        let m = NicModel::aries_no_network_atomics();
+        let mut a = acfg(AtomicVariant::AtomicInt, m, 1);
+        let mut b = acfg(AtomicVariant::AtomicObject, m, 1);
+        a.seed = seed;
+        b.seed = seed;
+        let (ra, rb) = (run_atomics(a), run_atomics(b));
+        let ratio = ra.makespan_ns as f64 / rb.makespan_ns as f64;
+        assert!((0.9..1.1).contains(&ratio), "seed {seed}: AtomicObject == atomic int, got {ratio}");
+    }
+}
+
+#[test]
+fn fig3_aba_remote_insensitive_to_network_atomics() {
+    // ABA ops are DCAS: never RDMA, so the network-atomics toggle must not
+    // change the distributed ABA series (paper: same line in both plots).
+    let with = run_atomics(acfg(AtomicVariant::AtomicObjectAba, NicModel::aries(), 8));
+    let without =
+        run_atomics(acfg(AtomicVariant::AtomicObjectAba, NicModel::aries_no_network_atomics(), 8));
+    let ratio = with.makespan_ns as f64 / without.makespan_ns as f64;
+    assert!((0.8..1.25).contains(&ratio), "ratio={ratio}");
+}
+
+#[test]
+fn fig4_vs_fig5_reclaim_frequency_ordering() {
+    // Reclaiming every iteration costs more than every 1024: throughput
+    // ordering must hold at every locale count.
+    for locales in [2, 8] {
+        let f4 = run_epoch(ecfg(EpochWorkload::DeleteReclaimEvery(1024), locales));
+        let f5 = run_epoch(ecfg(EpochWorkload::DeleteReclaimEvery(1), locales));
+        assert!(
+            f4.throughput_mops > f5.throughput_mops,
+            "L={locales}: per-1024 ({}) must beat per-1 ({})",
+            f4.throughput_mops,
+            f5.throughput_mops
+        );
+    }
+}
+
+#[test]
+fn fig6_remote_ratio_monotone_cost() {
+    let mut makespans = Vec::new();
+    for ratio in [0.0, 0.5, 1.0] {
+        let mut c = ecfg(EpochWorkload::DeleteReclaimAtEnd, 4);
+        c.remote_ratio = ratio;
+        makespans.push(run_epoch(c).makespan_ns);
+    }
+    assert!(makespans[0] <= makespans[1], "{makespans:?}");
+    assert!(makespans[1] <= makespans[2], "{makespans:?}");
+}
+
+#[test]
+fn fig7_readonly_beats_deletion() {
+    let ro = run_epoch(ecfg(EpochWorkload::ReadOnly, 4));
+    let del = run_epoch(ecfg(EpochWorkload::DeleteReclaimAtEnd, 4));
+    assert!(ro.throughput_mops > del.throughput_mops);
+    assert_eq!(ro.freed, 0);
+}
+
+// ---- conservation / protocol invariants ----
+
+#[test]
+fn sim_conservation_freed_never_exceeds_deferred() {
+    for k in [1usize, 64, 1024] {
+        let r = run_epoch(ecfg(EpochWorkload::DeleteReclaimEvery(k), 4));
+        assert!(r.freed <= r.total_iters, "k={k}");
+        assert!(r.freed_remote <= r.freed, "k={k}");
+        // Outcome counts partition the attempts (one per k iterations).
+        let attempts = r.advances + r.lost_local + r.lost_global + r.not_quiescent;
+        assert_eq!(attempts, r.total_iters / k as u64, "k={k}: one attempt per k iterations");
+    }
+}
+
+#[test]
+fn sim_clear_frees_everything_regardless_of_ratio() {
+    for ratio in [0.0, 0.3, 1.0] {
+        let mut c = ecfg(EpochWorkload::DeleteReclaimAtEnd, 4);
+        c.remote_ratio = ratio;
+        let r = run_epoch(c);
+        assert_eq!(r.freed, r.total_iters, "ratio={ratio}");
+    }
+}
+
+#[test]
+fn sim_determinism_across_runs() {
+    let a = run_epoch(ecfg(EpochWorkload::DeleteReclaimEvery(128), 8));
+    let b = run_epoch(ecfg(EpochWorkload::DeleteReclaimEvery(128), 8));
+    assert_eq!(a.makespan_ns, b.makespan_ns);
+    assert_eq!(a.advances, b.advances);
+    assert_eq!(a.lost_local, b.lost_local);
+    assert_eq!(a.lost_global, b.lost_global);
+}
+
+#[test]
+fn sim_seed_changes_trace_but_not_conservation() {
+    let mut c = ecfg(EpochWorkload::DeleteReclaimEvery(128), 4);
+    c.seed = 1;
+    let a = run_epoch(c.clone());
+    c.seed = 2;
+    let b = run_epoch(c);
+    assert_ne!(a.makespan_ns, b.makespan_ns, "different seeds should differ");
+    assert_eq!(a.total_iters, b.total_iters);
+}
+
+// ---- failure injection ----
+
+#[test]
+fn straggler_locale_slows_reclaim_but_stays_correct() {
+    let base = run_epoch(ecfg(EpochWorkload::DeleteReclaimEvery(256), 8));
+    let mut c = ecfg(EpochWorkload::DeleteReclaimEvery(256), 8);
+    c.slow_locale = Some(3);
+    c.slow_factor = 16;
+    let slow = run_epoch(c);
+    assert!(
+        slow.makespan_ns > base.makespan_ns,
+        "a straggler node must slow the run: {} vs {}",
+        slow.makespan_ns,
+        base.makespan_ns
+    );
+    // The protocol still conserves and still advances.
+    assert!(slow.advances > 0);
+    assert!(slow.freed <= slow.total_iters);
+}
+
+#[test]
+fn straggler_hurts_scan_bound_workloads_most() {
+    // Reclaim-heavy workloads serialize on the slow locale's AM handlers
+    // (every scan visits it); read-only workloads barely notice.
+    let mk = |workload, slow: Option<usize>| {
+        let mut c = ecfg(workload, 8);
+        c.slow_locale = slow;
+        c.slow_factor = 16;
+        run_epoch(c)
+    };
+    let ro_pen = mk(EpochWorkload::ReadOnly, Some(3)).makespan_ns as f64
+        / mk(EpochWorkload::ReadOnly, None).makespan_ns as f64;
+    let rc_pen = mk(EpochWorkload::DeleteReclaimEvery(1), Some(3)).makespan_ns as f64
+        / mk(EpochWorkload::DeleteReclaimEvery(1), None).makespan_ns as f64;
+    assert!(
+        rc_pen > ro_pen,
+        "reclaim-heavy penalty ({rc_pen:.2}x) must exceed read-only penalty ({ro_pen:.2}x)"
+    );
+}
+
+#[test]
+fn gemini_slower_than_aries_same_shape() {
+    let mut aries = ecfg(EpochWorkload::DeleteReclaimEvery(1024), 4);
+    aries.model = NicModel::aries();
+    let mut gemini = aries.clone();
+    gemini.model = NicModel::gemini();
+    let ra = run_epoch(aries);
+    let rg = run_epoch(gemini);
+    assert!(rg.makespan_ns > ra.makespan_ns, "Gemini fabric is slower");
+    assert_eq!(ra.total_iters, rg.total_iters);
+}
+
+#[test]
+fn infiniband_profile_matches_no_network_atomics() {
+    // Paper: without RDMA atomics, performance approximates InfiniBand.
+    let mut ib = ecfg(EpochWorkload::ReadOnly, 4);
+    ib.model = NicModel::infiniband();
+    let no_na = ecfg(EpochWorkload::ReadOnly, 4);
+    let ri = run_epoch(ib);
+    let rn = run_epoch(no_na);
+    let ratio = ri.makespan_ns as f64 / rn.makespan_ns as f64;
+    assert!((0.7..1.5).contains(&ratio), "IB ~ no-network-atomics; ratio={ratio}");
+}

@@ -1,0 +1,161 @@
+//! **Fig 8** (beyond the source paper — the follow-up work's aggregation
+//! curve, arXiv:2112.00068): a remote-`defer_delete`-heavy workload swept
+//! over the destination-buffered aggregation capacity {1, 64, 256, 1024}
+//! × locales. Capacity 1 is the unbuffered baseline: every remote-owned
+//! deferral migrates to its owner immediately, one bulk-of-one PUT + one
+//! AM per object. Larger buffers coalesce migrations into one transfer
+//! per destination, so the AM count collapses and modeled comm time
+//! (`virtual_ns`) drops with it; the new `aggregated_ops`/`flushes` NIC
+//! counters prove the coalescing happened.
+//!
+//! Emits machine-readable `BENCH_aggregation.json` next to the human
+//! table (the perf-trajectory seed for CI).
+
+use pgas_nb::epoch::{EpochManager, ReclaimPolicy};
+use pgas_nb::pgas::{coforall_locales, LocaleId, Machine, NicModel, NicSnapshot, Pgas};
+use pgas_nb::util::bench::BenchRunner;
+use pgas_nb::util::table::Table;
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Point {
+    locales: usize,
+    capacity: usize,
+    ops: u64,
+    wall_ns: u64,
+    comm: NicSnapshot,
+    advances: u64,
+    migrated: u64,
+    migration_flushes: u64,
+}
+
+/// Every locale defers `objs_per_locale` objects owned by *other*
+/// locales (rotating owner), reclaiming periodically — the hot remote
+/// path of the epoch manager.
+fn run_point(locales: usize, capacity: usize, objs_per_locale: usize) -> Point {
+    let p = Pgas::new(Machine::new(locales, 2), NicModel::aries_no_network_atomics());
+    let em = EpochManager::with_config(Arc::clone(&p), ReclaimPolicy::default(), capacity);
+    let t0 = Instant::now();
+    coforall_locales(p.machine(), |loc| {
+        let tok = em.register();
+        for i in 0..objs_per_locale {
+            tok.pin();
+            // Owner is always a *different* locale: the remote-heavy case.
+            let owner = LocaleId(((loc.index() + 1 + i % (locales - 1)) % locales) as u16);
+            tok.defer_delete(p.alloc(owner, i as u64));
+            tok.unpin();
+            if i % 512 == 0 {
+                tok.try_reclaim();
+            }
+        }
+    });
+    em.clear();
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    assert_eq!(p.live_objects(), 0, "aggregation must not leak");
+    let s = em.stats();
+    let ops = (locales * objs_per_locale) as u64;
+    assert_eq!(s.freed, ops, "every deferral reclaimed exactly once");
+    Point {
+        locales,
+        capacity,
+        ops,
+        wall_ns,
+        comm: p.comm_totals(),
+        advances: s.advances,
+        migrated: s.migrated,
+        migration_flushes: s.migration_flushes,
+    }
+}
+
+fn json_point(pt: &Point) -> String {
+    format!(
+        "    {{\"locales\": {}, \"capacity\": {}, \"ops\": {}, \"ams\": {}, \"puts\": {}, \
+         \"bytes\": {}, \"virtual_ns\": {}, \"aggregated_ops\": {}, \"flushes\": {}, \
+         \"advances\": {}, \"migrated\": {}, \"migration_flushes\": {}, \"wall_ns\": {}}}",
+        pt.locales,
+        pt.capacity,
+        pt.ops,
+        pt.comm.ams,
+        pt.comm.puts,
+        pt.comm.bytes,
+        pt.comm.virtual_ns,
+        pt.comm.aggregated_ops,
+        pt.comm.flushes,
+        pt.advances,
+        pt.migrated,
+        pt.migration_flushes,
+        pt.wall_ns
+    )
+}
+
+fn main() {
+    let mut b = BenchRunner::new("Fig 8: destination-buffered aggregation of remote deferrals");
+    let objs_per_locale: usize = if b.quick() { 2_048 } else { 8_192 };
+    let capacities = [1usize, 64, 256, 1024];
+    let locale_counts = [4usize, 8];
+
+    let mut t = Table::new(&[
+        "locales",
+        "capacity",
+        "ams",
+        "puts",
+        "virtual_ms",
+        "agg_ops",
+        "flushes",
+        "am_reduction",
+    ]);
+    let mut points: Vec<Point> = Vec::new();
+    for &locales in &locale_counts {
+        let mut baseline_ams = 0u64;
+        for &capacity in &capacities {
+            let pt = run_point(locales, capacity, objs_per_locale);
+            b.record_virtual(
+                &format!("L={locales} cap={capacity} remote defer_delete"),
+                pt.ops,
+                pt.comm.virtual_ns as f64,
+            );
+            if capacity == 1 {
+                baseline_ams = pt.comm.ams;
+            }
+            let reduction = if pt.comm.ams > 0 { baseline_ams as f64 / pt.comm.ams as f64 } else { 0.0 };
+            t.row(&[
+                locales.to_string(),
+                capacity.to_string(),
+                pt.comm.ams.to_string(),
+                pt.comm.puts.to_string(),
+                format!("{:.2}", pt.comm.virtual_ns as f64 / 1e6),
+                pt.comm.aggregated_ops.to_string(),
+                pt.comm.flushes.to_string(),
+                format!("{reduction:.1}x"),
+            ]);
+            points.push(pt);
+        }
+    }
+
+    println!("\n=== Fig 8: aggregation capacity sweep (remote-heavy deferral workload) ===");
+    println!("{}", t.render());
+    b.finish();
+
+    // Headline: the acceptance ratio for the largest machine in the sweep.
+    let base = points.iter().find(|p| p.locales == 4 && p.capacity == 1).unwrap();
+    let best = points.iter().find(|p| p.locales == 4 && p.capacity == 1024).unwrap();
+    println!(
+        "\nAM reduction (L=4, cap 1024 vs 1): {:.1}x  ({} -> {} AMs); modeled comm {:.2} ms -> {:.2} ms",
+        base.comm.ams as f64 / best.comm.ams.max(1) as f64,
+        base.comm.ams,
+        best.comm.ams,
+        base.comm.virtual_ns as f64 / 1e6,
+        best.comm.virtual_ns as f64 / 1e6,
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"fig8_aggregation\",\n  \"model\": \"aries_no_network_atomics\",\n  \
+         \"objs_per_locale\": {},\n  \"points\": [\n{}\n  ]\n}}\n",
+        objs_per_locale,
+        points.iter().map(json_point).collect::<Vec<_>>().join(",\n")
+    );
+    match std::fs::write("BENCH_aggregation.json", &json) {
+        Ok(()) => println!("[wrote BENCH_aggregation.json]"),
+        Err(e) => eprintln!("[could not write BENCH_aggregation.json: {e}]"),
+    }
+}

@@ -12,7 +12,7 @@
 
 use crate::atomics::AtomicObject;
 use crate::epoch::{EpochManager, EpochToken};
-use crate::pgas::{GlobalPtr, LocaleId, Pgas, WidePtr};
+use crate::pgas::{Aggregator, GlobalPtr, LocaleId, Pgas, WidePtr};
 use std::sync::Arc;
 
 const MARK: u64 = 1;
@@ -130,10 +130,24 @@ impl<V: Send + Sync + Clone> InterlockedHashTable<V> {
     /// Insert `(key, val)`; false if the key already exists.
     pub fn insert(&self, tok: &EpochToken, key: u64, val: V) -> bool {
         assert!(key > 0, "key 0 is reserved for bucket sentinels");
-        let head = self.bucket_of(key);
+        // Preserve an outer pin: only unpin if this call pinned (pin is
+        // idempotent, so unconditionally unpinning would silently release
+        // a caller's protection).
+        let was_pinned = tok.is_pinned();
         tok.pin();
+        let result = self.insert_pinned(tok, key, val);
+        if !was_pinned {
+            tok.unpin();
+        }
+        result
+    }
+
+    /// Insert under an already-pinned token (shared by the per-op and
+    /// batched paths; the batched path pins once per delivered batch).
+    fn insert_pinned(&self, tok: &EpochToken, key: u64, val: V) -> bool {
+        let head = self.bucket_of(key);
         let mut val = Some(val);
-        let result = loop {
+        loop {
             let (pred, curr) = self.search(tok, head, key);
             if !curr.is_nil() && unsafe { unmarked(curr).deref().key } == key {
                 break false;
@@ -159,16 +173,24 @@ impl<V: Send + Sync + Clone> InterlockedHashTable<V> {
                 val = (*n).val.take();
                 self.pgas.free(node);
             }
-        };
-        tok.unpin();
-        result
+        }
     }
 
     /// Remove `key`, returning whether it was present.
     pub fn remove(&self, tok: &EpochToken, key: u64) -> bool {
-        let head = self.bucket_of(key);
+        let was_pinned = tok.is_pinned();
         tok.pin();
-        let result = loop {
+        let result = self.remove_pinned(tok, key);
+        if !was_pinned {
+            tok.unpin();
+        }
+        result
+    }
+
+    /// Remove under an already-pinned token (see [`Self::insert_pinned`]).
+    fn remove_pinned(&self, tok: &EpochToken, key: u64) -> bool {
+        let head = self.bucket_of(key);
+        loop {
             let (pred, curr) = self.search(tok, head, key);
             if curr.is_nil() || unsafe { unmarked(curr).deref().key } != key {
                 break false;
@@ -185,9 +207,72 @@ impl<V: Send + Sync + Clone> InterlockedHashTable<V> {
                 tok.defer_delete(unmarked(curr));
             }
             break true;
-        };
-        tok.unpin();
-        result
+        }
+    }
+
+    /// Batched insert: items are destination-buffered by their bucket's
+    /// home locale and each batch is applied with **one** active message
+    /// there (the per-item CASes then run at local-atomic cost), instead
+    /// of one remote CAS round trip per item. Duplicates within the batch
+    /// resolve in delivery order. Returns how many items were newly
+    /// inserted. Linearization of every item has happened by return (the
+    /// aggregator drop-flushes).
+    pub fn insert_batch<I>(&self, tok: &EpochToken, items: I) -> usize
+    where
+        I: IntoIterator<Item = (u64, V)>,
+    {
+        let mut inserted = 0usize;
+        {
+            let ins = &mut inserted;
+            let mut agg = Aggregator::new(Arc::clone(&self.pgas), |_dst, batch: Vec<(u64, V)>| {
+                // One pin per delivered batch; preserve an outer pin (a
+                // capacity flush can deliver mid-iteration while the
+                // caller still relies on its own protection).
+                let was_pinned = tok.is_pinned();
+                tok.pin();
+                for (k, v) in batch {
+                    if self.insert_pinned(tok, k, v) {
+                        *ins += 1;
+                    }
+                }
+                if !was_pinned {
+                    tok.unpin();
+                }
+            });
+            for (key, val) in items {
+                assert!(key > 0, "key 0 is reserved for bucket sentinels");
+                agg.buffer(self.home_of(key), (key, val));
+            }
+        } // drop-flush delivers the tail batches
+        inserted
+    }
+
+    /// Batched remove, destination-buffered like [`Self::insert_batch`].
+    /// Returns how many keys were present and removed.
+    pub fn remove_batch<I>(&self, tok: &EpochToken, keys: I) -> usize
+    where
+        I: IntoIterator<Item = u64>,
+    {
+        let mut removed = 0usize;
+        {
+            let rem = &mut removed;
+            let mut agg = Aggregator::new(Arc::clone(&self.pgas), |_dst, batch: Vec<u64>| {
+                let was_pinned = tok.is_pinned();
+                tok.pin();
+                for k in batch {
+                    if self.remove_pinned(tok, k) {
+                        *rem += 1;
+                    }
+                }
+                if !was_pinned {
+                    tok.unpin();
+                }
+            });
+            for key in keys {
+                agg.buffer(self.home_of(key), key);
+            }
+        }
+        removed
     }
 
     /// Look up `key`, cloning the value under epoch protection.
@@ -299,6 +384,62 @@ mod tests {
         h.upsert(&tok, 7, 2);
         assert_eq!(h.get(&tok, 7), Some(2));
         assert_eq!(h.len(&tok), 1);
+    }
+
+    #[test]
+    fn batch_insert_remove_roundtrip() {
+        let (p, em) = setup(4);
+        let h: InterlockedHashTable<u64> = InterlockedHashTable::new(Arc::clone(&p), em.clone(), 32);
+        let tok = h.register();
+        let n = h.insert_batch(&tok, (1..=200u64).map(|k| (k, k * 10)));
+        assert_eq!(n, 200);
+        assert_eq!(h.len(&tok), 200);
+        for k in 1..=200u64 {
+            assert_eq!(h.get(&tok, k), Some(k * 10));
+        }
+        // Re-inserting the same keys inserts nothing.
+        assert_eq!(h.insert_batch(&tok, (1..=200u64).map(|k| (k, 0))), 0);
+        assert_eq!(h.get(&tok, 7), Some(70), "duplicates must not clobber");
+        let removed = h.remove_batch(&tok, (1..=300u64).step_by(2));
+        assert_eq!(removed, 100, "only the odd keys in range were present");
+        assert_eq!(h.len(&tok), 100);
+        drop(tok);
+        em.clear();
+    }
+
+    #[test]
+    fn batch_insert_coalesces_remote_ams() {
+        // The batched path's point: one AM per destination batch instead
+        // of one remote atomic (= one AM without network atomics) per op.
+        let items = || (1..=256u64).map(|k| (k, k));
+        let run = |batched: bool| {
+            let (p, em) = setup(4);
+            let h: InterlockedHashTable<u64> =
+                InterlockedHashTable::new(Arc::clone(&p), em.clone(), 64);
+            let tok = h.register();
+            let before = p.comm_totals();
+            if batched {
+                assert_eq!(h.insert_batch(&tok, items()), 256);
+            } else {
+                for (k, v) in items() {
+                    assert!(h.insert(&tok, k, v));
+                }
+            }
+            let d = p.comm_totals().minus(before);
+            drop(tok);
+            em.clear();
+            d
+        };
+        let unbatched = run(false);
+        let batched = run(true);
+        assert!(
+            batched.ams * 5 <= unbatched.ams,
+            "batched inserts must coalesce AMs: {} vs {}",
+            batched.ams,
+            unbatched.ams
+        );
+        assert!(batched.aggregated_ops >= 256 * 3 / 4, "coalescing must be observable");
+        assert!(batched.flushes >= 3, "one flush per remote destination at least");
     }
 
     #[test]

@@ -10,7 +10,8 @@ use crate::runtime::SharedReclaimScan;
 use crate::sim::{run_epoch, EpochConfig, EpochWorkload};
 use crate::util::cli::Args;
 use crate::util::table::{fmt_ops, Table};
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 use figures::Scale;
 use std::sync::Arc;
 use std::time::Instant;

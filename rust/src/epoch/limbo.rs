@@ -24,7 +24,7 @@
 //! `AtomicObject` ABA protection.
 
 use crate::atomics::AbaCell;
-use crate::pgas::ErasedPtr;
+use crate::pgas::{Aggregator, ErasedPtr, LocaleId};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// Sentinel for "next pointer not yet written by the pusher".
@@ -188,6 +188,30 @@ impl LimboChain {
     }
 }
 
+impl LimboChain {
+    /// Drain the chain into a destination-buffered aggregator, keyed by
+    /// each object's owner locale — the scatter step of `tryReclaim`
+    /// expressed on the aggregation layer (one bulk transfer + one AM
+    /// per destination when the aggregator flushes, instead of one RPC
+    /// per object). Returns `(drained, remote)` where `remote` counts
+    /// objects owned by a locale other than `home`.
+    pub fn drain_into_aggregator(
+        self,
+        pool: &NodePool,
+        home: LocaleId,
+        agg: &mut Aggregator<'_, ErasedPtr>,
+    ) -> (usize, usize) {
+        let mut remote = 0usize;
+        let n = self.drain(pool, |e| {
+            if e.locale() != home {
+                remote += 1;
+            }
+            agg.buffer(e.locale(), e);
+        });
+        (n, remote)
+    }
+}
+
 impl Drop for LimboChain {
     fn drop(&mut self) {
         // A dropped (unconsumed) chain leaks deliberately-deferred objects;
@@ -255,6 +279,33 @@ mod tests {
                 assert!(recycled >= 10 * round);
             }
         }
+    }
+
+    #[test]
+    fn drain_into_aggregator_scatters_by_owner() {
+        use crate::pgas::{Machine, NicModel};
+        let p = crate::pgas::Pgas::new(Machine::new(4, 1), NicModel::aries_no_network_atomics());
+        let pool = NodePool::new();
+        let list = LimboList::new();
+        for i in 0..12u64 {
+            list.push(&pool, p.alloc(LocaleId((i % 4) as u16), i).erase());
+        }
+        let freed = std::cell::RefCell::new(0usize);
+        {
+            let pgas = &p;
+            let mut agg = Aggregator::with_capacity(std::sync::Arc::clone(&p), 1024, |_d, objs| {
+                for e in objs {
+                    *freed.borrow_mut() += 1;
+                    unsafe { pgas.free_erased(e) };
+                }
+            });
+            let (n, remote) = list.pop_all().drain_into_aggregator(&pool, LocaleId(0), &mut agg);
+            assert_eq!(n, 12);
+            assert_eq!(remote, 9, "owners 1..3 are remote to locale 0");
+            assert_eq!(*freed.borrow(), 0, "nothing freed before the flush");
+        } // drop-flush delivers every free
+        assert_eq!(*freed.borrow(), 12);
+        assert_eq!(p.live_objects(), 0);
     }
 
     #[test]

@@ -25,15 +25,34 @@
 //! [`ReclaimPolicy::PaperTwoStale`] for exact-paper behaviour; the
 //! `ablations` bench compares them. With either policy a list is always
 //! drained before it becomes current again.
+//!
+//! ## Deferral aggregation
+//!
+//! A `defer_delete` of a **remote-owned** object no longer sits in the
+//! deferring locale's limbo list waiting for the drain-time scatter.
+//! Instead it enters that locale's per-destination
+//! [aggregation buffer](crate::pgas::aggregation), tagged with its limbo
+//! index, and is *migrated* to the owner's limbo list in bulk — one
+//! `PUT(n * entry)` + one AM per destination — either when the buffer
+//! fills or at the next epoch advance (the elected task flushes every
+//! locale's buffers **before any list is drained**). Migration preserves
+//! the entry's original limbo index, so it changes *where* an object
+//! waits, never *when* it is freed; by drain time every list is
+//! locale-local and reclamation is pure local frees. The advance is
+//! correspondingly three passes — flush migrations, drain the expired
+//! lists, then publish the new epoch to the locale caches — so no task
+//! can pin into the new epoch (and defer into the list index being
+//! drained) until every drain has finished.
 
 use super::limbo::{LimboList, NodePool};
 use super::token::{Token, TokenRegistry, QUIESCENT};
-use crate::pgas::{here, ErasedPtr, GlobalPtr, LocaleId, NicOp, Pgas, Privatized};
+use crate::pgas::aggregation::{charge_batch, default_capacity, AggBuffer};
+use crate::pgas::{here, Aggregator, ErasedPtr, GlobalPtr, LocaleId, NicOp, Pgas, Privatized};
 use crate::runtime::SharedReclaimScan;
 use once_cell::sync::OnceCell;
 use std::ptr::NonNull;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Number of rotating epochs/limbo lists (paper: e-1, e, e+1).
 pub const NUM_EPOCHS: u64 = 3;
@@ -70,8 +89,10 @@ pub enum ReclaimOutcome {
     LostGlobalElection,
     /// A token was pinned in a previous epoch; no advance possible.
     NotQuiescent,
-    /// Epoch advanced; `freed` objects reclaimed, `remote` of them on
-    /// other locales than the one that deferred them.
+    /// Epoch advanced; `freed` objects reclaimed, `remote` of them still
+    /// remote-owned at drain time (deferral migration typically makes
+    /// this 0 — migrations are reported via [`StatsSnapshot::migrated`]
+    /// and count toward `freed_remote`).
     Advanced { freed: usize, remote: usize },
 }
 
@@ -91,6 +112,12 @@ pub struct ManagerStats {
     pub advances: AtomicU64,
     pub freed: AtomicU64,
     pub freed_remote: AtomicU64,
+    /// Remote-owned deferrals migrated to their owner's limbo list by the
+    /// aggregation layer (each also counts toward `freed_remote` — it will
+    /// be freed away from its deferring locale).
+    pub migrated: AtomicU64,
+    /// Aggregation-buffer flushes that performed those migrations.
+    pub migration_flushes: AtomicU64,
 }
 
 /// A snapshot of [`ManagerStats`].
@@ -103,8 +130,20 @@ pub struct StatsSnapshot {
     pub advances: u64,
     pub freed: u64,
     pub freed_remote: u64,
+    pub migrated: u64,
+    pub migration_flushes: u64,
     pub deferred: u64,
     pub pins: u64,
+}
+
+/// A remote-owned deferral waiting to migrate to its owner's limbo list:
+/// the object plus the limbo index assigned at defer time. Migration must
+/// preserve the index — it is what ties the entry to the drain schedule
+/// the epoch protocol proved safe.
+#[derive(Copy, Clone)]
+struct DeferredEntry {
+    e: ErasedPtr,
+    idx: usize,
 }
 
 /// Per-locale privatized state.
@@ -117,6 +156,10 @@ pub(crate) struct LocaleInstance {
     limbo: [LimboList; NUM_EPOCHS as usize],
     pool: NodePool,
     tokens: TokenRegistry,
+    /// Destination-buffered remote-owned deferrals (see module docs).
+    /// The mutex is uncontended in steady state: pushes come from this
+    /// locale's tasks, drains from the (single) elected reclaimer.
+    defer_agg: Mutex<AggBuffer<DeferredEntry>>,
     /// Hot-path counters kept locale-private (privatization applies to
     /// the manager's own bookkeeping too — a single global counter would
     /// be a contended cache line on every pin).
@@ -125,7 +168,7 @@ pub(crate) struct LocaleInstance {
 }
 
 impl LocaleInstance {
-    fn new(locale: LocaleId) -> LocaleInstance {
+    fn new(locale: LocaleId, locales: usize, agg_capacity: usize) -> LocaleInstance {
         LocaleInstance {
             locale,
             locale_epoch: AtomicU64::new(1),
@@ -133,6 +176,7 @@ impl LocaleInstance {
             limbo: [LimboList::new(), LimboList::new(), LimboList::new()],
             pool: NodePool::new(),
             tokens: TokenRegistry::new(),
+            defer_agg: Mutex::new(AggBuffer::new(locales, agg_capacity)),
             pins: AtomicU64::new(0),
             deferred: AtomicU64::new(0),
         }
@@ -142,6 +186,8 @@ impl LocaleInstance {
 struct EmShared {
     pgas: Arc<Pgas>,
     policy: ReclaimPolicy,
+    /// Per-destination deferral-aggregation buffer capacity (entries).
+    agg_capacity: usize,
     /// Locale hosting the global epoch object ("a class instance wraps the
     /// global epoch itself so that there is a single centralized and
     /// coherent epoch").
@@ -160,8 +206,15 @@ struct EmShared {
 impl Drop for EmShared {
     fn drop(&mut self) {
         // Reclaim everything still deferred so teardown never leaks. The
-        // last handle going away implies no user tasks remain.
+        // last handle going away implies no user tasks remain. Buffered
+        // migrations are freed directly — no point migrating an entry
+        // whose destination list is itself being torn down.
         for (_, inst) in self.inst.iter() {
+            for (_dst, batch) in inst.defer_agg.lock().unwrap().take_all() {
+                for d in batch {
+                    unsafe { self.pgas.free_erased(d.e) };
+                }
+            }
             for list in &inst.limbo {
                 list.pop_all().drain(&inst.pool, |e| unsafe { self.pgas.free_erased(e) });
             }
@@ -182,15 +235,29 @@ impl EpochManager {
     }
 
     pub fn with_policy(pgas: Arc<Pgas>, policy: ReclaimPolicy) -> EpochManager {
+        Self::with_config(pgas, policy, default_capacity())
+    }
+
+    /// Full configuration: reclaim policy plus the per-destination
+    /// deferral-aggregation buffer capacity (`1` = unbuffered, every
+    /// remote-owned deferral migrates immediately; the fig8 baseline).
+    pub fn with_config(
+        pgas: Arc<Pgas>,
+        policy: ReclaimPolicy,
+        agg_capacity: usize,
+    ) -> EpochManager {
         let machine = pgas.machine();
         EpochManager {
             sh: Arc::new(EmShared {
                 pgas: Arc::clone(&pgas),
                 policy,
+                agg_capacity,
                 global_home: LocaleId(0),
                 global_epoch: AtomicU64::new(1),
                 global_flag: AtomicBool::new(false),
-                inst: Privatized::new(machine, LocaleInstance::new),
+                inst: Privatized::new(machine, |loc| {
+                    LocaleInstance::new(loc, machine.locales, agg_capacity)
+                }),
                 stats: ManagerStats::default(),
                 scanner: OnceCell::new(),
             }),
@@ -203,6 +270,11 @@ impl EpochManager {
 
     pub fn policy(&self) -> ReclaimPolicy {
         self.sh.policy
+    }
+
+    /// The deferral-aggregation buffer capacity this manager runs with.
+    pub fn agg_capacity(&self) -> usize {
+        self.sh.agg_capacity
     }
 
     /// Register the calling task, returning an RAII token (auto-unregister
@@ -258,6 +330,8 @@ impl EpochManager {
             advances: s.advances.load(Ordering::Relaxed),
             freed: s.freed.load(Ordering::Relaxed),
             freed_remote: s.freed_remote.load(Ordering::Relaxed),
+            migrated: s.migrated.load(Ordering::Relaxed),
+            migration_flushes: s.migration_flushes.load(Ordering::Relaxed),
             deferred,
             pins,
         }
@@ -314,29 +388,87 @@ impl EpochManager {
         sh.pgas.charge(NicOp::Atomic64, sh.global_home);
         sh.global_epoch.store(new_epoch, Ordering::SeqCst);
 
-        // (5) Per-locale: drain the expired list, scatter objects by owner,
-        // bulk-free, then update the cached epoch. The drain happens
-        // *before* the cache update so no task on this locale can pin into
-        // `new_epoch` and push into the list while it is being drained
-        // (matters for the Conservative policy, where the drained list is
-        // the one about to become current).
+        // (5) Flush every locale's deferral-aggregation buffers so each
+        // migrated entry reaches its owner's limbo list before *any* list
+        // is drained (module docs: migration never changes an entry's
+        // drain schedule). Migration counts are reported via stats, not
+        // through the outcome — they are not frees.
+        self.flush_deferred();
+
+        // (6) Per-locale: drain the expired list (scattering any still
+        // remote-owned entries through an aggregator).
         let reclaim_idx = sh.policy.reclaim_index(new_epoch);
         let (mut freed, mut remote) = (0usize, 0usize);
         for loc in machine.locale_ids() {
-            let (f, r) = sh.pgas.on(loc, || {
-                let inst = sh.inst.on_locale(loc);
-                let drained = self.drain_and_scatter(inst, reclaim_idx);
-                sh.pgas.charge(NicOp::Atomic64, loc);
-                inst.locale_epoch.store(new_epoch, Ordering::SeqCst);
-                drained
-            });
+            let inst = sh.inst.on_locale(loc);
+            let (f, r) = sh.pgas.on(loc, || self.drain_and_scatter(inst, reclaim_idx));
             freed += f;
             remote += r;
         }
+
+        // (7) Only now publish the new epoch to the locale caches. While
+        // the drains ran, no task anywhere could pin into `new_epoch`, so
+        // nothing could defer into (or capacity-migrate into) the list
+        // index being drained — the invariant that makes the Conservative
+        // policy safe with deferral migration in the picture.
+        for loc in machine.locale_ids() {
+            sh.pgas.on(loc, || {
+                sh.pgas.charge(NicOp::Atomic64, loc);
+                sh.inst.on_locale(loc).locale_epoch.store(new_epoch, Ordering::SeqCst);
+            });
+        }
+
         sh.stats.advances.fetch_add(1, Ordering::Relaxed);
         sh.stats.freed.fetch_add(freed as u64, Ordering::Relaxed);
         sh.stats.freed_remote.fetch_add(remote as u64, Ordering::Relaxed);
         ReclaimOutcome::Advanced { freed, remote }
+    }
+
+    /// Flush every locale's deferral-aggregation buffers, migrating each
+    /// batch to its owner's limbo list. Returns the number of migrated
+    /// entries. Runs on the elected path (before any drain) and in
+    /// [`EpochManager::clear`].
+    fn flush_deferred(&self) -> usize {
+        let sh = &self.sh;
+        let mut migrated = 0usize;
+        for loc in sh.pgas.machine().locale_ids() {
+            if sh.inst.on_locale(loc).defer_agg.lock().unwrap().is_empty() {
+                continue;
+            }
+            migrated += sh.pgas.on(loc, || {
+                let batches = sh.inst.on_locale(loc).defer_agg.lock().unwrap().take_all();
+                let mut n = 0usize;
+                for (dst, batch) in batches {
+                    n += batch.len();
+                    self.migrate_batch(dst, batch);
+                }
+                n
+            });
+        }
+        migrated
+    }
+
+    /// Deliver one migration batch: one bulk transfer + one AM pushing
+    /// every entry onto `dst`'s limbo list *with its original epoch
+    /// index*. Issued from the current locale context (the deferring
+    /// locale for capacity flushes, the flushed locale for elected
+    /// flushes). Each entry counts toward `freed_remote` here — it will
+    /// be freed away from the locale that deferred it.
+    fn migrate_batch(&self, dst: LocaleId, batch: Vec<DeferredEntry>) {
+        let sh = &self.sh;
+        debug_assert!(!batch.is_empty());
+        sh.stats.migrated.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        sh.stats.migration_flushes.fetch_add(1, Ordering::Relaxed);
+        sh.stats.freed_remote.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        charge_batch(&sh.pgas, dst, batch.len(), std::mem::size_of::<DeferredEntry>());
+        sh.pgas.on(dst, || {
+            let di = sh.inst.on_locale(dst);
+            for d in batch {
+                // One wait-free push per entry, local to the destination.
+                sh.pgas.charge(NicOp::Atomic64, dst);
+                di.limbo[d.idx].push(&di.pool, d.e);
+            }
+        });
     }
 
     /// Cluster-wide quiescence check: true iff every registered token is
@@ -392,12 +524,14 @@ impl EpochManager {
         true
     }
 
-    /// Drain one limbo list on `inst`'s locale, sorting objects into
-    /// per-destination scatter lists, then free each destination's batch
-    /// with one bulk transfer (Listing 4 lines 33–50).
+    /// Drain one limbo list on `inst`'s locale through the aggregation
+    /// layer: objects are destination-buffered by owner locale and each
+    /// destination's batch is freed with one bulk transfer + one AM
+    /// (Listing 4 lines 33–50, expressed on [`Aggregator`]). In steady
+    /// state deferral migration has already made every entry local and
+    /// this degenerates to a single local batch of frees.
     fn drain_and_scatter(&self, inst: &LocaleInstance, idx: usize) -> (usize, usize) {
         let sh = &self.sh;
-        let locales = sh.pgas.machine().locales;
         // One atomic exchange drains the list (wait-free deletion phase).
         sh.pgas.charge(NicOp::Atomic64, inst.locale);
         let chain = inst.limbo[idx].pop_all();
@@ -406,25 +540,14 @@ impl EpochManager {
             chain.drain(&inst.pool, |_| unreachable!());
             return (0, 0);
         }
-        let mut scatter: Vec<Vec<ErasedPtr>> = vec![Vec::new(); locales];
-        let n = chain.drain(&inst.pool, |e| scatter[e.locale().index()].push(e));
-        let mut remote = 0usize;
-        for (dest_idx, objs) in scatter.into_iter().enumerate() {
-            if objs.is_empty() {
-                continue;
+        let pgas = &sh.pgas;
+        let mut agg = Aggregator::with_capacity(Arc::clone(pgas), sh.agg_capacity, |_dst, objs| {
+            for e in objs {
+                unsafe { pgas.free_erased(e) };
             }
-            let dest = LocaleId(dest_idx as u16);
-            if dest != inst.locale {
-                remote += objs.len();
-                // Bulk transfer of the scatter list + one AM to delete.
-                sh.pgas.charge(NicOp::Put(objs.len() * 16), dest);
-            }
-            sh.pgas.on(dest, || {
-                for e in objs {
-                    unsafe { sh.pgas.free_erased(e) };
-                }
-            });
-        }
+        });
+        let (n, remote) = chain.drain_into_aggregator(&inst.pool, inst.locale, &mut agg);
+        drop(agg); // RAII flush: every batch delivered before we report
         (n, remote)
     }
 
@@ -432,6 +555,9 @@ impl EpochManager {
     /// guarantee no task is interacting with the manager (paper `clear`).
     pub fn clear(&self) -> usize {
         let sh = &self.sh;
+        // Migrate buffered deferrals first so the per-locale drains below
+        // see every entry.
+        self.flush_deferred();
         let (mut freed, mut remote) = (0usize, 0usize);
         for loc in sh.pgas.machine().locale_ids() {
             let (f, r) = sh.pgas.on(loc, || {
@@ -539,11 +665,25 @@ impl EpochToken {
         let epoch = tok.local_epoch.load(Ordering::SeqCst);
         assert_ne!(epoch, QUIESCENT, "defer_delete requires a pinned token");
         let inst = sh.inst.on_locale(self.locale);
-        // Wait-free push: pool recycle (one DCAS) + one exchange.
-        sh.pgas.charge(NicOp::Atomic128, self.locale);
-        sh.pgas.charge(NicOp::Atomic64, self.locale);
-        inst.limbo[(epoch - 1) as usize].push(&inst.pool, e);
+        let idx = (epoch - 1) as usize;
         inst.deferred.fetch_add(1, Ordering::Relaxed);
+        if e.locale() == self.locale {
+            // Local-owned: wait-free limbo push (pool recycle DCAS + one
+            // exchange), exactly Listing 2.
+            sh.pgas.charge(NicOp::Atomic128, self.locale);
+            sh.pgas.charge(NicOp::Atomic64, self.locale);
+            inst.limbo[idx].push(&inst.pool, e);
+        } else {
+            // Remote-owned: destination-buffered migration. The append is
+            // pure local work; the bulk transfer to the owner is charged
+            // when the batch flushes (buffer full here, or the next epoch
+            // advance / `clear`).
+            sh.pgas.charge(NicOp::Atomic64, self.locale);
+            let full = inst.defer_agg.lock().unwrap().push(e.locale(), DeferredEntry { e, idx });
+            if let Some(batch) = full {
+                self.mgr.migrate_batch(e.locale(), batch);
+            }
+        }
     }
 
     /// RAII pin: pins now, unpins when the guard drops — the idiomatic
@@ -752,6 +892,30 @@ mod tests {
         // one per object.
         let puts = p.comm_totals().puts - puts_before;
         assert_eq!(puts, 3, "one bulk transfer per remote destination");
+    }
+
+    #[test]
+    fn remote_defer_buffers_then_migrates_in_bulk() {
+        let p = pgas(3);
+        let em = EpochManager::new(Arc::clone(&p));
+        let tok = em.register();
+        tok.pin();
+        for i in 0..6u64 {
+            tok.defer_delete(p.alloc(LocaleId((1 + i % 2) as u16), i));
+        }
+        tok.unpin();
+        let before = p.comm_totals();
+        assert_eq!(before.flushes, 0, "remote deferrals sit in the buffer, unflushed");
+        assert!(em.try_reclaim().advanced());
+        let d = p.comm_totals().minus(before);
+        assert_eq!(d.flushes, 2, "one migration flush per destination locale");
+        assert_eq!(d.aggregated_ops, 6, "all six deferrals coalesced");
+        assert_eq!(d.puts, 2, "one bulk transfer per destination, not per object");
+        let s = em.stats();
+        assert_eq!(s.migrated, 6);
+        assert_eq!(s.migration_flushes, 2);
+        em.clear();
+        assert_eq!(p.live_objects(), 0);
     }
 
     #[test]

@@ -1,0 +1,497 @@
+//! Destination-buffered aggregation of fine-grained remote operations.
+//!
+//! The paper's cost hierarchy — processor atomic ≪ RDMA atomic ≪ active
+//! message — means any path that issues one AM *per object* is leaving an
+//! order of magnitude on the table. The authors' follow-up work (Dewan &
+//! Jenkins, arXiv:2112.00068) shows that the single biggest lever for
+//! scaling these constructs is **aggregation**: buffer small operations
+//! per destination locale and flush each buffer as one bulk transfer plus
+//! one active message that applies the whole batch at the destination,
+//! exactly like Chapel's `CopyAggregation.Aggregator`. DART-MPI
+//! (arXiv:1507.01773) layers the same batching runtime beneath its PGAS
+//! abstractions.
+//!
+//! This module is that layer for the in-process substrate:
+//!
+//! * [`AggBuffer`] — the core per-destination buffers: plain data, no
+//!   policy. Used directly where the flush action needs state the buffer
+//!   must not own (e.g. the epoch manager's deferral migration buffers,
+//!   which deliver into the destination's limbo lists).
+//! * [`Aggregator`] — buffers plus policy: a capacity (default
+//!   [`DEFAULT_AGG_CAPACITY`], the follow-up paper's sizing), automatic
+//!   flush when a destination's buffer fills, modeled-cost charging (one
+//!   `NicOp::Put(n * entry_size)` + one AM per flush instead of `n`
+//!   AMs), and **RAII drop-flush** so no buffered operation can be lost
+//!   at a scope or epoch boundary.
+//! * [`PutAggregator`] — ready-made aggregation of one-sided PUTs of
+//!   `Copy` records.
+//!
+//! ## Flush semantics
+//!
+//! An operation handed to [`Aggregator::buffer`] is *deferred*: it has
+//! not happened yet and must not be observed until its batch is
+//! delivered. Delivery happens when (a) the destination's buffer reaches
+//! capacity, (b) the caller invokes [`Aggregator::flush`] /
+//! [`Aggregator::flush_all`], or (c) the aggregator is dropped. Users
+//! with ordering requirements (the epoch manager at epoch boundaries,
+//! batched collection ops before their linearization is reported) call
+//! `flush_all` / drop at the boundary. The buffered-side invariant the
+//! tests pin down: **nothing is applied before its flush, and a drop
+//! applies everything**.
+
+use super::heap::GlobalPtr;
+use super::topology::LocaleId;
+use super::Pgas;
+use std::sync::Arc;
+
+/// Default per-destination buffer capacity, matching the follow-up
+/// paper's aggregation buffer sizing.
+pub const DEFAULT_AGG_CAPACITY: usize = 1024;
+
+/// The configured default capacity: `PGAS_NB_AGG_CAPACITY` when set (>=1),
+/// else [`DEFAULT_AGG_CAPACITY`]. Read once per process — aggregators are
+/// constructed on hot batched paths.
+pub fn default_capacity() -> usize {
+    static CONFIGURED: once_cell::sync::Lazy<usize> = once_cell::sync::Lazy::new(|| {
+        std::env::var("PGAS_NB_AGG_CAPACITY")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&c| c >= 1)
+            .unwrap_or(DEFAULT_AGG_CAPACITY)
+    });
+    *CONFIGURED
+}
+
+/// Per-destination operation buffers: one `Vec<T>` per locale of the
+/// machine, bounded by a shared capacity. Pure data — charging and
+/// delivery policy live in [`Aggregator`] (or in the caller, for users
+/// like the epoch manager whose delivery needs access to state that
+/// cannot be captured in a stored closure).
+pub struct AggBuffer<T> {
+    cap: usize,
+    bufs: Vec<Vec<T>>,
+    /// Total items ever buffered (diagnostics).
+    buffered: u64,
+}
+
+impl<T> AggBuffer<T> {
+    /// One empty buffer per destination locale, each flushing at `cap`.
+    pub fn new(locales: usize, cap: usize) -> AggBuffer<T> {
+        assert!(locales >= 1, "need at least one destination");
+        assert!(cap >= 1, "aggregation capacity must be at least 1");
+        AggBuffer { cap, bufs: (0..locales).map(|_| Vec::new()).collect(), buffered: 0 }
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Buffer `item` for `dst`. When this push fills `dst`'s buffer, the
+    /// full batch is returned and must be delivered by the caller.
+    #[inline]
+    pub fn push(&mut self, dst: LocaleId, item: T) -> Option<Vec<T>> {
+        self.buffered += 1;
+        let buf = &mut self.bufs[dst.index()];
+        buf.push(item);
+        if buf.len() >= self.cap {
+            Some(std::mem::take(buf))
+        } else {
+            None
+        }
+    }
+
+    /// Take everything currently buffered for `dst` (possibly empty).
+    pub fn take(&mut self, dst: LocaleId) -> Vec<T> {
+        std::mem::take(&mut self.bufs[dst.index()])
+    }
+
+    /// Take every non-empty buffer, with its destination.
+    pub fn take_all(&mut self) -> Vec<(LocaleId, Vec<T>)> {
+        let mut out = Vec::new();
+        for (i, buf) in self.bufs.iter_mut().enumerate() {
+            if !buf.is_empty() {
+                out.push((LocaleId(i as u16), std::mem::take(buf)));
+            }
+        }
+        out
+    }
+
+    /// Items currently buffered across all destinations.
+    pub fn pending(&self) -> usize {
+        self.bufs.iter().map(Vec::len).sum()
+    }
+
+    /// Items currently buffered for `dst`.
+    pub fn pending_for(&self, dst: LocaleId) -> usize {
+        self.bufs[dst.index()].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.iter().all(Vec::is_empty)
+    }
+
+    /// Total items ever buffered (diagnostics).
+    pub fn total_buffered(&self) -> u64 {
+        self.buffered
+    }
+}
+
+/// The delivery callback: runs *at the destination* (inside
+/// [`Pgas::on`], i.e. with the locale context switched), applying one
+/// flushed batch.
+type Deliver<'a, T> = Box<dyn FnMut(LocaleId, Vec<T>) + 'a>;
+
+/// A destination-buffered remote-operation aggregator (Chapel's
+/// `Aggregator` for this substrate). Owned by one task; for concurrent
+/// use give each task its own (that is also what the Chapel module does —
+/// aggregators are task-private by construction in `forall` intents).
+pub struct Aggregator<'a, T> {
+    pgas: Arc<Pgas>,
+    buf: AggBuffer<T>,
+    deliver: Deliver<'a, T>,
+    entry_bytes: usize,
+    flushed_items: u64,
+    flushed_batches: u64,
+}
+
+impl<'a, T> Aggregator<'a, T> {
+    /// An aggregator over `pgas`'s machine with the configured default
+    /// capacity (see [`default_capacity`]).
+    pub fn new(pgas: Arc<Pgas>, deliver: impl FnMut(LocaleId, Vec<T>) + 'a) -> Aggregator<'a, T> {
+        Self::with_capacity(pgas, default_capacity(), deliver)
+    }
+
+    /// An aggregator whose per-destination buffers flush at `cap` items.
+    /// `cap == 1` degenerates to unbuffered per-operation sends — the
+    /// baseline the fig8 bench compares against.
+    pub fn with_capacity(
+        pgas: Arc<Pgas>,
+        cap: usize,
+        deliver: impl FnMut(LocaleId, Vec<T>) + 'a,
+    ) -> Aggregator<'a, T> {
+        let locales = pgas.machine().locales;
+        Aggregator {
+            pgas,
+            buf: AggBuffer::new(locales, cap),
+            deliver: Box::new(deliver),
+            entry_bytes: std::mem::size_of::<T>().max(1),
+            flushed_items: 0,
+            flushed_batches: 0,
+        }
+    }
+
+    /// Buffer one operation for `dst`, flushing `dst`'s batch if this
+    /// fills it. The operation is **not applied** until its flush.
+    pub fn buffer(&mut self, dst: LocaleId, item: T) {
+        if let Some(batch) = self.buf.push(dst, item) {
+            self.send(dst, batch);
+        }
+    }
+
+    /// Flush everything buffered for `dst` now.
+    pub fn flush(&mut self, dst: LocaleId) {
+        let batch = self.buf.take(dst);
+        if !batch.is_empty() {
+            self.send(dst, batch);
+        }
+    }
+
+    /// Flush every destination (epoch-boundary barrier).
+    pub fn flush_all(&mut self) {
+        for (dst, batch) in self.buf.take_all() {
+            self.send(dst, batch);
+        }
+    }
+
+    /// One bulk transfer + one AM delivering `batch` at `dst`:
+    /// `NicOp::Put(n * entry_size)` (remote destinations only — a local
+    /// flush is a memcpy) followed by the `on`-statement that applies it.
+    fn send(&mut self, dst: LocaleId, batch: Vec<T>) {
+        let n = batch.len() as u64;
+        let pgas = &self.pgas;
+        let deliver = &mut self.deliver;
+        pgas.charge_flush(n, self.entry_bytes, dst);
+        pgas.on(dst, || deliver(dst, batch));
+        self.flushed_items += n;
+        self.flushed_batches += 1;
+    }
+
+    /// Operations buffered but not yet delivered.
+    pub fn pending(&self) -> usize {
+        self.buf.pending()
+    }
+
+    /// Operations buffered but not yet delivered for `dst`.
+    pub fn pending_for(&self, dst: LocaleId) -> usize {
+        self.buf.pending_for(dst)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// (delivered operations, delivered batches) so far.
+    pub fn flush_stats(&self) -> (u64, u64) {
+        (self.flushed_items, self.flushed_batches)
+    }
+}
+
+impl<T> Drop for Aggregator<'_, T> {
+    /// RAII drop-flush: every buffered operation is delivered. This is
+    /// what makes scoped aggregators safe at epoch boundaries — leaving
+    /// the scope *is* the flush barrier (panic-safe included).
+    fn drop(&mut self) {
+        self.flush_all();
+    }
+}
+
+/// Aggregated one-sided PUTs of `Copy` records: `n` puts to the same
+/// destination locale cost one bulk transfer + one AM instead of `n`
+/// individual `Pgas::put` calls.
+///
+/// Safety contract (same as [`Pgas::put`], shifted in time): every target
+/// passed to [`PutAggregator::put`] must stay live and writable until the
+/// flush that delivers it — at the latest, this aggregator's drop.
+pub struct PutAggregator<T: Copy + 'static> {
+    inner: Aggregator<'static, (GlobalPtr<T>, T)>,
+}
+
+impl<T: Copy + 'static> PutAggregator<T> {
+    pub fn new(pgas: Arc<Pgas>) -> PutAggregator<T> {
+        Self::with_capacity(pgas, default_capacity())
+    }
+
+    pub fn with_capacity(pgas: Arc<Pgas>, cap: usize) -> PutAggregator<T> {
+        PutAggregator {
+            inner: Aggregator::with_capacity(pgas, cap, |_dst, batch: Vec<(GlobalPtr<T>, T)>| {
+                for (p, v) in batch {
+                    debug_assert!(!p.is_nil(), "aggregated PUT to nil");
+                    // Matches `Pgas::put`'s volatile store; the bulk
+                    // transfer was charged at flush time.
+                    unsafe { std::ptr::write_volatile(p.addr() as *mut T, v) };
+                }
+            }),
+        }
+    }
+
+    /// Buffer `*dst = value`. Applied at flush, not now.
+    pub fn put(&mut self, dst: GlobalPtr<T>, value: T) {
+        debug_assert!(!dst.is_nil(), "aggregated PUT to nil");
+        self.inner.buffer(dst.locale(), (dst, value));
+    }
+
+    pub fn flush_all(&mut self) {
+        self.inner.flush_all();
+    }
+
+    pub fn pending(&self) -> usize {
+        self.inner.pending()
+    }
+
+    pub fn flush_stats(&self) -> (u64, u64) {
+        self.inner.flush_stats()
+    }
+}
+
+/// Charge helper for callers that manage an [`AggBuffer`] themselves
+/// (e.g. the epoch manager): account one flush of `batch_len` entries of
+/// `entry_bytes` each toward `dst`, issued from the current locale. The
+/// caller still delivers the batch (typically via [`Pgas::on`], which
+/// charges the companion AM). Mirrors what [`Aggregator::send`] does
+/// internally — kept public so by-hand users charge identically.
+pub fn charge_batch(pgas: &Pgas, dst: LocaleId, batch_len: usize, entry_bytes: usize) -> u64 {
+    pgas.charge_flush(batch_len as u64, entry_bytes, dst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pgas::{here, with_locale, Machine, NicModel};
+    use std::cell::RefCell;
+
+    fn pgas4() -> Arc<Pgas> {
+        Pgas::new(Machine::new(4, 2), NicModel::aries_no_network_atomics())
+    }
+
+    #[test]
+    fn buffer_holds_until_capacity() {
+        let p = pgas4();
+        let delivered = RefCell::new(Vec::new());
+        let mut agg = Aggregator::with_capacity(Arc::clone(&p), 3, |dst, batch: Vec<u64>| {
+            delivered.borrow_mut().push((dst, batch));
+        });
+        agg.buffer(LocaleId(1), 10);
+        agg.buffer(LocaleId(1), 11);
+        assert_eq!(agg.pending(), 2);
+        assert!(delivered.borrow().is_empty(), "nothing delivered before capacity");
+        agg.buffer(LocaleId(1), 12); // third fill triggers the flush
+        assert_eq!(agg.pending(), 0);
+        assert_eq!(delivered.borrow().len(), 1);
+        assert_eq!(delivered.borrow()[0], (LocaleId(1), vec![10, 11, 12]));
+    }
+
+    #[test]
+    fn destinations_are_independent() {
+        let p = pgas4();
+        let delivered = RefCell::new(Vec::new());
+        let mut agg = Aggregator::with_capacity(Arc::clone(&p), 2, |dst, batch: Vec<u64>| {
+            delivered.borrow_mut().push((dst, batch.len()));
+        });
+        agg.buffer(LocaleId(1), 1);
+        agg.buffer(LocaleId(2), 2);
+        agg.buffer(LocaleId(3), 3);
+        assert!(delivered.borrow().is_empty(), "no destination reached capacity");
+        agg.buffer(LocaleId(2), 4);
+        assert_eq!(*delivered.borrow(), vec![(LocaleId(2), 2)]);
+        assert_eq!(agg.pending_for(LocaleId(1)), 1);
+        assert_eq!(agg.pending_for(LocaleId(2)), 0);
+    }
+
+    #[test]
+    fn drop_flushes_everything() {
+        let p = pgas4();
+        let delivered = RefCell::new(0usize);
+        {
+            let mut agg = Aggregator::with_capacity(Arc::clone(&p), 100, |_dst, b: Vec<u64>| {
+                *delivered.borrow_mut() += b.len();
+            });
+            for i in 0..10 {
+                agg.buffer(LocaleId((i % 4) as u16), i);
+            }
+            assert_eq!(*delivered.borrow(), 0);
+        }
+        assert_eq!(*delivered.borrow(), 10, "drop must deliver every buffered op");
+    }
+
+    #[test]
+    fn delivery_runs_on_destination_locale() {
+        let p = pgas4();
+        let seen = RefCell::new(Vec::new());
+        let mut agg = Aggregator::with_capacity(Arc::clone(&p), 1, |dst, _b: Vec<()>| {
+            seen.borrow_mut().push((dst, here()));
+        });
+        agg.buffer(LocaleId(3), ());
+        assert_eq!(*seen.borrow(), vec![(LocaleId(3), LocaleId(3))]);
+    }
+
+    #[test]
+    fn remote_flush_charges_one_put_and_one_am() {
+        let p = pgas4();
+        let mut agg = Aggregator::with_capacity(Arc::clone(&p), 64, |_, _b: Vec<u64>| {});
+        for i in 0..64u64 {
+            agg.buffer(LocaleId(2), i);
+        }
+        let s = p.comm_totals();
+        assert_eq!(s.puts, 1, "64 ops, one bulk transfer");
+        assert_eq!(s.ams, 1, "64 ops, one active message");
+        assert_eq!(s.aggregated_ops, 64);
+        assert_eq!(s.flushes, 1);
+        assert_eq!(s.bytes, 64 * 8);
+    }
+
+    #[test]
+    fn capacity_one_is_unbuffered() {
+        let p = pgas4();
+        let mut agg = Aggregator::with_capacity(Arc::clone(&p), 1, |_, _b: Vec<u64>| {});
+        for i in 0..10u64 {
+            agg.buffer(LocaleId(1), i);
+        }
+        let s = p.comm_totals();
+        assert_eq!(s.ams, 10, "capacity 1 degenerates to one AM per op");
+        assert_eq!(s.flushes, 10);
+    }
+
+    #[test]
+    fn local_flush_is_not_a_wire_transfer() {
+        let p = pgas4();
+        let n = RefCell::new(0);
+        let mut agg = Aggregator::with_capacity(Arc::clone(&p), 8, |_, b: Vec<u64>| {
+            *n.borrow_mut() += b.len();
+        });
+        with_locale(LocaleId(0), || {
+            for i in 0..8u64 {
+                agg.buffer(LocaleId(0), i);
+            }
+        });
+        assert_eq!(*n.borrow(), 8);
+        let s = p.comm_totals();
+        assert_eq!(s.puts, 0, "local delivery is a memcpy");
+        assert_eq!(s.aggregated_ops, 8, "still observable as coalesced");
+    }
+
+    #[test]
+    fn explicit_flush_and_stats() {
+        let p = pgas4();
+        let mut agg = Aggregator::with_capacity(Arc::clone(&p), 100, |_, _b: Vec<u64>| {});
+        agg.buffer(LocaleId(1), 1);
+        agg.buffer(LocaleId(2), 2);
+        agg.flush(LocaleId(1));
+        assert_eq!(agg.pending_for(LocaleId(1)), 0);
+        assert_eq!(agg.pending_for(LocaleId(2)), 1);
+        agg.flush_all();
+        assert_eq!(agg.pending(), 0);
+        assert_eq!(agg.flush_stats(), (2, 2));
+        agg.flush_all(); // idempotent on empty buffers
+        assert_eq!(agg.flush_stats(), (2, 2));
+    }
+
+    #[test]
+    fn put_aggregator_applies_at_flush() {
+        let p = pgas4();
+        let targets: Vec<_> = (0..6).map(|i| p.alloc(LocaleId((i % 3 + 1) as u16), 0u64)).collect();
+        {
+            let mut agg = PutAggregator::with_capacity(Arc::clone(&p), 100);
+            for (i, &t) in targets.iter().enumerate() {
+                agg.put(t, (i as u64 + 1) * 7);
+            }
+            for &t in &targets {
+                assert_eq!(p.get(t), 0, "puts must not land before the flush");
+            }
+            agg.flush_all();
+            assert_eq!(agg.flush_stats().1, 3, "one batch per destination locale");
+        }
+        for (i, &t) in targets.iter().enumerate() {
+            assert_eq!(p.get(t), (i as u64 + 1) * 7);
+        }
+        for t in targets {
+            unsafe { p.free(t) };
+        }
+    }
+
+    #[test]
+    fn agg_buffer_take_all_and_counters() {
+        let mut b: AggBuffer<u32> = AggBuffer::new(4, 8);
+        assert!(b.is_empty());
+        assert!(b.push(LocaleId(1), 5).is_none());
+        assert!(b.push(LocaleId(3), 6).is_none());
+        assert_eq!(b.pending(), 2);
+        let all = b.take_all();
+        assert_eq!(all, vec![(LocaleId(1), vec![5]), (LocaleId(3), vec![6])]);
+        assert!(b.is_empty());
+        assert_eq!(b.total_buffered(), 2);
+    }
+
+    #[test]
+    fn agg_buffer_returns_full_batch_at_capacity() {
+        let mut b: AggBuffer<u32> = AggBuffer::new(2, 2);
+        assert!(b.push(LocaleId(0), 1).is_none());
+        let batch = b.push(LocaleId(0), 2).expect("second push fills capacity 2");
+        assert_eq!(batch, vec![1, 2]);
+        assert_eq!(b.pending_for(LocaleId(0)), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 1")]
+    fn zero_capacity_rejected() {
+        let _ = AggBuffer::<u8>::new(2, 0);
+    }
+
+    #[test]
+    fn default_capacity_is_paper_sizing() {
+        // (Env override is exercised manually; races with other tests make
+        // set_var unreliable here.)
+        assert_eq!(DEFAULT_AGG_CAPACITY, 1024);
+        assert!(default_capacity() >= 1);
+    }
+}

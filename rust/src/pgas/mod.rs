@@ -7,6 +7,7 @@
 //! InfiniBand cost hierarchy (see `DESIGN.md` §2 for why this substitution
 //! preserves the paper's behaviour).
 
+pub mod aggregation;
 pub mod heap;
 pub mod nic;
 pub mod privatized;
@@ -14,6 +15,7 @@ pub mod task;
 pub mod topology;
 pub mod wide_ptr;
 
+pub use aggregation::{AggBuffer, Aggregator, PutAggregator, DEFAULT_AGG_CAPACITY};
 pub use heap::{ErasedPtr, GlobalPtr, HeapStats};
 pub use nic::{Fabric, Nic, NicModel, NicOp, NicSnapshot};
 pub use privatized::Privatized;
@@ -69,20 +71,42 @@ impl Pgas {
         &self.heaps[loc.index()]
     }
 
+    /// The NIC of the locale the current task runs on. An out-of-range
+    /// issuing locale is a substrate bug (a task context pointing at a
+    /// locale this machine doesn't have); it must fail loudly, not be
+    /// silently attributed to the last NIC.
+    #[inline]
+    fn issuing_nic(&self) -> &Nic {
+        let from = here();
+        debug_assert!(
+            from.index() < self.nics.len(),
+            "charge issued from unknown locale {from:?} (machine has {} locales)",
+            self.nics.len()
+        );
+        &self.nics[from.index()]
+    }
+
     /// Charge `op`, issued by the current task, targeting `target`.
     /// Returns the modeled nanoseconds.
     #[inline]
     pub fn charge(&self, op: NicOp, target: LocaleId) -> u64 {
-        let from = here();
-        self.nics[from.index().min(self.nics.len() - 1)].charge(&self.model, op, from != target)
+        self.issuing_nic().charge(&self.model, op, here() != target)
     }
 
     /// Charge `n` identical operations with one counter update (hot-path
     /// bursts like `pin`'s three local atomics).
     #[inline]
     pub fn charge_n(&self, op: NicOp, target: LocaleId, n: u64) -> u64 {
-        let from = here();
-        self.nics[from.index().min(self.nics.len() - 1)].charge_n(&self.model, op, from != target, n)
+        self.issuing_nic().charge_n(&self.model, op, here() != target, n)
+    }
+
+    /// Charge one aggregated flush of `n` coalesced operations (each
+    /// `entry_bytes` long) toward `target`: a single bulk PUT (when the
+    /// destination is remote) tallied under the issuing locale's
+    /// `aggregated_ops`/`flushes` counters. See [`aggregation`].
+    #[inline]
+    pub fn charge_flush(&self, n: u64, entry_bytes: usize, target: LocaleId) -> u64 {
+        self.issuing_nic().charge_bulk(&self.model, here() != target, n, entry_bytes)
     }
 
     /// Allocate `value` on locale `loc` (Chapel `on loc { new unmanaged T }`).
@@ -142,6 +166,8 @@ impl Pgas {
             total.puts += s.puts;
             total.gets += s.gets;
             total.bytes += s.bytes;
+            total.aggregated_ops += s.aggregated_ops;
+            total.flushes += s.flushes;
             total.virtual_ns += s.virtual_ns;
         }
         total
@@ -231,5 +257,31 @@ mod tests {
     fn alloc_on_bogus_locale_rejected() {
         let p = pgas4();
         p.alloc(LocaleId(99), 1u8);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "unknown locale")]
+    fn charge_from_bogus_locale_rejected() {
+        // Regression: this used to be silently misattributed to the last NIC.
+        let p = pgas4();
+        with_locale(LocaleId(99), || {
+            p.charge(NicOp::Get(8), LocaleId(0));
+        });
+    }
+
+    #[test]
+    fn flush_charge_counts_and_totals() {
+        let p = pgas4();
+        with_locale(LocaleId(1), || {
+            p.charge_flush(64, 16, LocaleId(2));
+        });
+        let s = p.nic(LocaleId(1)).snapshot();
+        assert_eq!(s.aggregated_ops, 64);
+        assert_eq!(s.flushes, 1);
+        assert_eq!(s.puts, 1);
+        let t = p.comm_totals();
+        assert_eq!(t.aggregated_ops, 64);
+        assert_eq!(t.flushes, 1);
     }
 }

@@ -194,6 +194,13 @@ pub struct Nic {
     pub puts: AtomicU64,
     pub gets: AtomicU64,
     pub bytes: AtomicU64,
+    /// Small remote operations coalesced into bulk transfers by the
+    /// aggregation layer (see [`crate::pgas::aggregation`]) instead of
+    /// being issued individually.
+    pub aggregated_ops: AtomicU64,
+    /// Bulk flushes performed by the aggregation layer (each one carries
+    /// `aggregated_ops / flushes` operations on average).
+    pub flushes: AtomicU64,
     /// Sum of modeled nanoseconds charged through this NIC.
     pub virtual_ns: AtomicU64,
 }
@@ -207,6 +214,8 @@ pub struct NicSnapshot {
     pub puts: u64,
     pub gets: u64,
     pub bytes: u64,
+    pub aggregated_ops: u64,
+    pub flushes: u64,
     pub virtual_ns: u64,
 }
 
@@ -306,6 +315,26 @@ impl Nic {
         ns
     }
 
+    /// Charge one aggregated bulk transfer carrying `n` coalesced small
+    /// operations of `entry_bytes` each: a single PUT of the packed
+    /// payload instead of `n` individual messages. Local flushes cost
+    /// nothing on the wire (the "transfer" is a memcpy) but are still
+    /// tallied so coalescing stays observable. The companion active
+    /// message that *applies* the batch at the destination is charged
+    /// separately by the caller (via [`crate::pgas::Pgas::on`]).
+    pub fn charge_bulk(&self, model: &NicModel, remote: bool, n: u64, entry_bytes: usize) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        self.aggregated_ops.fetch_add(n, Ordering::Relaxed);
+        self.flushes.fetch_add(1, Ordering::Relaxed);
+        if remote {
+            self.charge(model, NicOp::Put(n as usize * entry_bytes), true)
+        } else {
+            0
+        }
+    }
+
     pub fn snapshot(&self) -> NicSnapshot {
         NicSnapshot {
             atomics_rdma: self.atomics_rdma.load(Ordering::Relaxed),
@@ -314,6 +343,8 @@ impl Nic {
             puts: self.puts.load(Ordering::Relaxed),
             gets: self.gets.load(Ordering::Relaxed),
             bytes: self.bytes.load(Ordering::Relaxed),
+            aggregated_ops: self.aggregated_ops.load(Ordering::Relaxed),
+            flushes: self.flushes.load(Ordering::Relaxed),
             virtual_ns: self.virtual_ns.load(Ordering::Relaxed),
         }
     }
@@ -328,6 +359,8 @@ impl NicSnapshot {
             puts: self.puts - earlier.puts,
             gets: self.gets - earlier.gets,
             bytes: self.bytes - earlier.bytes,
+            aggregated_ops: self.aggregated_ops - earlier.aggregated_ops,
+            flushes: self.flushes - earlier.flushes,
             virtual_ns: self.virtual_ns - earlier.virtual_ns,
         }
     }
@@ -429,6 +462,40 @@ mod tests {
         let t0 = Instant::now();
         nic.charge(&m, NicOp::ActiveMessage, true); // 3800 ns modeled
         assert!(t0.elapsed().as_nanos() >= 3_000, "spin should enforce modeled latency");
+    }
+
+    #[test]
+    fn bulk_charge_is_one_put_many_ops() {
+        let nic = Nic::new();
+        let m = NicModel::aries_no_network_atomics();
+        let ns = nic.charge_bulk(&m, true, 100, 16);
+        // One PUT of the packed payload, not 100 messages.
+        assert_eq!(ns, m.rma_base_ns + m.rma_per_cacheline_ns * (100u64 * 16).div_ceil(64));
+        let s = nic.snapshot();
+        assert_eq!(s.puts, 1);
+        assert_eq!(s.bytes, 1600);
+        assert_eq!(s.aggregated_ops, 100);
+        assert_eq!(s.flushes, 1);
+        assert_eq!(s.ams, 0, "the AM that applies the batch is charged by the caller");
+    }
+
+    #[test]
+    fn bulk_charge_local_is_free_but_counted() {
+        let nic = Nic::new();
+        let m = NicModel::aries();
+        assert_eq!(nic.charge_bulk(&m, false, 8, 16), 0);
+        let s = nic.snapshot();
+        assert_eq!(s.puts, 0, "local delivery is a memcpy, not a wire transfer");
+        assert_eq!(s.aggregated_ops, 8);
+        assert_eq!(s.flushes, 1);
+    }
+
+    #[test]
+    fn bulk_charge_empty_is_noop() {
+        let nic = Nic::new();
+        let m = NicModel::aries();
+        assert_eq!(nic.charge_bulk(&m, true, 0, 16), 0);
+        assert_eq!(nic.snapshot(), NicSnapshot::default());
     }
 
     #[test]

@@ -2,39 +2,75 @@
 //!
 //! Python (jax + pallas) runs only at build time (`make artifacts`); this
 //! module is the only place the compiled artifacts are touched at runtime.
+//!
+//! The XLA/PJRT backend (the `xla` crate plus the `xla_extension` C++
+//! library) is not available in the offline build environment, so it is
+//! gated behind the off-by-default `pjrt` cargo feature. Without it the
+//! loaders below return a descriptive error and every caller falls back
+//! to the scalar scan path — see [`crate::epoch::EpochManager`]'s
+//! quiescence scan, which treats a missing scanner as "use the per-token
+//! reads".
 
 pub mod reclaim_scan;
 
 pub use reclaim_scan::{ReclaimScan, ScanOutput, ScanShape, SharedReclaimScan};
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// A compiled XLA executable loaded from an HLO text artifact.
+#[cfg(feature = "pjrt")]
 pub struct LoadedExecutable {
     client: xla::PjRtClient,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl LoadedExecutable {
     /// Load an HLO text file (produced by `python/compile/aot.py`), compile
     /// it on the PJRT CPU client and return an executable handle.
     pub fn load(path: &str) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| crate::err!("pjrt client: {e}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| crate::err!("reading {path}: {e}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
+        let exe = client.compile(&comp).map_err(|e| crate::err!("compiling {path}: {e}"))?;
         Ok(Self { client, exe })
     }
 
     /// Execute with the given literals; the artifact is lowered with
     /// `return_tuple=True`, so the single output is a tuple.
     pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let mut result = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
-        Ok(result.decompose_tuple()?)
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| crate::err!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| crate::err!("fetch result: {e}"))?;
+        result.decompose_tuple().map_err(|e| crate::err!("decompose tuple: {e}"))
     }
 
     /// Number of addressable devices on the client.
     pub fn device_count(&self) -> usize {
         self.client.device_count()
+    }
+}
+
+/// Stub executable for builds without the `pjrt` feature: loading always
+/// fails, so artifact-driven paths degrade to their scalar fallbacks.
+#[cfg(not(feature = "pjrt"))]
+pub struct LoadedExecutable {
+    _priv: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl LoadedExecutable {
+    pub fn load(path: &str) -> Result<Self> {
+        Err(crate::err!(
+            "cannot load {path}: built without the `pjrt` feature (XLA backend unavailable)"
+        ))
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
     }
 }

@@ -9,7 +9,8 @@
 //! example and the `scan` benches.
 
 use super::LoadedExecutable;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Error, Result};
+use crate::{bail, err};
 
 /// Shape of one compiled artifact (parsed from its file name:
 /// `reclaim_scan_L{L}xT{T}_N{N}.hlo.txt`).
@@ -50,6 +51,9 @@ pub struct ScanOutput {
 
 /// A loaded reclaim-scan executable.
 pub struct ReclaimScan {
+    /// Only read by the PJRT-backed `execute_scan`; without the feature a
+    /// `ReclaimScan` cannot be constructed at all (loading fails first).
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     exe: LoadedExecutable,
     shape: ScanShape,
     /// Reused input staging buffers (the artifact shapes are static, so
@@ -62,7 +66,9 @@ impl ReclaimScan {
     /// Load the smallest artifact in `dir` that fits the given live sizes.
     pub fn load_fitting(dir: &str, locales: usize, tokens: usize, owners: usize) -> Result<ReclaimScan> {
         let mut best: Option<(ScanShape, std::path::PathBuf)> = None;
-        for entry in std::fs::read_dir(dir).with_context(|| format!("reading artifact dir {dir}"))? {
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| Error::from(e).context(format!("reading artifact dir {dir}")))?;
+        for entry in entries {
             let entry = entry?;
             let name = entry.file_name();
             let Some(shape) = ScanShape::parse_file_name(&name.to_string_lossy()) else {
@@ -80,7 +86,7 @@ impl ReclaimScan {
             }
         }
         let (shape, path) = best.ok_or_else(|| {
-            anyhow!("no reclaim_scan artifact in {dir} fits L={locales} T={tokens} N={owners}; run `make artifacts`")
+            err!("no reclaim_scan artifact in {dir} fits L={locales} T={tokens} N={owners}; run `make artifacts`")
         })?;
         let exe = LoadedExecutable::load(path.to_str().unwrap())?;
         Ok(ReclaimScan {
@@ -115,9 +121,16 @@ impl ReclaimScan {
         }
         self.owner_buf.fill(-1);
         self.owner_buf[..owners.len()].copy_from_slice(owners);
+        self.execute_scan(global_epoch, epochs.len().max(1))
+    }
 
-        let epochs_lit =
-            xla::Literal::vec1(&self.epoch_buf).reshape(&[s.locales as i64, s.tokens as i64])?;
+    /// Run the staged buffers through the PJRT executable.
+    #[cfg(feature = "pjrt")]
+    fn execute_scan(&mut self, global_epoch: i32, live: usize) -> Result<ScanOutput> {
+        let s = self.shape;
+        let epochs_lit = xla::Literal::vec1(&self.epoch_buf)
+            .reshape(&[s.locales as i64, s.tokens as i64])
+            .map_err(|e| err!("reshape epochs: {e}"))?;
         let ge_lit = xla::Literal::scalar(global_epoch);
         let owners_lit = xla::Literal::vec1(&self.owner_buf);
 
@@ -125,15 +138,22 @@ impl ReclaimScan {
         if out.len() != 3 {
             bail!("expected 3 outputs (safe, stale, hist); got {}", out.len());
         }
-        let safe: i32 = out[0].get_first_element()?;
-        let stale = out[1].to_vec::<i32>()?;
-        let hist = out[2].to_vec::<i32>()?;
-        let live = epochs.len().max(1);
+        let safe: i32 = out[0].get_first_element().map_err(|e| err!("read safe: {e}"))?;
+        let stale = out[1].to_vec::<i32>().map_err(|e| err!("read stale: {e}"))?;
+        let hist = out[2].to_vec::<i32>().map_err(|e| err!("read hist: {e}"))?;
         Ok(ScanOutput {
             safe: safe != 0,
             stale: stale[..live.min(stale.len())].to_vec(),
             hist: hist[..live.min(hist.len())].to_vec(),
         })
+    }
+
+    /// Stub: [`LoadedExecutable::load`] fails without the `pjrt` feature,
+    /// so a `ReclaimScan` can never be constructed and this is unreachable
+    /// in practice; it exists so the non-PJRT build type-checks.
+    #[cfg(not(feature = "pjrt"))]
+    fn execute_scan(&mut self, _global_epoch: i32, _live: usize) -> Result<ScanOutput> {
+        Err(err!("built without the `pjrt` feature (XLA backend unavailable)"))
     }
 }
 

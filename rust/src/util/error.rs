@@ -1,0 +1,98 @@
+//! Minimal string-message error type. The offline environment ships no
+//! `anyhow`; the CLI and the PJRT loaders are the only fallible
+//! boundaries, and a message-carrying error is all they need.
+
+use std::fmt;
+
+/// A string-message error (the `anyhow::Error` of this crate).
+pub struct Error(String);
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+
+    /// Prefix the message with `context` (the `with_context` idiom).
+    pub fn context(self, context: impl fmt::Display) -> Error {
+        Error(format!("{context}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// `return Err(Error)` with a formatted message (the `anyhow::bail!` idiom).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Construct an [`Error`] with a formatted message (the `anyhow::anyhow!`
+/// idiom).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("thing {} broke", 7)
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(fails().unwrap_err().to_string(), "thing 7 broke");
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+    }
+}

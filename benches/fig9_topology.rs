@@ -1,0 +1,150 @@
+//! **Fig 9** (beyond the source paper): interconnect-topology sensitivity
+//! of the epoch-reclamation workload. The same remote-heavy
+//! `DeleteReclaimEvery` trace is replayed on the DES testbed over four
+//! wirings — `flat` (the zero-cost crossbar, i.e. the pre-fabric model),
+//! `fully-connected`, `ring`, and the Aries-like `dragonfly` — sweeping
+//! locale counts. Virtual-time totals must separate measurably across
+//! the real topologies while `flat` reproduces the pre-fabric numbers
+//! (zero transit, zero queueing) exactly; the per-link counters (hops,
+//! busy time, queueing) show *why* each wiring costs what it does.
+//!
+//! Emits machine-readable `BENCH_topology.json` next to the human table
+//! (a CI artifact alongside `BENCH_aggregation.json`).
+
+use pgas_nb::fabric::TopologyKind;
+use pgas_nb::pgas::NicModel;
+use pgas_nb::sim::{run_epoch, EpochConfig, EpochResult, EpochWorkload};
+use pgas_nb::util::bench::BenchRunner;
+use pgas_nb::util::table::Table;
+
+struct Point {
+    kind: TopologyKind,
+    locales: usize,
+    r: EpochResult,
+}
+
+fn run_point(kind: TopologyKind, locales: usize, objs_per_task: usize) -> Point {
+    let cfg = EpochConfig {
+        workload: EpochWorkload::DeleteReclaimEvery(256),
+        model: NicModel::aries_no_network_atomics(),
+        locales,
+        tasks_per_locale: 8,
+        objs_per_task,
+        remote_ratio: 0.5,
+        fcfs_local_election: true,
+        slow_locale: None,
+        slow_factor: 8,
+        topology: kind,
+        seed: 29,
+    };
+    Point { kind, locales, r: run_epoch(cfg) }
+}
+
+fn json_point(pt: &Point) -> String {
+    let r = &pt.r;
+    format!(
+        "    {{\"topology\": \"{}\", \"locales\": {}, \"makespan_ns\": {}, \"mops\": {:.4}, \
+         \"net_messages\": {}, \"net_hops\": {}, \"net_bytes\": {}, \"transit_ns\": {}, \
+         \"queued_ns\": {}, \"links_used\": {}, \"max_link_busy_ns\": {}, \
+         \"max_link_wait_ns\": {}}}",
+        pt.kind.label(),
+        pt.locales,
+        r.makespan_ns,
+        r.throughput_mops,
+        r.net.messages,
+        r.net.hops,
+        r.net.bytes,
+        r.net.transit_ns,
+        r.net.queued_ns,
+        r.net.links_used,
+        r.net.max_link_busy_ns,
+        r.net.max_link_wait_ns,
+    )
+}
+
+fn main() {
+    let mut b = BenchRunner::new("Fig 9: interconnect topology sensitivity (epoch reclamation)");
+    let objs_per_task: usize = if b.quick() { 1_024 } else { 4_096 };
+    let locale_counts: &[usize] = if b.quick() { &[4, 8] } else { &[4, 8, 16, 32] };
+
+    let mut t = Table::new(&[
+        "topology",
+        "locales",
+        "makespan_ms",
+        "mops",
+        "net_msgs",
+        "mean_hops",
+        "transit_ms",
+        "queued_ms",
+        "hot_link_busy_ms",
+    ]);
+    let mut points: Vec<Point> = Vec::new();
+    for &locales in locale_counts {
+        for kind in TopologyKind::ALL {
+            let pt = run_point(kind, locales, objs_per_task);
+            b.record_virtual(
+                &format!("L={locales} topo={} reclaim/256 remote50%", kind.label()),
+                pt.r.total_iters,
+                pt.r.makespan_ns as f64,
+            );
+            t.row(&[
+                kind.label().into(),
+                locales.to_string(),
+                format!("{:.2}", pt.r.makespan_ns as f64 / 1e6),
+                format!("{:.2}", pt.r.throughput_mops),
+                pt.r.net.messages.to_string(),
+                format!("{:.2}", pt.r.net.hops as f64 / pt.r.net.messages.max(1) as f64),
+                format!("{:.2}", pt.r.net.transit_ns as f64 / 1e6),
+                format!("{:.2}", pt.r.net.queued_ns as f64 / 1e6),
+                format!("{:.2}", pt.r.net.max_link_busy_ns as f64 / 1e6),
+            ]);
+            points.push(pt);
+        }
+    }
+
+    println!("\n=== Fig 9: topology sweep (remote-heavy epoch reclamation) ===");
+    println!("{}", t.render());
+    b.finish();
+
+    // The acceptance invariants, checked on every run:
+    for &locales in locale_counts {
+        let get = |kind: TopologyKind| {
+            &points.iter().find(|p| p.kind == kind && p.locales == locales).unwrap().r
+        };
+        let flat = get(TopologyKind::FlatZero);
+        assert_eq!(flat.net.transit_ns, 0, "flat must reproduce the pre-fabric model");
+        assert_eq!(flat.net.queued_ns, 0);
+        for kind in [TopologyKind::FullyConnected, TopologyKind::Ring, TopologyKind::Dragonfly] {
+            let r = get(kind);
+            assert!(
+                r.makespan_ns > flat.makespan_ns,
+                "L={locales} {}: real wiring must be measurably slower than flat",
+                kind.label()
+            );
+        }
+    }
+    let headline = |kind: TopologyKind| {
+        let last = *locale_counts.last().unwrap();
+        points.iter().find(|p| p.kind == kind && p.locales == last).unwrap().r.makespan_ns as f64
+    };
+    let flat_ms = headline(TopologyKind::FlatZero);
+    println!(
+        "\nvirtual-time vs flat (L={}): fully-connected {:.2}x, ring {:.2}x, dragonfly {:.2}x",
+        locale_counts.last().unwrap(),
+        headline(TopologyKind::FullyConnected) / flat_ms,
+        headline(TopologyKind::Ring) / flat_ms,
+        headline(TopologyKind::Dragonfly) / flat_ms,
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"fig9_topology\",\n  \"model\": \"aries_no_network_atomics\",\n  \
+         \"workload\": \"reclaim_every_256_remote50\",\n  \"objs_per_task\": {},\n  \
+         \"points\": [\n{}\n  ]\n}}\n",
+        objs_per_task,
+        points.iter().map(json_point).collect::<Vec<_>>().join(",\n")
+    );
+    match std::fs::write("BENCH_topology.json", &json) {
+        Ok(()) => println!("[wrote BENCH_topology.json]"),
+        Err(e) => eprintln!("[could not write BENCH_topology.json: {e}]"),
+    }
+}

@@ -6,6 +6,7 @@
 //! have a Cray XC-50); the *shape* — who wins, scaling slopes, crossover
 //! points — is the reproduction target. See EXPERIMENTS.md.
 
+use crate::fabric::TopologyKind;
 use crate::pgas::NicModel;
 use crate::sim::{
     run_atomics, run_epoch, AtomicVariant, AtomicsConfig, EpochConfig, EpochResult, EpochWorkload,
@@ -95,6 +96,7 @@ pub fn fig3(scale: Scale) -> Table {
                 tasks_per_locale: tasks,
                 ops_per_task: total_ops / tasks,
                 vars_per_locale: 4096,
+                topology: TopologyKind::default(),
                 seed: 42,
             };
             let r = run_atomics(cfg);
@@ -122,6 +124,7 @@ pub fn fig3(scale: Scale) -> Table {
                     tasks_per_locale: tpl,
                     ops_per_task: (total_ops / (locales * tpl)).max(64),
                     vars_per_locale: 1024,
+                    topology: TopologyKind::default(),
                     seed: 42,
                 };
                 let r = run_atomics(cfg);
@@ -174,6 +177,7 @@ fn epoch_cfg(scale: Scale, workload: EpochWorkload, na: bool, locales: usize) ->
         fcfs_local_election: true,
         slow_locale: None,
         slow_factor: 8,
+        topology: TopologyKind::default(),
         seed: 7,
     }
 }
@@ -232,6 +236,46 @@ pub fn fig7(scale: Scale) -> Table {
     t
 }
 
+/// Fig. 9 (beyond the source paper) — topology sensitivity: the same
+/// remote-heavy reclamation workload swept over interconnect wirings.
+/// `flat` is the pre-fabric zero-cost model (the backward-compat
+/// reference); `fully-connected`, `ring` and `dragonfly` add
+/// route-derived transit and per-link queueing, so the spread between
+/// rows is pure network geography.
+pub fn fig9(scale: Scale) -> Table {
+    let mut t = Table::new(&[
+        "topology",
+        "locales",
+        "mops",
+        "makespan_ms",
+        "net_msgs",
+        "mean_hops",
+        "transit_ms",
+        "queued_ms",
+        "hot_link_busy_ms",
+    ]);
+    for kind in TopologyKind::ALL {
+        for &locales in &scale.locale_sweep() {
+            let mut cfg = epoch_cfg(scale, EpochWorkload::DeleteReclaimEvery(1024), false, locales);
+            cfg.remote_ratio = 0.5;
+            cfg.topology = kind;
+            let r = run_epoch(cfg);
+            t.row(&[
+                kind.label().into(),
+                locales.to_string(),
+                format!("{:.2}", r.throughput_mops),
+                format!("{:.2}", r.makespan_ns as f64 / 1e6),
+                r.net.messages.to_string(),
+                format!("{:.2}", r.net.hops as f64 / r.net.messages.max(1) as f64),
+                format!("{:.2}", r.net.transit_ns as f64 / 1e6),
+                format!("{:.2}", r.net.queued_ns as f64 / 1e6),
+                format!("{:.2}", r.net.max_link_busy_ns as f64 / 1e6),
+            ]);
+        }
+    }
+    t
+}
+
 /// Ablation: two-level FCFS election vs direct global contention.
 pub fn ablation_election(scale: Scale) -> Table {
     let mut t = epoch_header();
@@ -273,5 +317,15 @@ mod tests {
         assert!(csv.contains("remote0%"));
         assert!(csv.contains("remote50%"));
         assert!(csv.contains("remote100%"));
+    }
+
+    #[test]
+    fn fig9_covers_every_topology() {
+        let t = fig9(Scale::Quick);
+        assert_eq!(t.len(), TopologyKind::ALL.len() * 3);
+        let csv = t.to_csv();
+        for kind in TopologyKind::ALL {
+            assert!(csv.contains(kind.label()), "missing series {}", kind.label());
+        }
     }
 }

@@ -5,7 +5,8 @@ pub mod figures;
 
 use crate::collections::{InterlockedHashTable, LockFreeQueue, LockFreeStack};
 use crate::epoch::EpochManager;
-use crate::pgas::{coforall_locales, coforall_tasks, Machine, NicModel, Pgas};
+use crate::fabric::TopologyKind;
+use crate::pgas::{coforall_locales, coforall_tasks, LocaleId, Machine, NicModel, Pgas};
 use crate::runtime::SharedReclaimScan;
 use crate::sim::{run_epoch, EpochConfig, EpochWorkload};
 use crate::util::cli::Args;
@@ -21,15 +22,29 @@ pub const USAGE: &str = "pgas-nb — distributed non-blocking building blocks in
 Usage: pgas-nb <subcommand> [--opts]
 
 Subcommands:
-  bench <fig3|fig4|fig5|fig6|fig7|election>   regenerate a paper figure
+  bench <fig3|fig4|fig5|fig6|fig7|fig9|election>   regenerate a figure
         [--quick] [--csv]
   demo  [--locales N] [--tasks N]             real-substrate collections demo
-  scan  [--locales N] [--tokens N]            PJRT reclaim-scan vs scalar oracle
+  scan  [--locales N] [--tokens N] [--topology T]
+                                              PJRT reclaim-scan vs scalar oracle
   sim   [--workload readonly|delete-end|reclaim-every] [--every K]
         [--locales A,B,..] [--tasks N] [--objs N] [--remote-ratio F]
+        [--topology flat|fully-connected|ring|dragonfly]
         [--no-network-atomics]                custom DES testbed point
   info                                        environment / model summary
 ";
+
+/// CLI spellings of the interconnect topologies, derived from the enum so
+/// a new `TopologyKind` variant is exposed automatically.
+fn topology_choices() -> Vec<&'static str> {
+    TopologyKind::ALL.iter().map(|k| k.label()).collect()
+}
+
+fn parse_topology(args: &Args) -> TopologyKind {
+    let choices = topology_choices();
+    TopologyKind::parse(args.get_choice("topology", &choices, TopologyKind::FlatZero.label()))
+        .expect("every topology label parses (pinned by fabric::topology tests)")
+}
 
 /// Dispatch the CLI. Returns the process exit code.
 pub fn run_cli(args: &Args) -> Result<()> {
@@ -65,6 +80,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "fig5" => emit(args, "Fig 5: deletion, tryReclaim every iteration", &figures::fig5(scale)),
         "fig6" => emit(args, "Fig 6: deletion, reclaim at end (remote ratio)", &figures::fig6(scale)),
         "fig7" => emit(args, "Fig 7: read-only", &figures::fig7(scale)),
+        "fig9" | "topology" => {
+            emit(args, "Fig 9: interconnect topology sensitivity", &figures::fig9(scale))
+        }
         "election" => emit(args, "Ablation: FCFS election", &figures::ablation_election(scale)),
         "all" => {
             emit(args, "Fig 3", &figures::fig3(scale));
@@ -72,6 +90,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             emit(args, "Fig 5", &figures::fig5(scale));
             emit(args, "Fig 6", &figures::fig6(scale));
             emit(args, "Fig 7", &figures::fig7(scale));
+            emit(args, "Fig 9", &figures::fig9(scale));
         }
         other => bail!("unknown figure '{other}'"),
     }
@@ -156,6 +175,7 @@ fn cmd_scan(args: &Args) -> Result<()> {
     let mut kernel_ns = 0u128;
     let mut scalar_ns = 0u128;
     let mut mismatches = 0;
+    let mut last_out = None;
     for _ in 0..reps {
         let ge = 1 + rng.next_below(3) as i32;
         let epochs: Vec<Vec<i32>> = (0..locales)
@@ -171,10 +191,22 @@ fn cmd_scan(args: &Args) -> Result<()> {
         if out.safe != safe {
             mismatches += 1;
         }
+        last_out = Some(out);
     }
     println!("reps={reps} mismatches={mismatches}");
     println!("  PJRT kernel scan   {:.1} us/scan", kernel_ns as f64 / reps as f64 / 1e3);
     println!("  scalar scan        {:.3} us/scan", scalar_ns as f64 / reps as f64 / 1e3);
+    if let Some(out) = last_out {
+        // The hist output is the scatter-list size per destination; price
+        // its delivery over the chosen interconnect.
+        let topology = parse_topology(args);
+        let topo = topology.build(locales);
+        println!(
+            "  modeled scatter transit ({}) from locale0: {:.2} us",
+            topology.label(),
+            out.scatter_transit_ns(&*topo, LocaleId(0), 16) as f64 / 1e3
+        );
+    }
     if mismatches > 0 {
         bail!("kernel scan diverged from the scalar oracle");
     }
@@ -193,7 +225,10 @@ fn cmd_sim(args: &Args) -> Result<()> {
     } else {
         NicModel::aries()
     };
-    let mut t = Table::new(&["locales", "mops", "advances", "lost_local", "lost_global", "freed"]);
+    let topology = parse_topology(args);
+    let mut t = Table::new(&[
+        "locales", "mops", "advances", "lost_local", "lost_global", "freed", "queued_ms",
+    ]);
     for locales in args.get_usize_list("locales", &[2, 4, 8, 16]) {
         let cfg = EpochConfig {
             workload,
@@ -205,6 +240,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
             fcfs_local_election: !args.flag("no-fcfs"),
             slow_locale: args.get("slow-locale").and_then(|v| v.parse().ok()),
             slow_factor: args.get_u64("slow-factor", 8),
+            topology,
             seed: args.get_u64("seed", 7),
         };
         let r = run_epoch(cfg);
@@ -215,15 +251,17 @@ fn cmd_sim(args: &Args) -> Result<()> {
             r.lost_local.to_string(),
             r.lost_global.to_string(),
             r.freed.to_string(),
+            format!("{:.2}", r.net.queued_ns as f64 / 1e6),
         ]);
     }
-    emit(args, "custom sim sweep", &t);
+    emit(args, &format!("custom sim sweep ({})", topology.label()), &t);
     Ok(())
 }
 
 fn cmd_info() -> Result<()> {
     println!("pgas-nb — reproduction of Dewan & Jenkins, IPDPSW 2020");
     println!("  DCAS lock-free: {}", crate::atomics::dcas_is_lock_free());
+    println!("  topologies: {}", topology_choices().join("|"));
     println!("  host cores: {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
     for (name, m) in [
         ("aries(rdma)", NicModel::aries()),
@@ -266,6 +304,27 @@ mod tests {
     #[test]
     fn sim_custom_point() {
         run_cli(&argv("sim --workload readonly --locales 2 --tasks 2 --objs 512")).unwrap();
+    }
+
+    #[test]
+    fn sim_accepts_topology_flag() {
+        run_cli(&argv(
+            "sim --workload reclaim-every --every 64 --locales 4 --tasks 2 --objs 512 \
+             --topology dragonfly",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn bench_fig9_quick_runs() {
+        run_cli(&argv("bench fig9 --quick")).unwrap();
+    }
+
+    #[test]
+    fn topology_flag_falls_back_on_garbage() {
+        assert_eq!(parse_topology(&argv("sim --topology torus")), TopologyKind::FlatZero);
+        assert_eq!(parse_topology(&argv("sim --topology ring")), TopologyKind::Ring);
+        assert_eq!(parse_topology(&argv("sim")), TopologyKind::FlatZero);
     }
 
     #[test]

@@ -1,0 +1,37 @@
+//! Route-aware interconnect fabric: topology, links, and congestion.
+//!
+//! The substrate's original cost model was *flat*: every locale pair
+//! equidistant, the fabric infinitely wide. This subsystem splits one
+//! modeled message into the two quantities real PGAS studies (DART-MPI,
+//! arXiv:1507.01773; UPC address mapping, arXiv:1309.2328) show matter
+//! separately:
+//!
+//! * **injection** — what the *sender* pays: the NIC op cost from
+//!   [`crate::pgas::NicModel`] plus the topology's injection latency.
+//!   This is all that stalls the issuing task.
+//! * **transit** — what the *message* pays: per-hop propagation,
+//!   per-link serialization at finite bandwidth, and any queueing behind
+//!   other in-flight messages. Transit delays delivery (and, for
+//!   round-trip operations, the response), but never blocks the sender's
+//!   NIC issue slot.
+//!
+//! [`Topology`] (with [`FullyConnected`], [`Ring`] and the Aries-like
+//! [`Dragonfly`]) defines routes and per-hop costs; [`Network`] tracks
+//! in-flight messages hop-by-hop over per-directed-link
+//! [`Resource`](crate::sim::engine::Resource) queues and exposes the
+//! per-link counters (messages forwarded, busy time, peak queueing
+//! delay) that the fig9 bench reports. The live substrate
+//! ([`crate::pgas::Pgas`]) records routes for accounting; the DES
+//! testbed ([`crate::sim`]) additionally advances messages in virtual
+//! time, so link contention and hot-spot congestion *emerge* from the
+//! traffic pattern.
+//!
+//! The default topology everywhere is [`TopologyKind::FlatZero`] — a
+//! zero-cost crossbar under which every charge reduces exactly to the
+//! pre-fabric flat model (pinned by `rust/tests/fabric.rs`).
+
+pub mod network;
+pub mod topology;
+
+pub use network::{Delivery, LinkStats, NetTotals, Network};
+pub use topology::{ser_ns, Dragonfly, FullyConnected, Link, Ring, Route, Topology, TopologyKind};

@@ -1,0 +1,364 @@
+//! The in-flight message tracker: per-directed-link queues and counters.
+//!
+//! A [`Network`] owns one [`Resource`] per *directed link* of its
+//! [`Topology`]. Messages advance hop by hop in virtual time: each hop
+//! first serializes onto the link (finite bandwidth — this is where
+//! congestion queues form) and then propagates (pipelined latency). Two
+//! messages crossing the same directed link contend; messages on
+//! disjoint links do not — so hot-spot congestion *emerges* from the
+//! traffic pattern instead of being scripted.
+//!
+//! Two entry points:
+//!
+//! * [`Network::send`] — discrete-event path: inject at a virtual `now`,
+//!   queue on every link of the route, return the delivery time. Used by
+//!   the DES testbed ([`crate::sim`]).
+//! * [`Network::record`] — live-substrate path: the in-process substrate
+//!   has no global virtual clock, so it tallies the route (per-link
+//!   message/byte/busy counters, pure transit) without queueing. Used by
+//!   [`crate::pgas::Pgas`]'s charging path.
+//!
+//! Counters per link: messages forwarded, bytes, busy (serialization)
+//! time, and the peak single-message queueing delay — the congestion
+//! observables the fig9 bench and the paper's Figures 3–8 methodology
+//! report.
+
+use super::topology::{ser_ns, Link, Topology};
+use crate::pgas::topology::LocaleId;
+use crate::sim::engine::{Resource, VTime};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Outcome of routing one message.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct Delivery {
+    /// Virtual time the message reaches its destination NIC (meaningful
+    /// only for [`Network::send`]).
+    pub delivered_at: VTime,
+    /// Pure (uncongested) transit: injection + per-link serialization
+    /// and propagation. Equals `delivered_at - now` minus queueing.
+    pub transit_ns: u64,
+    /// Links crossed.
+    pub hops: u32,
+    /// Total time spent queued behind other messages on busy links.
+    pub waited_ns: u64,
+}
+
+/// Per-directed-link counters (a snapshot; see [`Network::link_stats`]).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct LinkStats {
+    pub link: Link,
+    /// Messages forwarded over this link.
+    pub msgs: u64,
+    /// Payload bytes forwarded.
+    pub bytes: u64,
+    /// Cumulative serialization (transmission) time.
+    pub busy_ns: u64,
+    /// Largest queueing delay any single message saw here (peak demand).
+    pub peak_wait_ns: u64,
+}
+
+struct LinkState {
+    res: Resource,
+    bytes: u64,
+    peak_wait_ns: VTime,
+}
+
+impl LinkState {
+    fn new() -> LinkState {
+        LinkState { res: Resource::new(), bytes: 0, peak_wait_ns: 0 }
+    }
+}
+
+/// Aggregate network counters.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct NetTotals {
+    pub messages: u64,
+    pub hops: u64,
+    pub bytes: u64,
+    /// Sum of pure per-message transit.
+    pub transit_ns: u64,
+    /// Sum of per-message queueing delay (always 0 on the live path).
+    pub queued_ns: u64,
+    /// Directed links that carried at least one message.
+    pub links_used: u64,
+    /// Busiest link's cumulative serialization time.
+    pub max_link_busy_ns: u64,
+    /// Busiest link's message count.
+    pub max_link_msgs: u64,
+    /// Largest single-message queueing delay on any link.
+    pub max_link_wait_ns: u64,
+}
+
+/// The route-aware fabric state for one machine.
+pub struct Network {
+    topo: Arc<dyn Topology>,
+    links: HashMap<(u16, u16), LinkState>,
+    messages: u64,
+    hops: u64,
+    bytes: u64,
+    transit_ns: u64,
+    queued_ns: u64,
+}
+
+impl Network {
+    pub fn new(topo: Arc<dyn Topology>) -> Network {
+        Network { topo, links: HashMap::new(), messages: 0, hops: 0, bytes: 0, transit_ns: 0, queued_ns: 0 }
+    }
+
+    pub fn topology(&self) -> &Arc<dyn Topology> {
+        &self.topo
+    }
+
+    /// DES path: inject a `bytes`-long message at virtual time `now` and
+    /// advance it hop by hop with per-link queueing. `from == to` is a
+    /// no-op delivered immediately (the fabric is not involved).
+    pub fn send(&mut self, now: VTime, from: LocaleId, to: LocaleId, bytes: usize) -> Delivery {
+        self.route_message(Some(now), from, to, bytes)
+    }
+
+    /// Live-substrate path: tally the route (per-link and aggregate
+    /// counters, pure transit) without virtual-time queueing. Returns the
+    /// pure transit in modeled nanoseconds.
+    pub fn record(&mut self, from: LocaleId, to: LocaleId, bytes: usize) -> u64 {
+        self.record_n(from, to, bytes, 1)
+    }
+
+    /// [`Network::record`] for `n` identical messages at once (hot-path
+    /// bursts); returns the summed pure transit.
+    pub fn record_n(&mut self, from: LocaleId, to: LocaleId, bytes: usize, n: u64) -> u64 {
+        if n == 0 || from == to {
+            return 0;
+        }
+        let per_msg = self.route_message(None, from, to, bytes).transit_ns;
+        if n > 1 {
+            // Tally the remaining n-1 copies in O(hops), not O(n * hops).
+            let route = self.topo.route(from, to);
+            let ser = ser_ns(self.topo.link_bytes_per_ns(), bytes);
+            for link in &route {
+                let st = self.links.entry(link.key()).or_insert_with(LinkState::new);
+                st.res.tally(n - 1, ser);
+                st.bytes += (n - 1) * bytes as u64;
+            }
+            self.messages += n - 1;
+            self.hops += (n - 1) * route.len() as u64;
+            self.bytes += (n - 1) * bytes as u64;
+            self.transit_ns += (n - 1) * per_msg;
+        }
+        n * per_msg
+    }
+
+    fn route_message(&mut self, queue_at: Option<VTime>, from: LocaleId, to: LocaleId, bytes: usize) -> Delivery {
+        let now = queue_at.unwrap_or(0);
+        if from == to {
+            return Delivery { delivered_at: now, ..Delivery::default() };
+        }
+        let topo = Arc::clone(&self.topo);
+        let route = topo.route(from, to);
+        let ser = ser_ns(topo.link_bytes_per_ns(), bytes);
+        let mut t = now + topo.injection_ns();
+        let mut pure = topo.injection_ns();
+        let mut waited = 0u64;
+        for &link in &route {
+            let st = self.links.entry(link.key()).or_insert_with(LinkState::new);
+            st.bytes += bytes as u64;
+            if queue_at.is_none() {
+                // Tally-only: busy time and message count, no queue state.
+                st.res.tally(1, ser);
+            } else if ser == 0 {
+                // Zero serialization (infinite bandwidth) cannot occupy
+                // the link, so it must not queue either — this is what
+                // makes the zero-cost crossbar exactly the flat model.
+                st.res.tally(1, 0); // count the message only
+                t += topo.link_ns(link);
+            } else {
+                // Serialize onto the link (queueing behind in-flight
+                // traffic), then propagate. Like every Resource in the
+                // DES, the link is FIFO in *call* order: a send chained
+                // far into the future (a drain's scatter) can make a
+                // later-issued, earlier-timed message wait. That is the
+                // engine's standard single-server approximation — exact
+                // when sends are time-monotone, conservative (queueing
+                // over-, never under-estimated) when they are not.
+                let done_ser = st.res.acquire(t, ser);
+                let wait = done_ser - ser - t;
+                waited += wait;
+                st.peak_wait_ns = st.peak_wait_ns.max(wait);
+                t = done_ser + topo.link_ns(link);
+            }
+            pure += ser + topo.link_ns(link);
+        }
+        self.messages += 1;
+        self.hops += route.len() as u64;
+        self.bytes += bytes as u64;
+        self.transit_ns += pure;
+        self.queued_ns += waited;
+        Delivery { delivered_at: t, transit_ns: pure, hops: route.len() as u32, waited_ns: waited }
+    }
+
+    /// Per-link counters, sorted by `(from, to)` for stable output.
+    pub fn link_stats(&self) -> Vec<LinkStats> {
+        let mut out: Vec<LinkStats> = self
+            .links
+            .iter()
+            .map(|(&(f, t), st)| LinkStats {
+                link: Link::new(LocaleId(f), LocaleId(t)),
+                msgs: st.res.ops(),
+                bytes: st.bytes,
+                busy_ns: st.res.busy(),
+                peak_wait_ns: st.peak_wait_ns,
+            })
+            .collect();
+        out.sort_by_key(|s| s.link.key());
+        out
+    }
+
+    /// The link that carried the most serialization time, if any.
+    pub fn hottest_link(&self) -> Option<LinkStats> {
+        self.link_stats().into_iter().max_by_key(|s| (s.busy_ns, s.msgs))
+    }
+
+    pub fn totals(&self) -> NetTotals {
+        let mut t = NetTotals {
+            messages: self.messages,
+            hops: self.hops,
+            bytes: self.bytes,
+            transit_ns: self.transit_ns,
+            queued_ns: self.queued_ns,
+            ..NetTotals::default()
+        };
+        for st in self.links.values() {
+            t.links_used += 1;
+            t.max_link_busy_ns = t.max_link_busy_ns.max(st.res.busy());
+            t.max_link_msgs = t.max_link_msgs.max(st.res.ops());
+            t.max_link_wait_ns = t.max_link_wait_ns.max(st.peak_wait_ns);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::topology::{FullyConnected, Ring};
+
+    fn ring8() -> Network {
+        Network::new(Arc::new(Ring::new(8)))
+    }
+
+    #[test]
+    fn send_matches_pure_transit_when_uncontended() {
+        let mut n = ring8();
+        let d = n.send(1_000, LocaleId(0), LocaleId(2), 8);
+        let expect = n.topology().transit_ns(LocaleId(0), LocaleId(2), 8);
+        assert_eq!(d.transit_ns, expect);
+        assert_eq!(d.delivered_at, 1_000 + expect);
+        assert_eq!(d.hops, 2);
+        assert_eq!(d.waited_ns, 0);
+    }
+
+    #[test]
+    fn same_link_contends_disjoint_links_do_not() {
+        let mut n = Network::new(Arc::new(FullyConnected::new(4)));
+        let big = 16 * 1024; // 1024 ns of serialization at 16 B/ns
+        let a = n.send(0, LocaleId(0), LocaleId(1), big);
+        let b = n.send(0, LocaleId(0), LocaleId(1), big);
+        assert_eq!(a.waited_ns, 0);
+        assert_eq!(b.waited_ns, 1_024, "second message queues behind the first");
+        let c = n.send(0, LocaleId(2), LocaleId(3), big);
+        assert_eq!(c.waited_ns, 0, "disjoint link: no contention");
+        assert_eq!(n.totals().queued_ns, 1_024);
+        assert_eq!(n.totals().max_link_wait_ns, 1_024);
+    }
+
+    #[test]
+    fn shared_ring_link_is_the_hot_spot() {
+        let mut n = ring8();
+        // 0->2 and 1->2 share the directed link 1->2.
+        for _ in 0..50 {
+            n.send(0, LocaleId(0), LocaleId(2), 4_096);
+            n.send(0, LocaleId(1), LocaleId(2), 4_096);
+        }
+        let hot = n.hottest_link().unwrap();
+        assert_eq!(hot.link.key(), (1, 2));
+        assert_eq!(hot.msgs, 100);
+        assert!(n.totals().queued_ns > 0, "contention must appear as queueing");
+    }
+
+    #[test]
+    fn self_send_skips_the_fabric() {
+        let mut n = ring8();
+        let d = n.send(77, LocaleId(3), LocaleId(3), 1 << 20);
+        assert_eq!(d.delivered_at, 77);
+        assert_eq!(d.transit_ns, 0);
+        assert_eq!(n.totals(), NetTotals::default());
+    }
+
+    #[test]
+    fn record_tallies_without_queueing() {
+        let mut n = ring8();
+        let t1 = n.record(LocaleId(0), LocaleId(4), 64);
+        let t2 = n.record(LocaleId(0), LocaleId(4), 64);
+        assert_eq!(t1, t2, "record never queues: transit is load-independent");
+        assert_eq!(t1, n.topology().transit_ns(LocaleId(0), LocaleId(4), 64));
+        let t = n.totals();
+        assert_eq!(t.messages, 2);
+        assert_eq!(t.hops, 8);
+        assert_eq!(t.queued_ns, 0);
+        assert_eq!(t.transit_ns, 2 * t1);
+    }
+
+    #[test]
+    fn record_n_equals_n_records() {
+        let mut a = ring8();
+        let mut b = ring8();
+        let ta = a.record_n(LocaleId(1), LocaleId(5), 128, 5);
+        let mut tb = 0;
+        for _ in 0..5 {
+            tb += b.record(LocaleId(1), LocaleId(5), 128);
+        }
+        assert_eq!(ta, tb);
+        assert_eq!(a.totals(), b.totals());
+        assert_eq!(a.link_stats(), b.link_stats());
+        assert_eq!(a.record_n(LocaleId(1), LocaleId(5), 128, 0), 0);
+    }
+
+    #[test]
+    fn zero_cost_topology_records_zero_transit() {
+        let mut n = Network::new(Arc::new(FullyConnected::zero_cost(4)));
+        assert_eq!(n.record(LocaleId(0), LocaleId(3), 1 << 20), 0);
+        let d = n.send(123, LocaleId(0), LocaleId(3), 1 << 20);
+        assert_eq!(d.delivered_at, 123, "flat-zero fabric is transparent");
+        let t = n.totals();
+        assert_eq!(t.messages, 2, "still observable in the counters");
+        assert_eq!(t.transit_ns, 0);
+    }
+
+    #[test]
+    fn zero_serialization_never_queues_even_out_of_order() {
+        // Regression: a zero-time transmission must not FIFO-serialize.
+        // DES steps can emit a link's messages with non-monotone
+        // timestamps (a drain schedules far-future sends); under the
+        // zero-cost topology the earlier message must still pass through
+        // untouched or the flat model would stop being flat.
+        let mut n = Network::new(Arc::new(FullyConnected::zero_cost(4)));
+        let late = n.send(10_000, LocaleId(0), LocaleId(1), 64);
+        assert_eq!(late.delivered_at, 10_000);
+        let early = n.send(5, LocaleId(0), LocaleId(1), 64);
+        assert_eq!(early.delivered_at, 5, "must not queue behind the future send");
+        assert_eq!(early.waited_ns, 0);
+        assert_eq!(n.totals().queued_ns, 0);
+    }
+
+    #[test]
+    fn link_stats_sorted_and_complete() {
+        let mut n = ring8();
+        n.send(0, LocaleId(0), LocaleId(2), 64);
+        n.send(0, LocaleId(5), LocaleId(4), 64);
+        let stats = n.link_stats();
+        let keys: Vec<_> = stats.iter().map(|s| s.link.key()).collect();
+        assert_eq!(keys, vec![(0, 1), (1, 2), (5, 4)]);
+        assert!(stats.iter().all(|s| s.msgs == 1 && s.bytes == 64));
+        assert_eq!(n.totals().links_used, 3);
+    }
+}

@@ -4,6 +4,7 @@ pub mod atomics;
 pub mod collections;
 pub mod coordinator;
 pub mod epoch;
+pub mod fabric;
 pub mod pgas;
 pub mod runtime;
 pub mod sim;

@@ -38,6 +38,15 @@
 //! `flush_all` / drop at the boundary. The buffered-side invariant the
 //! tests pin down: **nothing is applied before its flush, and a drop
 //! applies everything**.
+//!
+//! ## Route-aware charging
+//!
+//! Under a non-trivial interconnect ([`crate::fabric`]) a flush is
+//! charged as **one bulk message over one route** (plus the companion
+//! AM), so aggregation coalesces *transit* exactly as it coalesces NIC
+//! ops: `n` buffered operations cross the fabric's links once, not `n`
+//! times. The sender still stalls only for the injection-side cost —
+//! multi-hop delivery is the message's problem, not the issuing task's.
 
 use super::heap::GlobalPtr;
 use super::topology::LocaleId;
@@ -388,6 +397,29 @@ mod tests {
         assert_eq!(s.aggregated_ops, 64);
         assert_eq!(s.flushes, 1);
         assert_eq!(s.bytes, 64 * 8);
+    }
+
+    #[test]
+    fn remote_flush_is_one_routed_bulk_message() {
+        use crate::fabric::TopologyKind;
+        let p = Pgas::with_topology(
+            Machine::new(4, 2),
+            NicModel::aries_no_network_atomics(),
+            TopologyKind::Ring.build(4),
+        );
+        let mut agg = Aggregator::with_capacity(Arc::clone(&p), 64, |_, _b: Vec<u64>| {});
+        for i in 0..64u64 {
+            agg.buffer(LocaleId(2), i);
+        }
+        let n = p.network_totals();
+        // One bulk transfer + one companion AM crossed the fabric — not
+        // 64 per-op messages.
+        assert_eq!(n.messages, 2);
+        let topo = p.topology();
+        let am_bytes = crate::pgas::NicOp::ActiveMessage.payload_bytes();
+        let expect = topo.transit_ns(LocaleId(0), LocaleId(2), 64 * 8)
+            + topo.transit_ns(LocaleId(0), LocaleId(2), am_bytes);
+        assert_eq!(p.comm_totals().transit_ns, expect);
     }
 
     #[test]

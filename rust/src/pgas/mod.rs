@@ -5,7 +5,9 @@
 //! compression, per-locale heaps, one-sided PUT/GET, active messages
 //! (`on`-statements) and a modeled NIC implementing the Aries/Gemini/
 //! InfiniBand cost hierarchy (see `DESIGN.md` §2 for why this substitution
-//! preserves the paper's behaviour).
+//! preserves the paper's behaviour). Remote charges are additionally
+//! routed over an interconnect topology ([`crate::fabric`]); the default
+//! zero-cost crossbar reproduces the flat model exactly.
 
 pub mod aggregation;
 pub mod heap;
@@ -23,25 +25,52 @@ pub use task::{coforall_locales, coforall_tasks, forall_cyclic, here, with_local
 pub use topology::{LocaleId, Machine};
 pub use wide_ptr::WidePtr;
 
+use crate::fabric::{LinkStats, NetTotals, Network, Topology, TopologyKind};
 use crossbeam_utils::CachePadded;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// One PGAS "job": a machine shape, a NIC per locale, heap accounting per
-/// locale, and the communication primitives. Cheap to share (`Arc`).
+/// locale, an interconnect fabric, and the communication primitives.
+/// Cheap to share (`Arc`).
 pub struct Pgas {
     machine: Machine,
     model: NicModel,
     nics: Vec<CachePadded<Nic>>,
     heaps: Vec<CachePadded<HeapStats>>,
+    /// The wiring of the machine (see [`crate::fabric`]). Defaults to the
+    /// zero-cost crossbar, under which charging is exactly the flat model.
+    topo: Arc<dyn Topology>,
+    /// Per-directed-link accounting for messages this job issued. The
+    /// live substrate has no global virtual clock, so the network is used
+    /// in tally mode (no queueing); congestion emerges in the DES testbed.
+    net: Mutex<Network>,
 }
 
 impl Pgas {
+    /// Substrate over the default zero-cost flat fabric: every charge is
+    /// exactly the `NicModel` cost, transit is identically zero.
     pub fn new(machine: Machine, model: NicModel) -> Arc<Pgas> {
+        Pgas::with_topology(machine, model, TopologyKind::FlatZero.build(machine.locales))
+    }
+
+    /// Substrate over an explicit interconnect topology: remote charges
+    /// additionally record a route through `topo`, accruing per-link
+    /// counters and per-NIC `transit_ns`.
+    pub fn with_topology(machine: Machine, model: NicModel, topo: Arc<dyn Topology>) -> Arc<Pgas> {
+        assert_eq!(
+            topo.locales(),
+            machine.locales,
+            "topology wires {} locales but the machine has {}",
+            topo.locales(),
+            machine.locales
+        );
         Arc::new(Pgas {
             machine,
             model,
             nics: machine.locale_ids().map(|_| CachePadded::new(Nic::new())).collect(),
             heaps: machine.locale_ids().map(|_| CachePadded::new(HeapStats::default())).collect(),
+            net: Mutex::new(Network::new(Arc::clone(&topo))),
+            topo,
         })
     }
 
@@ -59,6 +88,21 @@ impl Pgas {
     #[inline]
     pub fn model(&self) -> &NicModel {
         &self.model
+    }
+
+    /// The interconnect topology this job runs over.
+    pub fn topology(&self) -> &Arc<dyn Topology> {
+        &self.topo
+    }
+
+    /// Aggregate fabric counters (messages, hops, transit, hottest link).
+    pub fn network_totals(&self) -> NetTotals {
+        self.net.lock().unwrap().totals()
+    }
+
+    /// Per-directed-link counters, sorted by `(from, to)`.
+    pub fn link_stats(&self) -> Vec<LinkStats> {
+        self.net.lock().unwrap().link_stats()
     }
 
     #[inline]
@@ -86,32 +130,74 @@ impl Pgas {
         &self.nics[from.index()]
     }
 
+    /// Record the fabric route of `n` identical `bytes`-long messages
+    /// from `from` to `to`: per-link counters plus the issuer's
+    /// `transit_ns`. Transit is *not* part of the sender's `virtual_ns` —
+    /// the sender stalls for injection only; delivery latency belongs to
+    /// the message (and, in the DES testbed, to virtual time).
+    ///
+    /// This takes the (uncontended-in-tests) network mutex on every
+    /// remote op. The live substrate is a modeling harness, not a
+    /// datapath — if per-link accounting ever shows up in a wall-clock
+    /// profile, shard it into per-link atomics keyed by a precomputed
+    /// route table.
+    fn record_transit(&self, from: LocaleId, to: LocaleId, bytes: usize, n: u64) {
+        let transit = self.net.lock().unwrap().record_n(from, to, bytes, n);
+        if transit > 0 {
+            self.nics[from.index()]
+                .transit_ns
+                .fetch_add(transit, std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+
     /// Charge `op`, issued by the current task, targeting `target`.
-    /// Returns the modeled nanoseconds.
+    /// Returns the modeled *sender-visible* nanoseconds (NIC op cost —
+    /// the injection side). Remote ops additionally record their route's
+    /// transit into the fabric counters (see [`crate::fabric`]).
     #[inline]
     pub fn charge(&self, op: NicOp, target: LocaleId) -> u64 {
-        self.issuing_nic().charge(&self.model, op, here() != target)
+        let from = here();
+        let remote = from != target;
+        let ns = self.issuing_nic().charge(&self.model, op, remote);
+        if remote {
+            self.record_transit(from, target, op.payload_bytes(), 1);
+        }
+        ns
     }
 
     /// Charge `n` identical operations with one counter update (hot-path
     /// bursts like `pin`'s three local atomics).
     #[inline]
     pub fn charge_n(&self, op: NicOp, target: LocaleId, n: u64) -> u64 {
-        self.issuing_nic().charge_n(&self.model, op, here() != target, n)
+        let from = here();
+        let remote = from != target;
+        let ns = self.issuing_nic().charge_n(&self.model, op, remote, n);
+        if remote && n > 0 {
+            self.record_transit(from, target, op.payload_bytes(), n);
+        }
+        ns
     }
 
     /// Charge one aggregated flush of `n` coalesced operations (each
     /// `entry_bytes` long) toward `target`: a single bulk PUT (when the
     /// destination is remote) tallied under the issuing locale's
-    /// `aggregated_ops`/`flushes` counters. See [`aggregation`].
+    /// `aggregated_ops`/`flushes` counters, and routed over the fabric as
+    /// **one bulk message** — not `n` — so aggregation also coalesces
+    /// transit. See [`aggregation`].
     #[inline]
     pub fn charge_flush(&self, n: u64, entry_bytes: usize, target: LocaleId) -> u64 {
-        self.issuing_nic().charge_bulk(&self.model, here() != target, n, entry_bytes)
+        let from = here();
+        let remote = from != target;
+        let ns = self.issuing_nic().charge_bulk(&self.model, remote, n, entry_bytes);
+        if remote && n > 0 {
+            self.record_transit(from, target, n as usize * entry_bytes, 1);
+        }
+        ns
     }
 
     /// Allocate `value` on locale `loc` (Chapel `on loc { new unmanaged T }`).
     pub fn alloc<T>(&self, loc: LocaleId, value: T) -> GlobalPtr<T> {
-        assert!(loc.index() < self.machine.locales, "allocation on unknown locale");
+        assert!(self.machine.contains(loc), "allocation on unknown locale");
         let addr = heap::raw_alloc(value);
         self.heaps[loc.index()].allocs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         GlobalPtr::from_wide(WidePtr::new(loc, addr))
@@ -169,6 +255,7 @@ impl Pgas {
             total.aggregated_ops += s.aggregated_ops;
             total.flushes += s.flushes;
             total.virtual_ns += s.virtual_ns;
+            total.transit_ns += s.transit_ns;
         }
         total
     }
@@ -268,6 +355,92 @@ mod tests {
         with_locale(LocaleId(99), || {
             p.charge(NicOp::Get(8), LocaleId(0));
         });
+    }
+
+    #[test]
+    fn default_fabric_is_transparent() {
+        // The zero-cost crossbar must not change any pre-fabric number:
+        // transit is identically zero, virtual_ns is the flat charge.
+        let p = pgas4();
+        let base = NicModel::aries_no_network_atomics();
+        let g = p.alloc(LocaleId(3), 1u64);
+        p.get(g);
+        p.on(LocaleId(2), || ());
+        let t = p.comm_totals();
+        assert_eq!(t.transit_ns, 0);
+        assert_eq!(t.virtual_ns, base.cost(NicOp::Get(8), true) + base.am_ns);
+        let n = p.network_totals();
+        assert_eq!(n.transit_ns, 0);
+        assert_eq!(n.messages, 2, "routes are still observable");
+        unsafe { p.free(g) };
+    }
+
+    #[test]
+    fn routed_fabric_accrues_transit_but_not_sender_stall() {
+        use crate::fabric::TopologyKind;
+        let machine = Machine::new(8, 2);
+        let model = NicModel::aries_no_network_atomics();
+        let flat = Pgas::new(machine, model);
+        let ring = Pgas::with_topology(machine, model, TopologyKind::Ring.build(8));
+        let issue = |p: &Arc<Pgas>| {
+            with_locale(LocaleId(0), || {
+                p.charge(NicOp::Atomic64, LocaleId(4));
+                p.charge(NicOp::Get(256), LocaleId(1));
+            })
+        };
+        issue(&flat);
+        issue(&ring);
+        let (tf, tr) = (flat.comm_totals(), ring.comm_totals());
+        // Sender-visible cost is the NIC model either way (decoupling:
+        // the sender pays injection, not the multi-hop delivery)...
+        assert_eq!(tf.virtual_ns, tr.virtual_ns);
+        // ...but the ring's messages crossed real links.
+        assert_eq!(tf.transit_ns, 0);
+        assert!(tr.transit_ns > 0);
+        assert_eq!(
+            tr.transit_ns,
+            ring.topology().transit_ns(LocaleId(0), LocaleId(4), 8)
+                + ring.topology().transit_ns(LocaleId(0), LocaleId(1), 256)
+        );
+        // Per-link accounting: 4 hops to L4 plus 1 hop to L1.
+        let n = ring.network_totals();
+        assert_eq!(n.messages, 2);
+        assert_eq!(n.hops, 5);
+        // 0->4 crosses {0->1, 1->2, 2->3, 3->4}; 0->1 reuses the first.
+        assert_eq!(ring.link_stats().len(), 4);
+        // Transit is attributed to the issuing NIC.
+        assert_eq!(ring.nic(LocaleId(0)).snapshot().transit_ns, tr.transit_ns);
+    }
+
+    #[test]
+    #[should_panic(expected = "topology wires")]
+    fn mismatched_topology_rejected() {
+        use crate::fabric::TopologyKind;
+        Pgas::with_topology(
+            Machine::new(4, 1),
+            NicModel::aries(),
+            TopologyKind::Ring.build(8),
+        );
+    }
+
+    #[test]
+    fn flush_routes_one_bulk_message() {
+        use crate::fabric::TopologyKind;
+        let p = Pgas::with_topology(
+            Machine::new(4, 2),
+            NicModel::aries_no_network_atomics(),
+            TopologyKind::Dragonfly.build(4),
+        );
+        with_locale(LocaleId(1), || {
+            p.charge_flush(64, 16, LocaleId(2));
+        });
+        let n = p.network_totals();
+        assert_eq!(n.messages, 1, "a flush is one bulk message per route, not 64");
+        assert_eq!(n.bytes, 64 * 16);
+        assert_eq!(
+            p.comm_totals().transit_ns,
+            p.topology().transit_ns(LocaleId(1), LocaleId(2), 64 * 16)
+        );
     }
 
     #[test]

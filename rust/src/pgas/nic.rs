@@ -185,6 +185,20 @@ pub enum NicOp {
     ActiveMessage,
 }
 
+impl NicOp {
+    /// Approximate wire payload of one such operation, used by the
+    /// route-aware fabric for per-link serialization. Atomics carry a
+    /// command + operand packet; AMs a small argument bundle.
+    pub fn payload_bytes(self) -> usize {
+        match self {
+            NicOp::Atomic64 => 8,
+            NicOp::Atomic128 => 16,
+            NicOp::Put(n) | NicOp::Get(n) => n,
+            NicOp::ActiveMessage => 64,
+        }
+    }
+}
+
 /// Per-locale NIC state: counters + virtual-time accumulator.
 #[derive(Debug, Default)]
 pub struct Nic {
@@ -201,8 +215,15 @@ pub struct Nic {
     /// Bulk flushes performed by the aggregation layer (each one carries
     /// `aggregated_ops / flushes` operations on average).
     pub flushes: AtomicU64,
-    /// Sum of modeled nanoseconds charged through this NIC.
+    /// Sum of modeled nanoseconds charged through this NIC. This is the
+    /// *sender-visible* (injection) cost only — see `transit_ns`.
     pub virtual_ns: AtomicU64,
+    /// Modeled fabric-transit nanoseconds of messages this NIC issued:
+    /// topology-derived per-hop propagation plus link serialization
+    /// (see [`crate::fabric`]). Deliberately kept out of `virtual_ns`:
+    /// the sender stalls for injection, not for a multi-hop delivery.
+    /// Identically 0 under the default zero-cost flat topology.
+    pub transit_ns: AtomicU64,
 }
 
 /// A snapshot of NIC counters (for reporting / deltas).
@@ -217,6 +238,7 @@ pub struct NicSnapshot {
     pub aggregated_ops: u64,
     pub flushes: u64,
     pub virtual_ns: u64,
+    pub transit_ns: u64,
 }
 
 impl Nic {
@@ -346,6 +368,7 @@ impl Nic {
             aggregated_ops: self.aggregated_ops.load(Ordering::Relaxed),
             flushes: self.flushes.load(Ordering::Relaxed),
             virtual_ns: self.virtual_ns.load(Ordering::Relaxed),
+            transit_ns: self.transit_ns.load(Ordering::Relaxed),
         }
     }
 }
@@ -362,6 +385,7 @@ impl NicSnapshot {
             aggregated_ops: self.aggregated_ops - earlier.aggregated_ops,
             flushes: self.flushes - earlier.flushes,
             virtual_ns: self.virtual_ns - earlier.virtual_ns,
+            transit_ns: self.transit_ns - earlier.transit_ns,
         }
     }
 
@@ -496,6 +520,15 @@ mod tests {
         let m = NicModel::aries();
         assert_eq!(nic.charge_bulk(&m, true, 0, 16), 0);
         assert_eq!(nic.snapshot(), NicSnapshot::default());
+    }
+
+    #[test]
+    fn payload_bytes_follow_op_class() {
+        assert_eq!(NicOp::Atomic64.payload_bytes(), 8);
+        assert_eq!(NicOp::Atomic128.payload_bytes(), 16);
+        assert_eq!(NicOp::Put(4096).payload_bytes(), 4096);
+        assert_eq!(NicOp::Get(12).payload_bytes(), 12);
+        assert_eq!(NicOp::ActiveMessage.payload_bytes(), 64);
     }
 
     #[test]

@@ -63,6 +63,11 @@ impl Machine {
         (0..self.locales as u16).map(LocaleId)
     }
 
+    /// Whether `loc` names a locale of this machine.
+    pub fn contains(&self, loc: LocaleId) -> bool {
+        loc.index() < self.locales
+    }
+
     pub fn total_cores(&self) -> usize {
         self.locales * self.cores_per_locale
     }
@@ -84,6 +89,15 @@ mod tests {
         let m = Machine::new(4, 2);
         let ids: Vec<_> = m.locale_ids().collect();
         assert_eq!(ids, vec![LocaleId(0), LocaleId(1), LocaleId(2), LocaleId(3)]);
+    }
+
+    #[test]
+    fn contains_checks_bounds() {
+        let m = Machine::new(4, 2);
+        assert!(m.contains(LocaleId(0)));
+        assert!(m.contains(LocaleId(3)));
+        assert!(!m.contains(LocaleId(4)));
+        assert!(!m.contains(LocaleId(99)));
     }
 
     #[test]

@@ -49,6 +49,29 @@ pub struct ScanOutput {
     pub hist: Vec<i32>,
 }
 
+impl ScanOutput {
+    /// Modeled fabric transit of delivering this scan's scatter lists
+    /// from `from`: each destination with a non-empty histogram bucket
+    /// receives **one bulk message over one route** (`hist[d]` entries of
+    /// `entry_bytes` each) — the route-aware price of the reclamation
+    /// the scan just proved safe. Local buckets are free (a memcpy).
+    pub fn scatter_transit_ns(
+        &self,
+        topo: &dyn crate::fabric::Topology,
+        from: crate::pgas::LocaleId,
+        entry_bytes: usize,
+    ) -> u64 {
+        self.hist
+            .iter()
+            .enumerate()
+            .filter(|&(d, &n)| n > 0 && d != from.index())
+            .map(|(d, &n)| {
+                topo.transit_ns(from, crate::pgas::LocaleId(d as u16), n as usize * entry_bytes)
+            })
+            .sum()
+    }
+}
+
 /// A loaded reclaim-scan executable.
 pub struct ReclaimScan {
     /// Only read by the PJRT-backed `execute_scan`; without the feature a
@@ -199,6 +222,21 @@ mod tests {
 
     fn have_artifacts() -> bool {
         std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
+    }
+
+    #[test]
+    fn scatter_transit_prices_remote_buckets_only() {
+        use crate::fabric::{Ring, Topology};
+        use crate::pgas::LocaleId;
+        let topo = Ring::new(4);
+        let out = ScanOutput { safe: true, stale: vec![0; 4], hist: vec![5, 0, 3, 2] };
+        let expect = topo.transit_ns(LocaleId(0), LocaleId(2), 3 * 16)
+            + topo.transit_ns(LocaleId(0), LocaleId(3), 2 * 16);
+        assert_eq!(out.scatter_transit_ns(&topo, LocaleId(0), 16), expect);
+        assert!(expect > 0);
+        // A scan with nothing remote to scatter prices to zero.
+        let local = ScanOutput { safe: true, stale: vec![0; 4], hist: vec![7, 0, 0, 0] };
+        assert_eq!(local.scatter_transit_ns(&topo, LocaleId(0), 16), 0);
     }
 
     #[test]

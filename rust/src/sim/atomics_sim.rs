@@ -16,7 +16,8 @@
 //! version moved between the two.
 
 use super::engine::{run, Resource, Step, VTime, Workload};
-use crate::pgas::{NicModel, NicOp};
+use crate::fabric::{NetTotals, Network, TopologyKind};
+use crate::pgas::{LocaleId, NicModel, NicOp};
 use crate::util::rng::Xoshiro256pp;
 
 /// The three Fig. 3 series.
@@ -56,6 +57,9 @@ pub struct AtomicsConfig {
     pub ops_per_task: usize,
     /// Atomic variables per locale (the distributed array).
     pub vars_per_locale: usize,
+    /// Interconnect wiring; remote accesses cross it hop by hop. The
+    /// default [`TopologyKind::FlatZero`] reproduces the flat model.
+    pub topology: TopologyKind,
     pub seed: u64,
 }
 
@@ -72,6 +76,8 @@ pub struct AtomicsResult {
     pub total_ops: u64,
     pub cas_retries: u64,
     pub throughput_mops: f64,
+    /// Fabric counters (messages, hops, transit, queueing, hottest link).
+    pub net: NetTotals,
 }
 
 #[derive(Copy, Clone)]
@@ -94,28 +100,40 @@ struct AtomicsSim {
     tasks: Vec<TaskState>,
     /// One serialization point + version counter per array element.
     elems: Vec<(Resource, u64)>,
+    /// In-flight messages advance hop-by-hop through this fabric.
+    net: Network,
     cas_retries: u64,
 }
 
 impl AtomicsSim {
     /// Completion time of one atomic on element `elem` issued at `now`
-    /// from `locale`: full latency for the issuer, pipeline occupancy at
-    /// the element's home.
+    /// from `locale`: the request crosses the fabric to the element's
+    /// home (queueing on busy links), pays pipeline occupancy there, and
+    /// the response rides the reverse route back to the issuer.
     fn access(&mut self, now: VTime, locale: usize, elem: usize) -> VTime {
-        let cfg = &self.cfg;
-        let home = elem % cfg.locales;
+        let home = elem % self.cfg.locales;
         let remote = home != locale;
-        let latency = cfg.model.cost(cfg.variant.op(), remote);
-        let occupancy = match cfg.variant.op() {
-            NicOp::Atomic64 if cfg.model.network_atomics => cfg.model.rdma_occupancy_ns,
-            NicOp::Atomic64 if remote => cfg.model.am_occupancy_ns,
-            NicOp::Atomic128 if remote => cfg.model.am_occupancy_ns,
+        let op = self.cfg.variant.op();
+        let latency = self.cfg.model.cost(op, remote);
+        let occupancy = match op {
+            NicOp::Atomic64 if self.cfg.model.network_atomics => self.cfg.model.rdma_occupancy_ns,
+            NicOp::Atomic64 if remote => self.cfg.model.am_occupancy_ns,
+            NicOp::Atomic128 if remote => self.cfg.model.am_occupancy_ns,
             _ => latency, // processor atomic: occupancy == latency
         };
+        let (arrival, back) = if remote {
+            let (from, to) = (LocaleId(locale as u16), LocaleId(home as u16));
+            let d = self.net.send(now, from, to, op.payload_bytes());
+            // The (small) response pays the reverse route's pure latency.
+            (d.delivered_at, self.net.topology().transit_ns(to, from, 8))
+        } else {
+            (now, 0)
+        };
+        let hold = occupancy.min(latency);
         let res = &mut self.elems[elem].0;
-        let start = res.acquire(now, occupancy.min(latency));
+        let start = res.acquire(arrival, hold);
         // issuer sees full latency measured from when the NIC accepted it
-        start - occupancy.min(latency) + latency
+        start - hold + latency + back
     }
 }
 
@@ -183,9 +201,11 @@ pub fn run_atomics(cfg: AtomicsConfig) -> AtomicsResult {
             locale: t / cfg.tasks_per_locale,
         })
         .collect();
+    let net = Network::new(cfg.topology.build(cfg.locales));
     let mut sim = AtomicsSim {
         tasks,
         elems: (0..n_elems).map(|_| (Resource::new(), 0)).collect(),
+        net,
         cas_retries: 0,
         cfg,
     };
@@ -196,6 +216,7 @@ pub fn run_atomics(cfg: AtomicsConfig) -> AtomicsResult {
         total_ops,
         cas_retries: sim.cas_retries,
         throughput_mops: if makespan == 0 { 0.0 } else { total_ops as f64 * 1e3 / makespan as f64 },
+        net: sim.net.totals(),
     }
 }
 
@@ -211,6 +232,7 @@ mod tests {
             tasks_per_locale: 4,
             ops_per_task: 2_000,
             vars_per_locale: 256,
+            topology: TopologyKind::default(),
             seed: 42,
         }
     }
@@ -288,5 +310,50 @@ mod tests {
         let b = run_atomics(cfg(AtomicVariant::AtomicObject, m, 4));
         assert_eq!(a.makespan_ns, b.makespan_ns);
         assert_eq!(a.cas_retries, b.cas_retries);
+        assert_eq!(a.net, b.net);
+    }
+
+    #[test]
+    fn topology_changes_distributed_cost() {
+        let m = NicModel::aries();
+        let make = |kind: TopologyKind| {
+            let mut c = cfg(AtomicVariant::AtomicObject, m, 8);
+            c.topology = kind;
+            run_atomics(c)
+        };
+        let flat = make(TopologyKind::FlatZero);
+        let fc = make(TopologyKind::FullyConnected);
+        let ring = make(TopologyKind::Ring);
+        assert_eq!(flat.net.transit_ns, 0, "flat-zero fabric adds nothing");
+        assert_eq!(flat.net.queued_ns, 0);
+        assert!(flat.net.messages > 0, "remote accesses still routed");
+        assert!(
+            fc.makespan_ns > flat.makespan_ns,
+            "one real hop must cost more than zero: {} vs {}",
+            fc.makespan_ns,
+            flat.makespan_ns
+        );
+        assert!(
+            ring.makespan_ns > fc.makespan_ns,
+            "multi-hop ring must cost more than the crossbar: {} vs {}",
+            ring.makespan_ns,
+            fc.makespan_ns
+        );
+        assert!(ring.net.hops > ring.net.messages, "ring routes average > 1 hop");
+    }
+
+    #[test]
+    fn shared_memory_ignores_topology() {
+        // One locale: no remote access, so the wiring cannot matter.
+        let m = NicModel::aries_no_network_atomics();
+        let make = |kind: TopologyKind| {
+            let mut c = cfg(AtomicVariant::AtomicInt, m, 1);
+            c.topology = kind;
+            run_atomics(c)
+        };
+        let flat = make(TopologyKind::FlatZero);
+        let ring = make(TopologyKind::Ring);
+        assert_eq!(flat.makespan_ns, ring.makespan_ns);
+        assert_eq!(ring.net.messages, 0);
     }
 }

@@ -52,8 +52,24 @@ impl Resource {
         now + hold
     }
 
+    /// Account `n` operations of `hold` each without touching the queue
+    /// state (`avail`). For tally-only consumers — the live substrate's
+    /// fabric counters — where ops must be counted and busy time summed
+    /// but nothing ever waits.
+    #[inline]
+    pub fn tally(&mut self, n: u64, hold: VTime) {
+        self.busy += n * hold;
+        self.ops += n;
+    }
+
     pub fn utilization(&self, total: VTime) -> f64 {
         if total == 0 { 0.0 } else { self.busy as f64 / total as f64 }
+    }
+
+    /// Cumulative time this resource was held (the fabric layer reports
+    /// this per directed link as "busy time").
+    pub fn busy(&self) -> VTime {
+        self.busy
     }
 
     pub fn ops(&self) -> u64 {
@@ -189,6 +205,16 @@ mod tests {
         assert_eq!(makespan, 4_000);
         assert_eq!(w.res.ops(), 400);
         assert!((w.res.utilization(makespan) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tally_counts_without_queueing() {
+        let mut r = Resource::new();
+        r.tally(10, 7);
+        assert_eq!(r.ops(), 10);
+        assert_eq!(r.busy(), 70);
+        // Queue state untouched: a real acquire at t=0 starts immediately.
+        assert_eq!(r.acquire(0, 5), 5);
     }
 
     #[test]

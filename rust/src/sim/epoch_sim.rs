@@ -17,7 +17,8 @@
 
 use super::engine::{run, MultiResource, Resource, Step, VTime, Workload};
 use crate::epoch::NUM_EPOCHS;
-use crate::pgas::{NicModel, NicOp};
+use crate::fabric::{NetTotals, Network, TopologyKind};
+use crate::pgas::{LocaleId, NicModel, NicOp};
 use crate::util::rng::Xoshiro256pp;
 
 /// Which figure's workload to run.
@@ -50,6 +51,10 @@ pub struct EpochConfig {
     pub slow_locale: Option<usize>,
     /// Slowdown multiplier for `slow_locale` (default 8).
     pub slow_factor: u64,
+    /// Interconnect wiring; every remote atomic, AM and scatter transfer
+    /// crosses it hop by hop, queueing on busy links. The default
+    /// [`TopologyKind::FlatZero`] reproduces the flat model exactly.
+    pub topology: TopologyKind,
     pub seed: u64,
 }
 
@@ -71,6 +76,8 @@ pub struct EpochResult {
     pub not_quiescent: u64,
     pub freed: u64,
     pub freed_remote: u64,
+    /// Fabric counters (messages, hops, transit, queueing, hottest link).
+    pub net: NetTotals,
 }
 
 /// Per-locale simulated state.
@@ -133,6 +140,8 @@ struct EpochSim {
     global_epoch: u64,
     global_flag: bool,
     global_res: Resource,
+    /// In-flight messages advance hop-by-hop through this fabric.
+    net: Network,
     locs: Vec<LocState>,
     tasks: Vec<TaskState>,
     // stats
@@ -157,9 +166,14 @@ impl EpochSim {
     /// * off + remote: an active message — queue on one of the target's
     ///   AM handler threads, the handler performs a ~ns processor atomic
     ///   on the word, and the reply completes the round trip.
+    ///
+    /// Remote forms first cross the fabric to `target` (queueing on busy
+    /// links) and their response rides the reverse route back.
+    #[allow(clippy::too_many_arguments)]
     fn op64(
         cfg: &EpochConfig,
         rng: &mut Xoshiro256pp,
+        net: &mut Network,
         word: &mut Resource,
         pool: &mut MultiResource,
         now: VTime,
@@ -167,16 +181,23 @@ impl EpochSim {
         target: usize,
     ) -> VTime {
         let remote = from != target;
+        let (now, back) = if remote {
+            let (f, t) = (LocaleId(from as u16), LocaleId(target as u16));
+            let d = net.send(now, f, t, NicOp::Atomic64.payload_bytes());
+            (d.delivered_at, net.topology().transit_ns(t, f, 8))
+        } else {
+            (now, 0)
+        };
         if cfg.model.network_atomics {
             let latency = jitter(rng, cfg.model.rdma_atomic_ns);
             let occ = cfg.model.rdma_occupancy_ns.min(latency);
-            return word.acquire(now, occ) - occ + latency;
+            return word.acquire(now, occ) - occ + latency + back;
         }
         if remote {
             let occ = cfg.model.am_occupancy_ns;
             let handled = pool.acquire(now, occ);
             let w = word.acquire(handled, cfg.model.local_atomic_ns);
-            return w + jitter(rng, cfg.model.am_ns.saturating_sub(occ));
+            return w + jitter(rng, cfg.model.am_ns.saturating_sub(occ)) + back;
         }
         word.acquire(now, cfg.model.local_atomic_ns)
     }
@@ -199,19 +220,29 @@ impl EpochSim {
     }
 
     /// An active message handled by one of `target`'s AM handler threads.
+    /// Remote AMs cross the fabric to `target` first; the reply rides the
+    /// reverse route.
     fn am(
         cfg: &EpochConfig,
         rng: &mut Xoshiro256pp,
+        net: &mut Network,
         res: &mut MultiResource,
         now: VTime,
         from: usize,
         target: usize,
     ) -> VTime {
         let remote = from != target;
+        let (now, back) = if remote {
+            let (f, t) = (LocaleId(from as u16), LocaleId(target as u16));
+            let d = net.send(now, f, t, NicOp::ActiveMessage.payload_bytes());
+            (d.delivered_at, net.topology().transit_ns(t, f, 8))
+        } else {
+            (now, 0)
+        };
         let slow = if cfg.slow_locale == Some(target) { cfg.slow_factor.max(1) } else { 1 };
         let latency = jitter(rng, cfg.model.cost(NicOp::ActiveMessage, remote)) * slow;
         let occupancy = if remote { (cfg.model.am_occupancy_ns * slow).min(latency) } else { latency };
-        res.acquire(now, occupancy) - occupancy + latency
+        res.acquire(now, occupancy) - occupancy + latency + back
     }
 
     fn deleting(&self) -> bool {
@@ -248,9 +279,24 @@ impl EpochSim {
             if dest != loc {
                 remote += n;
                 // One bulk PUT of the scatter list + one AM to delete.
+                // The bulk payload is one message over one route — it
+                // queues on each link it crosses, so a congested fabric
+                // slows the scatter here rather than by fiat.
                 let put = cfg.model.cost(NicOp::Put(n as usize * 16), true);
                 t += put;
-                t = Self::am(&cfg, &mut self.jrng, &mut self.locs[dest].progress_res, t, loc, dest);
+                t = self
+                    .net
+                    .send(t, LocaleId(loc as u16), LocaleId(dest as u16), n as usize * 16)
+                    .delivered_at;
+                t = Self::am(
+                    &cfg,
+                    &mut self.jrng,
+                    &mut self.net,
+                    &mut self.locs[dest].progress_res,
+                    t,
+                    loc,
+                    dest,
+                );
                 // Remote frees run on dest's progress thread.
                 t += n * cfg.model.local_atomic_ns;
             } else {
@@ -348,7 +394,7 @@ impl Workload for EpochSim {
             Phase::RGlobalFlag => {
                 let t = {
                     let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
-                    Self::op64(&cfg, &mut self.jrng, g, l0, now, me, 0)
+                    Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
                 };
                 if self.global_flag {
                     self.lost_global += 1;
@@ -365,7 +411,7 @@ impl Workload for EpochSim {
             Phase::RReadEpoch => {
                 let t = {
                     let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
-                    Self::op64(&cfg, &mut self.jrng, g, l0, now, me, 0)
+                    Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
                 };
                 self.tasks[tid].phase = Phase::RScan { this_epoch: self.global_epoch };
                 Step::ResumeAt(t)
@@ -375,8 +421,15 @@ impl Workload for EpochSim {
                 // locales in parallel; completion = the slowest locale.
                 let mut t_done = now;
                 for loc in 0..cfg.locales {
-                    let mut t =
-                        Self::am(&cfg, &mut self.jrng, &mut self.locs[loc].progress_res, now, me, loc);
+                    let mut t = Self::am(
+                        &cfg,
+                        &mut self.jrng,
+                        &mut self.net,
+                        &mut self.locs[loc].progress_res,
+                        now,
+                        me,
+                        loc,
+                    );
                     t += cfg.tasks_per_locale as u64 * cfg.model.local_atomic_ns;
                     t_done = t_done.max(t);
                 }
@@ -395,7 +448,7 @@ impl Workload for EpochSim {
             Phase::RAdvance { this_epoch } => {
                 let t = {
                     let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
-                    Self::op64(&cfg, &mut self.jrng, g, l0, now, me, 0)
+                    Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
                 };
                 let new_epoch = this_epoch % NUM_EPOCHS + 1;
                 self.global_epoch = new_epoch;
@@ -407,8 +460,15 @@ impl Workload for EpochSim {
                 // locale's cached epoch (coforall in Listing 4).
                 let mut t_done = now;
                 for loc in 0..cfg.locales {
-                    let t0 =
-                        Self::am(&cfg, &mut self.jrng, &mut self.locs[loc].progress_res, now, me, loc);
+                    let t0 = Self::am(
+                        &cfg,
+                        &mut self.jrng,
+                        &mut self.net,
+                        &mut self.locs[loc].progress_res,
+                        now,
+                        me,
+                        loc,
+                    );
                     let (mut t, freed, remote) = self.drain(t0, loc, loc, (new_epoch - 1) as usize);
                     t = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[loc].epoch_res, t);
                     self.locs[loc].epoch = new_epoch;
@@ -423,7 +483,7 @@ impl Workload for EpochSim {
             Phase::RRelease { advanced: _ } => {
                 let t1 = {
                     let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
-                    Self::op64(&cfg, &mut self.jrng, g, l0, now, me, 0)
+                    Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
                 };
                 self.global_flag = false;
                 let t2 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].flag_res, t1);
@@ -435,8 +495,15 @@ impl Workload for EpochSim {
                 // manager.clear(): parallel over locales, all three lists.
                 let mut t_done = now;
                 for loc in 0..cfg.locales {
-                    let mut t =
-                        Self::am(&cfg, &mut self.jrng, &mut self.locs[loc].progress_res, now, me, loc);
+                    let mut t = Self::am(
+                        &cfg,
+                        &mut self.jrng,
+                        &mut self.net,
+                        &mut self.locs[loc].progress_res,
+                        now,
+                        me,
+                        loc,
+                    );
                     for list in 0..NUM_EPOCHS as usize {
                         let (t2, freed, remote) = self.drain(t, loc, loc, list);
                         t = t2;
@@ -479,11 +546,13 @@ pub fn run_epoch(cfg: EpochConfig) -> EpochResult {
             limbo: vec![vec![0; cfg.locales]; NUM_EPOCHS as usize],
         })
         .collect();
+    let net = Network::new(cfg.topology.build(cfg.locales));
     let mut sim = EpochSim {
         jrng: Xoshiro256pp::new(cfg.seed ^ 0xBEEF),
         global_epoch: 1,
         global_flag: false,
         global_res: Resource::new(),
+        net,
         locs,
         tasks,
         advances: 0,
@@ -507,6 +576,7 @@ pub fn run_epoch(cfg: EpochConfig) -> EpochResult {
         not_quiescent: sim.not_quiescent,
         freed: sim.freed,
         freed_remote: sim.freed_remote,
+        net: sim.net.totals(),
     }
 }
 
@@ -525,6 +595,7 @@ mod tests {
             fcfs_local_election: true,
             slow_locale: None,
             slow_factor: 8,
+            topology: TopologyKind::default(),
             seed: 7,
         }
     }
@@ -632,5 +703,48 @@ mod tests {
         assert_eq!(a.makespan_ns, b.makespan_ns);
         assert_eq!(a.advances, b.advances);
         assert_eq!(a.freed, b.freed);
+        assert_eq!(a.net, b.net);
+    }
+
+    #[test]
+    fn topology_slows_reclaim_heavy_workloads() {
+        let mk = |kind: TopologyKind| {
+            let mut c = cfg(EpochWorkload::DeleteReclaimEvery(64), 8);
+            c.remote_ratio = 0.5;
+            c.topology = kind;
+            run_epoch(c)
+        };
+        let flat = mk(TopologyKind::FlatZero);
+        let ring = mk(TopologyKind::Ring);
+        assert_eq!(flat.net.transit_ns, 0);
+        assert_eq!(flat.net.queued_ns, 0);
+        assert!(
+            ring.makespan_ns > flat.makespan_ns,
+            "ring transit must show up in the makespan: {} vs {}",
+            ring.makespan_ns,
+            flat.makespan_ns
+        );
+        // The protocol still conserves (the trace itself may differ: a
+        // slower fabric legitimately changes election outcomes).
+        assert_eq!(flat.total_iters, ring.total_iters);
+        assert!(ring.freed <= ring.total_iters);
+    }
+
+    #[test]
+    fn global_epoch_hot_spot_congests_links_into_locale_zero() {
+        // Every election/advance touches the global word on locale 0; on
+        // a ring that funnels through the two directed links into L0, so
+        // queueing and a hot link must *emerge*.
+        let mut c = cfg(EpochWorkload::DeleteReclaimEvery(1), 8);
+        c.tasks_per_locale = 8;
+        c.topology = TopologyKind::Ring;
+        let r = run_epoch(c);
+        assert!(r.net.messages > 0);
+        assert!(r.net.queued_ns > 0, "hot-spot traffic must queue");
+        assert!(r.net.max_link_busy_ns > 0);
+        assert!(
+            r.net.max_link_wait_ns > 0,
+            "some message must have waited behind another on the hot link"
+        );
     }
 }

@@ -1,11 +1,14 @@
 //! The discrete-event testbed: a virtual Cray XC-50 on which the paper's
 //! scaling experiments (Figs. 3–7) are replayed. See `DESIGN.md` §2 for
-//! why simulation is the faithful substitution on this host.
+//! why simulation is the faithful substitution on this host. Remote
+//! operations additionally cross the route-aware fabric
+//! ([`crate::fabric`]) hop-by-hop in virtual time, so link contention
+//! and hot-spot congestion emerge from the interleaving (Fig 9).
 
 pub mod atomics_sim;
 pub mod engine;
 pub mod epoch_sim;
 
 pub use atomics_sim::{run_atomics, AtomicVariant, AtomicsConfig, AtomicsResult};
-pub use engine::{run, Resource, Step, VTime, Workload};
+pub use engine::{run, MultiResource, Resource, Step, VTime, Workload};
 pub use epoch_sim::{run_epoch, EpochConfig, EpochResult, EpochWorkload};

@@ -98,6 +98,25 @@ impl Args {
         self.get_parse(name).unwrap_or(default)
     }
 
+    /// A validated enumeration option: returns the matching choice, or
+    /// `default` (with a warning) when the value is absent or not one of
+    /// `choices`.
+    pub fn get_choice<'a>(&self, name: &str, choices: &[&'a str], default: &'a str) -> &'a str {
+        match self.get(name) {
+            None => default,
+            Some(v) => match choices.iter().find(|&&c| c == v) {
+                Some(&c) => c,
+                None => {
+                    eprintln!(
+                        "warning: --{name}={v} is not one of {}; using {default}",
+                        choices.join("|")
+                    );
+                    default
+                }
+            },
+        }
+    }
+
     fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
         self.get(name).and_then(|v| {
             v.parse().map_err(|_| {
@@ -160,6 +179,16 @@ mod tests {
         assert_eq!(a.get_usize("missing", 7), 7);
         assert_eq!(a.get_or("name", "dflt"), "dflt");
         assert_eq!(a.get_f64("ratio", 0.5), 0.5);
+    }
+
+    #[test]
+    fn choice_parsing() {
+        let a = Args::parse(&argv("--topology ring"));
+        let choices = ["flat", "ring", "dragonfly"];
+        assert_eq!(a.get_choice("topology", &choices, "flat"), "ring");
+        assert_eq!(a.get_choice("missing", &choices, "flat"), "flat");
+        let bad = Args::parse(&argv("--topology torus"));
+        assert_eq!(bad.get_choice("topology", &choices, "flat"), "flat");
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Fabric invariants: route well-formedness, hop-count minimality
+//! (checked against BFS over each topology's own adjacency), exact
+//! backward compatibility of the zero-cost crossbar with the pre-fabric
+//! flat model, and emergent congestion under the DES testbed.
+
+use pgas_nb::fabric::{Dragonfly, FullyConnected, Ring, Topology, TopologyKind};
+use pgas_nb::pgas::{with_locale, LocaleId, Machine, NicModel, NicOp, Pgas};
+use pgas_nb::sim::{run_epoch, EpochConfig, EpochWorkload};
+use std::collections::VecDeque;
+
+fn locales(topo: &dyn Topology) -> impl Iterator<Item = LocaleId> {
+    (0..topo.locales() as u16).map(LocaleId)
+}
+
+/// Shortest-path distances from `src` by BFS over the topology's own
+/// adjacency (`connected`), i.e. the links its minimal routes use.
+fn bfs_dist(topo: &dyn Topology, src: LocaleId) -> Vec<usize> {
+    let n = topo.locales();
+    let mut dist = vec![usize::MAX; n];
+    dist[src.index()] = 0;
+    let mut q = VecDeque::from([src]);
+    while let Some(u) = q.pop_front() {
+        for v in locales(topo) {
+            if dist[v.index()] == usize::MAX && topo.connected(u, v) {
+                dist[v.index()] = dist[u.index()] + 1;
+                q.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+// ---- routing invariants ----
+
+#[test]
+fn route_endpoints_and_contiguity_every_topology() {
+    for l in [1usize, 2, 4, 7, 16, 64] {
+        for kind in TopologyKind::ALL {
+            let topo = kind.build(l);
+            for a in locales(&*topo) {
+                for b in locales(&*topo) {
+                    let route = topo.route(a, b);
+                    if a == b {
+                        assert!(route.is_empty(), "{} L={l}: self-route", kind.label());
+                        continue;
+                    }
+                    assert_eq!(route.first().unwrap().from, a, "{} L={l}", kind.label());
+                    assert_eq!(route.last().unwrap().to, b, "{} L={l}", kind.label());
+                    for w in route.windows(2) {
+                        assert_eq!(w[0].to, w[1].from, "{} L={l}: contiguous", kind.label());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ring_hop_counts_are_minimal() {
+    for l in [2usize, 3, 8, 13, 64] {
+        let topo = Ring::new(l);
+        for a in locales(&topo) {
+            for b in locales(&topo) {
+                let d = a.index().abs_diff(b.index());
+                let expect = d.min(l - d);
+                assert_eq!(topo.hops(a, b), expect, "ring L={l} {a:?}->{b:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn ring_and_dragonfly_routes_match_bfs_shortest_paths() {
+    let topos: Vec<Box<dyn Topology>> = vec![
+        Box::new(Ring::new(12)),
+        Box::new(Dragonfly::new(16)),
+        Box::new(Dragonfly::new(17)), // partial last group
+        Box::new(Dragonfly::with_group_size(64, 8)),
+        Box::new(FullyConnected::new(9)),
+    ];
+    for topo in &topos {
+        for a in locales(&**topo) {
+            let dist = bfs_dist(&**topo, a);
+            for b in locales(&**topo) {
+                assert_eq!(
+                    topo.hops(a, b),
+                    dist[b.index()],
+                    "{}: {a:?}->{b:?} must be a shortest path",
+                    topo.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dragonfly_diameter_is_three() {
+    let topo = Dragonfly::with_group_size(64, 8);
+    let max = locales(&topo)
+        .flat_map(|a| locales(&topo).map(move |b| (a, b)))
+        .map(|(a, b)| topo.hops(a, b))
+        .max()
+        .unwrap();
+    assert_eq!(max, 3);
+}
+
+// ---- backward compatibility: zero-cost crossbar == pre-fabric flat ----
+
+#[test]
+fn flat_zero_pgas_charges_exactly_the_nic_model() {
+    let model = NicModel::aries_no_network_atomics();
+    let p = Pgas::new(Machine::new(4, 2), model);
+    let g = p.alloc(LocaleId(2), 5u64);
+    with_locale(LocaleId(1), || {
+        p.get(g);
+        p.put(g, 9);
+        p.charge(NicOp::Atomic64, LocaleId(2));
+        p.charge_flush(32, 16, LocaleId(3));
+        p.on(LocaleId(3), || ());
+    });
+    let t = p.comm_totals();
+    // Hand-computed flat charges, as before the fabric existed.
+    let expect = model.cost(NicOp::Get(8), true)
+        + model.cost(NicOp::Put(8), true)
+        + model.am_ns // remote atomic without network atomics
+        + model.cost(NicOp::Put(32 * 16), true) // bulk flush
+        + model.am_ns; // on-statement
+    assert_eq!(t.virtual_ns, expect);
+    assert_eq!(t.transit_ns, 0, "zero-cost fabric adds no transit");
+    assert_eq!(p.network_totals().queued_ns, 0);
+    unsafe { p.free(g) };
+}
+
+#[test]
+fn flat_zero_des_equals_default_and_other_topologies_differ() {
+    let cfg = |kind: TopologyKind| EpochConfig {
+        workload: EpochWorkload::DeleteReclaimEvery(128),
+        model: NicModel::aries_no_network_atomics(),
+        locales: 8,
+        tasks_per_locale: 4,
+        objs_per_task: 1_024,
+        remote_ratio: 0.5,
+        fcfs_local_election: true,
+        slow_locale: None,
+        slow_factor: 8,
+        topology: kind,
+        seed: 3,
+    };
+    let flat = run_epoch(cfg(TopologyKind::FlatZero));
+    let flat2 = run_epoch(cfg(TopologyKind::default()));
+    assert_eq!(flat.makespan_ns, flat2.makespan_ns, "FlatZero IS the default");
+    assert_eq!(flat.net.transit_ns, 0);
+
+    let mut spans = vec![("flat", flat.makespan_ns)];
+    for kind in [TopologyKind::FullyConnected, TopologyKind::Ring, TopologyKind::Dragonfly] {
+        let r = run_epoch(cfg(kind));
+        assert!(r.net.transit_ns > 0, "{}: transit must accrue", kind.label());
+        assert!(
+            r.makespan_ns > flat.makespan_ns,
+            "{}: real wiring must cost virtual time",
+            kind.label()
+        );
+        assert_eq!(r.total_iters, flat.total_iters, "same workload either way");
+        spans.push((kind.label(), r.makespan_ns));
+    }
+    // The three real topologies must be mutually distinguishable too —
+    // the fig9 acceptance criterion.
+    for i in 0..spans.len() {
+        for j in (i + 1)..spans.len() {
+            assert_ne!(
+                spans[i].1, spans[j].1,
+                "{} and {} produced identical virtual time",
+                spans[i].0, spans[j].0
+            );
+        }
+    }
+}
+
+// ---- emergent congestion ----
+
+#[test]
+fn hot_spot_queues_on_ring_but_not_on_crossbar_links() {
+    // Reclaim-every hammers the global word on locale 0. On a ring that
+    // traffic funnels through the links adjacent to L0; on a crossbar
+    // every source has its own private link to L0's locale, so per-link
+    // demand is lower. Queueing must reflect that geography.
+    let cfg = |kind: TopologyKind| EpochConfig {
+        workload: EpochWorkload::DeleteReclaimEvery(1),
+        model: NicModel::aries_no_network_atomics(),
+        locales: 8,
+        tasks_per_locale: 8,
+        objs_per_task: 768,
+        remote_ratio: 0.0,
+        fcfs_local_election: false, // ablation mode: maximal global traffic
+        slow_locale: None,
+        slow_factor: 8,
+        topology: kind,
+        seed: 9,
+    };
+    let ring = run_epoch(cfg(TopologyKind::Ring));
+    let xbar = run_epoch(cfg(TopologyKind::FullyConnected));
+    assert!(ring.net.queued_ns > 0, "ring hot spot must queue");
+    assert!(
+        ring.net.queued_ns > xbar.net.queued_ns,
+        "shared ring links must congest more than private crossbar links: {} vs {}",
+        ring.net.queued_ns,
+        xbar.net.queued_ns
+    );
+    assert!(
+        ring.net.max_link_busy_ns > xbar.net.max_link_busy_ns,
+        "the ring's hottest link carries funneled traffic"
+    );
+}
+
+#[test]
+fn live_substrate_link_counters_balance() {
+    // Per-link message counts must sum to the total hop count.
+    let p = Pgas::with_topology(
+        Machine::new(8, 2),
+        NicModel::aries_no_network_atomics(),
+        TopologyKind::Dragonfly.build(8),
+    );
+    with_locale(LocaleId(0), || {
+        for t in 1..8u16 {
+            p.charge(NicOp::Atomic64, LocaleId(t));
+        }
+    });
+    let totals = p.network_totals();
+    assert_eq!(totals.messages, 7);
+    let per_link: u64 = p.link_stats().iter().map(|s| s.msgs).sum();
+    assert_eq!(per_link, totals.hops);
+    assert_eq!(
+        p.comm_totals().transit_ns,
+        totals.transit_ns,
+        "issuer attribution and network totals agree"
+    );
+}
+
+#[test]
+fn transit_respects_topology_geometry() {
+    // Same endpoints, same payload: the ring pays per-hop distance, the
+    // crossbar one hop, the zero-cost crossbar nothing.
+    let flat = FullyConnected::zero_cost(16);
+    let xbar = FullyConnected::new(16);
+    let ring = Ring::new(16);
+    let (a, b) = (LocaleId(1), LocaleId(9)); // 8 hops apart on the ring
+    let bytes = 256;
+    assert_eq!(flat.transit_ns(a, b, bytes), 0);
+    let x = xbar.transit_ns(a, b, bytes);
+    let r = ring.transit_ns(a, b, bytes);
+    assert!(x > 0);
+    assert!(r > x, "8 ring hops must beat 1 crossbar hop: {r} vs {x}");
+    assert_eq!(ring.hops(a, b), 8);
+}

@@ -2,6 +2,7 @@
 //! reproduce the qualitative claims of §III under perturbation, stay
 //! deterministic, and degrade sanely under failure injection.
 
+use pgas_nb::fabric::TopologyKind;
 use pgas_nb::pgas::NicModel;
 use pgas_nb::sim::{
     run_atomics, run_epoch, AtomicVariant, AtomicsConfig, EpochConfig, EpochWorkload,
@@ -15,6 +16,7 @@ fn acfg(variant: AtomicVariant, model: NicModel, locales: usize) -> AtomicsConfi
         tasks_per_locale: 8,
         ops_per_task: 1_500,
         vars_per_locale: 512,
+        topology: TopologyKind::default(),
         seed: 11,
     }
 }
@@ -30,6 +32,7 @@ fn ecfg(workload: EpochWorkload, locales: usize) -> EpochConfig {
         fcfs_local_election: true,
         slow_locale: None,
         slow_factor: 8,
+        topology: TopologyKind::default(),
         seed: 11,
     }
 }

@@ -34,6 +34,7 @@ fn run_point(kind: TopologyKind, locales: usize, objs_per_task: usize) -> Point 
         fcfs_local_election: true,
         slow_locale: None,
         slow_factor: 8,
+        stalled_task: None,
         topology: kind,
         seed: 29,
     };

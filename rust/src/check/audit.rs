@@ -1,0 +1,334 @@
+//! Reclamation-safety auditing: a shadow state machine over every heap
+//! object's lifecycle (`Live → Retired → Freed`) plus the pin sessions of
+//! every epoch token, fed by hooks in [`crate::pgas::Pgas`] (alloc/free)
+//! and [`crate::epoch::EpochManager`] (pin/unpin/retire/advance).
+//!
+//! The auditor flags exactly the failures distributed EBR exists to
+//! prevent:
+//!
+//! * **Use-after-free** — an access (reported via
+//!   [`ReclaimAudit::on_access`]) to an object already freed. Accessing
+//!   a merely *retired* object is legal — that is the whole point of
+//!   deferral. Only the DES mutation testbed reports accesses (the real
+//!   collections' reads are not instrumented); on the real-collection
+//!   path a free that could race a reader surfaces as **premature
+//!   free** below, which is the root cause every use-after-free needs.
+//! * **Double-free** — two frees of one object, or a retire of an object
+//!   already freed (the retire would enqueue a second free).
+//! * **Premature free** — the EBR safety invariant itself: a retired
+//!   object may only be freed once every token that was **pinned at
+//!   retire time** has since unpinned. Such a token could have read a
+//!   reference to the object before its logical removal; freeing under
+//!   it is the use-after-free window the epoch protocol closes. This is
+//!   policy-independent (it holds for both `Conservative` and
+//!   `PaperTwoStale`) and catches a quiescence scan or drain-ordering
+//!   bug in the real manager, not just in mutants.
+//!
+//! Objects allocated before the auditor attached (sentinels, dummies)
+//! are unknown to the shadow map and deliberately ignored. Address reuse
+//! by the host allocator is handled by `on_alloc` resetting the slot.
+
+use crate::pgas::WidePtr;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Hook surface the substrate calls when an auditor is attached. All
+/// methods default to no-ops so the trait doubles as a marker for
+/// "observability points the reclamation protocol exposes".
+pub trait ReclaimAudit: Send + Sync {
+    /// An object became live at `w`.
+    fn on_alloc(&self, w: WidePtr) {
+        let _ = w;
+    }
+    /// `defer_delete` retired `w` under `epoch`.
+    fn on_retire(&self, w: WidePtr, epoch: u64) {
+        let _ = (w, epoch);
+    }
+    /// The substrate freed `w` (reclamation drain, teardown, or a direct
+    /// free of an unpublished object).
+    fn on_free(&self, w: WidePtr) {
+        let _ = w;
+    }
+    /// Token `token` pinned into `epoch` (transition from quiescent only;
+    /// idempotent re-pins are not reported).
+    fn on_pin(&self, token: usize, epoch: u64) {
+        let _ = (token, epoch);
+    }
+    /// Token `token` became quiescent.
+    fn on_unpin(&self, token: usize) {
+        let _ = token;
+    }
+    /// The global epoch advanced to `new_epoch`.
+    fn on_advance(&self, new_epoch: u64) {
+        let _ = new_epoch;
+    }
+    /// Harness-visible access to (the memory behind) `w`.
+    fn on_access(&self, w: WidePtr) {
+        let _ = w;
+    }
+}
+
+/// What went wrong.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum ViolationKind {
+    UseAfterFree,
+    DoubleFree,
+    PrematureFree,
+}
+
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub kind: ViolationKind,
+    pub detail: String,
+}
+
+/// Aggregate event counts (sanity checks in tests: retires ≤ frees after
+/// a clear, every pin matched, …).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct AuditCounts {
+    pub allocs: u64,
+    pub frees: u64,
+    pub retires: u64,
+    pub accesses: u64,
+    pub pins: u64,
+    pub unpins: u64,
+    pub advances: u64,
+}
+
+#[derive(Clone, Debug)]
+enum ObjState {
+    Live,
+    /// Retired in `epoch`; `readers` holds the pin sessions (token id,
+    /// session generation) that were open at retire time.
+    Retired { epoch: u64, readers: Vec<(usize, u64)> },
+    Freed,
+}
+
+#[derive(Default)]
+struct AuditState {
+    objs: HashMap<(u16, u64), ObjState>,
+    /// token id → generation of its currently-open pin session.
+    pinned: HashMap<usize, u64>,
+    next_gen: u64,
+    violations: Vec<Violation>,
+    counts: AuditCounts,
+}
+
+/// The concrete auditor. Attach one instance to a `Pgas` (and thereby to
+/// every `EpochManager` on it) via [`crate::pgas::Pgas::set_audit`].
+#[derive(Default)]
+pub struct ReclaimAuditor {
+    inner: Mutex<AuditState>,
+}
+
+impl ReclaimAuditor {
+    pub fn new() -> ReclaimAuditor {
+        ReclaimAuditor::default()
+    }
+
+    pub fn violations(&self) -> Vec<Violation> {
+        self.inner.lock().unwrap().violations.clone()
+    }
+
+    /// True iff no violation has been observed.
+    pub fn ok(&self) -> bool {
+        self.inner.lock().unwrap().violations.is_empty()
+    }
+
+    pub fn counts(&self) -> AuditCounts {
+        self.inner.lock().unwrap().counts
+    }
+
+    fn flag(st: &mut AuditState, kind: ViolationKind, detail: String) {
+        st.violations.push(Violation { kind, detail });
+    }
+
+    #[inline]
+    fn key(w: WidePtr) -> (u16, u64) {
+        (w.locale.0, w.addr)
+    }
+}
+
+impl ReclaimAudit for ReclaimAuditor {
+    fn on_alloc(&self, w: WidePtr) {
+        let mut st = self.inner.lock().unwrap();
+        st.counts.allocs += 1;
+        // Address reuse: a fresh allocation resets any prior lifecycle.
+        st.objs.insert(Self::key(w), ObjState::Live);
+    }
+
+    fn on_retire(&self, w: WidePtr, epoch: u64) {
+        let mut st = self.inner.lock().unwrap();
+        st.counts.retires += 1;
+        let readers: Vec<(usize, u64)> = st.pinned.iter().map(|(&t, &g)| (t, g)).collect();
+        match st.objs.get(&Self::key(w)).cloned() {
+            None => {} // pre-attach object: not tracked
+            Some(ObjState::Live) => {
+                st.objs.insert(Self::key(w), ObjState::Retired { epoch, readers });
+            }
+            Some(ObjState::Retired { .. }) => {
+                Self::flag(&mut st, ViolationKind::DoubleFree, format!("double retire of {w:?}"));
+            }
+            Some(ObjState::Freed) => {
+                Self::flag(
+                    &mut st,
+                    ViolationKind::DoubleFree,
+                    format!("retire of already-freed {w:?}"),
+                );
+            }
+        }
+    }
+
+    fn on_free(&self, w: WidePtr) {
+        let mut st = self.inner.lock().unwrap();
+        st.counts.frees += 1;
+        match st.objs.get(&Self::key(w)).cloned() {
+            None => {} // pre-attach object
+            Some(ObjState::Live) => {
+                // A direct free of a never-retired object is legal (an
+                // unpublished speculative node, or teardown).
+                st.objs.insert(Self::key(w), ObjState::Freed);
+            }
+            Some(ObjState::Retired { epoch, readers }) => {
+                for (tok, gen) in readers {
+                    if st.pinned.get(&tok) == Some(&gen) {
+                        Self::flag(
+                            &mut st,
+                            ViolationKind::PrematureFree,
+                            format!(
+                                "{w:?} retired in epoch {epoch} freed while token {tok:#x} \
+                                 is still inside the pin session open at retire time"
+                            ),
+                        );
+                    }
+                }
+                st.objs.insert(Self::key(w), ObjState::Freed);
+            }
+            Some(ObjState::Freed) => {
+                Self::flag(&mut st, ViolationKind::DoubleFree, format!("double free of {w:?}"));
+            }
+        }
+    }
+
+    fn on_pin(&self, token: usize, _epoch: u64) {
+        let mut st = self.inner.lock().unwrap();
+        st.counts.pins += 1;
+        st.next_gen += 1;
+        let gen = st.next_gen;
+        st.pinned.insert(token, gen);
+    }
+
+    fn on_unpin(&self, token: usize) {
+        let mut st = self.inner.lock().unwrap();
+        st.counts.unpins += 1;
+        st.pinned.remove(&token);
+    }
+
+    fn on_advance(&self, _new_epoch: u64) {
+        self.inner.lock().unwrap().counts.advances += 1;
+    }
+
+    fn on_access(&self, w: WidePtr) {
+        let mut st = self.inner.lock().unwrap();
+        st.counts.accesses += 1;
+        let freed = matches!(st.objs.get(&Self::key(w)), Some(ObjState::Freed));
+        if freed {
+            Self::flag(
+                &mut st,
+                ViolationKind::UseAfterFree,
+                format!("access to freed object {w:?}"),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pgas::LocaleId;
+
+    fn w(addr: u64) -> WidePtr {
+        WidePtr::new(LocaleId(0), addr)
+    }
+
+    #[test]
+    fn clean_lifecycle_is_clean() {
+        let a = ReclaimAuditor::new();
+        a.on_pin(1, 1);
+        a.on_alloc(w(16));
+        a.on_access(w(16));
+        a.on_retire(w(16), 1);
+        a.on_access(w(16)); // retired-but-not-freed access is LEGAL
+        a.on_unpin(1);
+        a.on_advance(2);
+        a.on_free(w(16));
+        assert!(a.ok(), "violations: {:?}", a.violations());
+        let c = a.counts();
+        assert_eq!((c.allocs, c.retires, c.frees, c.accesses), (1, 1, 1, 2));
+    }
+
+    #[test]
+    fn use_after_free_flagged() {
+        let a = ReclaimAuditor::new();
+        a.on_alloc(w(16));
+        a.on_free(w(16));
+        a.on_access(w(16));
+        let v = a.violations();
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].kind, ViolationKind::UseAfterFree);
+    }
+
+    #[test]
+    fn double_free_and_double_retire_flagged() {
+        let a = ReclaimAuditor::new();
+        a.on_alloc(w(16));
+        a.on_free(w(16));
+        a.on_free(w(16));
+        assert_eq!(a.violations()[0].kind, ViolationKind::DoubleFree);
+
+        let b = ReclaimAuditor::new();
+        b.on_pin(9, 1);
+        b.on_alloc(w(32));
+        b.on_retire(w(32), 1);
+        b.on_retire(w(32), 1);
+        assert_eq!(b.violations()[0].kind, ViolationKind::DoubleFree);
+    }
+
+    #[test]
+    fn premature_free_requires_the_retire_time_session() {
+        // Token pinned at retire time and STILL pinned at free time: bug.
+        let a = ReclaimAuditor::new();
+        a.on_pin(7, 1);
+        a.on_alloc(w(16));
+        a.on_retire(w(16), 1);
+        a.on_free(w(16));
+        assert_eq!(a.violations()[0].kind, ViolationKind::PrematureFree);
+
+        // Same token re-pinned in a NEW session: safe — the new session
+        // began after the retire, so it cannot hold a stale reference.
+        let b = ReclaimAuditor::new();
+        b.on_pin(7, 1);
+        b.on_alloc(w(16));
+        b.on_retire(w(16), 1);
+        b.on_unpin(7);
+        b.on_pin(7, 2);
+        b.on_free(w(16));
+        assert!(b.ok(), "violations: {:?}", b.violations());
+    }
+
+    #[test]
+    fn unknown_objects_ignored_and_reuse_resets() {
+        let a = ReclaimAuditor::new();
+        // Sentinel allocated before attach: free + access are ignored.
+        a.on_free(w(48));
+        a.on_access(w(48));
+        assert!(a.ok());
+        // Reuse: alloc at a previously-freed address starts a new life.
+        a.on_alloc(w(16));
+        a.on_free(w(16));
+        a.on_alloc(w(16));
+        a.on_access(w(16));
+        a.on_free(w(16));
+        assert!(a.ok(), "violations: {:?}", a.violations());
+    }
+}

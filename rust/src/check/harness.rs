@@ -1,0 +1,371 @@
+//! The checking harness: runs the *real* collections — `LockFreeStack`,
+//! `LockFreeQueue`, `LockFreeList`, `InterlockedHashTable` — under seeded
+//! concurrent churn with the [`HistoryRecorder`] wrapped around every
+//! operation and a [`ReclaimAuditor`] attached to the substrate, then
+//! judges the run: the recorded history must linearize against the
+//! sequential model, the auditor must observe zero lifecycle violations,
+//! and the heap must balance. Stack and queue churn issues balanced
+//! push/pop pairs ([`pair_op_is_write`]) so structure depth — and with
+//! it the linearization-order ambiguity the checker must search through
+//! — stays bounded by the task count; list/map histories resolve their
+//! ambiguity per key at every returned boolean.
+//!
+//! Adversarial knobs (the schedules most likely to expose an epoch or
+//! ordering bug):
+//!
+//! * `stalled_reader` — one task repeatedly pins and *holds* the pin
+//!   while everyone else churns and reclaims: epoch advances must abort
+//!   (`NotQuiescent`) rather than free under the stale pin.
+//! * `agg_capacity = 1` — every remote-owned deferral migrates
+//!   immediately (maximum migration-flush traffic interleaved with
+//!   drains); large capacities instead *delay* flushes to the elected
+//!   advance. Both orderings must preserve the drain schedule.
+//! * `topology` — hot-spot wirings (ring/dragonfly) reroute every remote
+//!   charge; reclamation correctness must be invariant to geography.
+
+use super::audit::{ReclaimAuditor, Violation};
+use super::history::{History, HistoryRecorder, Op, Ret};
+use super::linearize::{self, LinFailure};
+use super::spec::ModelKind;
+use crate::collections::{InterlockedHashTable, LockFreeList, LockFreeQueue, LockFreeStack};
+use crate::epoch::{EpochManager, ReclaimPolicy};
+use crate::fabric::TopologyKind;
+use crate::pgas::{coforall_locales, coforall_tasks, Machine, NicModel, Pgas};
+use crate::util::rng::{SplitMix64, Xoshiro256pp};
+use std::sync::Arc;
+
+/// One checking run's configuration.
+#[derive(Clone, Debug)]
+pub struct CheckCfg {
+    pub seed: u64,
+    pub locales: usize,
+    pub tasks_per_locale: usize,
+    /// Operations per (non-stalled) task; total history size is
+    /// `locales * tasks_per_locale * ops_per_task` minus the reader.
+    pub ops_per_task: usize,
+    /// Key range for list/map workloads (small = high contention).
+    pub key_space: u64,
+    pub topology: TopologyKind,
+    /// Deferral-aggregation capacity for the epoch manager (1 = flush on
+    /// every remote deferral).
+    pub agg_capacity: usize,
+    /// `try_reclaim` every this many operations.
+    pub reclaim_every: usize,
+    /// Dedicate global task 0 to pin-stall-unpin cycles.
+    pub stalled_reader: bool,
+}
+
+impl CheckCfg {
+    /// A 1k-op history per collection: 2 locales × 2 tasks × 250 ops.
+    pub fn quick(seed: u64) -> CheckCfg {
+        CheckCfg {
+            seed,
+            locales: 2,
+            tasks_per_locale: 2,
+            ops_per_task: 250,
+            key_space: 48,
+            topology: TopologyKind::FlatZero,
+            agg_capacity: crate::pgas::aggregation::default_capacity(),
+            reclaim_every: 64,
+            stalled_reader: false,
+        }
+    }
+
+    /// The adversarial variant: stalled pinned reader, immediate
+    /// migration flushes, hot-spot dragonfly wiring.
+    pub fn adversarial(seed: u64) -> CheckCfg {
+        CheckCfg {
+            topology: TopologyKind::Dragonfly,
+            agg_capacity: 1,
+            stalled_reader: true,
+            reclaim_every: 16,
+            ..CheckCfg::quick(seed)
+        }
+    }
+}
+
+/// Balanced-pair op choice for the stack/queue workloads: ops `2k` and
+/// `2k+1` of a task are one write (push/enqueue) and one read (pop/
+/// dequeue) in a coin-flipped order, decided by a pure function of
+/// (seed, task, pair) so both halves of a pair agree without sharing
+/// state. Balance keeps structure depth bounded by the task count, so
+/// the order ambiguity that overlapping writes leave behind (invisible
+/// until a later read observes it) cannot accumulate beyond what the
+/// linearizability DFS affords to backtrack over — see the
+/// [`super::linearize`] module docs. Returns whether op `i` is a write.
+fn pair_op_is_write(seed: u64, g: usize, i: usize) -> bool {
+    let pair = (i / 2) as u64;
+    let coin = SplitMix64::new(seed ^ ((g as u64) << 40).wrapping_add(pair)).next_u64() & 1 == 0;
+    coin == (i % 2 == 0)
+}
+
+/// Which real collection to drive.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Collection {
+    Stack,
+    Queue,
+    List,
+    Map,
+}
+
+impl Collection {
+    pub const ALL: [Collection; 4] =
+        [Collection::Stack, Collection::Queue, Collection::List, Collection::Map];
+
+    pub fn label(self) -> &'static str {
+        self.model().label()
+    }
+
+    pub fn model(self) -> ModelKind {
+        match self {
+            Collection::Stack => ModelKind::Stack,
+            Collection::Queue => ModelKind::Queue,
+            Collection::List => ModelKind::Set,
+            Collection::Map => ModelKind::Map,
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Collection> {
+        match s {
+            "stack" => Some(Collection::Stack),
+            "queue" => Some(Collection::Queue),
+            "list" | "set" => Some(Collection::List),
+            "map" | "table" => Some(Collection::Map),
+            _ => None,
+        }
+    }
+}
+
+/// The judged result of one run.
+pub struct CheckOutcome {
+    pub collection: Collection,
+    pub history: History,
+    pub lin: Result<(), LinFailure>,
+    /// Present iff `lin` failed: the fixed-point-minimized counterexample.
+    pub minimized: Option<History>,
+    pub violations: Vec<Violation>,
+    /// Heap objects still live after teardown (must be 0).
+    pub leaked: i64,
+}
+
+impl CheckOutcome {
+    pub fn passed(&self) -> bool {
+        self.lin.is_ok() && self.violations.is_empty() && self.leaked == 0
+    }
+}
+
+/// Drive `collection` under `cfg` and judge the run.
+pub fn check_collection(collection: Collection, cfg: &CheckCfg) -> CheckOutcome {
+    assert!(
+        !cfg.stalled_reader || cfg.locales * cfg.tasks_per_locale >= 2,
+        "stalled_reader dedicates task 0 to stalling; with no worker left the \
+         run would record an empty history and pass vacuously"
+    );
+    let machine = Machine::new(cfg.locales, cfg.tasks_per_locale);
+    let pgas = Pgas::with_topology(
+        machine,
+        NicModel::aries_no_network_atomics(),
+        cfg.topology.build(cfg.locales),
+    );
+    let auditor = Arc::new(ReclaimAuditor::new());
+    assert!(pgas.set_audit(Arc::clone(&auditor) as _), "fresh Pgas accepts an auditor");
+    let recorder = HistoryRecorder::new();
+
+    let history = {
+        let em = EpochManager::with_config(
+            Arc::clone(&pgas),
+            ReclaimPolicy::default(),
+            cfg.agg_capacity,
+        );
+        match collection {
+            Collection::Stack => {
+                let s = LockFreeStack::new(Arc::clone(&pgas), em.clone());
+                drive(cfg, &em, |g, i, _rng, tok| {
+                    if pair_op_is_write(cfg.seed, g, i) {
+                        let v = g as u64 * 1_000_000 + i as u64 + 1;
+                        recorder.record(g, Op::Push(v), || {
+                            s.push(tok, v);
+                            Ret::Unit
+                        });
+                    } else {
+                        recorder.record(g, Op::Pop, || Ret::Val(s.pop(tok)));
+                    }
+                });
+            }
+            Collection::Queue => {
+                let q = LockFreeQueue::new(Arc::clone(&pgas), em.clone());
+                drive(cfg, &em, |g, i, _rng, tok| {
+                    if pair_op_is_write(cfg.seed, g, i) {
+                        let v = g as u64 * 1_000_000 + i as u64 + 1;
+                        recorder.record(g, Op::Enq(v), || {
+                            q.enqueue(tok, v);
+                            Ret::Unit
+                        });
+                    } else {
+                        recorder.record(g, Op::Deq, || Ret::Val(q.dequeue(tok)));
+                    }
+                });
+            }
+            Collection::List => {
+                let l = LockFreeList::new(Arc::clone(&pgas), em.clone());
+                drive(cfg, &em, |g, _i, rng, tok| {
+                    let k = 1 + rng.next_below(cfg.key_space);
+                    match rng.next_below(10) {
+                        0..=3 => recorder.record(g, Op::SetInsert(k), || {
+                            Ret::Bool(l.insert(tok, k))
+                        }),
+                        4..=6 => recorder.record(g, Op::SetRemove(k), || {
+                            Ret::Bool(l.remove(tok, k))
+                        }),
+                        _ => recorder.record(g, Op::SetContains(k), || {
+                            Ret::Bool(l.contains(tok, k))
+                        }),
+                    };
+                });
+            }
+            Collection::Map => {
+                let h: InterlockedHashTable<u64> =
+                    InterlockedHashTable::new(Arc::clone(&pgas), em.clone(), cfg.locales * 8);
+                drive(cfg, &em, |g, _i, rng, tok| {
+                    let k = 1 + rng.next_below(cfg.key_space);
+                    match rng.next_below(10) {
+                        0..=3 => {
+                            let v = k * 1_000_000 + g as u64;
+                            recorder.record(g, Op::MapInsert(k, v), || {
+                                Ret::Bool(h.insert(tok, k, v))
+                            })
+                        }
+                        4..=5 => recorder.record(g, Op::MapRemove(k), || {
+                            Ret::Bool(h.remove(tok, k))
+                        }),
+                        _ => recorder.record(g, Op::MapGet(k), || Ret::Val(h.get(tok, k))),
+                    };
+                });
+            }
+        }
+        // Reclaim everything still deferred, then tear the structure and
+        // manager down (scope end) so the heap must balance.
+        em.clear();
+        recorder.take()
+    };
+
+    let model = collection.model();
+    let lin = linearize::check_history(model, &history);
+    let minimized = match lin.as_ref().err() {
+        None => None,
+        // UNDECIDED (state-cap) failures carry an empty window and would
+        // make every shrink candidate as expensive as the original run.
+        Some(f) if f.window.is_empty() => None,
+        // Prefer shrinking the localized window (orders of magnitude
+        // smaller than the run); its failure can depend on prefix state,
+        // so fall back to the full history if it passes alone.
+        Some(f) => Some(if linearize::check_history(model, &f.window).is_err() {
+            linearize::minimize(model, &f.window)
+        } else {
+            linearize::minimize(model, &history)
+        }),
+    };
+    CheckOutcome {
+        collection,
+        lin,
+        minimized,
+        violations: auditor.violations(),
+        leaked: pgas.live_objects(),
+        history,
+    }
+}
+
+/// Run `op` across `locales × tasks_per_locale` real tasks (global task
+/// id, per-op index, the task's RNG, its epoch token), plus the optional
+/// stalled reader on global task 0.
+fn drive(
+    cfg: &CheckCfg,
+    em: &EpochManager,
+    op: impl Fn(usize, usize, &mut Xoshiro256pp, &crate::epoch::EpochToken) + Sync,
+) {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    // Ops completed by the worker tasks; the stalled reader paces its
+    // pin sessions against this, not wall time.
+    let progress = AtomicUsize::new(0);
+    let workers =
+        cfg.locales * cfg.tasks_per_locale - usize::from(cfg.stalled_reader);
+    let total_ops = workers * cfg.ops_per_task;
+    coforall_locales(Machine::new(cfg.locales, cfg.tasks_per_locale), |loc| {
+        coforall_tasks(cfg.tasks_per_locale, |tid| {
+            let g = loc.index() * cfg.tasks_per_locale + tid;
+            let tok = em.register();
+            if cfg.stalled_reader && g == 0 {
+                // The adversarial schedule: hold a pin while the rest of
+                // the machine churns and tries to reclaim. Each session
+                // stays open until the peers have made REAL progress
+                // (~a tenth of the run) — a fixed-length spin would
+                // usually close before the first retire even lands, and
+                // any free of an object retired during an open session
+                // would be flagged as premature by the auditor.
+                for _ in 0..8 {
+                    tok.pin();
+                    let target =
+                        (progress.load(Ordering::Relaxed) + total_ops / 10).min(total_ops);
+                    while progress.load(Ordering::Relaxed) < target {
+                        std::thread::yield_now();
+                    }
+                    tok.unpin();
+                }
+                return;
+            }
+            let mut rng = Xoshiro256pp::new(cfg.seed ^ (g as u64).wrapping_mul(0xD6E8FEB8));
+            for i in 0..cfg.ops_per_task {
+                op(g, i, &mut rng, &tok);
+                progress.fetch_add(1, Ordering::Relaxed);
+                if cfg.reclaim_every > 0 && (i + 1) % cfg.reclaim_every == 0 {
+                    tok.try_reclaim();
+                }
+            }
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_and_queue_pass_quick_check() {
+        for c in [Collection::Stack, Collection::Queue] {
+            let out = check_collection(c, &CheckCfg::quick(11));
+            assert!(out.lin.is_ok(), "{}: {:?}", c.label(), out.lin.as_ref().err());
+            assert!(out.violations.is_empty(), "{}: {:?}", c.label(), out.violations);
+            assert_eq!(out.leaked, 0, "{} leaked", c.label());
+            assert!(out.history.len() > 500, "history recorded");
+            assert!(out.passed());
+        }
+    }
+
+    #[test]
+    fn list_and_map_pass_quick_check() {
+        for c in [Collection::List, Collection::Map] {
+            let out = check_collection(c, &CheckCfg::quick(12));
+            assert!(out.lin.is_ok(), "{}: {:?}", c.label(), out.lin.as_ref().err());
+            assert!(out.violations.is_empty(), "{}: {:?}", c.label(), out.violations);
+            assert_eq!(out.leaked, 0);
+        }
+    }
+
+    #[test]
+    fn adversarial_schedule_passes_and_actually_stalls() {
+        let out = check_collection(Collection::Stack, &CheckCfg::adversarial(13));
+        assert!(out.passed(), "lin={:?} violations={:?}", out.lin.as_ref().err(), out.violations);
+        // The stalled reader really did open pin sessions.
+        assert!(out.history.len() > 100);
+    }
+
+    #[test]
+    fn collection_parse_roundtrip() {
+        for c in Collection::ALL {
+            assert_eq!(Collection::parse(c.label()), Some(c));
+        }
+        assert_eq!(Collection::parse("table"), Some(Collection::Map));
+        assert_eq!(Collection::parse("bogus"), None);
+    }
+}

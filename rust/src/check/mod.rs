@@ -1,0 +1,40 @@
+//! Deterministic concurrency checking: the testbed's correctness oracle.
+//!
+//! The paper's claim is not that its structures are fast — it is that
+//! non-blocking algorithms *plus* distributed epoch-based reclamation
+//! stay **correct** under arbitrary interleavings of remote atomics and
+//! deferred frees. This subsystem checks exactly that, two ways:
+//!
+//! * **Linearizability** ([`linearize`]): every concurrent history the
+//!   collections produce (recorded by [`history::HistoryRecorder`] with
+//!   virtual timestamps) must admit a sequential order, consistent with
+//!   real-time precedence, that a `Vec`/`VecDeque`/`BTreeSet`/`BTreeMap`
+//!   model ([`spec`]) reproduces — Wing–Gong checking with per-operation
+//!   interval pruning.
+//! * **Reclamation safety** ([`audit`]): a shadow lifecycle machine over
+//!   every allocation, fed by hooks in the substrate and epoch manager,
+//!   flags use-after-free, double-free, and frees that violate the EBR
+//!   invariant (freeing under a pin session that was open at retire
+//!   time).
+//!
+//! [`harness`] drives the four real collections under seeded adversarial
+//! schedules; [`mutation`] replays deliberately-broken variants under
+//! the DES engine to prove the oracle actually bites (`pgas-nb check
+//! --mutate`).
+
+pub mod audit;
+pub mod harness;
+pub mod history;
+pub mod linearize;
+pub mod mutation;
+pub mod spec;
+
+pub use audit::{AuditCounts, ReclaimAudit, ReclaimAuditor, Violation, ViolationKind};
+pub use harness::{check_collection, CheckCfg, CheckOutcome, Collection};
+pub use history::{render_history, Completed, History, HistoryRecorder, Op, Ret};
+pub use linearize::{check_history, minimize, LinFailure};
+pub use mutation::{
+    first_detecting_seed, first_seed_detected_by, run_sim, Detector, Mutant, SimCfg, SimKind,
+    SimRun,
+};
+pub use spec::{ModelKind, SeqModel};

@@ -1,0 +1,709 @@
+//! Deterministic schedule exploration and mutation self-tests.
+//!
+//! The real collections run on real threads, so their interleavings are
+//! not reproducible. To *prove the checker can catch bugs* we need the
+//! opposite: known-broken algorithms whose races manifest on demand.
+//! This module re-expresses the Treiber stack and Michael–Scott queue as
+//! **step-decomposed state machines** over a simulated arena, driven by
+//! the DES engine ([`crate::sim::engine`]) in virtual time — every shared
+//! mutation happens in exactly one engine step, every interleaving is a
+//! pure function of the seed, and the produced [`History`] carries the
+//! engine's virtual timestamps.
+//!
+//! Three deliberate mutations are provided:
+//!
+//! * [`Mutant::StackSplitCas`] — the stack pop's `compareAndSwapABA` is
+//!   split into a compare step and a store step (check-then-act across a
+//!   step boundary). Two poppers can both pass the compare and both take
+//!   the same node: a duplicated pop the linearizability checker must
+//!   flag.
+//! * [`Mutant::QueueSplitCas`] — the same mis-ordering in the queue's
+//!   head swing: one value dequeued twice.
+//! * [`Mutant::SkipDeferGuard`] — pop frees its node immediately instead
+//!   of routing it through `defer_delete`, while a *stalled pinned
+//!   reader* (the adversarial schedule) still holds a reference it
+//!   re-reads after the stall: a use-after-free the reclamation auditor
+//!   must flag.
+//!
+//! `Mutant::None` runs the faithful decomposition and must pass both
+//! checks — the self-test's control arm.
+
+use super::audit::{ReclaimAudit, ReclaimAuditor, ViolationKind};
+use super::history::{Completed, History, Op, Ret};
+use super::spec::ModelKind;
+use crate::pgas::{LocaleId, WidePtr};
+use crate::sim::engine::{run, Step, VTime, Workload};
+use crate::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+/// Which deliberate bug (if any) to inject.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Mutant {
+    None,
+    StackSplitCas,
+    QueueSplitCas,
+    SkipDeferGuard,
+}
+
+impl Mutant {
+    pub fn label(self) -> &'static str {
+        match self {
+            Mutant::None => "none",
+            Mutant::StackSplitCas => "stack-split-cas",
+            Mutant::QueueSplitCas => "queue-split-cas",
+            Mutant::SkipDeferGuard => "skip-defer-guard",
+        }
+    }
+}
+
+/// Which structure the simulation runs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SimKind {
+    Stack,
+    Queue,
+}
+
+#[derive(Clone, Debug)]
+pub struct SimCfg {
+    pub kind: SimKind,
+    pub mutant: Mutant,
+    pub tasks: usize,
+    pub ops_per_task: usize,
+    /// Elements present before the concurrent phase (recorded as
+    /// sequential events so the history stays self-contained).
+    pub prepopulate: usize,
+    pub seed: u64,
+}
+
+impl SimCfg {
+    pub fn new(kind: SimKind, mutant: Mutant, seed: u64) -> SimCfg {
+        SimCfg { kind, mutant, tasks: 4, ops_per_task: 60, prepopulate: 16, seed }
+    }
+}
+
+/// Everything a self-test needs to judge one simulated run.
+pub struct SimRun {
+    pub history: History,
+    pub auditor: Arc<ReclaimAuditor>,
+    pub model: ModelKind,
+}
+
+// ---- simulated arena ----
+//
+// Slots are never deallocated (a "free" only drives the auditor's shadow
+// state machine), so even mutant schedules that use-after-free remain
+// memory-safe to *simulate* while being faithfully flagged.
+
+const NIL: u64 = 0;
+
+struct SimNode {
+    val: u64,
+    next: u64,
+}
+
+#[derive(Default)]
+struct Arena {
+    slots: Vec<SimNode>,
+}
+
+impl Arena {
+    fn alloc(&mut self, val: u64, auditor: &ReclaimAuditor) -> u64 {
+        self.slots.push(SimNode { val, next: NIL });
+        let addr = (self.slots.len() as u64) * 16; // bit 0 free, non-nil
+        auditor.on_alloc(wp(addr));
+        addr
+    }
+
+    fn node(&self, addr: u64) -> &SimNode {
+        &self.slots[(addr / 16 - 1) as usize]
+    }
+
+    fn node_mut(&mut self, addr: u64) -> &mut SimNode {
+        &mut self.slots[(addr / 16 - 1) as usize]
+    }
+}
+
+fn wp(addr: u64) -> WidePtr {
+    WidePtr::new(LocaleId(0), addr)
+}
+
+// ---- step costs (virtual ns) ----
+
+const C_ALLOC: VTime = 20;
+const C_READ: VTime = 10;
+const C_CAS: VTime = 15;
+/// Extra delay the split-CAS mutants insert between compare and store —
+/// the widened race window an adversarial schedule would seek out.
+const C_SPLIT_GAP: VTime = 40;
+/// How long the stalled reader holds its pin mid-operation.
+const C_STALL: VTime = 4_000;
+/// Offset added to every engine timestamp so prepopulation events
+/// (stamped 1, 2, …) strictly precede the concurrent phase.
+const T_BASE: VTime = 1_000_000;
+/// Round period: task `t`'s op `k` never starts before `k * ROUND`.
+/// Every task hits each round boundary within jitter of the others, so
+/// contention concentrates exactly where the mutants race — while ops
+/// from different rounds almost never overlap, keeping the history's
+/// concurrent spans (and so the checker's search windows) task-count
+/// sized instead of history-sized.
+const ROUND: VTime = 1_000;
+
+/// Per-task operation program entry.
+#[derive(Copy, Clone, Debug)]
+enum SimOp {
+    Push(u64),
+    Pop,
+    Enq(u64),
+    Deq,
+    /// Pin, read the head pointer, stall, re-read it (audit-only; not a
+    /// history event).
+    Peek,
+}
+
+struct TaskSt {
+    program: Vec<SimOp>,
+    cur: usize,
+    pc: u8,
+    /// True between `begin_op` and `finish_op`. A CAS-failure retry
+    /// re-enters pc 0; the guard keeps the op's invoke stamp (and its
+    /// pin session) anchored at the FIRST attempt — re-stamping would
+    /// shrink the interval and fabricate precedence.
+    in_op: bool,
+    invoke: VTime,
+    // registers
+    r_word: u64,
+    r_count: u64,
+    r_next: u64,
+    r_node: u64,
+    rng: Xoshiro256pp,
+}
+
+struct Sim {
+    cfg: SimCfg,
+    arena: Arena,
+    auditor: Arc<ReclaimAuditor>,
+    // stack head / queue head+tail, ABA-counted
+    head: (u64, u64),
+    tail: (u64, u64),
+    /// Retired-but-not-freed addresses (freed after the run, like a
+    /// final `clear`).
+    limbo: Vec<u64>,
+    tasks: Vec<TaskSt>,
+    history: History,
+}
+
+impl Sim {
+    fn jit(&mut self, tid: usize, base: VTime) -> VTime {
+        base + self.tasks[tid].rng.next_below(8)
+    }
+
+    /// Resume time after an operation completed: the next op waits for
+    /// its round boundary (`finish_op` has already advanced `cur`).
+    /// Retries stay on the tight `jit` path — rounds gate op *starts*,
+    /// never the races within one.
+    fn after_op(&mut self, tid: usize, now: VTime, cost: VTime) -> VTime {
+        let round_start = self.tasks[tid].cur as VTime * ROUND;
+        self.jit(tid, (now + cost).max(round_start))
+    }
+
+    fn begin_op(&mut self, tid: usize, now: VTime) {
+        if self.tasks[tid].in_op {
+            return; // retry re-entering pc 0: keep the original invoke/pin
+        }
+        self.tasks[tid].in_op = true;
+        self.tasks[tid].invoke = now;
+        // Every operation runs under a pin session, like the real
+        // collections' token discipline.
+        self.auditor.on_pin(tid, 1);
+    }
+
+    fn finish_op(&mut self, tid: usize, now: VTime, record: Option<(Op, Ret)>) {
+        if let Some((op, ret)) = record {
+            self.history.push(Completed {
+                task: tid,
+                invoke: T_BASE + self.tasks[tid].invoke,
+                response: T_BASE + now,
+                op,
+                ret,
+            });
+        }
+        self.auditor.on_unpin(tid);
+        self.tasks[tid].in_op = false;
+        self.tasks[tid].cur += 1;
+        self.tasks[tid].pc = 0;
+    }
+
+    fn retire_or_free(&mut self, addr: u64) {
+        if self.cfg.mutant == Mutant::SkipDeferGuard {
+            // The injected bug: bypass the epoch deferral entirely.
+            self.auditor.on_free(wp(addr));
+        } else {
+            self.auditor.on_retire(wp(addr), 1);
+            self.limbo.push(addr);
+        }
+    }
+}
+
+impl Workload for Sim {
+    fn step(&mut self, tid: usize, now: VTime) -> Step {
+        let cur = self.tasks[tid].cur;
+        if cur >= self.tasks[tid].program.len() {
+            return Step::Done;
+        }
+        let op = self.tasks[tid].program[cur];
+        let pc = self.tasks[tid].pc;
+        match (op, pc) {
+            // ---- stack push: alloc, read head, link+CAS ----
+            (SimOp::Push(v), 0) => {
+                self.begin_op(tid, now);
+                self.tasks[tid].r_node = self.arena.alloc(v, &self.auditor);
+                self.tasks[tid].pc = 1;
+                Step::ResumeAt(self.jit(tid, now + C_ALLOC))
+            }
+            (SimOp::Push(_), 1) => {
+                self.tasks[tid].r_word = self.head.0;
+                self.tasks[tid].r_count = self.head.1;
+                self.tasks[tid].pc = 2;
+                Step::ResumeAt(self.jit(tid, now + C_READ))
+            }
+            (SimOp::Push(v), 2) => {
+                let (node, ew, ec) =
+                    (self.tasks[tid].r_node, self.tasks[tid].r_word, self.tasks[tid].r_count);
+                self.arena.node_mut(node).next = ew; // unpublished: safe
+                if self.head == (ew, ec) {
+                    self.head = (node, ec + 1);
+                    self.finish_op(tid, now, Some((Op::Push(v), Ret::Unit)));
+                    return Step::ResumeAt(self.after_op(tid, now, C_CAS));
+                }
+                self.tasks[tid].pc = 1; // CAS failed: re-read
+                Step::ResumeAt(self.jit(tid, now + C_CAS))
+            }
+            // ---- stack pop: read head, read next, CAS (maybe split) ----
+            (SimOp::Pop, 0) => {
+                self.begin_op(tid, now);
+                self.tasks[tid].r_word = self.head.0;
+                self.tasks[tid].r_count = self.head.1;
+                if self.tasks[tid].r_word == NIL {
+                    self.finish_op(tid, now, Some((Op::Pop, Ret::Val(None))));
+                    return Step::ResumeAt(self.after_op(tid, now, C_READ));
+                }
+                self.tasks[tid].pc = 1;
+                Step::ResumeAt(self.jit(tid, now + C_READ))
+            }
+            (SimOp::Pop, 1) => {
+                let headw = self.tasks[tid].r_word;
+                // The deref a real pop performs under its pin.
+                self.auditor.on_access(wp(headw));
+                self.tasks[tid].r_next = self.arena.node(headw).next;
+                self.tasks[tid].pc = 2;
+                Step::ResumeAt(self.jit(tid, now + C_READ))
+            }
+            (SimOp::Pop, 2) => {
+                let (ew, ec, next) =
+                    (self.tasks[tid].r_word, self.tasks[tid].r_count, self.tasks[tid].r_next);
+                if self.cfg.mutant == Mutant::StackSplitCas {
+                    // MUTATION: compare here, store in a later step.
+                    if self.head == (ew, ec) {
+                        self.tasks[tid].pc = 3;
+                        return Step::ResumeAt(self.jit(tid, now + C_SPLIT_GAP));
+                    }
+                    self.tasks[tid].pc = 0;
+                    return Step::ResumeAt(self.jit(tid, now + C_CAS));
+                }
+                if self.head == (ew, ec) {
+                    self.head = (next, ec + 1);
+                    let val = self.arena.node(ew).val;
+                    self.retire_or_free(ew);
+                    self.finish_op(tid, now, Some((Op::Pop, Ret::Val(Some(val)))));
+                    return Step::ResumeAt(self.after_op(tid, now, C_CAS));
+                }
+                self.tasks[tid].pc = 0;
+                Step::ResumeAt(self.jit(tid, now + C_CAS))
+            }
+            (SimOp::Pop, 3) => {
+                // MUTATION (second half): blind store — the compare's
+                // evidence may have rotted in the gap.
+                let (ew, ec, next) =
+                    (self.tasks[tid].r_word, self.tasks[tid].r_count, self.tasks[tid].r_next);
+                self.head = (next, ec + 1);
+                let val = self.arena.node(ew).val;
+                self.retire_or_free(ew);
+                self.finish_op(tid, now, Some((Op::Pop, Ret::Val(Some(val)))));
+                Step::ResumeAt(self.after_op(tid, now, C_CAS))
+            }
+            // ---- queue enqueue: alloc, read tail, check next, link, swing ----
+            (SimOp::Enq(v), 0) => {
+                self.begin_op(tid, now);
+                self.tasks[tid].r_node = self.arena.alloc(v, &self.auditor);
+                self.tasks[tid].pc = 1;
+                Step::ResumeAt(self.jit(tid, now + C_ALLOC))
+            }
+            (SimOp::Enq(_), 1) => {
+                self.tasks[tid].r_word = self.tail.0;
+                self.tasks[tid].r_count = self.tail.1;
+                self.tasks[tid].pc = 2;
+                Step::ResumeAt(self.jit(tid, now + C_READ))
+            }
+            (SimOp::Enq(_), 2) => {
+                let (tw, tc) = (self.tasks[tid].r_word, self.tasks[tid].r_count);
+                self.auditor.on_access(wp(tw));
+                let next = self.arena.node(tw).next;
+                if next != NIL {
+                    // Tail lagging: help swing, then retry.
+                    if self.tail == (tw, tc) {
+                        self.tail = (next, tc + 1);
+                    }
+                    self.tasks[tid].pc = 1;
+                } else {
+                    self.tasks[tid].pc = 3;
+                }
+                Step::ResumeAt(self.jit(tid, now + C_CAS))
+            }
+            (SimOp::Enq(_), 3) => {
+                let (tw, node) = (self.tasks[tid].r_word, self.tasks[tid].r_node);
+                if self.arena.node(tw).next == NIL {
+                    self.arena.node_mut(tw).next = node; // linearization
+                    self.tasks[tid].pc = 4;
+                } else {
+                    self.tasks[tid].pc = 1;
+                }
+                Step::ResumeAt(self.jit(tid, now + C_CAS))
+            }
+            (SimOp::Enq(v), 4) => {
+                let (tw, tc, node) =
+                    (self.tasks[tid].r_word, self.tasks[tid].r_count, self.tasks[tid].r_node);
+                if self.tail == (tw, tc) {
+                    self.tail = (node, tc + 1); // swing (failure is fine)
+                }
+                self.finish_op(tid, now, Some((Op::Enq(v), Ret::Unit)));
+                Step::ResumeAt(self.after_op(tid, now, C_CAS))
+            }
+            // ---- queue dequeue: read head, read next, CAS (maybe split) ----
+            (SimOp::Deq, 0) => {
+                self.begin_op(tid, now);
+                self.tasks[tid].r_word = self.head.0;
+                self.tasks[tid].r_count = self.head.1;
+                self.tasks[tid].pc = 1;
+                Step::ResumeAt(self.jit(tid, now + C_READ))
+            }
+            (SimOp::Deq, 1) => {
+                let hw = self.tasks[tid].r_word;
+                self.auditor.on_access(wp(hw));
+                let next = self.arena.node(hw).next;
+                if next == NIL {
+                    self.finish_op(tid, now, Some((Op::Deq, Ret::Val(None))));
+                    return Step::ResumeAt(self.after_op(tid, now, C_READ));
+                }
+                self.tasks[tid].r_next = next;
+                self.tasks[tid].pc = 2;
+                Step::ResumeAt(self.jit(tid, now + C_READ))
+            }
+            (SimOp::Deq, 2) => {
+                let (hw, hc, next) =
+                    (self.tasks[tid].r_word, self.tasks[tid].r_count, self.tasks[tid].r_next);
+                if self.cfg.mutant == Mutant::QueueSplitCas {
+                    if self.head == (hw, hc) {
+                        self.tasks[tid].pc = 3;
+                        return Step::ResumeAt(self.jit(tid, now + C_SPLIT_GAP));
+                    }
+                    self.tasks[tid].pc = 0;
+                    return Step::ResumeAt(self.jit(tid, now + C_CAS));
+                }
+                if self.head == (hw, hc) {
+                    self.head = (next, hc + 1);
+                    self.auditor.on_access(wp(next));
+                    let val = self.arena.node(next).val;
+                    self.retire_or_free(hw); // old dummy
+                    self.finish_op(tid, now, Some((Op::Deq, Ret::Val(Some(val)))));
+                    return Step::ResumeAt(self.after_op(tid, now, C_CAS));
+                }
+                self.tasks[tid].pc = 0;
+                Step::ResumeAt(self.jit(tid, now + C_CAS))
+            }
+            (SimOp::Deq, 3) => {
+                // MUTATION (second half of the split head swing).
+                let (hw, hc, next) =
+                    (self.tasks[tid].r_word, self.tasks[tid].r_count, self.tasks[tid].r_next);
+                self.head = (next, hc + 1);
+                self.auditor.on_access(wp(next));
+                let val = self.arena.node(next).val;
+                self.retire_or_free(hw);
+                self.finish_op(tid, now, Some((Op::Deq, Ret::Val(Some(val)))));
+                Step::ResumeAt(self.after_op(tid, now, C_CAS))
+            }
+            // ---- stalled pinned reader (audit-only) ----
+            (SimOp::Peek, 0) => {
+                self.begin_op(tid, now);
+                let hw = self.head.0;
+                if hw == NIL {
+                    self.finish_op(tid, now, None);
+                    return Step::ResumeAt(self.after_op(tid, now, C_READ));
+                }
+                self.tasks[tid].r_word = hw;
+                self.auditor.on_access(wp(hw));
+                self.tasks[tid].pc = 1;
+                // The stall: pinned, holding a reference, going nowhere.
+                Step::ResumeAt(now + C_STALL)
+            }
+            (SimOp::Peek, 1) => {
+                // Re-read the node the pin was supposed to protect.
+                self.auditor.on_access(wp(self.tasks[tid].r_word));
+                self.finish_op(tid, now, None);
+                Step::ResumeAt(self.after_op(tid, now, C_READ))
+            }
+            (op, pc) => unreachable!("no step for {op:?} pc={pc}"),
+        }
+    }
+}
+
+/// Run one simulated schedule; deterministic in `cfg`.
+pub fn run_sim(cfg: &SimCfg) -> SimRun {
+    let auditor = Arc::new(ReclaimAuditor::new());
+    let mut arena = Arena::default();
+    let mut history = Vec::new();
+    let mut head = (NIL, 0);
+    let mut tail = (NIL, 0);
+    let mut stamp = 0;
+
+    // Prepopulate sequentially, recording the matching events.
+    match cfg.kind {
+        SimKind::Stack => {
+            for i in 0..cfg.prepopulate as u64 {
+                let v = 900_000 + i;
+                let node = arena.alloc(v, &auditor);
+                arena.node_mut(node).next = head.0;
+                head = (node, head.1 + 1);
+                history.push(Completed {
+                    task: 0,
+                    invoke: stamp + 1,
+                    response: stamp + 2,
+                    op: Op::Push(v),
+                    ret: Ret::Unit,
+                });
+                stamp += 2;
+            }
+        }
+        SimKind::Queue => {
+            let dummy = arena.alloc(0, &auditor);
+            head = (dummy, 0);
+            tail = (dummy, 0);
+            for i in 0..cfg.prepopulate as u64 {
+                let v = 900_000 + i;
+                let node = arena.alloc(v, &auditor);
+                arena.node_mut(tail.0).next = node;
+                tail = (node, tail.1 + 1);
+                history.push(Completed {
+                    task: 0,
+                    invoke: stamp + 1,
+                    response: stamp + 2,
+                    op: Op::Enq(v),
+                    ret: Ret::Unit,
+                });
+                stamp += 2;
+            }
+        }
+    }
+    assert!(stamp < T_BASE, "prepopulation must precede the concurrent phase");
+
+    // Per-task programs, generated in BALANCED PAIRS: each pair is one
+    // write (push/enqueue) and one read (pop/dequeue) in a coin-flipped
+    // order. Structure depth therefore stays within `prepopulate` ±
+    // `tasks`, so the order ambiguity overlapping writes leave behind
+    // (unobservable until a later pop/dequeue) cannot accumulate beyond
+    // what the checker's DFS can afford to backtrack over — a biased
+    // stream would let the structure (and with it the set of
+    // order-ambiguous resident values) grow without bound. Under
+    // SkipDeferGuard, task 0 is the stalled reader instead.
+    let tasks: Vec<TaskSt> = (0..cfg.tasks)
+        .map(|t| {
+            let mut rng = Xoshiro256pp::new(cfg.seed ^ (t as u64).wrapping_mul(0x9E3779B9));
+            let mut program: Vec<SimOp> = Vec::with_capacity(cfg.ops_per_task + 1);
+            let mut i = 0;
+            while i < cfg.ops_per_task {
+                let v = (t as u64) * 100_000 + i as u64 + 1;
+                let stalled_reader =
+                    cfg.kind == SimKind::Stack && cfg.mutant == Mutant::SkipDeferGuard && t == 0;
+                let (wr, rd) = match cfg.kind {
+                    SimKind::Stack => (SimOp::Push(v), SimOp::Pop),
+                    SimKind::Queue => (SimOp::Enq(v), SimOp::Deq),
+                };
+                // One decision draw per pair for every task (the reader
+                // included), so the jitter stream downstream is aligned
+                // across mutants.
+                let write_first = rng.chance(0.5);
+                if stalled_reader {
+                    program.push(SimOp::Peek);
+                    program.push(SimOp::Peek);
+                } else if write_first {
+                    program.push(wr);
+                    program.push(rd);
+                } else {
+                    program.push(rd);
+                    program.push(wr);
+                }
+                i += 2;
+            }
+            TaskSt {
+                program,
+                cur: 0,
+                pc: 0,
+                in_op: false,
+                invoke: 0,
+                r_word: 0,
+                r_count: 0,
+                r_next: 0,
+                r_node: 0,
+                rng,
+            }
+        })
+        .collect();
+
+    let n_tasks = tasks.len();
+    let mut sim = Sim {
+        cfg: cfg.clone(),
+        arena,
+        auditor: Arc::clone(&auditor),
+        head,
+        tail,
+        limbo: Vec::new(),
+        tasks,
+        history,
+    };
+    run(&mut sim, n_tasks);
+
+    // Final clear: every retired node is freed now that all tasks have
+    // completed and unpinned (mirrors `EpochManager::clear`).
+    for addr in std::mem::take(&mut sim.limbo) {
+        sim.auditor.on_free(wp(addr));
+    }
+
+    SimRun {
+        history: sim.history,
+        auditor,
+        model: match cfg.kind {
+            SimKind::Stack => ModelKind::Stack,
+            SimKind::Queue => ModelKind::Queue,
+        },
+    }
+}
+
+/// Which oracle must fire for a seed to count as a detection.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Detector {
+    /// Either oracle — the strictest *control* arm (nothing may fire).
+    Any,
+    /// The recorded history fails the linearizability check.
+    NonLinearizable,
+    /// The auditor reports a use-after-free.
+    UseAfterFree,
+}
+
+/// Scan seeds until `det` fires for the given mutant; returns the first
+/// such seed. Self-tests pin the EXPECTED oracle per mutant (a split
+/// CAS also double-retires, so an `Any` scan would stay green off the
+/// audit oracle alone even with a dead linearizability checker —
+/// manufactured confidence), and assert `Mutant::None` never trips
+/// `Any`.
+pub fn first_seed_detected_by(
+    kind: SimKind,
+    mutant: Mutant,
+    max_seeds: u64,
+    det: Detector,
+) -> Option<u64> {
+    for seed in 0..max_seeds {
+        let run = run_sim(&SimCfg::new(kind, mutant, seed));
+        let hit = match det {
+            Detector::Any => {
+                super::linearize::check_history(run.model, &run.history).is_err()
+                    || !run.auditor.ok()
+            }
+            Detector::NonLinearizable => {
+                super::linearize::check_history(run.model, &run.history).is_err()
+            }
+            Detector::UseAfterFree => run
+                .auditor
+                .violations()
+                .iter()
+                .any(|v| v.kind == ViolationKind::UseAfterFree),
+        };
+        if hit {
+            return Some(seed);
+        }
+    }
+    None
+}
+
+/// [`first_seed_detected_by`] with [`Detector::Any`].
+pub fn first_detecting_seed(kind: SimKind, mutant: Mutant, max_seeds: u64) -> Option<u64> {
+    first_seed_detected_by(kind, mutant, max_seeds, Detector::Any)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::audit::ViolationKind;
+    use crate::check::linearize::{check_history, minimize};
+
+    #[test]
+    fn unmutated_stack_and_queue_schedules_are_clean() {
+        for kind in [SimKind::Stack, SimKind::Queue] {
+            for seed in 0..10 {
+                let run = run_sim(&SimCfg::new(kind, Mutant::None, seed));
+                assert!(
+                    check_history(run.model, &run.history).is_ok(),
+                    "{kind:?} seed {seed}: faithful decomposition must be linearizable"
+                );
+                assert!(
+                    run.auditor.ok(),
+                    "{kind:?} seed {seed}: violations {:?}",
+                    run.auditor.violations()
+                );
+                let c = run.auditor.counts();
+                assert_eq!(c.pins, c.unpins, "every pin session closes");
+                assert_eq!(c.retires, c.frees, "final clear frees every retired node");
+            }
+        }
+    }
+
+    #[test]
+    fn runs_are_deterministic_in_the_seed() {
+        let a = run_sim(&SimCfg::new(SimKind::Stack, Mutant::None, 7));
+        let b = run_sim(&SimCfg::new(SimKind::Stack, Mutant::None, 7));
+        assert_eq!(a.history, b.history);
+        assert_eq!(a.auditor.counts(), b.auditor.counts());
+        let c = run_sim(&SimCfg::new(SimKind::Stack, Mutant::None, 8));
+        assert_ne!(a.history, c.history, "different seeds explore different schedules");
+    }
+
+    #[test]
+    fn split_cas_stack_detected_as_non_linearizable() {
+        let seed = first_detecting_seed(SimKind::Stack, Mutant::StackSplitCas, 20)
+            .expect("split-CAS stack must be caught within 20 seeds");
+        let run = run_sim(&SimCfg::new(SimKind::Stack, Mutant::StackSplitCas, seed));
+        assert!(check_history(run.model, &run.history).is_err());
+        // And the minimized counterexample is small enough to read.
+        let min = minimize(run.model, &run.history);
+        assert!(check_history(run.model, &min).is_err());
+        assert!(min.len() <= 8, "minimized to {} events", min.len());
+    }
+
+    #[test]
+    fn split_cas_queue_detected_as_non_linearizable() {
+        let seed = first_detecting_seed(SimKind::Queue, Mutant::QueueSplitCas, 20)
+            .expect("split-CAS queue must be caught within 20 seeds");
+        let run = run_sim(&SimCfg::new(SimKind::Queue, Mutant::QueueSplitCas, seed));
+        assert!(check_history(run.model, &run.history).is_err());
+    }
+
+    #[test]
+    fn skipped_defer_guard_detected_as_use_after_free() {
+        let seed = first_detecting_seed(SimKind::Stack, Mutant::SkipDeferGuard, 20)
+            .expect("skipped defer_delete must be caught within 20 seeds");
+        let run = run_sim(&SimCfg::new(SimKind::Stack, Mutant::SkipDeferGuard, seed));
+        let v = run.auditor.violations();
+        assert!(
+            v.iter().any(|v| v.kind == ViolationKind::UseAfterFree),
+            "expected a use-after-free, got {v:?}"
+        );
+    }
+}

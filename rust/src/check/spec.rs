@@ -1,0 +1,160 @@
+//! Sequential specifications the linearizability checker replays
+//! histories against: `Vec` for the stack, `VecDeque` for the queue,
+//! `BTreeSet` for the sorted list, `BTreeMap` for the hash table.
+//!
+//! A checked collection is linearizable iff its concurrent history can be
+//! reordered (respecting interval precedence) into a sequence that this
+//! model reproduces return-for-return.
+
+use super::history::{Op, Ret};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Which collection a history is checked against.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Stack,
+    Queue,
+    Set,
+    Map,
+}
+
+impl ModelKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            ModelKind::Stack => "stack",
+            ModelKind::Queue => "queue",
+            ModelKind::Set => "list",
+            ModelKind::Map => "map",
+        }
+    }
+}
+
+/// The sequential model state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SeqModel {
+    Stack(Vec<u64>),
+    Queue(VecDeque<u64>),
+    Set(BTreeSet<u64>),
+    Map(BTreeMap<u64, u64>),
+}
+
+impl SeqModel {
+    pub fn new(kind: ModelKind) -> SeqModel {
+        match kind {
+            ModelKind::Stack => SeqModel::Stack(Vec::new()),
+            ModelKind::Queue => SeqModel::Queue(VecDeque::new()),
+            ModelKind::Set => SeqModel::Set(BTreeSet::new()),
+            ModelKind::Map => SeqModel::Map(BTreeMap::new()),
+        }
+    }
+
+    /// Apply `op` sequentially, returning the specified result. Panics on
+    /// an op that does not belong to this model (a harness bug, not a
+    /// checkable outcome).
+    pub fn apply(&mut self, op: &Op) -> Ret {
+        match (self, op) {
+            (SeqModel::Stack(s), Op::Push(v)) => {
+                s.push(*v);
+                Ret::Unit
+            }
+            (SeqModel::Stack(s), Op::Pop) => Ret::Val(s.pop()),
+            (SeqModel::Queue(q), Op::Enq(v)) => {
+                q.push_back(*v);
+                Ret::Unit
+            }
+            (SeqModel::Queue(q), Op::Deq) => Ret::Val(q.pop_front()),
+            (SeqModel::Set(s), Op::SetInsert(k)) => Ret::Bool(s.insert(*k)),
+            (SeqModel::Set(s), Op::SetRemove(k)) => Ret::Bool(s.remove(k)),
+            (SeqModel::Set(s), Op::SetContains(k)) => Ret::Bool(s.contains(k)),
+            // Like the interlocked table: insert REJECTS an existing key
+            // (no overwrite), remove reports presence, get clones.
+            (SeqModel::Map(m), Op::MapInsert(k, v)) => {
+                if m.contains_key(k) {
+                    Ret::Bool(false)
+                } else {
+                    m.insert(*k, *v);
+                    Ret::Bool(true)
+                }
+            }
+            (SeqModel::Map(m), Op::MapRemove(k)) => Ret::Bool(m.remove(k).is_some()),
+            (SeqModel::Map(m), Op::MapGet(k)) => Ret::Val(m.get(k).copied()),
+            (model, op) => panic!("op {op:?} does not fit model {model:?}"),
+        }
+    }
+
+    /// A canonical serialization of the state, used as (half of) the
+    /// memoization key in the checker's DFS. Exact — two states share a
+    /// canon iff they are equal — so memoization can never mask a real
+    /// linearization.
+    pub fn canon(&self) -> Vec<u64> {
+        match self {
+            SeqModel::Stack(s) => s.clone(),
+            SeqModel::Queue(q) => q.iter().copied().collect(),
+            SeqModel::Set(s) => s.iter().copied().collect(),
+            SeqModel::Map(m) => m.iter().flat_map(|(&k, &v)| [k, v]).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_lifo() {
+        let mut m = SeqModel::new(ModelKind::Stack);
+        assert_eq!(m.apply(&Op::Push(1)), Ret::Unit);
+        assert_eq!(m.apply(&Op::Push(2)), Ret::Unit);
+        assert_eq!(m.apply(&Op::Pop), Ret::Val(Some(2)));
+        assert_eq!(m.apply(&Op::Pop), Ret::Val(Some(1)));
+        assert_eq!(m.apply(&Op::Pop), Ret::Val(None));
+    }
+
+    #[test]
+    fn queue_fifo() {
+        let mut m = SeqModel::new(ModelKind::Queue);
+        m.apply(&Op::Enq(1));
+        m.apply(&Op::Enq(2));
+        assert_eq!(m.apply(&Op::Deq), Ret::Val(Some(1)));
+        assert_eq!(m.apply(&Op::Deq), Ret::Val(Some(2)));
+        assert_eq!(m.apply(&Op::Deq), Ret::Val(None));
+    }
+
+    #[test]
+    fn set_semantics() {
+        let mut m = SeqModel::new(ModelKind::Set);
+        assert_eq!(m.apply(&Op::SetInsert(5)), Ret::Bool(true));
+        assert_eq!(m.apply(&Op::SetInsert(5)), Ret::Bool(false));
+        assert_eq!(m.apply(&Op::SetContains(5)), Ret::Bool(true));
+        assert_eq!(m.apply(&Op::SetRemove(5)), Ret::Bool(true));
+        assert_eq!(m.apply(&Op::SetRemove(5)), Ret::Bool(false));
+        assert_eq!(m.apply(&Op::SetContains(5)), Ret::Bool(false));
+    }
+
+    #[test]
+    fn map_insert_rejects_duplicates_like_the_table() {
+        let mut m = SeqModel::new(ModelKind::Map);
+        assert_eq!(m.apply(&Op::MapInsert(1, 10)), Ret::Bool(true));
+        assert_eq!(m.apply(&Op::MapInsert(1, 99)), Ret::Bool(false));
+        assert_eq!(m.apply(&Op::MapGet(1)), Ret::Val(Some(10)), "duplicate must not clobber");
+        assert_eq!(m.apply(&Op::MapRemove(1)), Ret::Bool(true));
+        assert_eq!(m.apply(&Op::MapGet(1)), Ret::Val(None));
+    }
+
+    #[test]
+    fn canon_distinguishes_order_sensitive_states() {
+        let mut a = SeqModel::new(ModelKind::Stack);
+        let mut b = SeqModel::new(ModelKind::Stack);
+        a.apply(&Op::Push(1));
+        a.apply(&Op::Push(2));
+        b.apply(&Op::Push(2));
+        b.apply(&Op::Push(1));
+        assert_ne!(a.canon(), b.canon());
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn mismatched_op_panics() {
+        SeqModel::new(ModelKind::Stack).apply(&Op::Deq);
+    }
+}

@@ -177,6 +177,7 @@ fn epoch_cfg(scale: Scale, workload: EpochWorkload, na: bool, locales: usize) ->
         fcfs_local_election: true,
         slow_locale: None,
         slow_factor: 8,
+        stalled_task: None,
         topology: TopologyKind::default(),
         seed: 7,
     }

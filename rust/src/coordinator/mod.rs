@@ -11,8 +11,8 @@ use crate::runtime::SharedReclaimScan;
 use crate::sim::{run_epoch, EpochConfig, EpochWorkload};
 use crate::util::cli::Args;
 use crate::util::table::{fmt_ops, Table};
-use crate::bail;
 use crate::util::error::Result;
+use crate::{bail, err};
 use figures::Scale;
 use std::sync::Arc;
 use std::time::Instant;
@@ -24,6 +24,13 @@ Usage: pgas-nb <subcommand> [--opts]
 Subcommands:
   bench <fig3|fig4|fig5|fig6|fig7|fig9|election>   regenerate a figure
         [--quick] [--csv]
+  check [--seeds 1,2,3] [--collections stack,queue,list,map]
+        [--locales N] [--tasks N] [--ops N] [--keys N] [--topology T]
+        [--agg-capacity N] [--reclaim-every K] [--stall] [--adversarial]
+        [--out DIR] [--mutate]
+                                              linearizability & reclamation-
+                                              safety checker (see README
+                                              \"Testing & verification\")
   demo  [--locales N] [--tasks N]             real-substrate collections demo
   scan  [--locales N] [--tokens N] [--topology T]
                                               PJRT reclaim-scan vs scalar oracle
@@ -50,6 +57,7 @@ fn parse_topology(args: &Args) -> TopologyKind {
 pub fn run_cli(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("bench") => cmd_bench(args),
+        Some("check") => cmd_check(args),
         Some("demo") => cmd_demo(args),
         Some("scan") => cmd_scan(args),
         Some("sim") => cmd_sim(args),
@@ -95,6 +103,266 @@ fn cmd_bench(args: &Args) -> Result<()> {
         other => bail!("unknown figure '{other}'"),
     }
     eprintln!("[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Strictly parse a numeric `check` knob: absent → default, present but
+/// unparseable → error. (`Args::get_usize`'s warn-and-default fallback
+/// is fine for benches; a correctness gate must not quietly run a
+/// different experiment than the one asked for.)
+fn check_knob<T: std::str::FromStr>(args: &Args, name: &str, default: T) -> Result<T> {
+    match args.get(name) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| err!("--{name}: expected a number, got '{v}'")),
+    }
+}
+
+/// The linearizability & reclamation-safety suite: drive the real
+/// collections under seeded (optionally adversarial) schedules, check
+/// every recorded history against its sequential model, audit every
+/// object lifecycle, and write minimized counterexamples to `--out` for
+/// CI artifact upload. `--mutate` instead runs the self-test: deliberate
+/// bugs must be detected, the faithful control must pass.
+fn cmd_check(args: &Args) -> Result<()> {
+    use crate::check::{check_collection, render_history, CheckCfg, Collection};
+    let out_dir = args.get_or("out", "check-failures");
+
+    // `check` takes no operands beyond the subcommand; a stray one is
+    // almost always a list split by a space (`--seeds 1, 2,3` leaves
+    // "2,3" positional) and would silently shrink the gate.
+    if let Some(extra) = args.positional().get(1) {
+        bail!("unexpected operand '{extra}' (did a --seeds/--collections list contain a space?)");
+    }
+    // A token after a bare flag is absorbed as its value and would make
+    // the flag read as false — `check --mutate now` must not silently
+    // run the ordinary suite instead of the self-test.
+    for b in ["mutate", "adversarial", "stall", "csv"] {
+        if let Some(v) = args.get(b) {
+            if v != "true" {
+                bail!("--{b} is a flag and takes no value (got '{v}')");
+            }
+        }
+    }
+    // The converse: a value-taking option typed with its value missing
+    // (`check --seeds<enter>`) parses as a bare flag and would silently
+    // fall back to the default experiment.
+    for opt in [
+        "seeds", "collections", "locales", "tasks", "ops", "keys", "topology", "agg-capacity",
+        "reclaim-every", "out",
+    ] {
+        if args.flag(opt) && args.get(opt).is_none() {
+            bail!("--{opt} requires a value");
+        }
+    }
+    if args.flag("mutate") {
+        // The self-test is a fixed, fully deterministic 0..50 scan; any
+        // suite knob would be silently ignored and let a user believe a
+        // customized mutation run happened.
+        for opt in [
+            "seeds", "collections", "locales", "tasks", "ops", "keys", "topology",
+            "agg-capacity", "reclaim-every",
+        ] {
+            if args.get(opt).is_some() || args.flag(opt) {
+                bail!("--mutate runs a fixed self-test; --{opt} does not apply (drop it)");
+            }
+        }
+        for f in ["adversarial", "stall"] {
+            if args.flag(f) {
+                bail!("--mutate runs a fixed self-test; --{f} does not apply (drop it)");
+            }
+        }
+        return cmd_check_mutate(out_dir);
+    }
+    let seeds = args.get_u64_list("seeds", &[1, 2, 3])?;
+    if seeds.is_empty() {
+        // Only stray commas survive parsing as an empty list (bad tokens
+        // already errored above); a gate must not pass vacuously.
+        bail!("--seeds parsed to an empty list (expected comma-separated u64s)");
+    }
+    let mut collections = Vec::new();
+    for name in args.get_str_list("collections", &["stack", "queue", "list", "map"]) {
+        match Collection::parse(&name) {
+            Some(c) => collections.push(c),
+            None => bail!("unknown collection '{name}' (stack|queue|list|map)"),
+        }
+    }
+    if collections.is_empty() {
+        bail!("--collections parsed to an empty list");
+    }
+    let base = if args.flag("adversarial") {
+        CheckCfg::adversarial(0)
+    } else {
+        CheckCfg::quick(0)
+    };
+    // An explicit --topology wins and must name a real wiring — a typo
+    // must not silently degrade the adversarial schedule to flat (the
+    // lenient get_choice fallback is fine for benches, not for a gate).
+    // Without the flag, keep the base profile's wiring (--adversarial
+    // means dragonfly, not the flat default).
+    let topology = match args.get("topology") {
+        None => base.topology,
+        Some(s) => match TopologyKind::parse(s) {
+            Some(k) => k,
+            None => bail!("unknown topology '{s}' ({})", topology_choices().join("|")),
+        },
+    };
+    // Bounds the library enforces with asserts become CLI errors here
+    // (a panic mid-gate skips the table/summary CI logs rely on), and
+    // malformed numbers are errors rather than silent defaults.
+    let locales = check_knob(args, "locales", base.locales)?;
+    let tasks_per_locale = check_knob(args, "tasks", base.tasks_per_locale)?;
+    let ops_per_task = check_knob(args, "ops", base.ops_per_task)?;
+    let key_space: u64 = check_knob(args, "keys", base.key_space)?;
+    let agg_capacity = check_knob(args, "agg-capacity", base.agg_capacity)?;
+    let reclaim_every = check_knob(args, "reclaim-every", base.reclaim_every)?;
+    if locales == 0 || tasks_per_locale == 0 {
+        bail!("--locales and --tasks must be at least 1");
+    }
+    if ops_per_task == 0 {
+        bail!("--ops must be at least 1 (an empty run checks nothing)");
+    }
+    if key_space == 0 {
+        bail!("--keys must be at least 1");
+    }
+    if agg_capacity == 0 {
+        bail!("--agg-capacity must be at least 1 (1 = unbuffered)");
+    }
+    let stalled_reader = args.flag("stall") || base.stalled_reader;
+    if stalled_reader && locales * tasks_per_locale < 2 {
+        // Task 0 becomes the stalled reader; with no worker left the run
+        // would record an empty history and pass vacuously.
+        bail!("--stall/--adversarial needs at least 2 total tasks (locales x tasks)");
+    }
+    let cfg_for = |seed: u64| CheckCfg {
+        seed,
+        locales,
+        tasks_per_locale,
+        ops_per_task,
+        key_space,
+        topology,
+        agg_capacity,
+        reclaim_every,
+        stalled_reader,
+    };
+
+    println!("check: seeds {seeds:?}");
+    let mut t = Table::new(&[
+        "seed", "collection", "events", "linearizable", "violations", "leaked", "ms",
+    ]);
+    let mut failures = 0usize;
+    for &seed in &seeds {
+        let cfg = cfg_for(seed);
+        for &c in &collections {
+            let t0 = Instant::now();
+            let out = check_collection(c, &cfg);
+            let ms = t0.elapsed().as_millis();
+            t.row_display(&[
+                seed.to_string(),
+                c.label().to_string(),
+                out.history.len().to_string(),
+                if out.lin.is_ok() { "yes".into() } else { "NO".into() },
+                out.violations.len().to_string(),
+                out.leaked.to_string(),
+                ms.to_string(),
+            ]);
+            if !out.passed() {
+                failures += 1;
+                std::fs::create_dir_all(out_dir)?;
+                let path = format!("{out_dir}/{}_seed{}.history.txt", c.label(), seed);
+                let mut body = String::new();
+                if let Err(f) = &out.lin {
+                    body.push_str(&format!("{f}\n== minimized counterexample ==\n"));
+                    if let Some(min) = &out.minimized {
+                        body.push_str(&render_history(min));
+                    }
+                }
+                for v in &out.violations {
+                    body.push_str(&format!("reclamation violation [{:?}]: {}\n", v.kind, v.detail));
+                }
+                if out.leaked != 0 {
+                    body.push_str(&format!("leaked objects: {}\n", out.leaked));
+                }
+                std::fs::write(&path, body)?;
+                eprintln!("FAILURE: {} seed {} -> {}", c.label(), seed, path);
+            }
+        }
+    }
+    emit(args, "linearizability & reclamation-safety check", &t);
+    if failures > 0 {
+        bail!("{failures} check(s) failed; minimized histories in {out_dir}/");
+    }
+    Ok(())
+}
+
+/// The `--mutate` self-test: each deliberately-broken variant must be
+/// detected within a bounded seed scan, and the faithful decomposition
+/// must never be. A checker that cannot catch a planted bug is worse
+/// than no checker — it manufactures confidence.
+fn cmd_check_mutate(out_dir: &str) -> Result<()> {
+    use crate::check::{
+        check_history, first_detecting_seed, first_seed_detected_by, minimize, render_history,
+        run_sim, Detector, Mutant, SimCfg, SimKind,
+    };
+    // Each mutant must be caught by the oracle it was built to defeat
+    // (`Detector::Any` here would let the audit oracle mask a dead
+    // linearizability checker: a split CAS also double-retires).
+    let cases = [
+        (SimKind::Stack, Mutant::StackSplitCas, Detector::NonLinearizable, "non-linearizable"),
+        (SimKind::Queue, Mutant::QueueSplitCas, Detector::NonLinearizable, "non-linearizable"),
+        (SimKind::Stack, Mutant::SkipDeferGuard, Detector::UseAfterFree, "use-after-free"),
+    ];
+    // Controls first, once per structure, over the SAME seed range the
+    // mutants are hunted over: a checker false-positive anywhere in that
+    // range would otherwise masquerade as a detection. The control arm
+    // uses the strictest detector — NOTHING may fire on faithful runs.
+    for kind in [SimKind::Stack, SimKind::Queue] {
+        if let Some(s) = first_detecting_seed(kind, Mutant::None, 50) {
+            bail!("control run falsely detected at seed {s} ({kind:?}) — checker is unsound");
+        }
+    }
+    let mut t = Table::new(&["structure", "mutant", "expected", "detected at seed"]);
+    let mut escaped = 0;
+    for (kind, mutant, det, expected) in cases {
+        match first_seed_detected_by(kind, mutant, 50, det) {
+            Some(seed) => {
+                t.row_display(&[
+                    format!("{kind:?}"),
+                    mutant.label().to_string(),
+                    expected.to_string(),
+                    seed.to_string(),
+                ]);
+                if mutant == Mutant::StackSplitCas {
+                    // Show the minimized counterexample for the README's
+                    // reproduce-a-failure walkthrough.
+                    let run = run_sim(&SimCfg::new(kind, mutant, seed));
+                    if check_history(run.model, &run.history).is_err() {
+                        let min = minimize(run.model, &run.history);
+                        std::fs::create_dir_all(out_dir)?;
+                        let path = format!("{out_dir}/mutant_{}.history.txt", mutant.label());
+                        std::fs::write(&path, render_history(&min))?;
+                        println!(
+                            "minimized {} counterexample ({} events) -> {path}",
+                            mutant.label(),
+                            min.len()
+                        );
+                    }
+                }
+            }
+            None => {
+                t.row_display(&[
+                    format!("{kind:?}"),
+                    mutant.label().to_string(),
+                    expected.to_string(),
+                    "ESCAPED".to_string(),
+                ]);
+                escaped += 1;
+            }
+        }
+    }
+    println!("\n=== mutation self-test ===\n{}", t.render());
+    if escaped > 0 {
+        bail!("{escaped} mutant(s) escaped the checker");
+    }
     Ok(())
 }
 
@@ -229,7 +497,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let mut t = Table::new(&[
         "locales", "mops", "advances", "lost_local", "lost_global", "freed", "queued_ms",
     ]);
-    for locales in args.get_usize_list("locales", &[2, 4, 8, 16]) {
+    for locales in args.get_usize_list("locales", &[2, 4, 8, 16])? {
         let cfg = EpochConfig {
             workload,
             model,
@@ -240,6 +508,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
             fcfs_local_election: !args.flag("no-fcfs"),
             slow_locale: args.get("slow-locale").and_then(|v| v.parse().ok()),
             slow_factor: args.get_u64("slow-factor", 8),
+            stalled_task: None,
             topology,
             seed: args.get_u64("seed", 7),
         };
@@ -330,6 +599,38 @@ mod tests {
     #[test]
     fn bench_unknown_fig_errors() {
         assert!(run_cli(&argv("bench fig99")).is_err());
+    }
+
+    #[test]
+    fn check_quick_point_runs_clean() {
+        run_cli(&argv("check --seeds 5 --ops 60 --locales 2 --tasks 2 --collections stack,map"))
+            .unwrap();
+    }
+
+    #[test]
+    fn check_mutate_self_test_detects_every_mutant() {
+        run_cli(&argv("check --mutate --out target/check-mutate-test")).unwrap();
+    }
+
+    #[test]
+    fn check_rejects_unknown_collection() {
+        assert!(run_cli(&argv("check --collections bogus")).is_err());
+    }
+
+    #[test]
+    fn check_rejects_gate_weakening_typos() {
+        // Unknown topology must not silently degrade to flat.
+        assert!(run_cli(&argv("check --topology dragon-fly")).is_err());
+        // A list split by a space leaves a stray operand: hard error,
+        // not a silently shorter seed list.
+        assert!(run_cli(&argv("check --seeds 1, 2,3")).is_err());
+        // An unparseable seed token is an error, not a dropped seed.
+        assert!(run_cli(&argv("check --seeds 1,2x,3")).is_err());
+        // Malformed numeric knobs error instead of silently defaulting.
+        assert!(run_cli(&argv("check --ops 50O")).is_err());
+        // A token absorbed by a bare flag must not flip it off silently
+        // (--mutate now would otherwise run the ordinary suite).
+        assert!(run_cli(&argv("check --mutate now")).is_err());
     }
 
     #[test]

@@ -387,6 +387,9 @@ impl EpochManager {
         let new_epoch = this_epoch % NUM_EPOCHS + 1;
         sh.pgas.charge(NicOp::Atomic64, sh.global_home);
         sh.global_epoch.store(new_epoch, Ordering::SeqCst);
+        if let Some(a) = sh.pgas.audit() {
+            a.on_advance(new_epoch);
+        }
 
         // (5) Flush every locale's deferral-aggregation buffers so each
         // migrated entry reaches its owner's limbo list before *any* list
@@ -631,6 +634,14 @@ impl EpochToken {
             let e = inst.locale_epoch.load(Ordering::SeqCst);
             tok.local_epoch.store(e, Ordering::SeqCst);
             if inst.locale_epoch.load(Ordering::SeqCst) == e {
+                // Audit AFTER the pin is published: the auditor's pinned
+                // set must never contain a token the protocol could still
+                // treat as quiescent (that would manufacture false
+                // premature-free reports; the reverse slack only costs
+                // detection strength).
+                if let Some(a) = sh.pgas.audit() {
+                    a.on_pin(self.tok.as_ptr() as usize, e);
+                }
                 return;
             }
             // Retry pays the re-read + re-publish.
@@ -642,6 +653,13 @@ impl EpochToken {
     pub fn unpin(&self) {
         let sh = &self.mgr.sh;
         sh.pgas.charge(NicOp::Atomic64, self.locale);
+        // Audit BEFORE the store (mirror-image of `pin`): between hook
+        // and store the protocol still sees us pinned and blocks frees,
+        // so the auditor closing the session early can only lose a
+        // detection, never invent one.
+        if let Some(a) = sh.pgas.audit() {
+            a.on_unpin(self.tok.as_ptr() as usize);
+        }
         // Release is sufficient: a scanner that misses this store merely
         // sees the token still pinned and aborts conservatively; safety
         // never depends on observing an unpin promptly.
@@ -667,6 +685,11 @@ impl EpochToken {
         let inst = sh.inst.on_locale(self.locale);
         let idx = (epoch - 1) as usize;
         inst.deferred.fetch_add(1, Ordering::Relaxed);
+        // Shadow the retirement before the entry can reach any limbo
+        // list (and thus before any drain could free it).
+        if let Some(a) = sh.pgas.audit() {
+            a.on_retire(e.wide, epoch);
+        }
         if e.locale() == self.locale {
             // Local-owned: wait-free limbo push (pool recycle DCAS + one
             // exchange), exactly Listing 2.
@@ -720,6 +743,12 @@ impl Drop for EpochToken {
         let sh = &self.mgr.sh;
         let inst = sh.inst.on_locale(self.locale);
         sh.pgas.charge(NicOp::Atomic128, self.locale);
+        // Unregistering quiesces the token; close any open audit session
+        // (token pointers are recycled, so a stale session would
+        // otherwise be misattributed to the next holder).
+        if let Some(a) = sh.pgas.audit() {
+            a.on_unpin(self.tok.as_ptr() as usize);
+        }
         inst.tokens.unregister(self.token());
     }
 }
@@ -1000,6 +1029,50 @@ mod tests {
         let em = EpochManager::new(Arc::clone(&p));
         let tok = em.register();
         tok.defer_delete(p.alloc(LocaleId(0), 1u64));
+    }
+
+    #[test]
+    fn audited_reclamation_cycle_is_clean() {
+        use crate::check::{ReclaimAudit, ReclaimAuditor};
+        let p = pgas(2);
+        let auditor = Arc::new(ReclaimAuditor::new());
+        assert!(p.set_audit(Arc::clone(&auditor) as Arc<dyn ReclaimAudit>));
+        let em = EpochManager::new(Arc::clone(&p));
+        let tok = em.register();
+        tok.pin();
+        tok.defer_delete(p.alloc(LocaleId(1), 9u64));
+        tok.unpin();
+        for _ in 0..3 {
+            assert!(em.try_reclaim().advanced());
+        }
+        assert_eq!(p.live_objects(), 0);
+        let c = auditor.counts();
+        assert_eq!((c.retires, c.frees, c.pins), (1, 1, 1));
+        assert!(c.advances >= 3);
+        assert!(auditor.ok(), "correct protocol must audit clean: {:?}", auditor.violations());
+    }
+
+    #[test]
+    fn audited_clear_under_live_pin_is_flagged_premature() {
+        // `clear()` requires that no task is interacting with the
+        // manager. Violating that contract — freeing a deferral whose
+        // retire-time pin session is still open — is exactly what the
+        // auditor's EBR rule flags.
+        use crate::check::{ReclaimAudit, ReclaimAuditor, ViolationKind};
+        let p = pgas(1);
+        let auditor = Arc::new(ReclaimAuditor::new());
+        assert!(p.set_audit(Arc::clone(&auditor) as Arc<dyn ReclaimAudit>));
+        let em = EpochManager::new(Arc::clone(&p));
+        let tok = em.register();
+        tok.pin();
+        tok.defer_delete(p.alloc(LocaleId(0), 1u64));
+        em.clear(); // still pinned: the freed node was protected
+        assert!(
+            auditor.violations().iter().any(|v| v.kind == ViolationKind::PrematureFree),
+            "free under an open retire-time pin session must be flagged: {:?}",
+            auditor.violations()
+        );
+        tok.unpin();
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! pgas-nb: distributed non-blocking algorithms and data structures in the
 //! Partitioned Global Address Space model.
 pub mod atomics;
+pub mod check;
 pub mod collections;
 pub mod coordinator;
 pub mod epoch;

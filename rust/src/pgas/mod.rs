@@ -25,8 +25,10 @@ pub use task::{coforall_locales, coforall_tasks, forall_cyclic, here, with_local
 pub use topology::{LocaleId, Machine};
 pub use wide_ptr::WidePtr;
 
+use crate::check::ReclaimAudit;
 use crate::fabric::{LinkStats, NetTotals, Network, Topology, TopologyKind};
 use crossbeam_utils::CachePadded;
+use once_cell::sync::OnceCell;
 use std::sync::{Arc, Mutex};
 
 /// One PGAS "job": a machine shape, a NIC per locale, heap accounting per
@@ -44,6 +46,10 @@ pub struct Pgas {
     /// live substrate has no global virtual clock, so the network is used
     /// in tally mode (no queueing); congestion emerges in the DES testbed.
     net: Mutex<Network>,
+    /// Optional reclamation auditor (the `check` subsystem's shadow
+    /// lifecycle machine). Set-once; a lock-free `get` per alloc/free
+    /// when attached, a single atomic load when not.
+    audit: OnceCell<Arc<dyn ReclaimAudit>>,
 }
 
 impl Pgas {
@@ -71,7 +77,22 @@ impl Pgas {
             heaps: machine.locale_ids().map(|_| CachePadded::new(HeapStats::default())).collect(),
             net: Mutex::new(Network::new(Arc::clone(&topo))),
             topo,
+            audit: OnceCell::new(),
         })
+    }
+
+    /// Attach a reclamation auditor (once per job). Every subsequent
+    /// alloc/free — and, through [`crate::epoch::EpochManager`], every
+    /// pin/unpin/retire/advance — is mirrored into it. Returns `false`
+    /// if an auditor was already attached.
+    pub fn set_audit(&self, a: Arc<dyn ReclaimAudit>) -> bool {
+        self.audit.set(a).is_ok()
+    }
+
+    /// The attached auditor, if any.
+    #[inline]
+    pub fn audit(&self) -> Option<&Arc<dyn ReclaimAudit>> {
+        self.audit.get()
     }
 
     /// Single-locale substrate with zero modeled latency — the default for
@@ -200,7 +221,11 @@ impl Pgas {
         assert!(self.machine.contains(loc), "allocation on unknown locale");
         let addr = heap::raw_alloc(value);
         self.heaps[loc.index()].allocs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        GlobalPtr::from_wide(WidePtr::new(loc, addr))
+        let wide = WidePtr::new(loc, addr);
+        if let Some(a) = self.audit.get() {
+            a.on_alloc(wide);
+        }
+        GlobalPtr::from_wide(wide)
     }
 
     /// Allocate on the current locale.
@@ -218,6 +243,11 @@ impl Pgas {
     pub unsafe fn free_erased(&self, e: ErasedPtr) {
         debug_assert!(!e.wide.is_nil(), "free of nil");
         self.heaps[e.locale().index()].frees.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // Flip the shadow state BEFORE the memory is reused, so a racing
+        // audited access can only be flagged, never missed.
+        if let Some(a) = self.audit.get() {
+            a.on_free(e.wide);
+        }
         unsafe { e.drop_in_place() }
     }
 
@@ -441,6 +471,20 @@ mod tests {
             p.comm_totals().transit_ns,
             p.topology().transit_ns(LocaleId(1), LocaleId(2), 64 * 16)
         );
+    }
+
+    #[test]
+    fn audit_hooks_mirror_alloc_and_free() {
+        use crate::check::ReclaimAuditor;
+        let p = pgas4();
+        let auditor = Arc::new(ReclaimAuditor::new());
+        assert!(p.set_audit(Arc::clone(&auditor) as Arc<dyn ReclaimAudit>));
+        assert!(!p.set_audit(Arc::clone(&auditor) as Arc<dyn ReclaimAudit>), "set-once");
+        let g = p.alloc(LocaleId(1), 5u64);
+        unsafe { p.free(g) };
+        let c = auditor.counts();
+        assert_eq!((c.allocs, c.frees), (1, 1));
+        assert!(auditor.ok());
     }
 
     #[test]

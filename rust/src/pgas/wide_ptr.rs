@@ -137,6 +137,72 @@ mod tests {
     }
 
     #[test]
+    fn compress_roundtrip_property() {
+        use crate::util::proptest::{shrink_u64, Prop};
+        // Deterministic edge cases first: the corners a random draw can
+        // miss (max locale, max offset, and both at once).
+        for (locale, addr) in [
+            (0u16, 0u64),
+            (0, ADDR_MASK),
+            (u16::MAX, 0),
+            (u16::MAX, ADDR_MASK),
+            (1, 1),
+            (u16::MAX - 1, ADDR_MASK - 1),
+        ] {
+            let w = WidePtr::new(LocaleId(locale), addr);
+            assert_eq!(WidePtr::decompress(w.compress().unwrap()), w);
+            assert_eq!(WidePtr::from_u128(w.to_u128()), w);
+        }
+        // Then the property: for ANY (locale, addr) — including addrs
+        // beyond 48 bits — compression either round-trips exactly or is
+        // refused, precisely when the address exceeds the mask.
+        Prop::new("widptr compress/decompress identity").cases(512).check(
+            |rng| {
+                let locale = (rng.next_u64() & 0xFFFF) as u16;
+                // 1 in 4 draws exercises the non-canonical (>48-bit) range.
+                let addr = if rng.chance(0.25) {
+                    rng.next_u64() | (1 << ADDR_BITS)
+                } else {
+                    rng.next_u64() & ADDR_MASK
+                };
+                (locale, addr)
+            },
+            |&(locale, addr)| {
+                let w = WidePtr::new(LocaleId(locale), addr);
+                match w.compress() {
+                    Some(c) => {
+                        if addr & !ADDR_MASK != 0 {
+                            return Err(format!("non-canonical {addr:#x} compressed"));
+                        }
+                        if WidePtr::decompress(c) != w {
+                            return Err(format!("roundtrip mangled {w:?}"));
+                        }
+                        if c >> ADDR_BITS != locale as u64 {
+                            return Err("locale not in the top 16 bits".into());
+                        }
+                    }
+                    None => {
+                        if addr & !ADDR_MASK == 0 {
+                            return Err(format!("canonical {addr:#x} refused"));
+                        }
+                    }
+                }
+                if WidePtr::from_u128(w.to_u128()) != w {
+                    return Err(format!("u128 roundtrip mangled {w:?}"));
+                }
+                Ok(())
+            },
+            |&(locale, addr)| {
+                shrink_u64(addr)
+                    .into_iter()
+                    .map(|a| (locale, a))
+                    .chain(shrink_u64(locale as u64).into_iter().map(|l| (l as u16, addr)))
+                    .collect()
+            },
+        );
+    }
+
+    #[test]
     fn locale_occupies_top_16_bits() {
         let w = WidePtr::new(LocaleId(0xABCD), 0x1234_5678_9ABC);
         let c = w.compress().unwrap();

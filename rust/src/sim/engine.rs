@@ -16,9 +16,39 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Virtual nanoseconds.
 pub type VTime = u64;
+
+/// A shared monotonic virtual clock for stamping events from *real*
+/// concurrent tasks (the history recorder in [`crate::check`]). Each
+/// `stamp()` is a sequentially-consistent fetch-add, so the stamps form a
+/// total order consistent with real time: if operation A's response stamp
+/// is below operation B's invoke stamp, A really completed before B began
+/// — exactly the precedence relation a linearizability checker needs.
+/// (The DES engine itself needs no such clock: its `VTime` flows from the
+/// event heap.)
+#[derive(Debug, Default)]
+pub struct VClock(AtomicU64);
+
+impl VClock {
+    pub fn new() -> VClock {
+        VClock::default()
+    }
+
+    /// The current virtual time (no advance).
+    #[inline]
+    pub fn now(&self) -> VTime {
+        self.0.load(Ordering::SeqCst)
+    }
+
+    /// Advance the clock and return a fresh, unique timestamp (> 0).
+    #[inline]
+    pub fn stamp(&self) -> VTime {
+        self.0.fetch_add(1, Ordering::SeqCst) + 1
+    }
+}
 
 /// A serialization point: one op at a time, FIFO in virtual time.
 ///
@@ -225,6 +255,28 @@ mod tests {
         assert_eq!(r.acquire(100, 10), 110, "idle gap: starts immediately");
         assert_eq!(r.ops(), 3);
         assert!(r.utilization(110) < 0.3);
+    }
+
+    #[test]
+    fn vclock_stamps_are_unique_and_monotonic_across_threads() {
+        let clock = VClock::new();
+        let stamps: Vec<Vec<VTime>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| s.spawn(|| (0..1_000).map(|_| clock.stamp()).collect::<Vec<_>>()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Per-thread monotonic…
+        for per in &stamps {
+            assert!(per.windows(2).all(|w| w[0] < w[1]));
+        }
+        // …and globally unique.
+        let mut all: Vec<VTime> = stamps.into_iter().flatten().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 4_000);
+        assert_eq!(clock.now(), 4_000);
+        assert!(all.iter().all(|&t| t > 0), "stamps are strictly positive");
     }
 
     #[test]

@@ -32,6 +32,20 @@ pub enum EpochWorkload {
     ReadOnly,
 }
 
+/// Failure injection: one simulated task pins and then *holds* the pin
+/// across its first `hold_iters` iterations (a stalled reader — page
+/// fault storm, debugger, OS preemption). The epoch protocol must
+/// respond with `NotQuiescent` aborts, never by freeing under the stale
+/// pin; the `check` subsystem uses the same adversarial shape against
+/// the real manager.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct StalledTask {
+    /// Global task index (0-based) of the stalled task.
+    pub task: usize,
+    /// Iterations it keeps its first pin open.
+    pub hold_iters: usize,
+}
+
 /// Configuration of one data point.
 #[derive(Clone, Debug)]
 pub struct EpochConfig {
@@ -51,6 +65,8 @@ pub struct EpochConfig {
     pub slow_locale: Option<usize>,
     /// Slowdown multiplier for `slow_locale` (default 8).
     pub slow_factor: u64,
+    /// Failure injection: a task that holds its pin (see [`StalledTask`]).
+    pub stalled_task: Option<StalledTask>,
     /// Interconnect wiring; every remote atomic, AM and scatter transfer
     /// crosses it hop by hop, queueing on busy links. The default
     /// [`TopologyKind::FlatZero`] reproduces the flat model exactly.
@@ -315,6 +331,11 @@ impl Workload for EpochSim {
         match phase {
             Phase::Pin => {
                 if self.tasks[tid].remaining == 0 {
+                    // Quiesce on exit even if a stall injection was still
+                    // holding the pin (the real token's Drop unregisters
+                    // it); otherwise a stalled task whose program ends
+                    // inside hold_iters would block advances forever.
+                    self.tasks[tid].epoch = 0;
                     self.active -= 1;
                     // Fig 6: last task out runs manager.clear().
                     if self.active == 0 && matches!(cfg.workload, EpochWorkload::DeleteReclaimAtEnd) {
@@ -333,7 +354,12 @@ impl Workload for EpochSim {
                 // network atomics are on.
                 let t2 = t1 + cfg.model.cost(NicOp::Atomic64, false);
                 let t3 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].epoch_res, t2);
-                self.tasks[tid].epoch = self.locs[me].epoch;
+                // Idempotent while pinned, like the real token: a stalled
+                // task keeps its ORIGINAL epoch, it does not migrate
+                // forward (that would hide the stall from the scan).
+                if self.tasks[tid].epoch == 0 {
+                    self.tasks[tid].epoch = self.locs[me].epoch;
+                }
                 self.tasks[tid].phase = if self.deleting() { Phase::Defer } else { Phase::Unpin };
                 Step::ResumeAt(t3)
             }
@@ -354,7 +380,12 @@ impl Workload for EpochSim {
                 Step::ResumeAt(t2)
             }
             Phase::Unpin => {
-                self.tasks[tid].epoch = 0;
+                let stalled = cfg
+                    .stalled_task
+                    .is_some_and(|s| tid == s.task && self.tasks[tid].iter <= s.hold_iters);
+                if !stalled {
+                    self.tasks[tid].epoch = 0;
+                }
                 let t = now + cfg.model.cost(NicOp::Atomic64, false); // token store
                 self.tasks[tid].phase = Phase::MaybeReclaim;
                 Step::ResumeAt(t)
@@ -595,6 +626,7 @@ mod tests {
             fcfs_local_election: true,
             slow_locale: None,
             slow_factor: 8,
+            stalled_task: None,
             topology: TopologyKind::default(),
             seed: 7,
         }
@@ -728,6 +760,40 @@ mod tests {
         // slower fabric legitimately changes election outcomes).
         assert_eq!(flat.total_iters, ring.total_iters);
         assert!(ring.freed <= ring.total_iters);
+    }
+
+    #[test]
+    fn stalled_pinned_task_forces_quiescence_aborts_not_unsafe_frees() {
+        let base = run_epoch(cfg(EpochWorkload::DeleteReclaimEvery(64), 2));
+        let mut c = cfg(EpochWorkload::DeleteReclaimEvery(64), 2);
+        c.stalled_task = Some(StalledTask { task: 0, hold_iters: 1_024 });
+        let r = run_epoch(c.clone());
+        // The stale pin must surface as NotQuiescent aborts…
+        assert!(
+            r.not_quiescent > base.not_quiescent,
+            "stall must abort scans: {} vs {}",
+            r.not_quiescent,
+            base.not_quiescent
+        );
+        // …not as lost work or phantom frees, and reclamation must
+        // resume once the stall releases.
+        assert_eq!(r.total_iters, base.total_iters);
+        assert!(r.advances > 0, "advances resume after the stall releases");
+        assert!(r.freed <= r.total_iters);
+        // Deterministic like every other failure injection.
+        let r2 = run_epoch(c);
+        assert_eq!(r.makespan_ns, r2.makespan_ns);
+        assert_eq!(r.not_quiescent, r2.not_quiescent);
+
+        // A stall outliving the whole program must quiesce on task exit
+        // (mirroring `EpochToken`'s Drop): the run completes with full
+        // work done rather than wedging every scan until the end.
+        let mut c3 = cfg(EpochWorkload::DeleteReclaimEvery(64), 2);
+        c3.stalled_task = Some(StalledTask { task: 0, hold_iters: usize::MAX });
+        let r3 = run_epoch(c3);
+        assert_eq!(r3.total_iters, base.total_iters);
+        assert!(r3.advances >= 1, "in-epoch advances still possible under the stall");
+        assert!(r3.not_quiescent > base.not_quiescent);
     }
 
     #[test]

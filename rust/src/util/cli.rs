@@ -126,15 +126,43 @@ impl Args {
     }
 
     /// Parse a comma-separated list of integers, e.g. `--locales 2,4,8,16`.
-    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        self.get_list(name, default)
+    }
+
+    /// Parse a comma-separated list of `T`s, e.g. `--seeds 1,2,3`.
+    /// Empty tokens (stray commas) are skipped; any other unparseable
+    /// token is an error naming it — a silently-shortened list must not
+    /// weaken a gate built on it (`check` seeds, sweep points).
+    pub fn get_list<T: std::str::FromStr + Clone>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, String> {
         match self.get(name) {
-            None => default.to_vec(),
+            None => Ok(default.to_vec()),
             Some(v) => v
                 .split(',')
+                .map(str::trim)
                 .filter(|t| !t.is_empty())
-                .filter_map(|t| t.trim().parse().ok())
+                .map(|t| {
+                    t.parse::<T>().map_err(|_| format!("--{name}: unparseable token '{t}'"))
+                })
                 .collect(),
         }
+    }
+
+    /// Parse a comma-separated list of u64s, e.g. `--seeds 1,2,3`.
+    pub fn get_u64_list(&self, name: &str, default: &[u64]) -> Result<Vec<u64>, String> {
+        self.get_list(name, default)
+    }
+
+    /// Parse a comma-separated list of strings, e.g.
+    /// `--collections stack,queue` (same split/trim/skip-empty rules as
+    /// the numeric lists; `String: FromStr` cannot fail).
+    pub fn get_str_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        let default: Vec<String> = default.iter().map(|s| s.to_string()).collect();
+        self.get_list(name, &default).expect("String: FromStr is infallible")
     }
 
     pub fn positional(&self) -> &[String] {
@@ -194,8 +222,21 @@ mod tests {
     #[test]
     fn list_parsing() {
         let a = Args::parse(&argv("--locales 2,4,8"));
-        assert_eq!(a.get_usize_list("locales", &[1]), vec![2, 4, 8]);
-        assert_eq!(a.get_usize_list("other", &[1, 2]), vec![1, 2]);
+        assert_eq!(a.get_usize_list("locales", &[1]).unwrap(), vec![2, 4, 8]);
+        assert_eq!(a.get_usize_list("other", &[1, 2]).unwrap(), vec![1, 2]);
+        let b = Args::parse(&argv("--seeds 7,8 --collections stack, queue"));
+        assert_eq!(b.get_u64_list("seeds", &[1]).unwrap(), vec![7, 8]);
+        assert_eq!(b.get_u64_list("missing", &[1, 2]).unwrap(), vec![1, 2]);
+        assert_eq!(b.get_str_list("collections", &["map"]), vec!["stack".to_string()]);
+        assert_eq!(b.get_str_list("missing", &["map"]), vec!["map".to_string()]);
+        // A typo'd token is an ERROR naming it, never a silently shorter
+        // list (a correctness gate must not shrink its own coverage).
+        let c = Args::parse(&argv("--seeds 1,2x,3"));
+        let err = c.get_u64_list("seeds", &[1]).unwrap_err();
+        assert!(err.contains("2x"), "got: {err}");
+        // Stray commas alone are fine (empty tokens skipped).
+        let d = Args::parse(&argv("--seeds 5,,7,"));
+        assert_eq!(d.get_u64_list("seeds", &[1]).unwrap(), vec![5, 7]);
     }
 
     #[test]

@@ -61,24 +61,8 @@ impl Prop {
         for case_idx in 0..self.cases {
             let input = gen(&mut rng);
             if let Err(first_msg) = test(&input) {
-                // Greedy shrink: repeatedly take the first failing candidate.
-                let mut best = input.clone();
-                let mut best_msg = first_msg;
-                let mut steps = 0;
-                'outer: while steps < self.max_shrink_steps {
-                    for cand in shrink(&best) {
-                        steps += 1;
-                        if steps >= self.max_shrink_steps {
-                            break 'outer;
-                        }
-                        if let Err(msg) = test(&cand) {
-                            best = cand;
-                            best_msg = msg;
-                            continue 'outer;
-                        }
-                    }
-                    break; // no candidate fails => minimal
-                }
+                let (best, best_msg) =
+                    shrink_to_fixed_point(input, first_msg, &test, &shrink, self.max_shrink_steps);
                 panic!(
                     "property '{}' failed (case {}/{}, seed {:#x}).\n  minimized input: {:?}\n  failure: {}",
                     self.name, case_idx + 1, self.cases, self.seed, best, best_msg
@@ -95,6 +79,43 @@ impl Prop {
     ) {
         self.check(gen, test, |_| Vec::new());
     }
+}
+
+/// Greedily shrink `input` (which must already fail `test`) to a **fixed
+/// point**: after every successful step the candidate list is recomputed
+/// from the new best and scanned from the start, and the loop only stops
+/// when a *complete* scan over `shrink(&best)` produces no failing
+/// candidate — i.e. the result is locally minimal. `max_steps` bounds the
+/// number of *successful* shrink steps only; a plateau scan (all
+/// candidates passing) never exhausts the budget. Returns the minimized
+/// input and its failure message.
+///
+/// (The previous in-line shrink loop counted every *tested* candidate
+/// against one global budget and bailed mid-scan, so large inputs could
+/// stop shrinking while strictly-smaller failing candidates remained.)
+pub fn shrink_to_fixed_point<T: Clone>(
+    input: T,
+    first_msg: String,
+    test: impl Fn(&T) -> Result<(), String>,
+    shrink: impl Fn(&T) -> Vec<T>,
+    max_steps: usize,
+) -> (T, String) {
+    let mut best = input;
+    let mut best_msg = first_msg;
+    let mut steps = 0;
+    'outer: while steps < max_steps {
+        for cand in shrink(&best) {
+            if let Err(msg) = test(&cand) {
+                best = cand;
+                best_msg = msg;
+                steps += 1;
+                // Re-shrink from the new best: its candidate list differs.
+                continue 'outer;
+            }
+        }
+        break; // full scan with no failing candidate => fixed point
+    }
+    (best, best_msg)
 }
 
 /// Standard shrinker for u64: 0, halves, and decrements.
@@ -176,6 +197,49 @@ mod tests {
             Ok(()) => panic!("property should have failed"),
         };
         assert!(msg.contains("minimized input: 100"), "got: {msg}");
+    }
+
+    #[test]
+    fn shrink_reaches_fixed_point_even_past_old_budget() {
+        // Property: fails iff the vector holds >= 3 even numbers. The
+        // minimum is exactly [0, 0, 0]; reaching it requires re-shrinking
+        // after every successful step (remove elements, then shrink the
+        // survivors) and the result must satisfy the fixed-point
+        // definition: no candidate of the minimized input fails.
+        let fails = |v: &Vec<u64>| -> Result<(), String> {
+            if v.iter().filter(|&&x| x % 2 == 0).count() >= 3 {
+                Err(format!("{} evens", v.len()))
+            } else {
+                Ok(())
+            }
+        };
+        let start: Vec<u64> = (0..200).map(|i| i * 2).collect();
+        assert!(fails(&start).is_err());
+        let (min, _msg) = shrink_to_fixed_point(
+            start,
+            "seed".into(),
+            fails,
+            |v| shrink_vec(v, |&e| shrink_u64(e)),
+            10_000,
+        );
+        // Fixed point: still failing, and NO candidate of the result fails.
+        assert!(fails(&min).is_err());
+        for cand in shrink_vec(&min, |&e| shrink_u64(e)) {
+            assert!(fails(&cand).is_ok(), "not a fixed point: {cand:?} still fails");
+        }
+        assert_eq!(min, vec![0, 0, 0], "true minimum reached");
+    }
+
+    #[test]
+    fn shrink_budget_counts_successful_steps_only() {
+        // With a budget of 2 successful steps, shrinking stops after two
+        // adoptions no matter how many passing candidates were scanned.
+        let fails = |v: &u64| -> Result<(), String> {
+            if *v >= 10 { Err("big".into()) } else { Ok(()) }
+        };
+        let (min, _) = shrink_to_fixed_point(1_000_000, "m".into(), fails, |&v| shrink_u64(v), 2);
+        assert!(fails(&min).is_err());
+        assert!(min < 1_000_000, "at least one step taken");
     }
 
     #[test]

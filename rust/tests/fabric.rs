@@ -6,6 +6,7 @@
 use pgas_nb::fabric::{Dragonfly, FullyConnected, Ring, Topology, TopologyKind};
 use pgas_nb::pgas::{with_locale, LocaleId, Machine, NicModel, NicOp, Pgas};
 use pgas_nb::sim::{run_epoch, EpochConfig, EpochWorkload};
+use pgas_nb::util::proptest::{shrink_usize, Prop};
 use std::collections::VecDeque;
 
 fn locales(topo: &dyn Topology) -> impl Iterator<Item = LocaleId> {
@@ -93,6 +94,62 @@ fn ring_and_dragonfly_routes_match_bfs_shortest_paths() {
     }
 }
 
+/// Every route of `topo` is a shortest path over its own adjacency.
+fn bfs_minimality(topo: &dyn Topology) -> Result<(), String> {
+    for a in locales(topo) {
+        let dist = bfs_dist(topo, a);
+        for b in locales(topo) {
+            let (got, want) = (topo.hops(a, b), dist[b.index()]);
+            if got != want {
+                return Err(format!(
+                    "{} L={}: {a:?}->{b:?} routes {got} hops, BFS says {want}",
+                    topo.name(),
+                    topo.locales()
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn randomized_configs_route_minimally_property() {
+    // The PR-2 throwaway script, now a shrinking property test: random
+    // (kind, locales, group_size) configurations — including partial
+    // last groups and degenerate group sizes that force attachment-row
+    // reuse (the case that historically broke dragonfly minimality).
+    Prop::new("routes are BFS-minimal on randomized configs").cases(64).check(
+        |rng| {
+            let kind = rng.next_below(3); // 0 = ring, 1 = crossbar, 2 = dragonfly
+            let locales = 1 + rng.next_usize(40);
+            let group = 1 + rng.next_usize(locales.max(2));
+            (kind, locales, group)
+        },
+        |&(kind, locales, group)| {
+            let topo: Box<dyn Topology> = match kind {
+                0 => Box::new(Ring::new(locales)),
+                1 => Box::new(FullyConnected::new(locales)),
+                _ => Box::new(Dragonfly::with_group_size(locales, group)),
+            };
+            bfs_minimality(&*topo)
+        },
+        |&(kind, locales, group)| {
+            let mut cands = Vec::new();
+            for l in shrink_usize(locales) {
+                if l >= 1 {
+                    cands.push((kind, l, group.min(l.max(1))));
+                }
+            }
+            for g in shrink_usize(group) {
+                if g >= 1 {
+                    cands.push((kind, locales, g));
+                }
+            }
+            cands
+        },
+    );
+}
+
 #[test]
 fn dragonfly_diameter_is_three() {
     let topo = Dragonfly::with_group_size(64, 8);
@@ -143,6 +200,7 @@ fn flat_zero_des_equals_default_and_other_topologies_differ() {
         fcfs_local_election: true,
         slow_locale: None,
         slow_factor: 8,
+        stalled_task: None,
         topology: kind,
         seed: 3,
     };
@@ -194,6 +252,7 @@ fn hot_spot_queues_on_ring_but_not_on_crossbar_links() {
         fcfs_local_election: false, // ablation mode: maximal global traffic
         slow_locale: None,
         slow_factor: 8,
+        stalled_task: None,
         topology: kind,
         seed: 9,
     };

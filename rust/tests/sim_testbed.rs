@@ -32,6 +32,7 @@ fn ecfg(workload: EpochWorkload, locales: usize) -> EpochConfig {
         fcfs_local_election: true,
         slow_locale: None,
         slow_factor: 8,
+        stalled_task: None,
         topology: TopologyKind::default(),
         seed: 11,
     }

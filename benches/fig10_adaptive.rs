@@ -1,0 +1,193 @@
+//! **Fig 10** (beyond the source paper): the congestion-adaptive fabric
+//! under the epoch hot-spot workload. Every task runs `tryReclaim` every
+//! iteration with half its deferrals remote, so election/advance traffic
+//! funnels into locale 0 — the worst case the paper's flat protocol
+//! leaves on the table. `minimal+fixed` replays that baseline (minimal
+//! routing, fixed-capacity aggregation, flat advance); `adaptive` turns
+//! on the three closed-loop knobs together: UGAL detours around
+//! congested global links, deadline/backpressure-driven migration flush,
+//! and the hierarchical (group-leader) epoch advance.
+//!
+//! Acceptance, asserted on every run:
+//! * with the knobs OFF the trace is the pre-adaptive one (zero detours,
+//!   zero migrations);
+//! * on the dragonfly hot spot the adaptive mode cuts modeled completion
+//!   time or the worst per-message link wait by ≥ 20 %;
+//! * the hierarchical advance receives strictly fewer AMs per advance at
+//!   the global-epoch home than the flat protocol.
+//!
+//! Emits machine-readable `BENCH_adaptive.json` next to the human table
+//! (a CI artifact alongside `BENCH_topology.json`).
+
+use pgas_nb::coordinator::figures::fig10_adaptive;
+use pgas_nb::fabric::TopologyKind;
+use pgas_nb::pgas::NicModel;
+use pgas_nb::sim::{run_epoch, Adaptivity, EpochConfig, EpochResult, EpochWorkload};
+use pgas_nb::util::bench::BenchRunner;
+use pgas_nb::util::table::Table;
+
+struct Point {
+    kind: TopologyKind,
+    adaptive: bool,
+    locales: usize,
+    r: EpochResult,
+}
+
+fn mode_label(adaptive: bool) -> &'static str {
+    if adaptive {
+        "adaptive"
+    } else {
+        "minimal+fixed"
+    }
+}
+
+fn run_point(kind: TopologyKind, adaptive: bool, locales: usize, objs_per_task: usize) -> Point {
+    let cfg = EpochConfig {
+        workload: EpochWorkload::DeleteReclaimEvery(1),
+        model: NicModel::aries_no_network_atomics(),
+        locales,
+        tasks_per_locale: 8,
+        objs_per_task,
+        remote_ratio: 0.5,
+        fcfs_local_election: true,
+        slow_locale: None,
+        slow_factor: 8,
+        stalled_task: None,
+        topology: kind,
+        agg_capacity: 256,
+        adaptive: if adaptive { fig10_adaptive() } else { Adaptivity::default() },
+        seed: 31,
+    };
+    Point { kind, adaptive, locales, r: run_epoch(cfg) }
+}
+
+fn json_point(pt: &Point) -> String {
+    let r = &pt.r;
+    format!(
+        "    {{\"mode\": \"{}\", \"topology\": \"{}\", \"locales\": {}, \"makespan_ns\": {}, \
+         \"mops\": {:.4}, \"max_link_wait_ns\": {}, \"queued_ns\": {}, \"detours\": {}, \
+         \"ams_rx_home\": {}, \"advances\": {}, \"migrated\": {}, \"migration_flushes\": {}}}",
+        mode_label(pt.adaptive),
+        pt.kind.label(),
+        pt.locales,
+        r.makespan_ns,
+        r.throughput_mops,
+        r.net.max_link_wait_ns,
+        r.net.queued_ns,
+        r.net.detours,
+        r.ams_rx_home,
+        r.advances,
+        r.migrated,
+        r.migration_flushes,
+    )
+}
+
+fn main() {
+    let mut b = BenchRunner::new("Fig 10: congestion-adaptive fabric (epoch hot spot)");
+    // Quick mode trades object count, not scale: the adaptive win (and the
+    // headline assertion below) grows with locale count, so both modes keep
+    // the L=32 hot-spot point and quick only shrinks the per-task work.
+    let objs_per_task: usize = if b.quick() { 512 } else { 2_048 };
+    let locale_counts: &[usize] = if b.quick() { &[8, 32] } else { &[8, 16, 32] };
+
+    let mut t = Table::new(&[
+        "mode",
+        "topology",
+        "locales",
+        "makespan_ms",
+        "mops",
+        "max_link_wait_us",
+        "detours",
+        "ams_rx_home/adv",
+        "migrated",
+    ]);
+    let mut points: Vec<Point> = Vec::new();
+    for &locales in locale_counts {
+        for kind in [TopologyKind::Ring, TopologyKind::Dragonfly] {
+            for adaptive in [false, true] {
+                let pt = run_point(kind, adaptive, locales, objs_per_task);
+                b.record_virtual(
+                    &format!("L={locales} topo={} {}", kind.label(), mode_label(adaptive)),
+                    pt.r.total_iters,
+                    pt.r.makespan_ns as f64,
+                );
+                t.row(&[
+                    mode_label(adaptive).into(),
+                    kind.label().into(),
+                    locales.to_string(),
+                    format!("{:.2}", pt.r.makespan_ns as f64 / 1e6),
+                    format!("{:.2}", pt.r.throughput_mops),
+                    format!("{:.2}", pt.r.net.max_link_wait_ns as f64 / 1e3),
+                    pt.r.net.detours.to_string(),
+                    format!("{:.1}", pt.r.ams_rx_home as f64 / pt.r.advances.max(1) as f64),
+                    pt.r.migrated.to_string(),
+                ]);
+                points.push(pt);
+            }
+        }
+    }
+
+    println!("\n=== Fig 10: adaptive vs minimal+fixed (epoch hot spot) ===");
+    println!("{}", t.render());
+    b.finish();
+
+    // The acceptance invariants, checked on every run:
+    let get = |kind: TopologyKind, adaptive: bool, locales: usize| {
+        &points
+            .iter()
+            .find(|p| p.kind == kind && p.adaptive == adaptive && p.locales == locales)
+            .unwrap()
+            .r
+    };
+    for &locales in locale_counts {
+        for kind in [TopologyKind::Ring, TopologyKind::Dragonfly] {
+            let base = get(kind, false, locales);
+            assert_eq!(base.net.detours, 0, "knobs off must never detour");
+            assert_eq!(base.migrated, 0, "knobs off must never migrate");
+            // Same offered work either way.
+            assert_eq!(base.total_iters, get(kind, true, locales).total_iters);
+        }
+    }
+    // Headline: the dragonfly hot spot at the largest scale.
+    let last = *locale_counts.last().unwrap();
+    let base = get(TopologyKind::Dragonfly, false, last);
+    let adap = get(TopologyKind::Dragonfly, true, last);
+    let makespan_gain = 1.0 - adap.makespan_ns as f64 / base.makespan_ns as f64;
+    let wait_gain = 1.0 - adap.net.max_link_wait_ns as f64 / base.net.max_link_wait_ns.max(1) as f64;
+    println!(
+        "\ndragonfly L={last}: completion {:.1}% better, worst link wait {:.1}% better, \
+         {} detours, home AMs/advance {:.1} -> {:.1}",
+        makespan_gain * 100.0,
+        wait_gain * 100.0,
+        adap.net.detours,
+        base.ams_rx_home as f64 / base.advances.max(1) as f64,
+        adap.ams_rx_home as f64 / adap.advances.max(1) as f64,
+    );
+    assert!(
+        makespan_gain >= 0.20 || wait_gain >= 0.20,
+        "adaptive mode must cut completion time or worst link wait by >= 20%: \
+         makespan {:.1}%, wait {:.1}%",
+        makespan_gain * 100.0,
+        wait_gain * 100.0
+    );
+    let per_base = base.ams_rx_home as f64 / base.advances.max(1) as f64;
+    let per_adap = adap.ams_rx_home as f64 / adap.advances.max(1) as f64;
+    assert!(
+        per_adap < per_base,
+        "hierarchical advance must shed received AMs at the global home: {per_base:.1} -> {per_adap:.1}"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"fig10_adaptive\",\n  \"model\": \"aries_no_network_atomics\",\n  \
+         \"workload\": \"reclaim_every_1_remote50\",\n  \"objs_per_task\": {},\n  \
+         \"adaptive\": {{\"ugal_threshold_ns\": 1000, \"flush_after_ns\": 100000, \
+         \"backpressure_ns\": 25000, \"hier_group\": 4, \"agg_capacity\": 256}},\n  \
+         \"points\": [\n{}\n  ]\n}}\n",
+        objs_per_task,
+        points.iter().map(json_point).collect::<Vec<_>>().join(",\n")
+    );
+    match std::fs::write("BENCH_adaptive.json", &json) {
+        Ok(()) => println!("[wrote BENCH_adaptive.json]"),
+        Err(e) => eprintln!("[could not write BENCH_adaptive.json: {e}]"),
+    }
+}

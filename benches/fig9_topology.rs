@@ -12,8 +12,8 @@
 //! (a CI artifact alongside `BENCH_aggregation.json`).
 
 use pgas_nb::fabric::TopologyKind;
-use pgas_nb::pgas::NicModel;
-use pgas_nb::sim::{run_epoch, EpochConfig, EpochResult, EpochWorkload};
+use pgas_nb::pgas::{NicModel, DEFAULT_AGG_CAPACITY};
+use pgas_nb::sim::{run_epoch, Adaptivity, EpochConfig, EpochResult, EpochWorkload};
 use pgas_nb::util::bench::BenchRunner;
 use pgas_nb::util::table::Table;
 
@@ -36,6 +36,8 @@ fn run_point(kind: TopologyKind, locales: usize, objs_per_task: usize) -> Point 
         slow_factor: 8,
         stalled_task: None,
         topology: kind,
+        agg_capacity: DEFAULT_AGG_CAPACITY,
+        adaptive: Adaptivity::default(),
         seed: 29,
     };
     Point { kind, locales, r: run_epoch(cfg) }

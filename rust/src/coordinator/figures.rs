@@ -7,9 +7,10 @@
 //! points — is the reproduction target. See EXPERIMENTS.md.
 
 use crate::fabric::TopologyKind;
-use crate::pgas::NicModel;
+use crate::pgas::{NicModel, DEFAULT_AGG_CAPACITY};
 use crate::sim::{
-    run_atomics, run_epoch, AtomicVariant, AtomicsConfig, EpochConfig, EpochResult, EpochWorkload,
+    run_atomics, run_epoch, Adaptivity, AtomicVariant, AtomicsConfig, EpochConfig, EpochResult,
+    EpochWorkload,
 };
 use crate::util::table::Table;
 
@@ -179,6 +180,8 @@ fn epoch_cfg(scale: Scale, workload: EpochWorkload, na: bool, locales: usize) ->
         slow_factor: 8,
         stalled_task: None,
         topology: TopologyKind::default(),
+        agg_capacity: DEFAULT_AGG_CAPACITY,
+        adaptive: Adaptivity::default(),
         seed: 7,
     }
 }
@@ -277,6 +280,67 @@ pub fn fig9(scale: Scale) -> Table {
     t
 }
 
+/// The congestion-adaptive knob settings fig 10 sweeps against the
+/// fixed/minimal baseline. Exposed so the bench target and the CLI use
+/// identical settings.
+pub fn fig10_adaptive() -> Adaptivity {
+    Adaptivity {
+        ugal_threshold_ns: Some(1_000),
+        flush_after_ns: Some(100_000),
+        backpressure_ns: 25_000,
+        hier_group: Some(4),
+    }
+}
+
+/// Fig. 10 (beyond the source paper) — the congestion-adaptive fabric
+/// under the epoch hot-spot workload: every task elects every iteration,
+/// half the deferrals are remote, and all election/advance traffic
+/// funnels into locale 0. `minimal+fixed` is the PR-1/PR-2 baseline
+/// (minimal routing, fixed-capacity aggregation, flat advance);
+/// `adaptive` turns on UGAL detours, deadline/backpressure flush and the
+/// hierarchical (group-of-4) advance together.
+pub fn fig10(scale: Scale) -> Table {
+    let mut t = Table::new(&[
+        "mode",
+        "topology",
+        "locales",
+        "mops",
+        "makespan_ms",
+        "max_link_wait_us",
+        "detours",
+        "ams_rx_home",
+        "ams_rx_home_per_advance",
+        "migrated",
+    ]);
+    for kind in [TopologyKind::Ring, TopologyKind::Dragonfly] {
+        for adaptive in [false, true] {
+            for &locales in &scale.locale_sweep() {
+                let mut cfg = epoch_cfg(scale, EpochWorkload::DeleteReclaimEvery(1), false, locales);
+                cfg.remote_ratio = 0.5;
+                cfg.topology = kind;
+                cfg.agg_capacity = 256;
+                if adaptive {
+                    cfg.adaptive = fig10_adaptive();
+                }
+                let r = run_epoch(cfg);
+                t.row(&[
+                    if adaptive { "adaptive" } else { "minimal+fixed" }.into(),
+                    kind.label().into(),
+                    locales.to_string(),
+                    format!("{:.2}", r.throughput_mops),
+                    format!("{:.2}", r.makespan_ns as f64 / 1e6),
+                    format!("{:.2}", r.net.max_link_wait_ns as f64 / 1e3),
+                    r.net.detours.to_string(),
+                    r.ams_rx_home.to_string(),
+                    format!("{:.1}", r.ams_rx_home as f64 / r.advances.max(1) as f64),
+                    r.migrated.to_string(),
+                ]);
+            }
+        }
+    }
+    t
+}
+
 /// Ablation: two-level FCFS election vs direct global contention.
 pub fn ablation_election(scale: Scale) -> Table {
     let mut t = epoch_header();
@@ -328,5 +392,17 @@ mod tests {
         for kind in TopologyKind::ALL {
             assert!(csv.contains(kind.label()), "missing series {}", kind.label());
         }
+    }
+
+    #[test]
+    fn fig10_sweeps_both_modes_over_both_topologies() {
+        let t = fig10(Scale::Quick);
+        // 2 topologies × 2 modes × 3 locale points.
+        assert_eq!(t.len(), 2 * 2 * 3);
+        let csv = t.to_csv();
+        assert!(csv.contains("minimal+fixed"));
+        assert!(csv.contains("adaptive"));
+        assert!(csv.contains("ring"));
+        assert!(csv.contains("dragonfly"));
     }
 }

@@ -4,11 +4,11 @@
 pub mod figures;
 
 use crate::collections::{InterlockedHashTable, LockFreeQueue, LockFreeStack};
-use crate::epoch::EpochManager;
+use crate::epoch::{EpochManager, ReclaimPolicy};
 use crate::fabric::TopologyKind;
 use crate::pgas::{coforall_locales, coforall_tasks, LocaleId, Machine, NicModel, Pgas};
 use crate::runtime::SharedReclaimScan;
-use crate::sim::{run_epoch, EpochConfig, EpochWorkload};
+use crate::sim::{run_epoch, Adaptivity, EpochConfig, EpochWorkload};
 use crate::util::cli::Args;
 use crate::util::table::{fmt_ops, Table};
 use crate::util::error::Result;
@@ -22,21 +22,24 @@ pub const USAGE: &str = "pgas-nb — distributed non-blocking building blocks in
 Usage: pgas-nb <subcommand> [--opts]
 
 Subcommands:
-  bench <fig3|fig4|fig5|fig6|fig7|fig9|election>   regenerate a figure
+  bench <fig3|fig4|fig5|fig6|fig7|fig9|fig10|election>   regenerate a figure
         [--quick] [--csv]
   check [--seeds 1,2,3] [--collections stack,queue,list,map]
         [--locales N] [--tasks N] [--ops N] [--keys N] [--topology T]
         [--agg-capacity N] [--reclaim-every K] [--stall] [--adversarial]
-        [--out DIR] [--mutate]
+        [--adaptive] [--out DIR] [--mutate]
                                               linearizability & reclamation-
                                               safety checker (see README
                                               \"Testing & verification\")
-  demo  [--locales N] [--tasks N]             real-substrate collections demo
+  demo  [--locales N] [--tasks N] [--agg-capacity N] [--hier-group G]
+                                              real-substrate collections demo
   scan  [--locales N] [--tokens N] [--topology T]
                                               PJRT reclaim-scan vs scalar oracle
   sim   [--workload readonly|delete-end|reclaim-every] [--every K]
         [--locales A,B,..] [--tasks N] [--objs N] [--remote-ratio F]
         [--topology flat|fully-connected|ring|dragonfly]
+        [--agg-capacity N] [--ugal-threshold NS] [--flush-after NS]
+        [--backpressure NS] [--hier-group G]
         [--no-network-atomics]                custom DES testbed point
   info                                        environment / model summary
 ";
@@ -91,6 +94,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "fig9" | "topology" => {
             emit(args, "Fig 9: interconnect topology sensitivity", &figures::fig9(scale))
         }
+        "fig10" | "adaptive" => {
+            emit(args, "Fig 10: congestion-adaptive fabric", &figures::fig10(scale))
+        }
         "election" => emit(args, "Ablation: FCFS election", &figures::ablation_election(scale)),
         "all" => {
             emit(args, "Fig 3", &figures::fig3(scale));
@@ -99,6 +105,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             emit(args, "Fig 6", &figures::fig6(scale));
             emit(args, "Fig 7", &figures::fig7(scale));
             emit(args, "Fig 9", &figures::fig9(scale));
+            emit(args, "Fig 10", &figures::fig10(scale));
         }
         other => bail!("unknown figure '{other}'"),
     }
@@ -136,7 +143,7 @@ fn cmd_check(args: &Args) -> Result<()> {
     // A token after a bare flag is absorbed as its value and would make
     // the flag read as false — `check --mutate now` must not silently
     // run the ordinary suite instead of the self-test.
-    for b in ["mutate", "adversarial", "stall", "csv"] {
+    for b in ["mutate", "adversarial", "adaptive", "stall", "csv"] {
         if let Some(v) = args.get(b) {
             if v != "true" {
                 bail!("--{b} is a flag and takes no value (got '{v}')");
@@ -166,7 +173,7 @@ fn cmd_check(args: &Args) -> Result<()> {
                 bail!("--mutate runs a fixed self-test; --{opt} does not apply (drop it)");
             }
         }
-        for f in ["adversarial", "stall"] {
+        for f in ["adversarial", "adaptive", "stall"] {
             if args.flag(f) {
                 bail!("--mutate runs a fixed self-test; --{f} does not apply (drop it)");
             }
@@ -189,7 +196,11 @@ fn cmd_check(args: &Args) -> Result<()> {
     if collections.is_empty() {
         bail!("--collections parsed to an empty list");
     }
-    let base = if args.flag("adversarial") {
+    // --adaptive is the adversarial schedule plus the hierarchical
+    // (group-leader) epoch advance; it subsumes --adversarial.
+    let base = if args.flag("adaptive") {
+        CheckCfg::adaptive(0)
+    } else if args.flag("adversarial") {
         CheckCfg::adversarial(0)
     } else {
         CheckCfg::quick(0)
@@ -243,6 +254,7 @@ fn cmd_check(args: &Args) -> Result<()> {
         agg_capacity,
         reclaim_every,
         stalled_reader,
+        hier_group: base.hier_group,
     };
 
     println!("check: seeds {seeds:?}");
@@ -372,8 +384,18 @@ fn cmd_demo(args: &Args) -> Result<()> {
     let locales = args.get_usize("locales", 4);
     let tasks = args.get_usize("tasks", 2);
     let ops = args.get_usize("ops", 2_000);
+    // --agg-capacity overrides the PGAS_NB_AGG_CAPACITY env fallback;
+    // --hier-group turns on the hierarchical (group-leader) advance.
+    let agg_capacity =
+        args.get_usize("agg-capacity", crate::pgas::aggregation::default_capacity());
+    let hier_group = args.get("hier-group").and_then(|v| v.parse::<usize>().ok()).filter(|&g| g >= 1);
     let pgas = Pgas::new(Machine::new(locales, tasks), NicModel::aries_no_network_atomics());
-    let em = EpochManager::new(Arc::clone(&pgas));
+    let em = EpochManager::with_full_config(
+        Arc::clone(&pgas),
+        ReclaimPolicy::default(),
+        agg_capacity,
+        hier_group,
+    );
 
     let stack = LockFreeStack::new(Arc::clone(&pgas), em.clone());
     let queue = LockFreeQueue::new(Arc::clone(&pgas), em.clone());
@@ -494,8 +516,17 @@ fn cmd_sim(args: &Args) -> Result<()> {
         NicModel::aries()
     };
     let topology = parse_topology(args);
+    // Congestion-adaptivity knobs (fig 10); absent = the exact
+    // pre-adaptive code paths.
+    let adaptive = Adaptivity {
+        ugal_threshold_ns: args.get("ugal-threshold").and_then(|v| v.parse().ok()),
+        flush_after_ns: args.get("flush-after").and_then(|v| v.parse().ok()),
+        backpressure_ns: args.get_u64("backpressure", 0),
+        hier_group: args.get("hier-group").and_then(|v| v.parse::<usize>().ok()).filter(|&g| g >= 1),
+    };
     let mut t = Table::new(&[
         "locales", "mops", "advances", "lost_local", "lost_global", "freed", "queued_ms",
+        "detours", "ams_rx_home",
     ]);
     for locales in args.get_usize_list("locales", &[2, 4, 8, 16])? {
         let cfg = EpochConfig {
@@ -510,6 +541,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
             slow_factor: args.get_u64("slow-factor", 8),
             stalled_task: None,
             topology,
+            agg_capacity: args
+                .get_usize("agg-capacity", crate::pgas::aggregation::default_capacity()),
+            adaptive,
             seed: args.get_u64("seed", 7),
         };
         let r = run_epoch(cfg);
@@ -521,6 +555,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
             r.lost_global.to_string(),
             r.freed.to_string(),
             format!("{:.2}", r.net.queued_ns as f64 / 1e6),
+            r.net.detours.to_string(),
+            r.ams_rx_home.to_string(),
         ]);
     }
     emit(args, &format!("custom sim sweep ({})", topology.label()), &t);
@@ -590,6 +626,27 @@ mod tests {
     }
 
     #[test]
+    fn bench_fig10_quick_runs() {
+        run_cli(&argv("bench fig10 --quick")).unwrap();
+    }
+
+    #[test]
+    fn sim_accepts_adaptivity_flags() {
+        run_cli(&argv(
+            "sim --workload reclaim-every --every 16 --locales 4 --tasks 2 --objs 256 \
+             --topology dragonfly --remote-ratio 0.5 --agg-capacity 64 \
+             --ugal-threshold 1000 --flush-after 100000 --backpressure 25000 --hier-group 2",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn demo_accepts_agg_capacity_and_hier_group() {
+        run_cli(&argv("demo --locales 4 --tasks 2 --ops 300 --agg-capacity 32 --hier-group 2"))
+            .unwrap();
+    }
+
+    #[test]
     fn topology_flag_falls_back_on_garbage() {
         assert_eq!(parse_topology(&argv("sim --topology torus")), TopologyKind::FlatZero);
         assert_eq!(parse_topology(&argv("sim --topology ring")), TopologyKind::Ring);
@@ -605,6 +662,14 @@ mod tests {
     fn check_quick_point_runs_clean() {
         run_cli(&argv("check --seeds 5 --ops 60 --locales 2 --tasks 2 --collections stack,map"))
             .unwrap();
+    }
+
+    #[test]
+    fn check_adaptive_point_runs_clean() {
+        run_cli(&argv(
+            "check --adaptive --seeds 7 --ops 60 --locales 2 --tasks 2 --collections stack",
+        ))
+        .unwrap();
     }
 
     #[test]

@@ -43,6 +43,30 @@
 //! lists, then publish the new epoch to the locale caches — so no task
 //! can pin into the new epoch (and defer into the list index being
 //! drained) until every drain has finished.
+//!
+//! ## Hierarchical advance
+//!
+//! The flat protocol makes `global_home` a hot-spot: every locale's
+//! election traffic targets the one global flag, and the quiescence scan
+//! and epoch publish fan out of one locale to every other. With a group
+//! size configured ([`EpochManager::with_full_config`]), locales are
+//! partitioned into contiguous groups of `g` whose first member is the
+//! **group leader**, and the advance becomes a two-level tree:
+//!
+//! * **Election** inserts a group-leader flag between the local and
+//!   global flags — contenders that lose within their group bounce off
+//!   their leader's memory, so only one contender *per group* ever
+//!   reaches the global flag. (A group-level loss is reported as
+//!   [`ReclaimOutcome::LostGlobalElection`]: semantically, someone else
+//!   from this group is already past you toward the global flag.)
+//! * **Scan** and **publish** walk leader → members instead of
+//!   elected → everyone, so `global_home` receives O(groups) AMs per
+//!   advance instead of O(locales) (plus each leader O(g) from its own
+//!   members).
+//!
+//! The drains are untouched — they are the payload, not the hot-spot.
+//! With no group size configured (`None`, the default) every code path
+//! is exactly the flat protocol.
 
 use super::limbo::{LimboList, NodePool};
 use super::token::{Token, TokenRegistry, QUIESCENT};
@@ -153,6 +177,9 @@ pub(crate) struct LocaleInstance {
     locale_epoch: AtomicU64,
     /// FCFS local election flag for `try_reclaim`.
     is_setting_epoch: AtomicBool,
+    /// FCFS *group* election flag (hierarchical advance only). Lives on
+    /// every instance but is only ever touched on group leaders.
+    is_setting_group: AtomicBool,
     limbo: [LimboList; NUM_EPOCHS as usize],
     pool: NodePool,
     tokens: TokenRegistry,
@@ -173,6 +200,7 @@ impl LocaleInstance {
             locale,
             locale_epoch: AtomicU64::new(1),
             is_setting_epoch: AtomicBool::new(false),
+            is_setting_group: AtomicBool::new(false),
             limbo: [LimboList::new(), LimboList::new(), LimboList::new()],
             pool: NodePool::new(),
             tokens: TokenRegistry::new(),
@@ -188,6 +216,9 @@ struct EmShared {
     policy: ReclaimPolicy,
     /// Per-destination deferral-aggregation buffer capacity (entries).
     agg_capacity: usize,
+    /// Hierarchical-advance group size (see module docs). `None` = the
+    /// flat protocol, bit-identical to the pre-hierarchy manager.
+    hier_group: Option<usize>,
     /// Locale hosting the global epoch object ("a class instance wraps the
     /// global epoch itself so that there is a single centralized and
     /// coherent epoch").
@@ -246,12 +277,29 @@ impl EpochManager {
         policy: ReclaimPolicy,
         agg_capacity: usize,
     ) -> EpochManager {
+        Self::with_full_config(pgas, policy, agg_capacity, None)
+    }
+
+    /// Everything [`Self::with_config`] takes, plus the hierarchical
+    /// advance's group size (`None` = flat protocol — the default; see
+    /// module docs). A group size of 1 makes every locale its own leader
+    /// (the group flag degenerates to a second local flag).
+    pub fn with_full_config(
+        pgas: Arc<Pgas>,
+        policy: ReclaimPolicy,
+        agg_capacity: usize,
+        hier_group: Option<usize>,
+    ) -> EpochManager {
+        if let Some(g) = hier_group {
+            assert!(g >= 1, "hierarchical group size must be at least 1");
+        }
         let machine = pgas.machine();
         EpochManager {
             sh: Arc::new(EmShared {
                 pgas: Arc::clone(&pgas),
                 policy,
                 agg_capacity,
+                hier_group,
                 global_home: LocaleId(0),
                 global_epoch: AtomicU64::new(1),
                 global_flag: AtomicBool::new(false),
@@ -275,6 +323,30 @@ impl EpochManager {
     /// The deferral-aggregation buffer capacity this manager runs with.
     pub fn agg_capacity(&self) -> usize {
         self.sh.agg_capacity
+    }
+
+    /// The hierarchical-advance group size, if configured.
+    pub fn hier_group(&self) -> Option<usize> {
+        self.sh.hier_group
+    }
+
+    /// The leader of `loc`'s group (the first locale of its contiguous
+    /// group). Only meaningful with `hier_group` set.
+    #[inline]
+    fn group_leader_of(&self, loc: LocaleId, g: usize) -> LocaleId {
+        LocaleId((loc.index() / g * g) as u16)
+    }
+
+    /// All group leaders, in locale order (roots of the two-level tree).
+    fn group_leaders(&self, g: usize) -> impl Iterator<Item = LocaleId> {
+        let locales = self.sh.pgas.machine().locales;
+        (0..locales).step_by(g.max(1)).map(|i| LocaleId(i as u16))
+    }
+
+    /// The members of `leader`'s group, leader included.
+    fn group_members(&self, leader: LocaleId, g: usize) -> impl Iterator<Item = LocaleId> {
+        let locales = self.sh.pgas.machine().locales;
+        (leader.index()..(leader.index() + g).min(locales)).map(|i| LocaleId(i as u16))
     }
 
     /// Register the calling task, returning an RAII token (auto-unregister
@@ -351,9 +423,30 @@ impl EpochManager {
             sh.stats.lost_local.fetch_add(1, Ordering::Relaxed);
             return ReclaimOutcome::LostLocalElection;
         }
-        // (2) Global election.
+        // (1b) Group-leader election (hierarchical advance only): losers
+        // bounce off their group leader's memory without ever touching
+        // `global_home` — the whole point of the hierarchy.
+        let leader = match sh.hier_group {
+            Some(g) => {
+                let leader = self.group_leader_of(my.locale, g);
+                sh.pgas.charge(NicOp::Atomic64, leader);
+                if sh.inst.on_locale(leader).is_setting_group.swap(true, Ordering::SeqCst) {
+                    sh.pgas.charge(NicOp::Atomic64, my.locale);
+                    my.is_setting_epoch.store(false, Ordering::SeqCst);
+                    sh.stats.lost_global.fetch_add(1, Ordering::Relaxed);
+                    return ReclaimOutcome::LostGlobalElection;
+                }
+                Some(leader)
+            }
+            None => None,
+        };
+        // (2) Global election (only one contender per group gets here).
         sh.pgas.charge(NicOp::Atomic64, sh.global_home);
         if sh.global_flag.swap(true, Ordering::SeqCst) {
+            if let Some(leader) = leader {
+                sh.pgas.charge(NicOp::Atomic64, leader);
+                sh.inst.on_locale(leader).is_setting_group.store(false, Ordering::SeqCst);
+            }
             sh.pgas.charge(NicOp::Atomic64, my.locale);
             my.is_setting_epoch.store(false, Ordering::SeqCst);
             sh.stats.lost_global.fetch_add(1, Ordering::Relaxed);
@@ -365,6 +458,10 @@ impl EpochManager {
         // Release in reverse order.
         sh.pgas.charge(NicOp::Atomic64, sh.global_home);
         sh.global_flag.store(false, Ordering::SeqCst);
+        if let Some(leader) = leader {
+            sh.pgas.charge(NicOp::Atomic64, leader);
+            sh.inst.on_locale(leader).is_setting_group.store(false, Ordering::SeqCst);
+        }
         sh.pgas.charge(NicOp::Atomic64, my.locale);
         my.is_setting_epoch.store(false, Ordering::SeqCst);
         outcome
@@ -413,12 +510,28 @@ impl EpochManager {
         // the drains ran, no task anywhere could pin into `new_epoch`, so
         // nothing could defer into (or capacity-migrate into) the list
         // index being drained — the invariant that makes the Conservative
-        // policy safe with deferral migration in the picture.
-        for loc in machine.locale_ids() {
-            sh.pgas.on(loc, || {
-                sh.pgas.charge(NicOp::Atomic64, loc);
-                sh.inst.on_locale(loc).locale_epoch.store(new_epoch, Ordering::SeqCst);
-            });
+        // policy safe with deferral migration in the picture. Under the
+        // hierarchical advance the broadcast goes elected → leaders →
+        // members instead of elected → everyone.
+        let publish = |loc: LocaleId| {
+            sh.pgas.charge(NicOp::Atomic64, loc);
+            sh.inst.on_locale(loc).locale_epoch.store(new_epoch, Ordering::SeqCst);
+        };
+        match sh.hier_group {
+            None => {
+                for loc in machine.locale_ids() {
+                    sh.pgas.on(loc, || publish(loc));
+                }
+            }
+            Some(g) => {
+                for leader in self.group_leaders(g) {
+                    sh.pgas.on(leader, || {
+                        for member in self.group_members(leader, g) {
+                            sh.pgas.on(member, || publish(member));
+                        }
+                    });
+                }
+            }
         }
 
         sh.stats.advances.fetch_add(1, Ordering::Relaxed);
@@ -510,18 +623,41 @@ impl EpochManager {
                 // Artifact mismatch/failure: fall through to scalar scan.
             }
         }
-        for loc in machine.locale_ids() {
-            let safe = sh.pgas.on(loc, || {
-                let inst = sh.inst.on_locale(loc);
-                inst.tokens.scan(|t: &Token| {
-                    // One atomic read per token, charged locally on `loc`.
-                    sh.pgas.charge(NicOp::Atomic64, loc);
-                    let le = t.local_epoch.load(Ordering::SeqCst);
-                    !(le != QUIESCENT && le != this_epoch)
-                })
-            });
-            if !safe {
-                return false;
+        let scan_locale = |loc: LocaleId| {
+            let inst = sh.inst.on_locale(loc);
+            inst.tokens.scan(|t: &Token| {
+                // One atomic read per token, charged locally on `loc`.
+                sh.pgas.charge(NicOp::Atomic64, loc);
+                let le = t.local_epoch.load(Ordering::SeqCst);
+                !(le != QUIESCENT && le != this_epoch)
+            })
+        };
+        match sh.hier_group {
+            None => {
+                for loc in machine.locale_ids() {
+                    if !sh.pgas.on(loc, || scan_locale(loc)) {
+                        return false;
+                    }
+                }
+            }
+            Some(g) => {
+                // Two-level reduction: the elected task AMs each group
+                // leader once; each leader scans its own members. The
+                // intra-group `on`s land on the leader's neighbours, not
+                // on the elected locale or `global_home`.
+                for leader in self.group_leaders(g) {
+                    let safe = sh.pgas.on(leader, || {
+                        for member in self.group_members(leader, g) {
+                            if !sh.pgas.on(member, || scan_locale(member)) {
+                                return false;
+                            }
+                        }
+                        true
+                    });
+                    if !safe {
+                        return false;
+                    }
+                }
             }
         }
         true
@@ -945,6 +1081,97 @@ mod tests {
         assert_eq!(s.migration_flushes, 2);
         em.clear();
         assert_eq!(p.live_objects(), 0);
+    }
+
+    #[test]
+    fn hierarchical_advance_preserves_protocol() {
+        let p = pgas(8);
+        let em = EpochManager::with_full_config(
+            Arc::clone(&p),
+            ReclaimPolicy::Conservative,
+            default_capacity(),
+            Some(4),
+        );
+        assert_eq!(em.hier_group(), Some(4));
+        // Epoch cycles and locale caches follow, exactly as flat.
+        for expected in [2, 3, 1, 2] {
+            assert!(em.try_reclaim().advanced());
+            assert_eq!(em.global_epoch(), expected);
+            assert_eq!(em.local_epoch(), expected);
+        }
+        // A stale pin still blocks the advance through the leader tree.
+        let tok = with_locale(LocaleId(7), || em.register());
+        with_locale(LocaleId(7), || tok.pin());
+        assert!(em.try_reclaim().advanced(), "same-epoch pin does not block");
+        assert_eq!(em.try_reclaim(), ReclaimOutcome::NotQuiescent);
+        with_locale(LocaleId(7), || tok.unpin());
+        assert!(em.try_reclaim().advanced());
+        // Deferred remote objects still reclaim on the same schedule.
+        tok.pin();
+        tok.defer_delete(p.alloc(LocaleId(5), 9u64));
+        tok.unpin();
+        let mut advances = 0;
+        while p.live_objects() > 0 {
+            assert!(em.try_reclaim().advanced());
+            advances += 1;
+            assert!(advances <= 3);
+        }
+        assert_eq!(advances, 3, "conservative drain schedule unchanged by hierarchy");
+    }
+
+    #[test]
+    fn hierarchical_flags_release_cleanly_from_every_locale() {
+        // Sequential attempts from every locale must each win the whole
+        // chain — a leaked group or global flag would make the next
+        // attempt from the same group lose.
+        let p = pgas(8);
+        let em = EpochManager::with_full_config(
+            Arc::clone(&p),
+            ReclaimPolicy::Conservative,
+            default_capacity(),
+            Some(2),
+        );
+        for round in 0..2 {
+            for loc in p.machine().locale_ids() {
+                let o = with_locale(loc, || em.try_reclaim());
+                assert!(o.advanced(), "round {round}, locale {loc:?}: {o:?}");
+            }
+        }
+        assert_eq!(em.stats().advances, 16);
+    }
+
+    #[test]
+    fn group_losses_bounce_off_the_leader_not_global_home() {
+        // The hierarchy's point: under contention, a losing contender's
+        // election traffic lands on its group leader, not on locale 0.
+        // Occupy the flags directly to make the loss deterministic.
+        let p = pgas(8);
+        let em = EpochManager::with_full_config(
+            Arc::clone(&p),
+            ReclaimPolicy::Conservative,
+            default_capacity(),
+            Some(4),
+        );
+        em.sh.inst.on_locale(LocaleId(4)).is_setting_group.store(true, Ordering::SeqCst);
+        let home = p.nic(LocaleId(0)).snapshot().ams_rx;
+        let leader = p.nic(LocaleId(4)).snapshot().ams_rx;
+        let o = with_locale(LocaleId(5), || em.try_reclaim());
+        assert_eq!(o, ReclaimOutcome::LostGlobalElection);
+        assert_eq!(p.nic(LocaleId(0)).snapshot().ams_rx, home, "loss never reached global_home");
+        assert_eq!(p.nic(LocaleId(4)).snapshot().ams_rx - leader, 1, "it bounced off the leader");
+        em.sh.inst.on_locale(LocaleId(4)).is_setting_group.store(false, Ordering::SeqCst);
+        assert!(with_locale(LocaleId(5), || em.try_reclaim()).advanced(), "flag back-out is clean");
+
+        // The flat protocol pays global_home one AM for the same loss —
+        // multiplied by every contender on every locale under contention.
+        let p2 = pgas(8);
+        let em2 = EpochManager::new(Arc::clone(&p2));
+        em2.sh.global_flag.store(true, Ordering::SeqCst);
+        let home2 = p2.nic(LocaleId(0)).snapshot().ams_rx;
+        let o2 = with_locale(LocaleId(5), || em2.try_reclaim());
+        assert_eq!(o2, ReclaimOutcome::LostGlobalElection);
+        assert_eq!(p2.nic(LocaleId(0)).snapshot().ams_rx - home2, 1);
+        em2.sh.global_flag.store(false, Ordering::SeqCst);
     }
 
     #[test]

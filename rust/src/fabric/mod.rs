@@ -29,9 +29,17 @@
 //! The default topology everywhere is [`TopologyKind::FlatZero`] — a
 //! zero-cost crossbar under which every charge reduces exactly to the
 //! pre-fabric flat model (pinned by `rust/tests/fabric.rs`).
+//!
+//! Routing is minimal by default. A [`Network`] built with
+//! [`Network::with_adaptive`] additionally applies a UGAL-style decision
+//! on the DES path: when the minimal route's bottleneck queue exceeds a
+//! threshold, a seeded Valiant detour through a random intermediate
+//! group ([`Topology::detour_route`]) is taken iff its queues are
+//! shallower. Off by default; with it off, every trace is bit-identical
+//! to minimal-only routing.
 
 pub mod network;
 pub mod topology;
 
-pub use network::{Delivery, LinkStats, NetTotals, Network};
+pub use network::{AdaptiveRouting, Delivery, LinkStats, NetTotals, Network};
 pub use topology::{ser_ns, Dragonfly, FullyConnected, Link, Ring, Route, Topology, TopologyKind};

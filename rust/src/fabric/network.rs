@@ -22,10 +22,24 @@
 //! time, and the peak single-message queueing delay — the congestion
 //! observables the fig9 bench and the paper's Figures 3–8 methodology
 //! report.
+//!
+//! ## Congestion-adaptive (UGAL) routing
+//!
+//! With [`AdaptiveRouting`] configured ([`Network::with_adaptive`]), the
+//! DES send path stops committing blindly to the minimal route: when the
+//! minimal route's bottleneck backlog ([`Network::link_backlog_ns`])
+//! exceeds the threshold, a seeded-random Valiant detour
+//! ([`Topology::detour_route`]) is considered and taken iff its
+//! hop-weighted bottleneck is shallower — the classic UGAL rule. The
+//! randomness is drawn *only* past the threshold, so any trace that never
+//! congests is bit-identical to minimal-only routing; with no
+//! `AdaptiveRouting` at all (the default), the adaptive code path does
+//! not exist and every pre-adaptive trace is reproduced exactly.
 
-use super::topology::{ser_ns, Link, Topology};
+use super::topology::{ser_ns, Link, Route, Topology};
 use crate::pgas::topology::LocaleId;
 use crate::sim::engine::{Resource, VTime};
+use crate::util::rng::Xoshiro256pp;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -88,26 +102,104 @@ pub struct NetTotals {
     pub max_link_msgs: u64,
     /// Largest single-message queueing delay on any link.
     pub max_link_wait_ns: u64,
+    /// Messages that took a non-minimal (UGAL) route.
+    pub detours: u64,
+}
+
+/// Configuration of the congestion-adaptive (UGAL) routing decision.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct AdaptiveRouting {
+    /// Detours are considered only when the minimal route's bottleneck
+    /// backlog strictly exceeds this many virtual nanoseconds. Sensible
+    /// values sit around a few global-link serialization times; `u64::MAX`
+    /// disables detours while keeping the accessors live.
+    pub threshold_ns: u64,
+    /// Seed for the intermediate-group choice (deterministic replays).
+    pub seed: u64,
+}
+
+impl AdaptiveRouting {
+    pub fn new(threshold_ns: u64, seed: u64) -> AdaptiveRouting {
+        AdaptiveRouting { threshold_ns, seed }
+    }
 }
 
 /// The route-aware fabric state for one machine.
 pub struct Network {
     topo: Arc<dyn Topology>,
     links: HashMap<(u16, u16), LinkState>,
+    /// UGAL decision state; `None` = minimal-only (the default).
+    adaptive: Option<(AdaptiveRouting, Xoshiro256pp)>,
     messages: u64,
     hops: u64,
     bytes: u64,
     transit_ns: u64,
     queued_ns: u64,
+    detours: u64,
 }
 
 impl Network {
     pub fn new(topo: Arc<dyn Topology>) -> Network {
-        Network { topo, links: HashMap::new(), messages: 0, hops: 0, bytes: 0, transit_ns: 0, queued_ns: 0 }
+        Network {
+            topo,
+            links: HashMap::new(),
+            adaptive: None,
+            messages: 0,
+            hops: 0,
+            bytes: 0,
+            transit_ns: 0,
+            queued_ns: 0,
+            detours: 0,
+        }
+    }
+
+    /// A network whose DES sends route adaptively (see the module docs).
+    pub fn with_adaptive(topo: Arc<dyn Topology>, cfg: AdaptiveRouting) -> Network {
+        let rng = Xoshiro256pp::new(cfg.seed ^ 0x5EED_F00D);
+        Network { adaptive: Some((cfg, rng)), ..Network::new(topo) }
     }
 
     pub fn topology(&self) -> &Arc<dyn Topology> {
         &self.topo
+    }
+
+    /// Instantaneous backlog of one directed link at virtual time `now`:
+    /// how long a message arriving now would queue before serializing.
+    /// Zero for idle or never-used links. This is the congestion
+    /// observable the UGAL decision (and the sim's backpressure-adaptive
+    /// flush policy) reads.
+    pub fn link_backlog_ns(&self, link: Link, now: VTime) -> VTime {
+        self.links.get(&link.key()).map_or(0, |st| st.res.backlog(now))
+    }
+
+    /// Bottleneck (maximum per-link) backlog along a route at `now`.
+    pub fn route_backlog_ns(&self, route: &[Link], now: VTime) -> VTime {
+        route.iter().map(|&l| self.link_backlog_ns(l, now)).max().unwrap_or(0)
+    }
+
+    /// The route a DES send takes at `now`: minimal, unless adaptive
+    /// routing is on, the minimal bottleneck exceeds the threshold, and a
+    /// seeded Valiant detour wins the hop-weighted UGAL comparison.
+    fn choose_route(&mut self, from: LocaleId, to: LocaleId, now: VTime) -> Route {
+        let minimal = self.topo.route(from, to);
+        let Some((cfg, _)) = &self.adaptive else { return minimal };
+        let q_min = self.route_backlog_ns(&minimal, now);
+        if minimal.is_empty() || q_min <= cfg.threshold_ns {
+            return minimal;
+        }
+        // Randomness is drawn only past the threshold: uncongested traces
+        // stay bit-identical to minimal-only routing.
+        let choice = self.adaptive.as_mut().expect("adaptive checked above").1.next_u64();
+        let topo = Arc::clone(&self.topo);
+        let Some(detour) = topo.detour_route(from, to, choice) else { return minimal };
+        let q_det = self.route_backlog_ns(&detour, now);
+        // UGAL: compare hop-weighted bottlenecks (a longer path must buy
+        // proportionally shallower queues to be worth its extra hops).
+        if q_det * detour.len() as u64 >= q_min * minimal.len() as u64 {
+            return minimal;
+        }
+        self.detours += 1;
+        detour
     }
 
     /// DES path: inject a `bytes`-long message at virtual time `now` and
@@ -154,7 +246,13 @@ impl Network {
             return Delivery { delivered_at: now, ..Delivery::default() };
         }
         let topo = Arc::clone(&self.topo);
-        let route = topo.route(from, to);
+        let route = match queue_at {
+            // DES path: the route may adapt to instantaneous congestion.
+            Some(now) => self.choose_route(from, to, now),
+            // Tally path: no virtual clock, no queues, hence no backlog to
+            // adapt to — always minimal.
+            None => topo.route(from, to),
+        };
         let ser = ser_ns(topo.link_bytes_per_ns(), bytes);
         let mut t = now + topo.injection_ns();
         let mut pure = topo.injection_ns();
@@ -225,6 +323,7 @@ impl Network {
             bytes: self.bytes,
             transit_ns: self.transit_ns,
             queued_ns: self.queued_ns,
+            detours: self.detours,
             ..NetTotals::default()
         };
         for st in self.links.values() {
@@ -348,6 +447,95 @@ mod tests {
         assert_eq!(early.delivered_at, 5, "must not queue behind the future send");
         assert_eq!(early.waited_ns, 0);
         assert_eq!(n.totals().queued_ns, 0);
+    }
+
+    #[test]
+    fn backlog_accessor_tracks_link_queue_depth() {
+        let mut n = Network::new(Arc::new(FullyConnected::new(4)));
+        let link = Link::new(LocaleId(0), LocaleId(1));
+        assert_eq!(n.link_backlog_ns(link, 0), 0, "unused link has no backlog");
+        n.send(0, LocaleId(0), LocaleId(1), 16 * 1024); // 1024 ns of serialization
+        assert!(n.link_backlog_ns(link, 0) >= 1_024);
+        assert_eq!(n.link_backlog_ns(link, 1_000_000), 0, "backlog drains");
+        let route = n.topology().route(LocaleId(0), LocaleId(1));
+        assert_eq!(n.route_backlog_ns(&route, 0), n.link_backlog_ns(link, 0));
+    }
+
+    fn dragonfly16() -> Arc<crate::fabric::Dragonfly> {
+        Arc::new(crate::fabric::Dragonfly::with_group_size(16, 4))
+    }
+
+    /// Saturate the one global link the minimal 0->10 route uses (group 0
+    /// -> group 2 attaches at 2->8), then send 0->10. Neither 0 nor 10 is
+    /// an attachment router toward any intermediate group, so every
+    /// Valiant detour for this pair is the full 5-hop form.
+    fn saturate_and_send(n: &mut Network) -> Delivery {
+        for _ in 0..16 {
+            n.send(0, LocaleId(2), LocaleId(8), 64 * 1024);
+        }
+        n.send(0, LocaleId(0), LocaleId(10), 1_024)
+    }
+
+    #[test]
+    fn ugal_detours_around_a_congested_global_link() {
+        let mut minimal = Network::new(dragonfly16());
+        let mut adaptive = Network::with_adaptive(dragonfly16(), AdaptiveRouting::new(2_000, 42));
+        let dm = saturate_and_send(&mut minimal);
+        let da = saturate_and_send(&mut adaptive);
+        assert_eq!(minimal.totals().detours, 0);
+        assert_eq!(adaptive.totals().detours, 1, "the hot send must detour");
+        assert!(da.hops > dm.hops, "detour is non-minimal: {} vs {}", da.hops, dm.hops);
+        assert!(
+            da.delivered_at < dm.delivered_at,
+            "detour must beat the queue: {} vs {}",
+            da.delivered_at,
+            dm.delivered_at
+        );
+        assert!(da.waited_ns < dm.waited_ns);
+    }
+
+    #[test]
+    fn adaptive_under_threshold_is_bit_identical_to_minimal() {
+        // Uncongested traffic (and traffic below the threshold) must not
+        // detour and must not perturb the RNG — deliveries equal the
+        // minimal-only network's bit for bit.
+        let mut minimal = Network::new(dragonfly16());
+        let mut adaptive = Network::with_adaptive(dragonfly16(), AdaptiveRouting::new(u64::MAX, 7));
+        for i in 0..40u64 {
+            let (f, t) = (LocaleId((i % 16) as u16), LocaleId(((i * 7 + 3) % 16) as u16));
+            let dm = minimal.send(i * 100, f, t, 4_096);
+            let da = adaptive.send(i * 100, f, t, 4_096);
+            assert_eq!(dm, da, "send #{i}");
+        }
+        assert_eq!(minimal.totals().queued_ns, adaptive.totals().queued_ns);
+        assert_eq!(adaptive.totals().detours, 0);
+    }
+
+    #[test]
+    fn adaptive_routing_is_deterministic() {
+        let run = || {
+            let mut n = Network::with_adaptive(dragonfly16(), AdaptiveRouting::new(500, 9));
+            let mut total = 0u64;
+            for i in 0..200u64 {
+                let (f, t) = (LocaleId((i % 4) as u16), LocaleId((8 + i % 4) as u16));
+                total += n.send(i * 10, f, t, 32 * 1024).delivered_at;
+            }
+            (total, n.totals())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn record_path_never_detours() {
+        // The live-substrate tally path has no queues, so there is no
+        // backlog to adapt to: routes stay minimal and the RNG untouched.
+        let mut n = Network::with_adaptive(dragonfly16(), AdaptiveRouting::new(0, 1));
+        for _ in 0..100 {
+            n.record(LocaleId(1), LocaleId(9), 1 << 20);
+        }
+        let t = n.totals();
+        assert_eq!(t.detours, 0);
+        assert_eq!(t.hops, 300, "always the 3-hop minimal route");
     }
 
     #[test]

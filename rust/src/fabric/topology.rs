@@ -65,10 +65,14 @@ pub fn ser_ns(bytes_per_ns: u64, bytes: usize) -> u64 {
     }
 }
 
-/// The wiring of the machine. Implementations must route *minimally*
-/// (no implementation here takes a non-shortest path) and
-/// deterministically (the DES replays routes, so `route` must be a pure
-/// function of its arguments).
+/// The wiring of the machine. [`Topology::route`] must be *minimal* (a
+/// shortest path over the topology's own adjacency) and deterministic (a
+/// pure function of its arguments — the DES replays routes). Non-minimal
+/// paths exist only as explicitly requested *detours*
+/// ([`Topology::detour_route`]), used by the congestion-adaptive
+/// (UGAL-style) routing decision in [`Network`](super::Network); a
+/// topology with no useful detours simply returns `None` and stays
+/// minimal-only.
 pub trait Topology: Send + Sync {
     /// Short human/CSV label, e.g. `"ring"`.
     fn name(&self) -> &'static str;
@@ -79,6 +83,22 @@ pub trait Topology: Send + Sync {
     /// Ordered directed links from `from` to `to`. Must be empty iff
     /// `from == to`, start at `from`, end at `to`, and be contiguous.
     fn route(&self, from: LocaleId, to: LocaleId) -> Route;
+
+    /// A deterministic *non-minimal* alternative route for congestion
+    /// avoidance, or `None` when the topology offers none for this pair.
+    /// `choice` selects among the candidates (the caller supplies seeded
+    /// randomness; the same `choice` must always yield the same route).
+    ///
+    /// Contract, property-tested in `tests/fabric.rs`: the route is
+    /// loop-free, endpoint-correct, contiguous, uses only links of the
+    /// topology's own adjacency, differs from the minimal route, and is
+    /// at most `hops(from, to) + 2` long. Implementations therefore only
+    /// offer a detour where that slack exists (the dragonfly's full
+    /// 3-hop local–global–local case).
+    fn detour_route(&self, from: LocaleId, to: LocaleId, choice: u64) -> Option<Route> {
+        let _ = (from, to, choice);
+        None
+    }
 
     /// Cost of handing a message from the NIC to the fabric (beyond the
     /// NIC op cost itself, which stays in [`crate::pgas::NicModel`]).
@@ -383,6 +403,56 @@ impl Topology for Dragonfly {
         route
     }
 
+    /// Valiant/UGAL detour: route through a `choice`-selected intermediate
+    /// group `gx ∉ {gs, gd}`, crossing the gs↔gx and gx↔gd global links
+    /// instead of the (possibly congested) gs↔gd one:
+    ///
+    /// `from → attach(gs,gx) → attach(gx,gs) → attach(gx,gd) → attach(gd,gx) → to`
+    ///
+    /// with the intra-group hops elided where the endpoints coincide — at
+    /// most 5 hops. Offered only when the minimal route is the full 3-hop
+    /// local–global–local path: shorter minimal routes (intra-group,
+    /// attachment-adjacent, or the double-global shortcut) leave no slack
+    /// inside the `minimal + 2` hop budget, and their links are not the
+    /// single shared global link that congests in the first place.
+    fn detour_route(&self, from: LocaleId, to: LocaleId, choice: u64) -> Option<Route> {
+        if from == to || self.num_groups() < 3 {
+            return None;
+        }
+        let (gs, gd) = (self.group_of(from), self.group_of(to));
+        if gs == gd || self.route(from, to).len() < 3 {
+            return None;
+        }
+        // The choice-th group other than gs and gd (deterministic).
+        let mut k = (choice % (self.num_groups() as u64 - 2)) as usize;
+        let mut gx = usize::MAX;
+        for g in 0..self.num_groups() {
+            if g == gs || g == gd {
+                continue;
+            }
+            if k == 0 {
+                gx = g;
+                break;
+            }
+            k -= 1;
+        }
+        let (a1, b1) = (self.attachment(gs, gx), self.attachment(gx, gs));
+        let (b2, a2) = (self.attachment(gx, gd), self.attachment(gd, gx));
+        let mut route = Vec::with_capacity(5);
+        if from != a1 {
+            route.push(Link::new(from, a1));
+        }
+        route.push(Link::new(a1, b1));
+        if b1 != b2 {
+            route.push(Link::new(b1, b2));
+        }
+        route.push(Link::new(b2, a2));
+        if a2 != to {
+            route.push(Link::new(a2, to));
+        }
+        Some(route)
+    }
+
     fn injection_ns(&self) -> u64 {
         self.injection_ns
     }
@@ -555,6 +625,80 @@ mod tests {
         assert!(t.link_ns(route[1]) > t.per_hop_ns());
         assert!(t.connected(LocaleId(3), LocaleId(15)));
         assert!(t.connected(LocaleId(15), LocaleId(13)));
+    }
+
+    #[test]
+    fn default_topologies_offer_no_detours() {
+        for kind in [TopologyKind::FlatZero, TopologyKind::FullyConnected, TopologyKind::Ring] {
+            let t = kind.build(8);
+            for a in 0..8u16 {
+                for b in 0..8u16 {
+                    for choice in [0u64, 7, u64::MAX] {
+                        assert!(
+                            t.detour_route(LocaleId(a), LocaleId(b), choice).is_none(),
+                            "{} is minimal-only",
+                            t.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dragonfly_detour_goes_through_a_third_group() {
+        let t = Dragonfly::with_group_size(16, 4);
+        // 1 -> 9 routes minimally in 3 hops via the group-0/group-2 link;
+        // every detour must instead cross two other global links.
+        let (from, to) = (LocaleId(1), LocaleId(9));
+        assert_eq!(t.route(from, to).len(), 3);
+        let mut seen_groups = std::collections::BTreeSet::new();
+        for choice in 0..8u64 {
+            let d = t.detour_route(from, to, choice).expect("3-hop pair must offer detours");
+            assert!(d.len() >= 3 && d.len() <= 5, "detour {d:?}");
+            assert_eq!(d.first().unwrap().from, from);
+            assert_eq!(d.last().unwrap().to, to);
+            let globals: Vec<usize> = d
+                .iter()
+                .filter(|l| t.group_of(l.from) != t.group_of(l.to))
+                .map(|l| t.group_of(l.to))
+                .collect();
+            assert_eq!(globals.len(), 2, "exactly two global hops: {d:?}");
+            assert_ne!(globals[0], t.group_of(to), "first global hop leaves for gx");
+            seen_groups.insert(globals[0]);
+        }
+        // choice really selects among ALL intermediate groups (here 1, 3).
+        assert_eq!(seen_groups.len(), 2);
+    }
+
+    #[test]
+    fn dragonfly_offers_no_detour_when_minimal_is_short() {
+        let t = Dragonfly::with_group_size(16, 4);
+        // Intra-group pair.
+        assert!(t.detour_route(LocaleId(0), LocaleId(1), 0).is_none());
+        // Attachment-to-attachment pair: minimal route is 1 hop.
+        let (a, b) = (t.attachment(0, 2), t.attachment(2, 0));
+        assert_eq!(t.route(a, b).len(), 1);
+        assert!(t.detour_route(a, b, 0).is_none());
+        // Self.
+        assert!(t.detour_route(LocaleId(5), LocaleId(5), 0).is_none());
+        // Two groups only: no third group to detour through.
+        let two = Dragonfly::with_group_size(8, 4);
+        assert!(two.detour_route(LocaleId(1), LocaleId(5), 0).is_none());
+    }
+
+    #[test]
+    fn dragonfly_detour_is_deterministic_in_choice() {
+        let t = Dragonfly::with_group_size(64, 8);
+        let (from, to) = (LocaleId(1), LocaleId(62));
+        for choice in [0u64, 1, 5, 1 << 40, u64::MAX] {
+            let a = t.detour_route(from, to, choice);
+            let b = t.detour_route(from, to, choice);
+            assert_eq!(a, b, "same choice, same route");
+            assert!(a.is_some());
+        }
+        // Wrap-around: choice is reduced modulo the candidate count.
+        assert_eq!(t.detour_route(from, to, 0), t.detour_route(from, to, 6));
     }
 
     #[test]

@@ -47,6 +47,32 @@
 //! ops: `n` buffered operations cross the fabric's links once, not `n`
 //! times. The sender still stalls only for the injection-side cost —
 //! multi-hop delivery is the message's problem, not the issuing task's.
+//!
+//! ## Adaptive flush (deadline + backpressure)
+//!
+//! A fixed capacity trades latency for bandwidth blindly: under light
+//! traffic a buffered op can wait unboundedly for its batch to fill, and
+//! under a congested route a big batch arrives exactly when the links
+//! can least absorb it. [`FlushPolicy`] makes both knobs explicit:
+//!
+//! * **Deadline** (`flush_after_ns`): a destination whose *oldest*
+//!   buffered op is older than the deadline — measured on the issuing
+//!   locale's virtual clock ([`Pgas::local_virtual_ns`]) — is flushed at
+//!   the next buffering opportunity, so no op waits unboundedly while
+//!   the task keeps issuing.
+//! * **Backpressure** (`backpressure_ns`): the effective capacity halves
+//!   for every `backpressure_ns` of bottleneck-link backlog observed on
+//!   the destination's route (never below 1), and grows back to the base
+//!   capacity as the links drain. Deep queues → flush smaller, sooner.
+//!
+//! The policy itself is pure (no clock, no network — callers feed it
+//! observations), so the live [`Aggregator`] and the DES testbed
+//! ([`crate::sim`]) share the exact same decision rule. On the live
+//! substrate the fabric runs in tally mode (nothing queues), so the
+//! observed backlog is identically 0 and only the deadline binds; link
+//! backpressure genuinely binds in the DES testbed, where queues exist.
+//! [`FlushPolicy::fixed`] — the default — reproduces the PR 1 behaviour
+//! bit-for-bit.
 
 use super::heap::GlobalPtr;
 use super::topology::LocaleId;
@@ -69,6 +95,65 @@ pub fn default_capacity() -> usize {
             .unwrap_or(DEFAULT_AGG_CAPACITY)
     });
     *CONFIGURED
+}
+
+/// When to flush a destination's buffer: the pure decision rule shared
+/// by the live [`Aggregator`] and the DES testbed's migration buffers.
+/// Callers feed it observations (buffered count, oldest-op age, route
+/// backlog); it never reads a clock or the network itself.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct FlushPolicy {
+    /// Per-destination capacity under an uncongested route.
+    pub base_capacity: usize,
+    /// Flush a destination whose oldest buffered op is at least this old
+    /// (virtual ns). `None` disables the deadline — capacity-only, the
+    /// PR 1 behaviour.
+    pub flush_after_ns: Option<u64>,
+    /// Halve the effective capacity for every this many nanoseconds of
+    /// bottleneck backlog on the destination's route (clamped at 1).
+    /// `0` disables the backpressure shrink.
+    pub backpressure_ns: u64,
+}
+
+impl FlushPolicy {
+    /// Capacity-only policy: flush at `cap`, never on age, never shrink.
+    /// Behaviour is bit-identical to the pre-adaptive aggregator.
+    pub fn fixed(cap: usize) -> FlushPolicy {
+        assert!(cap >= 1, "aggregation capacity must be at least 1");
+        FlushPolicy { base_capacity: cap, flush_after_ns: None, backpressure_ns: 0 }
+    }
+
+    /// Fully adaptive policy: capacity `cap`, deadline `flush_after_ns`,
+    /// capacity halving per `backpressure_ns` of route backlog.
+    pub fn adaptive(cap: usize, flush_after_ns: u64, backpressure_ns: u64) -> FlushPolicy {
+        assert!(cap >= 1, "aggregation capacity must be at least 1");
+        FlushPolicy { base_capacity: cap, flush_after_ns: Some(flush_after_ns), backpressure_ns }
+    }
+
+    /// True iff this policy is exactly the fixed-capacity rule.
+    pub fn is_fixed(&self) -> bool {
+        self.flush_after_ns.is_none() && self.backpressure_ns == 0
+    }
+
+    /// Capacity in force under `backlog_ns` of observed route backlog:
+    /// the base capacity halved once per `backpressure_ns` multiple,
+    /// never below 1, and back to the base the moment the route drains.
+    #[inline]
+    pub fn effective_capacity(&self, backlog_ns: u64) -> usize {
+        if self.backpressure_ns == 0 {
+            return self.base_capacity;
+        }
+        let halvings = (backlog_ns / self.backpressure_ns).min(u64::from(usize::BITS - 1)) as u32;
+        (self.base_capacity >> halvings).max(1)
+    }
+
+    /// Should a destination whose oldest op was buffered at
+    /// `oldest_buffered_at` flush at `now`? (Both on the same virtual
+    /// clock; callers only invoke this for non-empty buffers.)
+    #[inline]
+    pub fn deadline_due(&self, oldest_buffered_at: u64, now: u64) -> bool {
+        self.flush_after_ns.is_some_and(|d| now.saturating_sub(oldest_buffered_at) >= d)
+    }
 }
 
 /// Per-destination operation buffers: one `Vec<T>` per locale of the
@@ -158,6 +243,11 @@ type Deliver<'a, T> = Box<dyn FnMut(LocaleId, Vec<T>) + 'a>;
 pub struct Aggregator<'a, T> {
     pgas: Arc<Pgas>,
     buf: AggBuffer<T>,
+    policy: FlushPolicy,
+    /// Virtual timestamp ([`Pgas::local_virtual_ns`]) at which the oldest
+    /// op of each destination's *current* batch was buffered. Meaningful
+    /// only while that destination's buffer is non-empty.
+    since: Vec<u64>,
     deliver: Deliver<'a, T>,
     entry_bytes: usize,
     flushed_items: u64,
@@ -179,10 +269,22 @@ impl<'a, T> Aggregator<'a, T> {
         cap: usize,
         deliver: impl FnMut(LocaleId, Vec<T>) + 'a,
     ) -> Aggregator<'a, T> {
+        Self::with_policy(pgas, FlushPolicy::fixed(cap), deliver)
+    }
+
+    /// An aggregator under an explicit [`FlushPolicy`]. With
+    /// [`FlushPolicy::fixed`] this is exactly [`Self::with_capacity`].
+    pub fn with_policy(
+        pgas: Arc<Pgas>,
+        policy: FlushPolicy,
+        deliver: impl FnMut(LocaleId, Vec<T>) + 'a,
+    ) -> Aggregator<'a, T> {
         let locales = pgas.machine().locales;
         Aggregator {
             pgas,
-            buf: AggBuffer::new(locales, cap),
+            buf: AggBuffer::new(locales, policy.base_capacity),
+            policy,
+            since: vec![0; locales],
             deliver: Box::new(deliver),
             entry_bytes: std::mem::size_of::<T>().max(1),
             flushed_items: 0,
@@ -191,10 +293,33 @@ impl<'a, T> Aggregator<'a, T> {
     }
 
     /// Buffer one operation for `dst`, flushing `dst`'s batch if this
-    /// fills it. The operation is **not applied** until its flush.
+    /// fills it or if the batch's oldest op has exceeded the policy's
+    /// deadline. The operation is **not applied** until its flush.
     pub fn buffer(&mut self, dst: LocaleId, item: T) {
+        if self.buf.pending_for(dst) == 0 {
+            self.since[dst.index()] = self.pgas.local_virtual_ns();
+        }
         if let Some(batch) = self.buf.push(dst, item) {
             self.send(dst, batch);
+        } else if self.policy.deadline_due(self.since[dst.index()], self.pgas.local_virtual_ns()) {
+            self.flush(dst);
+        }
+    }
+
+    /// Flush every destination whose oldest buffered op has exceeded the
+    /// policy's deadline (a no-op under a fixed policy). Callers on
+    /// batched loops that go long stretches without buffering toward a
+    /// given destination can invoke this to bound staleness.
+    pub fn maybe_flush_expired(&mut self) {
+        if self.policy.flush_after_ns.is_none() {
+            return;
+        }
+        let now = self.pgas.local_virtual_ns();
+        for i in 0..self.since.len() {
+            let dst = LocaleId(i as u16);
+            if self.buf.pending_for(dst) > 0 && self.policy.deadline_due(self.since[i], now) {
+                self.flush(dst);
+            }
         }
     }
 
@@ -240,6 +365,11 @@ impl<'a, T> Aggregator<'a, T> {
         self.buf.capacity()
     }
 
+    /// The flush policy in force.
+    pub fn policy(&self) -> FlushPolicy {
+        self.policy
+    }
+
     /// (delivered operations, delivered batches) so far.
     pub fn flush_stats(&self) -> (u64, u64) {
         (self.flushed_items, self.flushed_batches)
@@ -272,8 +402,12 @@ impl<T: Copy + 'static> PutAggregator<T> {
     }
 
     pub fn with_capacity(pgas: Arc<Pgas>, cap: usize) -> PutAggregator<T> {
+        Self::with_policy(pgas, FlushPolicy::fixed(cap))
+    }
+
+    pub fn with_policy(pgas: Arc<Pgas>, policy: FlushPolicy) -> PutAggregator<T> {
         PutAggregator {
-            inner: Aggregator::with_capacity(pgas, cap, |_dst, batch: Vec<(GlobalPtr<T>, T)>| {
+            inner: Aggregator::with_policy(pgas, policy, |_dst, batch: Vec<(GlobalPtr<T>, T)>| {
                 for (p, v) in batch {
                     debug_assert!(!p.is_nil(), "aggregated PUT to nil");
                     // Matches `Pgas::put`'s volatile store; the bulk
@@ -292,6 +426,11 @@ impl<T: Copy + 'static> PutAggregator<T> {
 
     pub fn flush_all(&mut self) {
         self.inner.flush_all();
+    }
+
+    /// See [`Aggregator::maybe_flush_expired`].
+    pub fn maybe_flush_expired(&mut self) {
+        self.inner.maybe_flush_expired();
     }
 
     pub fn pending(&self) -> usize {
@@ -489,6 +628,87 @@ mod tests {
         for t in targets {
             unsafe { p.free(t) };
         }
+    }
+
+    #[test]
+    fn effective_capacity_halves_under_backpressure_and_recovers() {
+        let p = FlushPolicy::adaptive(1024, 10_000, 1_000);
+        assert_eq!(p.effective_capacity(0), 1024, "uncongested: base capacity");
+        assert_eq!(p.effective_capacity(999), 1024);
+        assert_eq!(p.effective_capacity(1_000), 512);
+        assert_eq!(p.effective_capacity(2_500), 256);
+        assert_eq!(p.effective_capacity(10_000), 1);
+        assert_eq!(p.effective_capacity(u64::MAX), 1, "clamped, never 0");
+        // Recovery is instantaneous: capacity is a pure function of the
+        // observed backlog, so a drained route is back at base.
+        assert_eq!(p.effective_capacity(0), 1024);
+    }
+
+    #[test]
+    fn fixed_policy_never_shrinks_or_expires() {
+        let p = FlushPolicy::fixed(64);
+        assert!(p.is_fixed());
+        assert_eq!(p.effective_capacity(u64::MAX), 64);
+        assert!(!p.deadline_due(0, u64::MAX));
+        assert!(!FlushPolicy::adaptive(64, 100, 7).is_fixed());
+    }
+
+    #[test]
+    fn deadline_flush_applies_nothing_early_and_drop_still_flushes() {
+        use crate::pgas::NicOp;
+        let p = pgas4();
+        let delivered = RefCell::new(Vec::new());
+        {
+            let mut agg = Aggregator::with_policy(
+                Arc::clone(&p),
+                FlushPolicy::adaptive(100, 5_000, 0),
+                |dst, batch: Vec<u64>| delivered.borrow_mut().push((dst, batch)),
+            );
+            agg.buffer(LocaleId(1), 10);
+            agg.buffer(LocaleId(1), 11);
+            assert!(delivered.borrow().is_empty(), "young batch: nothing applied before flush");
+            // Advance the issuing locale's virtual clock past the deadline.
+            while p.local_virtual_ns() < 5_000 {
+                p.charge(NicOp::Get(8), LocaleId(3));
+            }
+            assert!(delivered.borrow().is_empty(), "clock alone cannot apply a batch");
+            agg.buffer(LocaleId(1), 12); // overdue: this buffering flushes
+            assert_eq!(*delivered.borrow(), vec![(LocaleId(1), vec![10, 11, 12])]);
+            agg.buffer(LocaleId(2), 99); // fresh batch, stays buffered…
+            assert_eq!(agg.pending(), 1);
+        }
+        // …until the drop barrier.
+        assert_eq!(delivered.borrow().len(), 2, "drop must deliver every buffered op");
+        assert_eq!(delivered.borrow()[1], (LocaleId(2), vec![99]));
+    }
+
+    #[test]
+    fn maybe_flush_expired_flushes_only_overdue_destinations() {
+        use crate::pgas::NicOp;
+        let p = pgas4();
+        let delivered = RefCell::new(Vec::new());
+        let mut agg = Aggregator::with_policy(
+            Arc::clone(&p),
+            FlushPolicy::adaptive(100, 5_000, 0),
+            |dst, batch: Vec<u64>| delivered.borrow_mut().push((dst, batch.len())),
+        );
+        agg.buffer(LocaleId(1), 1);
+        while p.local_virtual_ns() < 5_000 {
+            p.charge(NicOp::Get(8), LocaleId(3));
+        }
+        agg.buffer(LocaleId(2), 2); // fresh
+        agg.maybe_flush_expired();
+        assert_eq!(*delivered.borrow(), vec![(LocaleId(1), 1)], "only the overdue destination");
+        assert_eq!(agg.pending_for(LocaleId(2)), 1);
+        // A fixed-policy aggregator's maybe_flush_expired is a no-op.
+        let fixed_flushes = RefCell::new(0usize);
+        let mut fixed = Aggregator::with_capacity(Arc::clone(&p), 100, |_, _b: Vec<u64>| {
+            *fixed_flushes.borrow_mut() += 1;
+        });
+        fixed.buffer(LocaleId(1), 1);
+        fixed.maybe_flush_expired();
+        assert_eq!(*fixed_flushes.borrow(), 0, "fixed policy never expires");
+        assert_eq!(fixed.pending(), 1);
     }
 
     #[test]

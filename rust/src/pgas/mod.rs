@@ -17,7 +17,7 @@ pub mod task;
 pub mod topology;
 pub mod wide_ptr;
 
-pub use aggregation::{AggBuffer, Aggregator, PutAggregator, DEFAULT_AGG_CAPACITY};
+pub use aggregation::{AggBuffer, Aggregator, FlushPolicy, PutAggregator, DEFAULT_AGG_CAPACITY};
 pub use heap::{ErasedPtr, GlobalPtr, HeapStats};
 pub use nic::{Fabric, Nic, NicModel, NicOp, NicSnapshot};
 pub use privatized::Privatized;
@@ -177,13 +177,7 @@ impl Pgas {
     /// transit into the fabric counters (see [`crate::fabric`]).
     #[inline]
     pub fn charge(&self, op: NicOp, target: LocaleId) -> u64 {
-        let from = here();
-        let remote = from != target;
-        let ns = self.issuing_nic().charge(&self.model, op, remote);
-        if remote {
-            self.record_transit(from, target, op.payload_bytes(), 1);
-        }
-        ns
+        self.charge_n(op, target, 1)
     }
 
     /// Charge `n` identical operations with one counter update (hot-path
@@ -195,8 +189,25 @@ impl Pgas {
         let ns = self.issuing_nic().charge_n(&self.model, op, remote, n);
         if remote && n > 0 {
             self.record_transit(from, target, op.payload_bytes(), n);
+            if self.model.arrives_as_am(op) {
+                // The target's progress thread handles these — the
+                // received-AM side of the hot-spot picture.
+                self.nics[target.index()]
+                    .ams_rx
+                    .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+            }
         }
         ns
+    }
+
+    /// The issuing locale's NIC virtual-time accumulator — the live
+    /// substrate's per-locale virtual clock. Monotone (every charge this
+    /// locale issues advances it); zero until the first charge. The
+    /// aggregation layer's deadline-based flush reads this to decide when
+    /// a buffered batch has waited long enough ([`aggregation::FlushPolicy`]).
+    #[inline]
+    pub fn local_virtual_ns(&self) -> u64 {
+        self.issuing_nic().virtual_ns.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Charge one aggregated flush of `n` coalesced operations (each
@@ -267,6 +278,8 @@ impl Pgas {
     /// message): charged as an AM, run with the locale context switched —
     /// the substrate analogue of the target's progress thread running it.
     pub fn on<R>(&self, loc: LocaleId, f: impl FnOnce() -> R) -> R {
+        // `charge` also counts the arrival in the target's `ams_rx` (a
+        // local `on` runs inline — no AM reaches a progress thread).
         self.charge(NicOp::ActiveMessage, loc);
         with_locale(loc, f)
     }
@@ -284,6 +297,7 @@ impl Pgas {
             total.bytes += s.bytes;
             total.aggregated_ops += s.aggregated_ops;
             total.flushes += s.flushes;
+            total.ams_rx += s.ams_rx;
             total.virtual_ns += s.virtual_ns;
             total.transit_ns += s.transit_ns;
         }
@@ -335,6 +349,47 @@ mod tests {
         let observed = p.on(LocaleId(1), here);
         assert_eq!(observed, LocaleId(1));
         assert_eq!(p.comm_totals().ams, 1);
+    }
+
+    #[test]
+    fn on_counts_arrival_at_target_but_not_for_local_on() {
+        let p = pgas4();
+        p.on(LocaleId(1), || ());
+        p.on(LocaleId(1), || ());
+        with_locale(LocaleId(2), || p.on(LocaleId(2), || ()));
+        assert_eq!(p.nic(LocaleId(1)).snapshot().ams_rx, 2);
+        assert_eq!(p.nic(LocaleId(0)).snapshot().ams_rx, 0, "issuer receives nothing");
+        assert_eq!(p.nic(LocaleId(2)).snapshot().ams_rx, 0, "local on runs inline");
+        assert_eq!(p.comm_totals().ams_rx, 2);
+    }
+
+    #[test]
+    fn demoted_remote_atomics_count_as_received_ams() {
+        // Without network atomics a remote Atomic64 is an AM at the
+        // target; with them it is handled by the target NIC (no progress
+        // thread). PUT/GET never involve the progress thread.
+        let p = pgas4(); // aries_no_network_atomics
+        p.charge(NicOp::Atomic64, LocaleId(3));
+        p.charge(NicOp::Atomic128, LocaleId(3));
+        p.charge(NicOp::Put(64), LocaleId(3));
+        p.charge(NicOp::Get(64), LocaleId(3));
+        p.charge(NicOp::Atomic64, LocaleId(0)); // local: inline
+        assert_eq!(p.nic(LocaleId(3)).snapshot().ams_rx, 2);
+        let rdma = Pgas::new(Machine::new(4, 2), NicModel::aries());
+        rdma.charge(NicOp::Atomic64, LocaleId(3));
+        assert_eq!(rdma.nic(LocaleId(3)).snapshot().ams_rx, 0, "RDMA atomic, no AM");
+    }
+
+    #[test]
+    fn local_virtual_ns_is_the_issuing_locales_clock() {
+        let p = pgas4();
+        let base = NicModel::aries_no_network_atomics();
+        with_locale(LocaleId(1), || {
+            assert_eq!(p.local_virtual_ns(), 0);
+            p.charge(NicOp::Get(8), LocaleId(3));
+            assert_eq!(p.local_virtual_ns(), base.cost(NicOp::Get(8), true));
+        });
+        with_locale(LocaleId(2), || assert_eq!(p.local_virtual_ns(), 0, "per-locale, not global"));
     }
 
     #[test]

@@ -125,6 +125,20 @@ impl NicModel {
 }
 
 impl NicModel {
+    /// Does `op`, issued toward a remote target, arrive as an **active
+    /// message** handled by the target's progress thread? True for
+    /// explicit AMs, for 128-bit atomics (no RDMA form on any modeled
+    /// fabric), and for 64-bit atomics when network atomics are off.
+    /// RDMA atomics and one-sided PUT/GET are handled by the target NIC
+    /// without involving a progress thread.
+    pub fn arrives_as_am(&self, op: NicOp) -> bool {
+        match op {
+            NicOp::ActiveMessage | NicOp::Atomic128 => true,
+            NicOp::Atomic64 => !self.network_atomics,
+            NicOp::Put(_) | NicOp::Get(_) => false,
+        }
+    }
+
     /// Pure cost of `op` (issued toward a `remote` or local target) under
     /// this model, in modeled nanoseconds. Shared by the live substrate
     /// ([`Nic::charge`]) and the discrete-event testbed simulator.
@@ -215,6 +229,15 @@ pub struct Nic {
     /// Bulk flushes performed by the aggregation layer (each one carries
     /// `aggregated_ops / flushes` operations on average).
     pub flushes: AtomicU64,
+    /// Active messages *received* by this locale (executed by its progress
+    /// thread), as opposed to `ams` which counts AMs *issued*. This is the
+    /// hot-spot observable for the epoch's `global_home`: under a flat
+    /// advance, every locale's election traffic and scan AMs land here;
+    /// under a hierarchical advance only group leaders' do. Incremented by
+    /// [`crate::pgas::Pgas`] charge paths for remote ops that
+    /// [`NicModel::arrives_as_am`] — a local `on` runs inline, no AM
+    /// arrives anywhere.
+    pub ams_rx: AtomicU64,
     /// Sum of modeled nanoseconds charged through this NIC. This is the
     /// *sender-visible* (injection) cost only — see `transit_ns`.
     pub virtual_ns: AtomicU64,
@@ -237,6 +260,7 @@ pub struct NicSnapshot {
     pub bytes: u64,
     pub aggregated_ops: u64,
     pub flushes: u64,
+    pub ams_rx: u64,
     pub virtual_ns: u64,
     pub transit_ns: u64,
 }
@@ -367,6 +391,7 @@ impl Nic {
             bytes: self.bytes.load(Ordering::Relaxed),
             aggregated_ops: self.aggregated_ops.load(Ordering::Relaxed),
             flushes: self.flushes.load(Ordering::Relaxed),
+            ams_rx: self.ams_rx.load(Ordering::Relaxed),
             virtual_ns: self.virtual_ns.load(Ordering::Relaxed),
             transit_ns: self.transit_ns.load(Ordering::Relaxed),
         }
@@ -384,6 +409,7 @@ impl NicSnapshot {
             bytes: self.bytes - earlier.bytes,
             aggregated_ops: self.aggregated_ops - earlier.aggregated_ops,
             flushes: self.flushes - earlier.flushes,
+            ams_rx: self.ams_rx - earlier.ams_rx,
             virtual_ns: self.virtual_ns - earlier.virtual_ns,
             transit_ns: self.transit_ns - earlier.transit_ns,
         }

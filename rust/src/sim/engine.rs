@@ -102,6 +102,15 @@ impl Resource {
         self.busy
     }
 
+    /// Instantaneous queue depth at `now`, in time units: how long a
+    /// zero-hold operation arriving at `now` would wait before starting.
+    /// Zero when the resource is idle. This is the congestion observable
+    /// the fabric's adaptive (UGAL) routing decision reads per link.
+    #[inline]
+    pub fn backlog(&self, now: VTime) -> VTime {
+        self.avail.saturating_sub(now)
+    }
+
     pub fn ops(&self) -> u64 {
         self.ops
     }
@@ -245,6 +254,22 @@ mod tests {
         assert_eq!(r.busy(), 70);
         // Queue state untouched: a real acquire at t=0 starts immediately.
         assert_eq!(r.acquire(0, 5), 5);
+    }
+
+    #[test]
+    fn backlog_reports_instantaneous_queue_depth() {
+        let mut r = Resource::new();
+        assert_eq!(r.backlog(0), 0, "idle resource has no backlog");
+        r.acquire(0, 100);
+        assert_eq!(r.backlog(0), 100);
+        assert_eq!(r.backlog(40), 60, "backlog drains as time passes");
+        assert_eq!(r.backlog(100), 0);
+        assert_eq!(r.backlog(500), 0, "never negative");
+        r.acquire(50, 10); // queues: starts at 100, done at 110
+        assert_eq!(r.backlog(50), 60);
+        // tally never adds backlog (no queue state).
+        r.tally(10, 1_000);
+        assert_eq!(r.backlog(50), 60);
     }
 
     #[test]

@@ -14,11 +14,21 @@
 //! * Fig 6 — deletion, reclamation only at the very end (`clear`), with a
 //!   0/50/100 % remote-object ratio;
 //! * Fig 7 — read-only: pin/unpin only.
+//!
+//! ## Congestion adaptivity (fig 10)
+//!
+//! [`Adaptivity`] bundles the three closed-loop knobs the fig10 bench
+//! sweeps — UGAL adaptive routing on the fabric, deadline/backpressure
+//! migration flush on the aggregation side, and the hierarchical
+//! (group-leader tree) epoch advance. Every knob is off by default, and
+//! with all of them off the simulator executes the exact pre-adaptive
+//! code paths, so traces are bit-identical to earlier revisions (pinned
+//! by the tests here and in `rust/tests/`).
 
 use super::engine::{run, MultiResource, Resource, Step, VTime, Workload};
 use crate::epoch::NUM_EPOCHS;
-use crate::fabric::{NetTotals, Network, TopologyKind};
-use crate::pgas::{LocaleId, NicModel, NicOp};
+use crate::fabric::{AdaptiveRouting, NetTotals, Network, TopologyKind};
+use crate::pgas::{FlushPolicy, LocaleId, NicModel, NicOp, DEFAULT_AGG_CAPACITY};
 use crate::util::rng::Xoshiro256pp;
 
 /// Which figure's workload to run.
@@ -46,6 +56,42 @@ pub struct StalledTask {
     pub hold_iters: usize,
 }
 
+/// Congestion-adaptivity knobs for the testbed (fig 10). All off by
+/// default; with every knob off the simulator executes the exact
+/// pre-adaptive code paths, so traces are bit-identical (pinned by the
+/// `adaptivity_off_is_bit_identical` test).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct Adaptivity {
+    /// UGAL adaptive routing: when the minimal route's bottleneck link
+    /// queue exceeds this, a Valiant detour is considered. `None` =
+    /// minimal routing only.
+    pub ugal_threshold_ns: Option<u64>,
+    /// Deadline-based migration flush: `Some(d)` buffers remote-owned
+    /// deferrals per destination (the aggregation layer's deferral
+    /// migration) and flushes a destination once its oldest buffered
+    /// entry is `d` virtual ns old, even if the buffer is not full.
+    /// `None` = no migration buffering; remote-owned deferrals sit in
+    /// the deferring locale's limbo and scatter at drain time, exactly
+    /// as before.
+    pub flush_after_ns: Option<u64>,
+    /// Backpressure: halve the effective migration-buffer capacity for
+    /// every `backpressure_ns` of queue backlog on the route to the
+    /// destination (0 = fixed capacity). Only meaningful with
+    /// `flush_after_ns` set.
+    pub backpressure_ns: u64,
+    /// Hierarchical epoch advance with contiguous leader groups of this
+    /// size: election, quiescence scan and epoch publish go through the
+    /// group leaders instead of every locale hammering locale 0.
+    pub hier_group: Option<usize>,
+}
+
+impl Adaptivity {
+    /// Is any knob on?
+    pub fn any(&self) -> bool {
+        self.ugal_threshold_ns.is_some() || self.flush_after_ns.is_some() || self.hier_group.is_some()
+    }
+}
+
 /// Configuration of one data point.
 #[derive(Clone, Debug)]
 pub struct EpochConfig {
@@ -71,6 +117,12 @@ pub struct EpochConfig {
     /// crosses it hop by hop, queueing on busy links. The default
     /// [`TopologyKind::FlatZero`] reproduces the flat model exactly.
     pub topology: TopologyKind,
+    /// Base per-destination migration-buffer capacity (mirrors the
+    /// substrate's `--agg-capacity` / `PGAS_NB_AGG_CAPACITY`). Used only
+    /// when [`Adaptivity::flush_after_ns`] is set.
+    pub agg_capacity: usize,
+    /// Congestion-adaptivity knobs (fig 10); all off by default.
+    pub adaptive: Adaptivity,
     pub seed: u64,
 }
 
@@ -92,6 +144,14 @@ pub struct EpochResult {
     pub not_quiescent: u64,
     pub freed: u64,
     pub freed_remote: u64,
+    /// Active messages *received* at locale 0 — the global-epoch home.
+    /// The hierarchical advance exists to shrink this hot-spot count.
+    pub ams_rx_home: u64,
+    /// Deferred objects migrated to their owner through the adaptive
+    /// flush path (0 unless [`Adaptivity::flush_after_ns`] is set).
+    pub migrated: u64,
+    /// Migration-buffer flushes (bulk PUT + AM each).
+    pub migration_flushes: u64,
     /// Fabric counters (messages, hops, transit, queueing, hottest link).
     pub net: NetTotals,
 }
@@ -100,14 +160,26 @@ pub struct EpochResult {
 struct LocState {
     epoch: u64,
     flag: bool,
-    /// Serialization points: the flag word, the epoch word, the limbo
-    /// heads + node pool, and the AM progress thread.
+    /// Group-leader election flag (hierarchical advance; only ever set
+    /// on group leaders).
+    gflag: bool,
+    /// Serialization points: the flag word, the group flag word, the
+    /// epoch word, the limbo heads + node pool, and the AM progress
+    /// thread.
     flag_res: Resource,
+    gflag_res: Resource,
     epoch_res: Resource,
     limbo_res: Resource,
     progress_res: MultiResource,
     /// limbo[list][owner_locale] = deferred-object count.
     limbo: Vec<Vec<u64>>,
+    /// Adaptive-flush migration buffers: mig[dest][list] = buffered
+    /// remote-owned deferrals headed for `dest`, keyed by the limbo list
+    /// they were deferred under. Empty unless the flush knob is on.
+    mig: Vec<[u64; NUM_EPOCHS as usize]>,
+    /// Virtual time the oldest entry buffered for each destination was
+    /// deferred at (meaningful only while that buffer is non-empty).
+    mig_since: Vec<VTime>,
 }
 
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -118,6 +190,9 @@ enum Phase {
     MaybeReclaim,
     // --- tryReclaim state machine ---
     RLocalFlag,
+    /// Hierarchical advance only: FCFS on the group leader's flag,
+    /// between the local and global flags.
+    RGroupFlag,
     RGlobalFlag,
     RReadEpoch,
     RScan { this_epoch: u64 },
@@ -167,7 +242,12 @@ struct EpochSim {
     not_quiescent: u64,
     freed: u64,
     freed_remote: u64,
+    migrated: u64,
+    migration_flushes: u64,
     iters: u64,
+    /// Active messages received per locale (progress-thread arrivals):
+    /// remote AMs, demoted remote atomics, scatter/migration deletes.
+    ams_rx: Vec<u64>,
     /// Tasks still in the main loop (for the final clear trigger).
     active: usize,
 }
@@ -272,6 +352,90 @@ impl EpochSim {
         }
     }
 
+    /// Count one received AM at `target` (the progress-thread arrival
+    /// side; mirrors `NicSnapshot::ams_rx` on the real substrate).
+    #[inline]
+    fn rx_am(&mut self, from: usize, target: usize) {
+        if from != target {
+            self.ams_rx[target] += 1;
+        }
+    }
+
+    /// A remote 64-bit atomic arrives as an AM only when the NIC cannot
+    /// execute it (mirrors `NicModel::arrives_as_am`).
+    #[inline]
+    fn rx_atomic(&mut self, from: usize, target: usize) {
+        if from != target && !self.cfg.model.network_atomics {
+            self.ams_rx[target] += 1;
+        }
+    }
+
+    /// The adaptive flush policy, when the knob is on.
+    fn flush_policy(&self) -> Option<FlushPolicy> {
+        self.cfg.adaptive.flush_after_ns.map(|d| FlushPolicy {
+            base_capacity: self.cfg.agg_capacity.max(1),
+            flush_after_ns: Some(d),
+            backpressure_ns: self.cfg.adaptive.backpressure_ns,
+        })
+    }
+
+    /// Leader of `loc`'s contiguous group under the hierarchical advance.
+    #[inline]
+    fn group_leader(loc: usize, g: usize) -> usize {
+        loc / g * g
+    }
+
+    /// Flush locale `from`'s migration buffer for `dest`: one bulk PUT of
+    /// the batch + one AM whose handler pushes every entry into `dest`'s
+    /// limbo under its ORIGINAL list index — owner-local from then on, so
+    /// the eventual drain frees without another network crossing
+    /// (mirrors the real manager's `migrate_batch`). No-op when empty.
+    fn flush_migration(&mut self, now: VTime, from: usize, dest: usize) -> VTime {
+        let cfg = self.cfg.clone();
+        let lists = std::mem::take(&mut self.locs[from].mig[dest]);
+        let n: u64 = lists.iter().sum();
+        if n == 0 {
+            return now;
+        }
+        self.migrated += n;
+        self.migration_flushes += 1;
+        let mut t = now + cfg.model.cost(NicOp::Put(n as usize * 16), true);
+        t = self
+            .net
+            .send(t, LocaleId(from as u16), LocaleId(dest as u16), n as usize * 16)
+            .delivered_at;
+        self.rx_am(from, dest);
+        t = Self::am(&cfg, &mut self.jrng, &mut self.net, &mut self.locs[dest].progress_res, t, from, dest);
+        t += n * cfg.model.local_atomic_ns;
+        for (list, &cnt) in lists.iter().enumerate() {
+            self.locs[dest].limbo[list][dest] += cnt;
+        }
+        t
+    }
+
+    /// Step 5 of the adaptive advance: before any limbo list is drained,
+    /// every locale flushes its migration buffers so in-flight deferrals
+    /// reach their owner's limbo first. Parallel over locales (one AM to
+    /// kick each), sequential over destinations within a locale; returns
+    /// the completion of the slowest locale. No-op (returns `now`) when
+    /// nothing is buffered.
+    fn flush_all_migrations(&mut self, now: VTime, actor: usize) -> VTime {
+        let cfg = self.cfg.clone();
+        let mut t_done = now;
+        for loc in 0..cfg.locales {
+            if self.locs[loc].mig.iter().all(|lists| lists.iter().all(|&c| c == 0)) {
+                continue;
+            }
+            self.rx_am(actor, loc);
+            let mut t = Self::am(&cfg, &mut self.jrng, &mut self.net, &mut self.locs[loc].progress_res, now, actor, loc);
+            for dest in 0..cfg.locales {
+                t = self.flush_migration(t, loc, dest);
+            }
+            t_done = t_done.max(t);
+        }
+        t_done
+    }
+
     /// Drain one locale's expired limbo list: pop (one exchange), scatter,
     /// bulk transfer per remote destination. Returns (completion, freed,
     /// remote_freed). Conservative policy: list index `new_epoch - 1`.
@@ -304,6 +468,7 @@ impl EpochSim {
                     .net
                     .send(t, LocaleId(loc as u16), LocaleId(dest as u16), n as usize * 16)
                     .delivered_at;
+                self.rx_am(loc, dest);
                 t = Self::am(
                     &cfg,
                     &mut self.jrng,
@@ -375,9 +540,31 @@ impl Workload for EpochSim {
                 };
                 let epoch = self.tasks[tid].epoch;
                 let list = ((epoch - 1) % NUM_EPOCHS) as usize;
-                self.locs[me].limbo[list][owner] += 1;
+                let mut t_done = t2;
+                match self.flush_policy() {
+                    Some(policy) if owner != me => {
+                        // Adaptive flush: buffer toward the owner instead
+                        // of parking in the local limbo for a drain-time
+                        // scatter. Capacity adapts to the backlog on the
+                        // route (backpressure); the deadline guarantees no
+                        // entry waits unboundedly.
+                        if self.locs[me].mig[owner].iter().sum::<u64>() == 0 {
+                            self.locs[me].mig_since[owner] = t2;
+                        }
+                        self.locs[me].mig[owner][list] += 1;
+                        let total: u64 = self.locs[me].mig[owner].iter().sum();
+                        let route =
+                            self.net.topology().route(LocaleId(me as u16), LocaleId(owner as u16));
+                        let backlog = self.net.route_backlog_ns(&route, t2);
+                        let cap = policy.effective_capacity(backlog) as u64;
+                        if total >= cap || policy.deadline_due(self.locs[me].mig_since[owner], t2) {
+                            t_done = self.flush_migration(t2, me, owner);
+                        }
+                    }
+                    _ => self.locs[me].limbo[list][owner] += 1,
+                }
                 self.tasks[tid].phase = Phase::Unpin;
-                Step::ResumeAt(t2)
+                Step::ResumeAt(t_done)
             }
             Phase::Unpin => {
                 let stalled = cfg
@@ -391,9 +578,28 @@ impl Workload for EpochSim {
                 Step::ResumeAt(t)
             }
             Phase::MaybeReclaim => {
+                // Adaptive flush: sweep this locale's migration buffers
+                // for overdue destinations (the issuing-side deadline
+                // check — `Aggregator::maybe_flush_expired` on the real
+                // substrate).
+                let mut t0 = now;
+                if let Some(policy) = self.flush_policy() {
+                    for dest in 0..cfg.locales {
+                        if self.locs[me].mig[dest].iter().sum::<u64>() > 0
+                            && policy.deadline_due(self.locs[me].mig_since[dest], now)
+                        {
+                            t0 = self.flush_migration(t0, me, dest);
+                        }
+                    }
+                }
                 let do_reclaim = match self.reclaim_every() {
                     Some(k) => self.tasks[tid].iter % k == 0,
                     None => false,
+                };
+                let after_local = if cfg.adaptive.hier_group.is_some() {
+                    Phase::RGroupFlag
+                } else {
+                    Phase::RGlobalFlag
                 };
                 self.tasks[tid].phase = if do_reclaim {
                     self.tasks[tid].resume_phase = Phase::Pin;
@@ -404,12 +610,12 @@ impl Workload for EpochSim {
                         // global flag directly (still marking the local
                         // flag so release stays symmetric).
                         self.locs[me].flag = true;
-                        Phase::RGlobalFlag
+                        after_local
                     }
                 } else {
                     Phase::Pin
                 };
-                Step::ResumeAt(now)
+                Step::ResumeAt(t0)
             }
             Phase::RLocalFlag => {
                 let t = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].flag_res, now);
@@ -418,19 +624,58 @@ impl Workload for EpochSim {
                     self.tasks[tid].phase = self.tasks[tid].resume_phase;
                 } else {
                     self.locs[me].flag = true;
-                    self.tasks[tid].phase = Phase::RGlobalFlag;
+                    self.tasks[tid].phase = if cfg.adaptive.hier_group.is_some() {
+                        Phase::RGroupFlag
+                    } else {
+                        Phase::RGlobalFlag
+                    };
                 }
                 Step::ResumeAt(t)
             }
+            Phase::RGroupFlag => {
+                // Hierarchical advance: FCFS on the group leader's flag.
+                // A loss bounces off the LEADER — the global home never
+                // sees the attempt (that is the whole point).
+                let g = cfg.adaptive.hier_group.expect("RGroupFlag requires hier_group");
+                let leader = Self::group_leader(me, g);
+                self.rx_atomic(me, leader);
+                let t = {
+                    let lead = &mut self.locs[leader];
+                    let (w, p) = (&mut lead.gflag_res, &mut lead.progress_res);
+                    Self::op64(&cfg, &mut self.jrng, &mut self.net, w, p, now, me, leader)
+                };
+                if self.locs[leader].gflag {
+                    self.lost_global += 1;
+                    let t2 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].flag_res, t);
+                    self.locs[me].flag = false;
+                    self.tasks[tid].phase = self.tasks[tid].resume_phase;
+                    return Step::ResumeAt(t2);
+                }
+                self.locs[leader].gflag = true;
+                self.tasks[tid].phase = Phase::RGlobalFlag;
+                Step::ResumeAt(t)
+            }
             Phase::RGlobalFlag => {
+                self.rx_atomic(me, 0);
                 let t = {
                     let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
                     Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
                 };
                 if self.global_flag {
                     self.lost_global += 1;
-                    // clear local flag and back out
-                    let t2 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].flag_res, t);
+                    // Back out: group flag (hierarchical only), then local.
+                    let mut t2 = t;
+                    if let Some(g) = cfg.adaptive.hier_group {
+                        let leader = Self::group_leader(me, g);
+                        self.rx_atomic(me, leader);
+                        t2 = {
+                            let lead = &mut self.locs[leader];
+                            let (w, p) = (&mut lead.gflag_res, &mut lead.progress_res);
+                            Self::op64(&cfg, &mut self.jrng, &mut self.net, w, p, t2, me, leader)
+                        };
+                        self.locs[leader].gflag = false;
+                    }
+                    let t2 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].flag_res, t2);
                     self.locs[me].flag = false;
                     self.tasks[tid].phase = self.tasks[tid].resume_phase;
                     return Step::ResumeAt(t2);
@@ -440,6 +685,7 @@ impl Workload for EpochSim {
                 Step::ResumeAt(t)
             }
             Phase::RReadEpoch => {
+                self.rx_atomic(me, 0);
                 let t = {
                     let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
                     Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
@@ -450,19 +696,56 @@ impl Workload for EpochSim {
             Phase::RScan { this_epoch } => {
                 // `coforall loc in Locales do on loc`: the scan visits all
                 // locales in parallel; completion = the slowest locale.
+                // Hierarchical: the elected task fans out to the group
+                // LEADERS only, each leader fans out to its members — the
+                // elected locale's NIC sources O(groups) AMs instead of
+                // O(locales).
                 let mut t_done = now;
-                for loc in 0..cfg.locales {
-                    let mut t = Self::am(
-                        &cfg,
-                        &mut self.jrng,
-                        &mut self.net,
-                        &mut self.locs[loc].progress_res,
-                        now,
-                        me,
-                        loc,
-                    );
-                    t += cfg.tasks_per_locale as u64 * cfg.model.local_atomic_ns;
-                    t_done = t_done.max(t);
+                match cfg.adaptive.hier_group {
+                    None => {
+                        for loc in 0..cfg.locales {
+                            self.rx_am(me, loc);
+                            let mut t = Self::am(
+                                &cfg,
+                                &mut self.jrng,
+                                &mut self.net,
+                                &mut self.locs[loc].progress_res,
+                                now,
+                                me,
+                                loc,
+                            );
+                            t += cfg.tasks_per_locale as u64 * cfg.model.local_atomic_ns;
+                            t_done = t_done.max(t);
+                        }
+                    }
+                    Some(g) => {
+                        for leader in (0..cfg.locales).step_by(g.max(1)) {
+                            self.rx_am(me, leader);
+                            let tl = Self::am(
+                                &cfg,
+                                &mut self.jrng,
+                                &mut self.net,
+                                &mut self.locs[leader].progress_res,
+                                now,
+                                me,
+                                leader,
+                            );
+                            for member in leader..(leader + g).min(cfg.locales) {
+                                self.rx_am(leader, member);
+                                let mut t = Self::am(
+                                    &cfg,
+                                    &mut self.jrng,
+                                    &mut self.net,
+                                    &mut self.locs[member].progress_res,
+                                    tl,
+                                    leader,
+                                    member,
+                                );
+                                t += cfg.tasks_per_locale as u64 * cfg.model.local_atomic_ns;
+                                t_done = t_done.max(t);
+                            }
+                        }
+                    }
                 }
                 let safe = self
                     .tasks
@@ -477,6 +760,7 @@ impl Workload for EpochSim {
                 Step::ResumeAt(t_done)
             }
             Phase::RAdvance { this_epoch } => {
+                self.rx_atomic(me, 0);
                 let t = {
                     let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
                     Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
@@ -487,51 +771,127 @@ impl Workload for EpochSim {
                 Step::ResumeAt(t)
             }
             Phase::RDrain { new_epoch } => {
+                // Adaptive flush: migration buffers flush BEFORE any list
+                // drains, so in-flight deferrals reach their owner's limbo
+                // first (step 5 of the real advance).
+                let start = if self.flush_policy().is_some() {
+                    self.flush_all_migrations(now, me)
+                } else {
+                    now
+                };
                 // Parallel per-locale: drain the expired list, update the
-                // locale's cached epoch (coforall in Listing 4).
-                let mut t_done = now;
-                for loc in 0..cfg.locales {
-                    let t0 = Self::am(
-                        &cfg,
-                        &mut self.jrng,
-                        &mut self.net,
-                        &mut self.locs[loc].progress_res,
-                        now,
-                        me,
-                        loc,
-                    );
-                    let (mut t, freed, remote) = self.drain(t0, loc, loc, (new_epoch - 1) as usize);
-                    t = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[loc].epoch_res, t);
-                    self.locs[loc].epoch = new_epoch;
-                    self.freed += freed;
-                    self.freed_remote += remote;
-                    t_done = t_done.max(t);
+                // locale's cached epoch (coforall in Listing 4). Under the
+                // hierarchical advance the fan-out goes elected → group
+                // leaders → members.
+                let mut t_done = start;
+                let list = (new_epoch - 1) as usize;
+                match cfg.adaptive.hier_group {
+                    None => {
+                        for loc in 0..cfg.locales {
+                            self.rx_am(me, loc);
+                            let t0 = Self::am(
+                                &cfg,
+                                &mut self.jrng,
+                                &mut self.net,
+                                &mut self.locs[loc].progress_res,
+                                start,
+                                me,
+                                loc,
+                            );
+                            let (mut t, freed, remote) = self.drain(t0, loc, loc, list);
+                            t = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[loc].epoch_res, t);
+                            self.locs[loc].epoch = new_epoch;
+                            self.freed += freed;
+                            self.freed_remote += remote;
+                            t_done = t_done.max(t);
+                        }
+                    }
+                    Some(g) => {
+                        for leader in (0..cfg.locales).step_by(g.max(1)) {
+                            self.rx_am(me, leader);
+                            let tl = Self::am(
+                                &cfg,
+                                &mut self.jrng,
+                                &mut self.net,
+                                &mut self.locs[leader].progress_res,
+                                start,
+                                me,
+                                leader,
+                            );
+                            for member in leader..(leader + g).min(cfg.locales) {
+                                self.rx_am(leader, member);
+                                let t0 = Self::am(
+                                    &cfg,
+                                    &mut self.jrng,
+                                    &mut self.net,
+                                    &mut self.locs[member].progress_res,
+                                    tl,
+                                    leader,
+                                    member,
+                                );
+                                let (mut t, freed, remote) = self.drain(t0, member, member, list);
+                                t = Self::op64_local(
+                                    &cfg,
+                                    &mut self.jrng,
+                                    &mut self.locs[member].epoch_res,
+                                    t,
+                                );
+                                self.locs[member].epoch = new_epoch;
+                                self.freed += freed;
+                                self.freed_remote += remote;
+                                t_done = t_done.max(t);
+                            }
+                        }
+                    }
                 }
                 self.advances += 1;
                 self.tasks[tid].phase = Phase::RRelease { advanced: true };
                 Step::ResumeAt(t_done)
             }
             Phase::RRelease { advanced: _ } => {
+                self.rx_atomic(me, 0);
                 let t1 = {
                     let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
                     Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
                 };
                 self.global_flag = false;
-                let t2 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].flag_res, t1);
+                // Release order mirrors acquisition in reverse: global,
+                // then the group leader's flag (hierarchical only), then
+                // the local flag.
+                let mut t = t1;
+                if let Some(g) = cfg.adaptive.hier_group {
+                    let leader = Self::group_leader(me, g);
+                    self.rx_atomic(me, leader);
+                    t = {
+                        let lead = &mut self.locs[leader];
+                        let (w, p) = (&mut lead.gflag_res, &mut lead.progress_res);
+                        Self::op64(&cfg, &mut self.jrng, &mut self.net, w, p, t, me, leader)
+                    };
+                    self.locs[leader].gflag = false;
+                }
+                let t2 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].flag_res, t);
                 self.locs[me].flag = false;
                 self.tasks[tid].phase = self.tasks[tid].resume_phase;
                 Step::ResumeAt(t2)
             }
             Phase::Clear => {
-                // manager.clear(): parallel over locales, all three lists.
-                let mut t_done = now;
+                // manager.clear(): flush any still-buffered migrations
+                // first (they would otherwise leak), then parallel over
+                // locales, all three lists.
+                let start = if self.flush_policy().is_some() {
+                    self.flush_all_migrations(now, me)
+                } else {
+                    now
+                };
+                let mut t_done = start;
                 for loc in 0..cfg.locales {
+                    self.rx_am(me, loc);
                     let mut t = Self::am(
                         &cfg,
                         &mut self.jrng,
                         &mut self.net,
                         &mut self.locs[loc].progress_res,
-                        now,
+                        start,
                         me,
                         loc,
                     );
@@ -566,18 +926,30 @@ pub fn run_epoch(cfg: EpochConfig) -> EpochResult {
             rng: Xoshiro256pp::new(cfg.seed ^ (t as u64).wrapping_mul(0xA5A5)),
         })
         .collect();
+    if let Some(g) = cfg.adaptive.hier_group {
+        assert!(g >= 1, "hier_group must be at least 1");
+    }
     let locs = (0..cfg.locales)
         .map(|_| LocState {
             epoch: 1,
             flag: false,
+            gflag: false,
             flag_res: Resource::new(),
+            gflag_res: Resource::new(),
             epoch_res: Resource::new(),
             limbo_res: Resource::new(),
             progress_res: MultiResource::new(cfg.model.am_handlers),
             limbo: vec![vec![0; cfg.locales]; NUM_EPOCHS as usize],
+            mig: vec![[0; NUM_EPOCHS as usize]; cfg.locales],
+            mig_since: vec![0; cfg.locales],
         })
         .collect();
-    let net = Network::new(cfg.topology.build(cfg.locales));
+    let topo = cfg.topology.build(cfg.locales);
+    let net = match cfg.adaptive.ugal_threshold_ns {
+        Some(thr) => Network::with_adaptive(topo, AdaptiveRouting::new(thr, cfg.seed)),
+        None => Network::new(topo),
+    };
+    let locales = cfg.locales;
     let mut sim = EpochSim {
         jrng: Xoshiro256pp::new(cfg.seed ^ 0xBEEF),
         global_epoch: 1,
@@ -592,7 +964,10 @@ pub fn run_epoch(cfg: EpochConfig) -> EpochResult {
         not_quiescent: 0,
         freed: 0,
         freed_remote: 0,
+        migrated: 0,
+        migration_flushes: 0,
         iters: 0,
+        ams_rx: vec![0; locales],
         active: n_tasks,
         cfg,
     };
@@ -607,6 +982,9 @@ pub fn run_epoch(cfg: EpochConfig) -> EpochResult {
         not_quiescent: sim.not_quiescent,
         freed: sim.freed,
         freed_remote: sim.freed_remote,
+        ams_rx_home: sim.ams_rx[0],
+        migrated: sim.migrated,
+        migration_flushes: sim.migration_flushes,
         net: sim.net.totals(),
     }
 }
@@ -628,6 +1006,8 @@ mod tests {
             slow_factor: 8,
             stalled_task: None,
             topology: TopologyKind::default(),
+            agg_capacity: DEFAULT_AGG_CAPACITY,
+            adaptive: Adaptivity::default(),
             seed: 7,
         }
     }
@@ -812,5 +1192,204 @@ mod tests {
             r.net.max_link_wait_ns > 0,
             "some message must have waited behind another on the hot link"
         );
+    }
+
+    // --- congestion adaptivity (fig 10) -------------------------------
+
+    /// Knobs that cannot fire must leave the trace bit-identical: a UGAL
+    /// threshold no backlog can exceed draws no randomness, and
+    /// `agg_capacity` is inert while the flush knob is off.
+    #[test]
+    fn inert_adaptivity_knobs_are_bit_identical() {
+        let mut base = cfg(EpochWorkload::DeleteReclaimEvery(64), 8);
+        base.remote_ratio = 0.5;
+        base.topology = TopologyKind::Dragonfly;
+        let mut inert = base.clone();
+        inert.adaptive.ugal_threshold_ns = Some(u64::MAX);
+        inert.agg_capacity = 3; // unused: flush_after_ns is None
+        let a = run_epoch(base);
+        let b = run_epoch(inert);
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+        assert_eq!(a.advances, b.advances);
+        assert_eq!(a.freed, b.freed);
+        assert_eq!(a.ams_rx_home, b.ams_rx_home);
+        assert_eq!(b.net.detours, 0);
+        assert_eq!(a.net, b.net);
+        assert_eq!(b.migrated, 0);
+        assert_eq!(b.migration_flushes, 0);
+    }
+
+    #[test]
+    fn hierarchical_advance_cuts_received_ams_at_global_home() {
+        // Fig 10's epoch axis: under an all-locales election storm, the
+        // group-leader tree absorbs election losses and fans scans/drains
+        // out through leaders, so locale 0 receives far fewer AMs per
+        // advance than under the flat protocol.
+        let mk = |hier: Option<usize>| {
+            let mut c = cfg(EpochWorkload::DeleteReclaimEvery(1), 16);
+            c.tasks_per_locale = 8;
+            c.objs_per_task = 512;
+            c.topology = TopologyKind::Dragonfly;
+            c.adaptive.hier_group = hier;
+            run_epoch(c)
+        };
+        let flat = mk(None);
+        let hier = mk(Some(4));
+        assert!(flat.advances > 0 && hier.advances > 0);
+        // Work conserves regardless of the advance topology.
+        assert_eq!(flat.total_iters, hier.total_iters);
+        assert!(hier.freed <= hier.total_iters);
+        let per_flat = flat.ams_rx_home as f64 / flat.advances as f64;
+        let per_hier = hier.ams_rx_home as f64 / hier.advances as f64;
+        assert!(
+            per_hier < per_flat * 0.7,
+            "hierarchy must shed the global-home hot-spot: flat={per_flat:.1} hier={per_hier:.1} AMs/advance"
+        );
+        // Determinism with the knob on.
+        let again = mk(Some(4));
+        assert_eq!(hier.makespan_ns, again.makespan_ns);
+        assert_eq!(hier.ams_rx_home, again.ams_rx_home);
+    }
+
+    #[test]
+    fn hierarchy_composes_with_the_election_ablation() {
+        // fcfs_local_election=false skips the local flag; the attempt must
+        // then contend on the GROUP flag, not jump straight to global.
+        let mut c = cfg(EpochWorkload::DeleteReclaimEvery(8), 8);
+        c.tasks_per_locale = 8;
+        c.fcfs_local_election = false;
+        c.adaptive.hier_group = Some(2);
+        let r = run_epoch(c);
+        assert_eq!(r.lost_local, 0, "no local flag to lose");
+        assert!(r.advances > 0);
+        assert!(r.freed <= r.total_iters);
+    }
+
+    #[test]
+    fn adaptive_flush_migrates_deferrals_to_their_owner() {
+        // With the flush knob on, every remote-owned deferral crosses the
+        // wire once (bulk, batched) and is drained owner-locally — so
+        // drains report zero remote frees and `migrated` carries the
+        // whole remote volume.
+        let mut c = cfg(EpochWorkload::DeleteReclaimAtEnd, 4);
+        c.remote_ratio = 1.0;
+        c.agg_capacity = 64;
+        c.adaptive.flush_after_ns = Some(50_000);
+        let r = run_epoch(c);
+        assert_eq!(r.freed, r.total_iters, "clear() must still free everything");
+        assert_eq!(r.migrated, r.total_iters, "all deferrals are remote-owned");
+        assert!(r.migration_flushes > 0);
+        assert!(
+            r.migration_flushes >= r.migrated / 64,
+            "capacity-bounded batches: {} flushes for {}",
+            r.migration_flushes,
+            r.migrated
+        );
+        assert_eq!(r.freed_remote, 0, "migrated objects drain owner-locally");
+
+        // Against the same workload without the knob, the scatter path
+        // reports the same frees as remote instead.
+        let mut c0 = cfg(EpochWorkload::DeleteReclaimAtEnd, 4);
+        c0.remote_ratio = 1.0;
+        let r0 = run_epoch(c0);
+        assert_eq!(r0.freed_remote, r0.freed);
+        assert_eq!(r0.migrated, 0);
+        assert_eq!(r.freed, r0.freed);
+    }
+
+    #[test]
+    fn deadline_flush_bounds_buffered_wait() {
+        // A tiny deadline must force flushes long before the (huge)
+        // capacity fills: with capacity ≫ objects, a fixed policy would
+        // hold everything until clear(), while the deadline drives many
+        // small batches out early.
+        let mut c = cfg(EpochWorkload::DeleteReclaimAtEnd, 4);
+        c.remote_ratio = 1.0;
+        c.agg_capacity = usize::MAX >> 1;
+        c.adaptive.flush_after_ns = Some(10_000);
+        let r = run_epoch(c);
+        assert!(
+            r.migration_flushes > 3 * 4,
+            "deadline must flush repeatedly, not once per destination at clear: {}",
+            r.migration_flushes
+        );
+        assert_eq!(r.freed, r.total_iters);
+    }
+
+    #[test]
+    fn backpressure_flushes_smaller_batches_under_congestion() {
+        let mk = |backpressure_ns: u64| {
+            let mut c = cfg(EpochWorkload::DeleteReclaimEvery(16), 8);
+            c.tasks_per_locale = 8;
+            c.remote_ratio = 1.0;
+            c.topology = TopologyKind::Ring;
+            c.agg_capacity = 256;
+            c.adaptive.flush_after_ns = Some(1 << 40); // deadline effectively off
+            c.adaptive.backpressure_ns = backpressure_ns;
+            run_epoch(c)
+        };
+        let relaxed = mk(0);
+        let tight = mk(1); // any backlog at all halves the capacity
+        assert_eq!(relaxed.total_iters, tight.total_iters);
+        assert!(
+            tight.migration_flushes > relaxed.migration_flushes,
+            "shrunken capacity must flush more, smaller batches: {} vs {}",
+            tight.migration_flushes,
+            relaxed.migration_flushes
+        );
+    }
+
+    #[test]
+    fn ugal_routing_relieves_the_dragonfly_hot_spot() {
+        // Fig 10's fabric axis: the election storm funnels into locale
+        // 0's group; UGAL detours spread the global-link load, cutting
+        // the worst per-message wait.
+        let mk = |thr: Option<u64>| {
+            let mut c = cfg(EpochWorkload::DeleteReclaimEvery(1), 16);
+            c.tasks_per_locale = 8;
+            c.objs_per_task = 512;
+            c.remote_ratio = 0.5;
+            c.topology = TopologyKind::Dragonfly;
+            c.adaptive.ugal_threshold_ns = thr;
+            run_epoch(c)
+        };
+        let minimal = mk(None);
+        let adaptive = mk(Some(1_000));
+        assert_eq!(minimal.net.detours, 0);
+        assert!(adaptive.net.detours > 0, "the hot spot must trigger detours");
+        assert!(
+            adaptive.net.max_link_wait_ns < minimal.net.max_link_wait_ns,
+            "UGAL must cut the worst link wait: {} vs {}",
+            adaptive.net.max_link_wait_ns,
+            minimal.net.max_link_wait_ns
+        );
+    }
+
+    #[test]
+    fn all_knobs_compose_deterministically() {
+        let mk = || {
+            let mut c = cfg(EpochWorkload::DeleteReclaimEvery(4), 16);
+            c.tasks_per_locale = 4;
+            c.objs_per_task = 512;
+            c.remote_ratio = 0.5;
+            c.topology = TopologyKind::Dragonfly;
+            c.agg_capacity = 128;
+            c.adaptive = Adaptivity {
+                ugal_threshold_ns: Some(1_000),
+                flush_after_ns: Some(100_000),
+                backpressure_ns: 25_000,
+                hier_group: Some(4),
+            };
+            run_epoch(c)
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+        assert_eq!(a.net, b.net);
+        assert_eq!(a.ams_rx_home, b.ams_rx_home);
+        assert_eq!(a.migrated, b.migrated);
+        // The composed run still conserves the protocol's books.
+        assert!(a.freed <= a.total_iters);
+        assert!(a.advances > 0);
     }
 }

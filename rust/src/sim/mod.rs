@@ -11,4 +11,4 @@ pub mod epoch_sim;
 
 pub use atomics_sim::{run_atomics, AtomicVariant, AtomicsConfig, AtomicsResult};
 pub use engine::{run, MultiResource, Resource, Step, VTime, Workload};
-pub use epoch_sim::{run_epoch, EpochConfig, EpochResult, EpochWorkload, StalledTask};
+pub use epoch_sim::{run_epoch, Adaptivity, EpochConfig, EpochResult, EpochWorkload, StalledTask};

@@ -161,6 +161,122 @@ fn dragonfly_diameter_is_three() {
     assert_eq!(max, 3);
 }
 
+// ---- congestion-adaptive (Valiant/UGAL) detours ----
+
+/// The `detour_route` contract for one topology: loop-free,
+/// endpoint-correct, contiguous, adjacency-only links, distinct from the
+/// minimal route, and within the `minimal + 2` hop budget (verified
+/// against BFS distances, not the topology's own `hops`).
+fn detour_contract(topo: &dyn Topology) -> Result<(), String> {
+    let name = topo.name();
+    for a in locales(topo) {
+        let dist = bfs_dist(topo, a);
+        for b in locales(topo) {
+            for choice in 0..8u64 {
+                let Some(route) = topo.detour_route(a, b, choice) else { continue };
+                if a == b {
+                    return Err(format!("{name}: self-pair {a:?} offered a detour"));
+                }
+                if route.first().unwrap().from != a || route.last().unwrap().to != b {
+                    return Err(format!("{name}: {a:?}->{b:?} detour endpoints wrong"));
+                }
+                for w in route.windows(2) {
+                    if w[0].to != w[1].from {
+                        return Err(format!("{name}: {a:?}->{b:?} detour not contiguous"));
+                    }
+                }
+                let mut seen = vec![route[0].from];
+                for l in &route {
+                    if seen.contains(&l.to) {
+                        return Err(format!("{name}: {a:?}->{b:?} detour revisits {:?}", l.to));
+                    }
+                    seen.push(l.to);
+                }
+                for l in &route {
+                    if !topo.connected(l.from, l.to) {
+                        return Err(format!(
+                            "{name}: {a:?}->{b:?} detour uses non-adjacent {:?}->{:?}",
+                            l.from, l.to
+                        ));
+                    }
+                }
+                if route == topo.route(a, b) {
+                    return Err(format!("{name}: {a:?}->{b:?} detour IS the minimal route"));
+                }
+                let budget = dist[b.index()] + 2;
+                if route.len() > budget {
+                    return Err(format!(
+                        "{name}: {a:?}->{b:?} detour {} hops > BFS {} + 2",
+                        route.len(),
+                        dist[b.index()]
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn detours_satisfy_the_contract_on_fixed_configs() {
+    let topos: Vec<Box<dyn Topology>> = vec![
+        Box::new(Ring::new(12)),
+        Box::new(FullyConnected::new(9)),
+        Box::new(Dragonfly::new(16)),
+        Box::new(Dragonfly::new(17)), // partial last group
+        Box::new(Dragonfly::with_group_size(64, 8)),
+        Box::new(Dragonfly::with_group_size(12, 4)), // exactly 3 groups
+    ];
+    for topo in &topos {
+        detour_contract(&**topo).unwrap();
+    }
+}
+
+#[test]
+fn dragonfly_inter_group_pairs_get_detours_and_others_do_not() {
+    // Detours exist exactly where the minimal route is the full 3-hop
+    // local–global–local form and a third group is available.
+    let topo = Dragonfly::with_group_size(16, 4);
+    let mut offered = 0usize;
+    for a in locales(&topo) {
+        for b in locales(&topo) {
+            let has = topo.detour_route(a, b, 0).is_some();
+            if has {
+                offered += 1;
+            }
+            let expect = a != b && topo.route(a, b).len() == 3;
+            assert_eq!(has, expect, "{a:?}->{b:?}: detour iff 3-hop minimal route");
+        }
+    }
+    assert!(offered > 0, "a 4-group dragonfly must offer detours somewhere");
+}
+
+#[test]
+fn randomized_configs_detours_respect_contract_property() {
+    Prop::new("detour contract on randomized configs").cases(48).check(
+        |rng| {
+            let locales = 1 + rng.next_usize(40);
+            let group = 1 + rng.next_usize(locales.max(2));
+            (locales, group)
+        },
+        |&(locales, group)| detour_contract(&Dragonfly::with_group_size(locales, group)),
+        |&(locales, group)| {
+            let mut cands = Vec::new();
+            for l in shrink_usize(locales) {
+                if l >= 1 {
+                    cands.push((l, group.min(l.max(1))));
+                }
+            }
+            for g in shrink_usize(group) {
+                if g >= 1 {
+                    cands.push((locales, g));
+                }
+            }
+            cands
+        },
+    );
+}
+
 // ---- backward compatibility: zero-cost crossbar == pre-fabric flat ----
 
 #[test]
@@ -202,6 +318,8 @@ fn flat_zero_des_equals_default_and_other_topologies_differ() {
         slow_factor: 8,
         stalled_task: None,
         topology: kind,
+        agg_capacity: pgas_nb::pgas::DEFAULT_AGG_CAPACITY,
+        adaptive: pgas_nb::sim::Adaptivity::default(),
         seed: 3,
     };
     let flat = run_epoch(cfg(TopologyKind::FlatZero));
@@ -254,6 +372,8 @@ fn hot_spot_queues_on_ring_but_not_on_crossbar_links() {
         slow_factor: 8,
         stalled_task: None,
         topology: kind,
+        agg_capacity: pgas_nb::pgas::DEFAULT_AGG_CAPACITY,
+        adaptive: pgas_nb::sim::Adaptivity::default(),
         seed: 9,
     };
     let ring = run_epoch(cfg(TopologyKind::Ring));

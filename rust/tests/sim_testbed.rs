@@ -3,9 +3,9 @@
 //! deterministic, and degrade sanely under failure injection.
 
 use pgas_nb::fabric::TopologyKind;
-use pgas_nb::pgas::NicModel;
+use pgas_nb::pgas::{NicModel, DEFAULT_AGG_CAPACITY};
 use pgas_nb::sim::{
-    run_atomics, run_epoch, AtomicVariant, AtomicsConfig, EpochConfig, EpochWorkload,
+    run_atomics, run_epoch, Adaptivity, AtomicVariant, AtomicsConfig, EpochConfig, EpochWorkload,
 };
 
 fn acfg(variant: AtomicVariant, model: NicModel, locales: usize) -> AtomicsConfig {
@@ -34,6 +34,8 @@ fn ecfg(workload: EpochWorkload, locales: usize) -> EpochConfig {
         slow_factor: 8,
         stalled_task: None,
         topology: TopologyKind::default(),
+        agg_capacity: DEFAULT_AGG_CAPACITY,
+        adaptive: Adaptivity::default(),
         seed: 11,
     }
 }
@@ -110,6 +112,28 @@ fn sim_conservation_freed_never_exceeds_deferred() {
         assert!(r.freed <= r.total_iters, "k={k}");
         assert!(r.freed_remote <= r.freed, "k={k}");
         // Outcome counts partition the attempts (one per k iterations).
+        let attempts = r.advances + r.lost_local + r.lost_global + r.not_quiescent;
+        assert_eq!(attempts, r.total_iters / k as u64, "k={k}: one attempt per k iterations");
+    }
+}
+
+#[test]
+fn sim_conservation_survives_the_adaptive_knobs() {
+    // The attempt partition (one outcome per attempt) must hold with the
+    // group-flag phase inserted and the migration buffers active: group
+    // losses count as lost_global, buffered deferrals still all free.
+    for k in [1usize, 64] {
+        let mut c = ecfg(EpochWorkload::DeleteReclaimEvery(k), 8);
+        c.remote_ratio = 0.5;
+        c.agg_capacity = 64;
+        c.adaptive = Adaptivity {
+            ugal_threshold_ns: Some(1_000),
+            flush_after_ns: Some(100_000),
+            backpressure_ns: 25_000,
+            hier_group: Some(4),
+        };
+        let r = run_epoch(c);
+        assert!(r.freed <= r.total_iters, "k={k}");
         let attempts = r.advances + r.lost_local + r.lost_global + r.not_quiescent;
         assert_eq!(attempts, r.total_iters / k as u64, "k={k}: one attempt per k iterations");
     }

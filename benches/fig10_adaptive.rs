@@ -66,7 +66,8 @@ fn json_point(pt: &Point) -> String {
     format!(
         "    {{\"mode\": \"{}\", \"topology\": \"{}\", \"locales\": {}, \"makespan_ns\": {}, \
          \"mops\": {:.4}, \"max_link_wait_ns\": {}, \"queued_ns\": {}, \"detours\": {}, \
-         \"ams_rx_home\": {}, \"advances\": {}, \"migrated\": {}, \"migration_flushes\": {}}}",
+         \"ams_rx_home\": {}, \"advances\": {}, \"migrated\": {}, \"migration_flushes\": {}, \
+         \"lat\": {}}}",
         mode_label(pt.adaptive),
         pt.kind.label(),
         pt.locales,
@@ -79,6 +80,7 @@ fn json_point(pt: &Point) -> String {
         r.advances,
         r.migrated,
         r.migration_flushes,
+        r.latency.json(),
     )
 }
 

@@ -49,7 +49,7 @@ fn json_point(pt: &Point) -> String {
         "    {{\"topology\": \"{}\", \"locales\": {}, \"makespan_ns\": {}, \"mops\": {:.4}, \
          \"net_messages\": {}, \"net_hops\": {}, \"net_bytes\": {}, \"transit_ns\": {}, \
          \"queued_ns\": {}, \"links_used\": {}, \"max_link_busy_ns\": {}, \
-         \"max_link_wait_ns\": {}}}",
+         \"max_link_wait_ns\": {}, \"lat\": {}}}",
         pt.kind.label(),
         pt.locales,
         r.makespan_ns,
@@ -62,6 +62,7 @@ fn json_point(pt: &Point) -> String {
         r.net.links_used,
         r.net.max_link_busy_ns,
         r.net.max_link_wait_ns,
+        r.latency.json(),
     )
 }
 

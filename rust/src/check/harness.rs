@@ -40,8 +40,10 @@ use crate::pgas::{coforall_locales, coforall_tasks, Machine, NicModel, Pgas};
 use crate::util::rng::{SplitMix64, Xoshiro256pp};
 use std::sync::Arc;
 
-/// One checking run's configuration.
-#[derive(Clone, Debug)]
+/// One checking run's configuration. `PartialEq` pins the trace-header
+/// round trip: a config rebuilt from a trace's schedule section must
+/// equal the one that produced it (`--trace-in` replays depend on this).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CheckCfg {
     pub seed: u64,
     pub locales: usize,
@@ -176,6 +178,19 @@ impl CheckOutcome {
 
 /// Drive `collection` under `cfg` and judge the run.
 pub fn check_collection(collection: Collection, cfg: &CheckCfg) -> CheckOutcome {
+    check_collection_traced(collection, cfg, None)
+}
+
+/// [`check_collection`] with an optional event sink attached to the
+/// substrate: AM sends/deliveries, epoch pins/unpins/advances, deferral
+/// and reclaim events all land in the trace, so a failing run ships a
+/// causal record alongside its minimized history. `None` leaves every
+/// hot path on the untraced code.
+pub fn check_collection_traced(
+    collection: Collection,
+    cfg: &CheckCfg,
+    tracer: Option<Arc<crate::obs::Tracer>>,
+) -> CheckOutcome {
     assert!(
         !cfg.stalled_reader || cfg.locales * cfg.tasks_per_locale >= 2,
         "stalled_reader dedicates task 0 to stalling; with no worker left the \
@@ -187,6 +202,9 @@ pub fn check_collection(collection: Collection, cfg: &CheckCfg) -> CheckOutcome 
         NicModel::aries_no_network_atomics(),
         cfg.topology.build(cfg.locales),
     );
+    if let Some(tr) = tracer {
+        assert!(pgas.set_tracer(tr), "fresh Pgas accepts a tracer");
+    }
     let auditor = Arc::new(ReclaimAuditor::new());
     assert!(pgas.set_audit(Arc::clone(&auditor) as _), "fresh Pgas accepts an auditor");
     let recorder = HistoryRecorder::new();
@@ -397,6 +415,23 @@ mod tests {
                 out.violations,
                 out.leaked
             );
+        }
+    }
+
+    #[test]
+    fn traced_check_judges_identically_and_records_the_epoch_lifecycle() {
+        let plain = check_collection(Collection::Stack, &CheckCfg::quick(11));
+        let tr = Arc::new(crate::obs::Tracer::new());
+        let out = check_collection_traced(Collection::Stack, &CheckCfg::quick(11), Some(tr.clone()));
+        assert!(out.passed());
+        // Scheduling is thread-timing dependent, but the verdict and the
+        // heap books must agree with the untraced run.
+        assert_eq!(out.leaked, plain.leaked);
+        assert_eq!(out.history.len(), plain.history.len());
+        let kinds: std::collections::HashSet<&'static str> =
+            tr.events().iter().map(|e| e.ev.kind()).collect();
+        for k in ["pin", "unpin", "defer", "reclaim"] {
+            assert!(kinds.contains(k), "trace missing {k}: {kinds:?}");
         }
     }
 

@@ -30,11 +30,11 @@ pub mod mutation;
 pub mod spec;
 
 pub use audit::{AuditCounts, ReclaimAudit, ReclaimAuditor, Violation, ViolationKind};
-pub use harness::{check_collection, CheckCfg, CheckOutcome, Collection};
+pub use harness::{check_collection, check_collection_traced, CheckCfg, CheckOutcome, Collection};
 pub use history::{render_history, Completed, History, HistoryRecorder, Op, Ret};
 pub use linearize::{check_history, minimize, LinFailure};
 pub use mutation::{
-    first_detecting_seed, first_seed_detected_by, run_sim, Detector, Mutant, SimCfg, SimKind,
-    SimRun,
+    first_detecting_seed, first_seed_detected_by, run_sim, run_sim_traced, Detector, Mutant,
+    SimCfg, SimKind, SimRun,
 };
 pub use spec::{ModelKind, SeqModel};

@@ -31,6 +31,8 @@
 use super::audit::{ReclaimAudit, ReclaimAuditor, ViolationKind};
 use super::history::{Completed, History, Op, Ret};
 use super::spec::ModelKind;
+use crate::obs::span::span_id;
+use crate::obs::{Event, Tracer, INFRA_TASK};
 use crate::pgas::{LocaleId, WidePtr};
 use crate::sim::engine::{run, Step, VTime, Workload};
 use crate::util::rng::Xoshiro256pp;
@@ -190,6 +192,9 @@ struct Sim {
     limbo: Vec<u64>,
     tasks: Vec<TaskSt>,
     history: History,
+    /// Event sink; `None` keeps the schedule machinery on the exact
+    /// untraced code (events are never built).
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl Sim {
@@ -215,6 +220,11 @@ impl Sim {
         // Every operation runs under a pin session, like the real
         // collections' token discipline.
         self.auditor.on_pin(tid, 1);
+        if let Some(tr) = &self.tracer {
+            let span = span_id(tid as u32, self.tasks[tid].cur as u64);
+            tr.record_at(T_BASE + now, tid as u32, 0, Event::OpBegin { span });
+            tr.record_at(T_BASE + now, tid as u32, 0, Event::Pin { epoch: 1 });
+        }
     }
 
     fn finish_op(&mut self, tid: usize, now: VTime, record: Option<(Op, Ret)>) {
@@ -228,18 +238,39 @@ impl Sim {
             });
         }
         self.auditor.on_unpin(tid);
+        if let Some(tr) = &self.tracer {
+            let span = span_id(tid as u32, self.tasks[tid].cur as u64);
+            let ns = now.saturating_sub(self.tasks[tid].invoke);
+            tr.record_at(T_BASE + now, tid as u32, 0, Event::Unpin);
+            tr.record_at(T_BASE + now, tid as u32, 0, Event::OpEnd { span, ns });
+        }
         self.tasks[tid].in_op = false;
         self.tasks[tid].cur += 1;
         self.tasks[tid].pc = 0;
     }
 
-    fn retire_or_free(&mut self, addr: u64) {
+    /// The deref a pinned operation performs: audit it, and put it on the
+    /// trace (the record a UAF post-mortem greps for).
+    fn access(&self, now: VTime, tid: usize, addr: u64) {
+        self.auditor.on_access(wp(addr));
+        if let Some(tr) = &self.tracer {
+            tr.record_at(T_BASE + now, tid as u32, 0, Event::Access { addr });
+        }
+    }
+
+    fn retire_or_free(&mut self, now: VTime, addr: u64) {
         if self.cfg.mutant == Mutant::SkipDeferGuard {
             // The injected bug: bypass the epoch deferral entirely.
             self.auditor.on_free(wp(addr));
+            if let Some(tr) = &self.tracer {
+                tr.record_at(T_BASE + now, INFRA_TASK, 0, Event::Free { addr });
+            }
         } else {
             self.auditor.on_retire(wp(addr), 1);
             self.limbo.push(addr);
+            if let Some(tr) = &self.tracer {
+                tr.record_at(T_BASE + now, INFRA_TASK, 0, Event::Defer { dst: 0, list: 0 });
+            }
         }
     }
 }
@@ -293,7 +324,7 @@ impl Workload for Sim {
             (SimOp::Pop, 1) => {
                 let headw = self.tasks[tid].r_word;
                 // The deref a real pop performs under its pin.
-                self.auditor.on_access(wp(headw));
+                self.access(now, tid, headw);
                 self.tasks[tid].r_next = self.arena.node(headw).next;
                 self.tasks[tid].pc = 2;
                 Step::ResumeAt(self.jit(tid, now + C_READ))
@@ -313,7 +344,7 @@ impl Workload for Sim {
                 if self.head == (ew, ec) {
                     self.head = (next, ec + 1);
                     let val = self.arena.node(ew).val;
-                    self.retire_or_free(ew);
+                    self.retire_or_free(now, ew);
                     self.finish_op(tid, now, Some((Op::Pop, Ret::Val(Some(val)))));
                     return Step::ResumeAt(self.after_op(tid, now, C_CAS));
                 }
@@ -327,7 +358,7 @@ impl Workload for Sim {
                     (self.tasks[tid].r_word, self.tasks[tid].r_count, self.tasks[tid].r_next);
                 self.head = (next, ec + 1);
                 let val = self.arena.node(ew).val;
-                self.retire_or_free(ew);
+                self.retire_or_free(now, ew);
                 self.finish_op(tid, now, Some((Op::Pop, Ret::Val(Some(val)))));
                 Step::ResumeAt(self.after_op(tid, now, C_CAS))
             }
@@ -346,7 +377,7 @@ impl Workload for Sim {
             }
             (SimOp::Enq(_), 2) => {
                 let (tw, tc) = (self.tasks[tid].r_word, self.tasks[tid].r_count);
-                self.auditor.on_access(wp(tw));
+                self.access(now, tid, tw);
                 let next = self.arena.node(tw).next;
                 if next != NIL {
                     // Tail lagging: help swing, then retry.
@@ -388,7 +419,7 @@ impl Workload for Sim {
             }
             (SimOp::Deq, 1) => {
                 let hw = self.tasks[tid].r_word;
-                self.auditor.on_access(wp(hw));
+                self.access(now, tid, hw);
                 let next = self.arena.node(hw).next;
                 if next == NIL {
                     self.finish_op(tid, now, Some((Op::Deq, Ret::Val(None))));
@@ -411,9 +442,9 @@ impl Workload for Sim {
                 }
                 if self.head == (hw, hc) {
                     self.head = (next, hc + 1);
-                    self.auditor.on_access(wp(next));
+                    self.access(now, tid, next);
                     let val = self.arena.node(next).val;
-                    self.retire_or_free(hw); // old dummy
+                    self.retire_or_free(now, hw); // old dummy
                     self.finish_op(tid, now, Some((Op::Deq, Ret::Val(Some(val)))));
                     return Step::ResumeAt(self.after_op(tid, now, C_CAS));
                 }
@@ -425,9 +456,9 @@ impl Workload for Sim {
                 let (hw, hc, next) =
                     (self.tasks[tid].r_word, self.tasks[tid].r_count, self.tasks[tid].r_next);
                 self.head = (next, hc + 1);
-                self.auditor.on_access(wp(next));
+                self.access(now, tid, next);
                 let val = self.arena.node(next).val;
-                self.retire_or_free(hw);
+                self.retire_or_free(now, hw);
                 self.finish_op(tid, now, Some((Op::Deq, Ret::Val(Some(val)))));
                 Step::ResumeAt(self.after_op(tid, now, C_CAS))
             }
@@ -440,14 +471,14 @@ impl Workload for Sim {
                     return Step::ResumeAt(self.after_op(tid, now, C_READ));
                 }
                 self.tasks[tid].r_word = hw;
-                self.auditor.on_access(wp(hw));
+                self.access(now, tid, hw);
                 self.tasks[tid].pc = 1;
                 // The stall: pinned, holding a reference, going nowhere.
                 Step::ResumeAt(now + C_STALL)
             }
             (SimOp::Peek, 1) => {
                 // Re-read the node the pin was supposed to protect.
-                self.auditor.on_access(wp(self.tasks[tid].r_word));
+                self.access(now, tid, self.tasks[tid].r_word);
                 self.finish_op(tid, now, None);
                 Step::ResumeAt(self.after_op(tid, now, C_READ))
             }
@@ -458,6 +489,15 @@ impl Workload for Sim {
 
 /// Run one simulated schedule; deterministic in `cfg`.
 pub fn run_sim(cfg: &SimCfg) -> SimRun {
+    run_sim_traced(cfg, None)
+}
+
+/// [`run_sim`] with an optional event sink: op spans, pin/unpin, every
+/// audited pointer access, deferrals — and, under
+/// [`Mutant::SkipDeferGuard`], the rogue `Free` itself, so a detected
+/// use-after-free reads straight off the trace as `free(addr)` followed
+/// by `access(addr)`. `None` executes the exact untraced schedule.
+pub fn run_sim_traced(cfg: &SimCfg, tracer: Option<Arc<Tracer>>) -> SimRun {
     let auditor = Arc::new(ReclaimAuditor::new());
     let mut arena = Arena::default();
     let mut history = Vec::new();
@@ -568,13 +608,20 @@ pub fn run_sim(cfg: &SimCfg) -> SimRun {
         limbo: Vec::new(),
         tasks,
         history,
+        tracer,
     };
-    run(&mut sim, n_tasks);
+    let (makespan, _) = run(&mut sim, n_tasks);
 
     // Final clear: every retired node is freed now that all tasks have
     // completed and unpinned (mirrors `EpochManager::clear`).
+    let drained = sim.limbo.len() as u64;
     for addr in std::mem::take(&mut sim.limbo) {
         sim.auditor.on_free(wp(addr));
+    }
+    if drained > 0 {
+        if let Some(tr) = &sim.tracer {
+            tr.record_at(T_BASE + makespan, INFRA_TASK, 0, Event::Reclaim { n: drained });
+        }
     }
 
     SimRun {
@@ -705,5 +752,40 @@ mod tests {
             v.iter().any(|v| v.kind == ViolationKind::UseAfterFree),
             "expected a use-after-free, got {v:?}"
         );
+    }
+
+    #[test]
+    fn uaf_trace_shows_the_offending_free_then_access() {
+        // Re-run the detecting seed with a tracer: the causal record of
+        // the bug — a Free followed by a later Access of the SAME
+        // address — must read straight off the trace.
+        let seed = first_seed_detected_by(
+            SimKind::Stack,
+            Mutant::SkipDeferGuard,
+            20,
+            Detector::UseAfterFree,
+        )
+        .expect("a detecting seed exists");
+        let tr = Arc::new(Tracer::new());
+        let run = run_sim_traced(&SimCfg::new(SimKind::Stack, Mutant::SkipDeferGuard, seed), Some(tr.clone()));
+        assert!(!run.auditor.ok());
+        let events = tr.events();
+        let culprit = events.iter().enumerate().any(|(i, e)| match e.ev {
+            Event::Free { addr } => events[i..]
+                .iter()
+                .any(|later| matches!(later.ev, Event::Access { addr: a } if a == addr)),
+            _ => false,
+        });
+        assert!(culprit, "trace must contain free(addr) … access(addr)");
+
+        // Control arm: the faithful decomposition routes every retire
+        // through the deferral path — its trace has NO Free events, and
+        // the run's history/audit are untouched by tracing.
+        let plain = run_sim(&SimCfg::new(SimKind::Stack, Mutant::None, seed));
+        let trc = Arc::new(Tracer::new());
+        let traced = run_sim_traced(&SimCfg::new(SimKind::Stack, Mutant::None, seed), Some(trc.clone()));
+        assert_eq!(plain.history, traced.history, "tracing must not perturb the schedule");
+        assert!(trc.events().iter().all(|e| !matches!(e.ev, Event::Free { .. })));
+        assert!(trc.events().iter().any(|e| matches!(e.ev, Event::Defer { .. })));
     }
 }

@@ -341,6 +341,32 @@ pub fn fig10(scale: Scale) -> Table {
     t
 }
 
+/// The representative fig 9 DES point recorded by `bench fig9
+/// --trace-out`: the largest locale count of the sweep over the
+/// dragonfly wiring (the most route/queue structure a fig 9 trace can
+/// show).
+pub fn fig9_trace_point(scale: Scale) -> EpochConfig {
+    let locales = *scale.locale_sweep().last().expect("sweep is non-empty");
+    let mut cfg = epoch_cfg(scale, EpochWorkload::DeleteReclaimEvery(1024), false, locales);
+    cfg.remote_ratio = 0.5;
+    cfg.topology = TopologyKind::Dragonfly;
+    cfg
+}
+
+/// The representative fig 10 point recorded by `bench fig10
+/// --trace-out`: largest-L dragonfly with the full adaptive knob set —
+/// the point whose trace shows UGAL detours, deadline flushes and the
+/// hierarchical advance together.
+pub fn fig10_trace_point(scale: Scale) -> EpochConfig {
+    let locales = *scale.locale_sweep().last().expect("sweep is non-empty");
+    let mut cfg = epoch_cfg(scale, EpochWorkload::DeleteReclaimEvery(1), false, locales);
+    cfg.remote_ratio = 0.5;
+    cfg.topology = TopologyKind::Dragonfly;
+    cfg.agg_capacity = 256;
+    cfg.adaptive = fig10_adaptive();
+    cfg
+}
+
 /// Ablation: two-level FCFS election vs direct global contention.
 pub fn ablation_election(scale: Scale) -> Table {
     let mut t = epoch_header();

@@ -7,8 +7,9 @@ use crate::collections::{InterlockedHashTable, LockFreeQueue, LockFreeStack};
 use crate::epoch::{EpochManager, ReclaimPolicy};
 use crate::fabric::TopologyKind;
 use crate::pgas::{coforall_locales, coforall_tasks, LocaleId, Machine, NicModel, Pgas};
+use crate::obs::{header_for_epoch, Tracer};
 use crate::runtime::SharedReclaimScan;
-use crate::sim::{run_epoch, Adaptivity, EpochConfig, EpochWorkload};
+use crate::sim::{run_epoch_traced, Adaptivity, EpochConfig, EpochWorkload};
 use crate::util::cli::Args;
 use crate::util::table::{fmt_ops, Table};
 use crate::util::error::Result;
@@ -23,11 +24,14 @@ Usage: pgas-nb <subcommand> [--opts]
 
 Subcommands:
   bench <fig3|fig4|fig5|fig6|fig7|fig9|fig10|election>   regenerate a figure
-        [--quick] [--csv]
+        [--quick] [--csv] [--trace-out FILE]  (--trace-out: fig9/fig10 only —
+                                              record the figure's
+                                              representative DES point)
   check [--seeds 1,2,3] [--collections stack,queue,list,map]
         [--locales N] [--tasks N] [--ops N] [--keys N] [--topology T]
         [--agg-capacity N] [--reclaim-every K] [--stall] [--adversarial]
         [--adaptive] [--out DIR] [--mutate]
+        [--trace-out FILE] [--trace-in FILE]
                                               linearizability & reclamation-
                                               safety checker (see README
                                               \"Testing & verification\")
@@ -40,7 +44,14 @@ Subcommands:
         [--topology flat|fully-connected|ring|dragonfly]
         [--agg-capacity N] [--ugal-threshold NS] [--flush-after NS]
         [--backpressure NS] [--hier-group G]
-        [--no-network-atomics]                custom DES testbed point
+        [--no-network-atomics]
+        [--trace-out FILE] [--trace-in FILE]  custom DES testbed point;
+                                              --trace-in deterministically
+                                              replays a recorded trace and
+                                              verifies event-for-event
+  trace <summary|top-ops|diff> <FILE> [FILE2] [--n N]
+                                              inspect / compare recorded
+                                              traces (JSONL or .bin)
   info                                        environment / model summary
 ";
 
@@ -64,6 +75,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
         Some("demo") => cmd_demo(args),
         Some("scan") => cmd_scan(args),
         Some("sim") => cmd_sim(args),
+        Some("trace") => cmd_trace(args),
         Some("info") => cmd_info(),
         _ => {
             print!("{USAGE}");
@@ -84,6 +96,12 @@ fn emit(args: &Args, title: &str, t: &Table) {
 fn cmd_bench(args: &Args) -> Result<()> {
     let scale = if args.flag("quick") { Scale::Quick } else { Scale::from_env() };
     let which = args.positional().get(1).map(|s| s.as_str()).unwrap_or("all");
+    if args.flag("trace-out") && args.get("trace-out").is_none() {
+        bail!("--trace-out requires a value (a trace file path)");
+    }
+    if let Some(path) = args.get("trace-out") {
+        return cmd_bench_trace(which, scale, path);
+    }
     let t0 = Instant::now();
     match which {
         "fig3" => emit(args, "Fig 3: AtomicObject vs atomic int", &figures::fig3(scale)),
@@ -113,6 +131,37 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `bench <fig9|fig10> --trace-out FILE`: run the figure's representative
+/// DES point (largest locale count, dragonfly) with the tracer attached
+/// and write the trace — JSONL, or binary when FILE ends in `.bin`. Two
+/// invocations with the same scale write byte-identical files (the DES
+/// is a pure function of its config; pinned by the CI trace job).
+fn cmd_bench_trace(which: &str, scale: Scale, path: &str) -> Result<()> {
+    let cfg = match which {
+        "fig9" | "topology" => figures::fig9_trace_point(scale),
+        "fig10" | "adaptive" => figures::fig10_trace_point(scale),
+        other => bail!("--trace-out records a DES trace for fig9/fig10 only (got '{other}')"),
+    };
+    let tr = Arc::new(Tracer::new());
+    let r = run_epoch_traced(cfg.clone(), Some(Arc::clone(&tr)));
+    tr.write(path, &header_for_epoch(&cfg))?;
+    println!(
+        "trace: {} events retained ({} recorded, {} overwritten) -> {path}",
+        tr.len(),
+        tr.recorded(),
+        tr.dropped()
+    );
+    println!(
+        "  point: {} locales on {}, {:.2} mops, op p50/p99 {}/{} ns",
+        cfg.locales,
+        cfg.topology.label(),
+        r.throughput_mops,
+        r.latency.op.percentile(50.0),
+        r.latency.op.percentile(99.0)
+    );
+    Ok(())
+}
+
 /// Strictly parse a numeric `check` knob: absent → default, present but
 /// unparseable → error. (`Args::get_usize`'s warn-and-default fallback
 /// is fine for benches; a correctness gate must not quietly run a
@@ -131,8 +180,17 @@ fn check_knob<T: std::str::FromStr>(args: &Args, name: &str, default: T) -> Resu
 /// CI artifact upload. `--mutate` instead runs the self-test: deliberate
 /// bugs must be detected, the faithful control must pass.
 fn cmd_check(args: &Args) -> Result<()> {
-    use crate::check::{check_collection, render_history, CheckCfg, Collection};
+    use crate::check::{check_collection_traced, render_history, CheckCfg, Collection};
+    use crate::obs::header_for_check;
     let out_dir = args.get_or("out", "check-failures");
+    for opt in ["trace-in", "trace-out"] {
+        if args.flag(opt) && args.get(opt).is_none() {
+            bail!("--{opt} requires a value (a trace file path)");
+        }
+    }
+    if let Some(path) = args.get("trace-in") {
+        return cmd_check_replay(path);
+    }
 
     // `check` takes no operands beyond the subcommand; a stray one is
     // almost always a list split by a space (`--seeds 1, 2,3` leaves
@@ -167,7 +225,7 @@ fn cmd_check(args: &Args) -> Result<()> {
         // customized mutation run happened.
         for opt in [
             "seeds", "collections", "locales", "tasks", "ops", "keys", "topology",
-            "agg-capacity", "reclaim-every",
+            "agg-capacity", "reclaim-every", "trace-out",
         ] {
             if args.get(opt).is_some() || args.flag(opt) {
                 bail!("--mutate runs a fixed self-test; --{opt} does not apply (drop it)");
@@ -244,6 +302,10 @@ fn cmd_check(args: &Args) -> Result<()> {
         // would record an empty history and pass vacuously.
         bail!("--stall/--adversarial needs at least 2 total tasks (locales x tasks)");
     }
+    let trace_out = args.get("trace-out");
+    if trace_out.is_some() && (seeds.len() != 1 || collections.len() != 1) {
+        bail!("--trace-out records one run; pass one --seeds value and one --collections value");
+    }
     let cfg_for = |seed: u64| CheckCfg {
         seed,
         locales,
@@ -266,7 +328,11 @@ fn cmd_check(args: &Args) -> Result<()> {
         let cfg = cfg_for(seed);
         for &c in &collections {
             let t0 = Instant::now();
-            let out = check_collection(c, &cfg);
+            // Every run is traced: tracing is pinned not to perturb the
+            // judged outcome, and it is what makes a failure reproducible
+            // (the trace header is the run's full config).
+            let tr = Arc::new(Tracer::new());
+            let out = check_collection_traced(c, &cfg, Some(Arc::clone(&tr)));
             let ms = t0.elapsed().as_millis();
             t.row_display(&[
                 seed.to_string(),
@@ -295,7 +361,17 @@ fn cmd_check(args: &Args) -> Result<()> {
                     body.push_str(&format!("leaked objects: {}\n", out.leaked));
                 }
                 std::fs::write(&path, body)?;
-                eprintln!("FAILURE: {} seed {} -> {}", c.label(), seed, path);
+                // The trace artifact rides along with the minimized
+                // history: header = the exact failing config, events =
+                // the epoch lifecycle around the failure.
+                let tpath = format!("{out_dir}/{}_seed{}.trace.jsonl", c.label(), seed);
+                tr.write(&tpath, &header_for_check(c, &cfg))?;
+                eprintln!("FAILURE: {} seed {} -> {} (trace: {tpath})", c.label(), seed, path);
+                eprintln!("  reproduce: pgas-nb check --trace-in {tpath}");
+            }
+            if let Some(p) = trace_out {
+                tr.write(p, &header_for_check(c, &cfg))?;
+                println!("trace: {} events -> {p}", tr.len());
             }
         }
     }
@@ -303,6 +379,50 @@ fn cmd_check(args: &Args) -> Result<()> {
     if failures > 0 {
         bail!("{failures} check(s) failed; minimized histories in {out_dir}/");
     }
+    Ok(())
+}
+
+/// `check --trace-in FILE`: rebuild the exact run a `check` trace records
+/// and re-judge it. The check harness runs the live multi-threaded
+/// substrate, so replay reproduces from the header (the run's full
+/// config) rather than comparing scheduling-dependent event order — a
+/// recorded failure recurs because the judged schedule is re-derived
+/// from the same seed.
+fn cmd_check_replay(path: &str) -> Result<()> {
+    use crate::check::check_collection;
+    use crate::obs::{check_from_header, parse_trace_file};
+    let parsed = parse_trace_file(path).map_err(|e| err!("{e}"))?;
+    let kind = parsed.kind().map_err(|e| err!("{e}"))?.to_string();
+    if kind != "check" {
+        bail!("'{path}' is a '{kind}' trace; `check --trace-in` replays 'check' traces");
+    }
+    let (collection, cfg) = check_from_header(&parsed.header).map_err(|e| err!("{e}"))?;
+    println!(
+        "replaying check from {path}: {} seed {} ({} locales x {} tasks, {} ops/task)",
+        collection.label(),
+        cfg.seed,
+        cfg.locales,
+        cfg.tasks_per_locale,
+        cfg.ops_per_task
+    );
+    let out = check_collection(collection, &cfg);
+    println!(
+        "  events {}  linearizable {}  violations {}  leaked {}",
+        out.history.len(),
+        if out.lin.is_ok() { "yes" } else { "NO" },
+        out.violations.len(),
+        out.leaked
+    );
+    if !out.passed() {
+        if let Err(f) = &out.lin {
+            println!("{f}");
+        }
+        for v in &out.violations {
+            println!("reclamation violation [{:?}]: {}", v.kind, v.detail);
+        }
+        bail!("replayed check failed (reproduced the recorded failure)");
+    }
+    println!("replayed check passed");
     Ok(())
 }
 
@@ -504,6 +624,15 @@ fn cmd_scan(args: &Args) -> Result<()> {
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {
+    for opt in ["trace-in", "trace-out"] {
+        if args.flag(opt) && args.get(opt).is_none() {
+            bail!("--{opt} requires a value (a trace file path)");
+        }
+    }
+    if let Some(path) = args.get("trace-in") {
+        return cmd_sim_replay(path);
+    }
+    let trace_out = args.get("trace-out");
     let workload = match args.get_or("workload", "reclaim-every") {
         "readonly" => EpochWorkload::ReadOnly,
         "delete-end" => EpochWorkload::DeleteReclaimAtEnd,
@@ -526,9 +655,13 @@ fn cmd_sim(args: &Args) -> Result<()> {
     };
     let mut t = Table::new(&[
         "locales", "mops", "advances", "lost_local", "lost_global", "freed", "queued_ms",
-        "detours", "ams_rx_home",
+        "detours", "ams_rx_home", "op_p50_us", "op_p99_us",
     ]);
-    for locales in args.get_usize_list("locales", &[2, 4, 8, 16])? {
+    let locale_points = args.get_usize_list("locales", &[2, 4, 8, 16])?;
+    if trace_out.is_some() && locale_points.len() != 1 {
+        bail!("--trace-out records one DES point; pass a single --locales value");
+    }
+    for locales in locale_points {
         let cfg = EpochConfig {
             workload,
             model,
@@ -546,7 +679,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
             adaptive,
             seed: args.get_u64("seed", 7),
         };
-        let r = run_epoch(cfg);
+        let tracer = trace_out.map(|_| Arc::new(Tracer::new()));
+        let r = run_epoch_traced(cfg.clone(), tracer.clone());
         t.row_display(&[
             locales.to_string(),
             format!("{:.2}", r.throughput_mops),
@@ -557,10 +691,217 @@ fn cmd_sim(args: &Args) -> Result<()> {
             format!("{:.2}", r.net.queued_ns as f64 / 1e6),
             r.net.detours.to_string(),
             r.ams_rx_home.to_string(),
+            format!("{:.2}", r.latency.op.percentile(50.0) as f64 / 1e3),
+            format!("{:.2}", r.latency.op.percentile(99.0) as f64 / 1e3),
         ]);
+        if let (Some(p), Some(tr)) = (trace_out, &tracer) {
+            tr.write(p, &header_for_epoch(&cfg))?;
+            println!(
+                "trace: {} events retained ({} overwritten) -> {p}",
+                tr.len(),
+                tr.dropped()
+            );
+        }
     }
     emit(args, &format!("custom sim sweep ({})", topology.label()), &t);
     Ok(())
+}
+
+/// `sim --trace-in FILE`: rebuild the DES config from the trace header,
+/// re-run with a fresh tracer, and verify the replay event-for-event.
+/// The DES is single-threaded and a pure function of config + seed, so
+/// any divergence means the file was edited or the build changed
+/// behavior — either way worth a hard failure.
+fn cmd_sim_replay(path: &str) -> Result<()> {
+    use crate::obs::{epoch_from_header, parse_trace_file};
+    let parsed = parse_trace_file(path).map_err(|e| err!("{e}"))?;
+    let kind = parsed.kind().map_err(|e| err!("{e}"))?.to_string();
+    if kind != "sim" {
+        bail!("'{path}' is a '{kind}' trace; `sim --trace-in` replays 'sim' traces");
+    }
+    let cfg = epoch_from_header(&parsed.header).map_err(|e| err!("{e}"))?;
+    println!(
+        "replaying sim from {path}: {} locales on {}, seed {}",
+        cfg.locales,
+        cfg.topology.label(),
+        cfg.seed
+    );
+    let tr = Arc::new(Tracer::new());
+    let r = run_epoch_traced(cfg, Some(Arc::clone(&tr)));
+    let fresh = tr.events();
+    if fresh == parsed.events {
+        println!(
+            "REPLAY MATCH: {} events identical; makespan {} ns, {:.2} mops",
+            fresh.len(),
+            r.makespan_ns,
+            r.throughput_mops
+        );
+        return Ok(());
+    }
+    match fresh.iter().zip(parsed.events.iter()).position(|(a, b)| a != b) {
+        Some(i) => bail!(
+            "REPLAY MISMATCH at event {i}:\n  recorded: {}\n  replayed: {}",
+            parsed.events[i].to_json(),
+            fresh[i].to_json()
+        ),
+        None => bail!(
+            "REPLAY MISMATCH: recorded {} events, replayed {}",
+            parsed.events.len(),
+            fresh.len()
+        ),
+    }
+}
+
+/// `trace <summary|top-ops|diff>`: offline inspection of recorded trace
+/// files (JSONL or binary, auto-detected).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let pos = args.positional();
+    match pos.get(1).map(|s| s.as_str()) {
+        Some("summary") => {
+            let path = pos.get(2).ok_or_else(|| err!("usage: pgas-nb trace summary <FILE>"))?;
+            trace_summary(path)
+        }
+        Some("top-ops") => {
+            let path =
+                pos.get(2).ok_or_else(|| err!("usage: pgas-nb trace top-ops <FILE> [--n N]"))?;
+            trace_top_ops(path, args.get_usize("n", 10))
+        }
+        Some("diff") => {
+            let a = pos.get(2).ok_or_else(|| err!("usage: pgas-nb trace diff <FILE> <FILE>"))?;
+            let b = pos.get(3).ok_or_else(|| err!("usage: pgas-nb trace diff <FILE> <FILE>"))?;
+            trace_diff(a, b)
+        }
+        _ => bail!("usage: pgas-nb trace <summary|top-ops|diff> <FILE> [FILE2]"),
+    }
+}
+
+/// Header, event census, virtual-time extent and op-latency percentiles
+/// of one trace file.
+fn trace_summary(path: &str) -> Result<()> {
+    use crate::obs::Event;
+    let parsed = crate::obs::parse_trace_file(path).map_err(|e| err!("{e}"))?;
+    println!("trace {path}");
+    println!("  kind: {}", parsed.kind().map_err(|e| err!("{e}"))?);
+    let cfg: Vec<String> = parsed
+        .header
+        .iter()
+        .filter(|(k, _)| !matches!(k.as_str(), "trace" | "version" | "kind"))
+        .map(|(k, v)| format!("{k}={}", v.render()))
+        .collect();
+    println!("  config: {}", cfg.join(" "));
+    let evs = &parsed.events;
+    println!("  events: {}", evs.len());
+    if evs.is_empty() {
+        return Ok(());
+    }
+    let t0 = evs.iter().map(|e| e.t).min().expect("non-empty");
+    let t1 = evs.iter().map(|e| e.t).max().expect("non-empty");
+    println!("  virtual time: [{t0}, {t1}] ns (extent {} ns)", t1 - t0);
+    // Census in order of first appearance (stable across runs: recording
+    // order is virtual-time program order).
+    let mut counts: Vec<(&'static str, u64)> = Vec::new();
+    let mut lat = crate::util::stats::LatencyHistogram::new();
+    for e in evs {
+        let k = e.ev.kind();
+        match counts.iter_mut().find(|(n, _)| *n == k) {
+            Some((_, c)) => *c += 1,
+            None => counts.push((k, 1)),
+        }
+        if let Event::OpEnd { ns, .. } = e.ev {
+            lat.record(ns);
+        }
+    }
+    let mut t = Table::new(&["event", "count"]);
+    for (k, c) in &counts {
+        t.row_display(&[k.to_string(), c.to_string()]);
+    }
+    println!("{}", t.render());
+    if lat.count() > 0 {
+        println!(
+            "  ops: {} completed; latency p50/p95/p99/p999 = {}/{}/{}/{} ns (log-bucket upper bounds)",
+            lat.count(),
+            lat.percentile(50.0),
+            lat.percentile(95.0),
+            lat.percentile(99.0),
+            lat.percentile(99.9)
+        );
+    }
+    Ok(())
+}
+
+/// The N slowest completed ops in a trace, worst first.
+fn trace_top_ops(path: &str, n: usize) -> Result<()> {
+    use crate::obs::{span_iter, span_task, Event};
+    let parsed = crate::obs::parse_trace_file(path).map_err(|e| err!("{e}"))?;
+    let mut ops: Vec<(u64, u64, u16, u64)> = parsed
+        .events
+        .iter()
+        .filter_map(|e| match e.ev {
+            Event::OpEnd { span, ns } => Some((ns, span, e.locale, e.t)),
+            _ => None,
+        })
+        .collect();
+    // Worst first; ties broken by completion time then span so the
+    // listing is deterministic.
+    ops.sort_by(|a, b| b.0.cmp(&a.0).then(a.3.cmp(&b.3)).then(a.1.cmp(&b.1)));
+    println!("top {} of {} completed ops by latency ({path})", ops.len().min(n), ops.len());
+    let mut t = Table::new(&["rank", "ns", "task", "iter", "locale", "end_t"]);
+    for (i, (ns, span, locale, end_t)) in ops.iter().take(n).enumerate() {
+        t.row_display(&[
+            (i + 1).to_string(),
+            ns.to_string(),
+            span_task(*span).to_string(),
+            span_iter(*span).to_string(),
+            locale.to_string(),
+            end_t.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Field-by-field header diff plus the first divergent event. Exit code
+/// is the verdict: identical traces return success, any difference is an
+/// error (so CI can gate on `trace diff a b`).
+fn trace_diff(a: &str, b: &str) -> Result<()> {
+    let pa = crate::obs::parse_trace_file(a).map_err(|e| err!("{e}"))?;
+    let pb = crate::obs::parse_trace_file(b).map_err(|e| err!("{e}"))?;
+    let mut diffs = 0usize;
+    for (k, v) in &pa.header {
+        match pb.header.iter().find(|(k2, _)| k2 == k) {
+            Some((_, v2)) if v2 == v => {}
+            Some((_, v2)) => {
+                println!("header {k}: {} vs {}", v.render(), v2.render());
+                diffs += 1;
+            }
+            None => {
+                println!("header {k}: only in {a}");
+                diffs += 1;
+            }
+        }
+    }
+    for (k, _) in &pb.header {
+        if !pa.header.iter().any(|(k2, _)| k2 == k) {
+            println!("header {k}: only in {b}");
+            diffs += 1;
+        }
+    }
+    if pa.events.len() != pb.events.len() {
+        println!("event count: {} vs {}", pa.events.len(), pb.events.len());
+        diffs += 1;
+    }
+    if let Some(i) = pa.events.iter().zip(pb.events.iter()).position(|(x, y)| x != y) {
+        println!("first divergent event at index {i}:");
+        println!("  {a}: {}", pa.events[i].to_json());
+        println!("  {b}: {}", pb.events[i].to_json());
+        diffs += 1;
+    }
+    if diffs == 0 {
+        println!("traces identical: {} events", pa.events.len());
+        Ok(())
+    } else {
+        bail!("traces differ ({diffs} difference(s))");
+    }
 }
 
 fn cmd_info() -> Result<()> {
@@ -696,6 +1037,90 @@ mod tests {
         // A token absorbed by a bare flag must not flip it off silently
         // (--mutate now would otherwise run the ordinary suite).
         assert!(run_cli(&argv("check --mutate now")).is_err());
+    }
+
+    #[test]
+    fn sim_trace_out_and_replay_round_trip() {
+        std::fs::create_dir_all("target/trace-test").unwrap();
+        let p = "target/trace-test/sim.trace.jsonl";
+        run_cli(&argv(&format!(
+            "sim --workload reclaim-every --every 64 --locales 4 --tasks 2 --objs 256 \
+             --topology ring --remote-ratio 0.5 --trace-out {p}"
+        )))
+        .unwrap();
+        run_cli(&argv(&format!("sim --trace-in {p}"))).unwrap();
+        run_cli(&argv(&format!("trace summary {p}"))).unwrap();
+        run_cli(&argv(&format!("trace top-ops {p} --n 5"))).unwrap();
+        run_cli(&argv(&format!("trace diff {p} {p}"))).unwrap();
+        // Kind mismatch is a hard error, not a silent fallback.
+        assert!(run_cli(&argv(&format!("check --trace-in {p}"))).is_err());
+    }
+
+    #[test]
+    fn sim_trace_out_needs_a_single_locale_point() {
+        std::fs::create_dir_all("target/trace-test").unwrap();
+        assert!(run_cli(&argv("sim --locales 2,4 --trace-out target/trace-test/x.jsonl")).is_err());
+    }
+
+    #[test]
+    fn tampered_trace_fails_diff_and_replay() {
+        std::fs::create_dir_all("target/trace-test").unwrap();
+        let p = "target/trace-test/tamper.trace.jsonl";
+        let q = "target/trace-test/tamper-cut.trace.jsonl";
+        run_cli(&argv(&format!(
+            "sim --workload readonly --locales 2 --tasks 2 --objs 128 --trace-out {p}"
+        )))
+        .unwrap();
+        let body = std::fs::read_to_string(p).unwrap();
+        let mut lines: Vec<&str> = body.lines().collect();
+        assert!(lines.len() > 2, "trace should have a header and events");
+        lines.pop();
+        std::fs::write(q, lines.join("\n") + "\n").unwrap();
+        assert!(run_cli(&argv(&format!("trace diff {p} {q}"))).is_err());
+        assert!(run_cli(&argv(&format!("sim --trace-in {q}"))).is_err());
+    }
+
+    #[test]
+    fn check_trace_out_and_replay_round_trip() {
+        std::fs::create_dir_all("target/trace-test").unwrap();
+        let p = "target/trace-test/check.trace.jsonl";
+        run_cli(&argv(&format!(
+            "check --seeds 5 --ops 40 --locales 2 --tasks 2 --collections stack --trace-out {p}"
+        )))
+        .unwrap();
+        run_cli(&argv(&format!("check --trace-in {p}"))).unwrap();
+        run_cli(&argv(&format!("trace summary {p}"))).unwrap();
+        assert!(run_cli(&argv(&format!("sim --trace-in {p}"))).is_err());
+    }
+
+    #[test]
+    fn check_trace_out_needs_a_single_run() {
+        std::fs::create_dir_all("target/trace-test").unwrap();
+        assert!(run_cli(&argv(
+            "check --seeds 1,2 --ops 40 --locales 2 --tasks 2 \
+             --trace-out target/trace-test/y.jsonl"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn bench_fig10_trace_out_quick_writes_binary() {
+        std::fs::create_dir_all("target/trace-test").unwrap();
+        let p = "target/trace-test/fig10.trace.bin";
+        run_cli(&argv(&format!("bench fig10 --quick --trace-out {p}"))).unwrap();
+        run_cli(&argv(&format!("trace summary {p}"))).unwrap();
+        assert!(std::fs::read(p).unwrap().starts_with(b"PGTR"));
+        // Only the DES figures have a traceable point.
+        assert!(run_cli(&argv("bench fig3 --quick --trace-out target/trace-test/z.bin")).is_err());
+    }
+
+    #[test]
+    fn trace_subcommand_rejects_garbage() {
+        assert!(run_cli(&argv("trace")).is_err());
+        assert!(run_cli(&argv("trace bogus x")).is_err());
+        assert!(run_cli(&argv("trace summary target/trace-test/does-not-exist")).is_err());
+        assert!(run_cli(&argv("sim --trace-in")).is_err());
+        assert!(run_cli(&argv("check --trace-out")).is_err());
     }
 
     #[test]

@@ -70,6 +70,7 @@
 
 use super::limbo::{LimboList, NodePool};
 use super::token::{Token, TokenRegistry, QUIESCENT};
+use crate::obs::{Event, INFRA_TASK};
 use crate::pgas::aggregation::{charge_batch, default_capacity, AggBuffer};
 use crate::pgas::{here, Aggregator, ErasedPtr, GlobalPtr, LocaleId, NicOp, Pgas, Privatized};
 use crate::runtime::SharedReclaimScan;
@@ -487,6 +488,14 @@ impl EpochManager {
         if let Some(a) = sh.pgas.audit() {
             a.on_advance(new_epoch);
         }
+        if let Some(tr) = sh.pgas.tracer() {
+            tr.record_at(
+                sh.pgas.local_virtual_ns(),
+                INFRA_TASK,
+                here().index() as u16,
+                Event::Advance { epoch: new_epoch },
+            );
+        }
 
         // (5) Flush every locale's deferral-aggregation buffers so each
         // migrated entry reaches its owner's limbo list before *any* list
@@ -577,6 +586,20 @@ impl EpochManager {
         sh.stats.migration_flushes.fetch_add(1, Ordering::Relaxed);
         sh.stats.freed_remote.fetch_add(batch.len() as u64, Ordering::Relaxed);
         charge_batch(&sh.pgas, dst, batch.len(), std::mem::size_of::<DeferredEntry>());
+        // Emitted here (not in `charge_flush`) so a migration flush and an
+        // aggregation-layer flush each produce exactly one event.
+        if let Some(tr) = sh.pgas.tracer() {
+            tr.record_at(
+                sh.pgas.local_virtual_ns(),
+                INFRA_TASK,
+                here().index() as u16,
+                Event::Flush {
+                    dst: dst.index() as u16,
+                    n: batch.len() as u64,
+                    bytes: (batch.len() * std::mem::size_of::<DeferredEntry>()) as u64,
+                },
+            );
+        }
         sh.pgas.on(dst, || {
             let di = sh.inst.on_locale(dst);
             for d in batch {
@@ -687,6 +710,14 @@ impl EpochManager {
         });
         let (n, remote) = chain.drain_into_aggregator(&inst.pool, inst.locale, &mut agg);
         drop(agg); // RAII flush: every batch delivered before we report
+        if let Some(tr) = sh.pgas.tracer() {
+            tr.record_at(
+                sh.pgas.local_virtual_ns(),
+                INFRA_TASK,
+                inst.locale.index() as u16,
+                Event::Reclaim { n: n as u64 },
+            );
+        }
         (n, remote)
     }
 
@@ -778,6 +809,14 @@ impl EpochToken {
                 if let Some(a) = sh.pgas.audit() {
                     a.on_pin(self.tok.as_ptr() as usize, e);
                 }
+                if let Some(tr) = sh.pgas.tracer() {
+                    tr.record_at(
+                        sh.pgas.local_virtual_ns(),
+                        INFRA_TASK,
+                        self.locale.index() as u16,
+                        Event::Pin { epoch: e },
+                    );
+                }
                 return;
             }
             // Retry pays the re-read + re-publish.
@@ -795,6 +834,14 @@ impl EpochToken {
         // detection, never invent one.
         if let Some(a) = sh.pgas.audit() {
             a.on_unpin(self.tok.as_ptr() as usize);
+        }
+        if let Some(tr) = sh.pgas.tracer() {
+            tr.record_at(
+                sh.pgas.local_virtual_ns(),
+                INFRA_TASK,
+                self.locale.index() as u16,
+                Event::Unpin,
+            );
         }
         // Release is sufficient: a scanner that misses this store merely
         // sees the token still pinned and aborts conservatively; safety
@@ -825,6 +872,14 @@ impl EpochToken {
         // list (and thus before any drain could free it).
         if let Some(a) = sh.pgas.audit() {
             a.on_retire(e.wide, epoch);
+        }
+        if let Some(tr) = sh.pgas.tracer() {
+            tr.record_at(
+                sh.pgas.local_virtual_ns(),
+                INFRA_TASK,
+                self.locale.index() as u16,
+                Event::Defer { dst: e.locale().index() as u16, list: idx as u64 },
+            );
         }
         if e.locale() == self.locale {
             // Local-owned: wait-free limbo push (pool recycle DCAS + one
@@ -1032,6 +1087,30 @@ mod tests {
         assert_eq!(p.live_objects(), 10);
         assert_eq!(em.clear(), 10);
         assert_eq!(p.live_objects(), 0);
+    }
+
+    #[test]
+    fn tracer_sees_the_full_epoch_lifecycle() {
+        use crate::obs::{Event, Tracer};
+        let p = pgas(2);
+        let tr = Arc::new(Tracer::new());
+        assert!(p.set_tracer(Arc::clone(&tr)));
+        let em = EpochManager::new(Arc::clone(&p));
+        let tok = em.register();
+        tok.pin();
+        tok.defer_delete(p.alloc(LocaleId(1), 7u64)); // remote-owned: migrates
+        tok.unpin();
+        for _ in 0..3 {
+            assert!(em.try_reclaim().advanced());
+        }
+        let kinds: Vec<&str> = tr.events().iter().map(|e| e.ev.kind()).collect();
+        for want in ["pin", "defer", "unpin", "advance", "flush", "reclaim", "am_send"] {
+            assert!(kinds.contains(&want), "missing '{want}' in {kinds:?}");
+        }
+        // The defer records the owner's limbo list, the flush its migration.
+        let evs = tr.events();
+        assert!(evs.iter().any(|e| matches!(e.ev, Event::Defer { dst: 1, .. })));
+        assert!(evs.iter().any(|e| matches!(e.ev, Event::Flush { dst: 1, n: 1, .. })));
     }
 
     #[test]

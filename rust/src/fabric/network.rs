@@ -37,6 +37,8 @@
 //! not exist and every pre-adaptive trace is reproduced exactly.
 
 use super::topology::{ser_ns, Link, Route, Topology};
+use crate::obs::event::{Event, INFRA_TASK};
+use crate::obs::Tracer;
 use crate::pgas::topology::LocaleId;
 use crate::sim::engine::{Resource, VTime};
 use crate::util::rng::Xoshiro256pp;
@@ -130,6 +132,9 @@ pub struct Network {
     links: HashMap<(u16, u16), LinkState>,
     /// UGAL decision state; `None` = minimal-only (the default).
     adaptive: Option<(AdaptiveRouting, Xoshiro256pp)>,
+    /// Attached trace recorder; `None` (the default) skips all event
+    /// construction — the zero-overhead-when-off contract.
+    tracer: Option<Arc<Tracer>>,
     messages: u64,
     hops: u64,
     bytes: u64,
@@ -144,6 +149,7 @@ impl Network {
             topo,
             links: HashMap::new(),
             adaptive: None,
+            tracer: None,
             messages: 0,
             hops: 0,
             bytes: 0,
@@ -151,6 +157,14 @@ impl Network {
             queued_ns: 0,
             detours: 0,
         }
+    }
+
+    /// Attach a tracer: DES sends start emitting per-hop
+    /// [`Event::HopEnq`]/[`Event::HopDeq`] events. Recording never
+    /// touches link queues or the routing RNG, so traced and untraced
+    /// runs deliver identically.
+    pub fn set_tracer(&mut self, t: Arc<Tracer>) {
+        self.tracer = Some(t);
     }
 
     /// A network whose DES sends route adaptively (see the module docs).
@@ -254,10 +268,14 @@ impl Network {
             None => topo.route(from, to),
         };
         let ser = ser_ns(topo.link_bytes_per_ns(), bytes);
+        // Cloned up front (an Arc bump when tracing, a no-op when not) so
+        // event emission below doesn't alias the `links` borrow.
+        let tracer = if queue_at.is_some() { self.tracer.clone() } else { None };
         let mut t = now + topo.injection_ns();
         let mut pure = topo.injection_ns();
         let mut waited = 0u64;
         for &link in &route {
+            let (lf, lt) = link.key();
             let st = self.links.entry(link.key()).or_insert_with(LinkState::new);
             st.bytes += bytes as u64;
             if queue_at.is_none() {
@@ -268,7 +286,13 @@ impl Network {
                 // the link, so it must not queue either — this is what
                 // makes the zero-cost crossbar exactly the flat model.
                 st.res.tally(1, 0); // count the message only
+                if let Some(tr) = &tracer {
+                    tr.record_at(t, INFRA_TASK, lf, Event::HopEnq { from: lf, to: lt, wait_ns: 0 });
+                }
                 t += topo.link_ns(link);
+                if let Some(tr) = &tracer {
+                    tr.record_at(t, INFRA_TASK, lf, Event::HopDeq { from: lf, to: lt });
+                }
             } else {
                 // Serialize onto the link (queueing behind in-flight
                 // traffic), then propagate. Like every Resource in the
@@ -282,7 +306,20 @@ impl Network {
                 let wait = done_ser - ser - t;
                 waited += wait;
                 st.peak_wait_ns = st.peak_wait_ns.max(wait);
+                if let Some(tr) = &tracer {
+                    // Enq stamps when serialization began (head of queue
+                    // reached), deq when the hop fully completed.
+                    tr.record_at(
+                        done_ser - ser,
+                        INFRA_TASK,
+                        lf,
+                        Event::HopEnq { from: lf, to: lt, wait_ns: wait },
+                    );
+                }
                 t = done_ser + topo.link_ns(link);
+                if let Some(tr) = &tracer {
+                    tr.record_at(t, INFRA_TASK, lf, Event::HopDeq { from: lf, to: lt });
+                }
             }
             pure += ser + topo.link_ns(link);
         }
@@ -292,6 +329,20 @@ impl Network {
         self.transit_ns += pure;
         self.queued_ns += waited;
         Delivery { delivered_at: t, transit_ns: pure, hops: route.len() as u32, waited_ns: waited }
+    }
+
+    /// Cumulative pure transit over all messages so far (cheap running
+    /// sum; the span accounting in the epoch DES reads deltas of this
+    /// around each task step).
+    #[inline]
+    pub fn transit_ns_total(&self) -> u64 {
+        self.transit_ns
+    }
+
+    /// Cumulative link-queueing delay over all messages so far.
+    #[inline]
+    pub fn queued_ns_total(&self) -> u64 {
+        self.queued_ns
     }
 
     /// Per-link counters, sorted by `(from, to)` for stable output.
@@ -316,6 +367,15 @@ impl Network {
         self.link_stats().into_iter().max_by_key(|s| (s.busy_ns, s.msgs))
     }
 
+    /// Aggregate counters, maintained as independent running sums.
+    ///
+    /// **Deprecated for new call sites**: prefer deriving gauges from
+    /// [`Network::link_stats`] via
+    /// [`crate::obs::MetricsRegistry::from_link_stats`] — the registry is
+    /// computed from the fine-grained per-link state, so it cannot drift
+    /// from it. This accessor stays as the cheap hot-path read, and the
+    /// DES runners cross-check the two views under `debug_assertions`
+    /// ([`crate::obs::MetricsRegistry::verify_network`]).
     pub fn totals(&self) -> NetTotals {
         let mut t = NetTotals {
             messages: self.messages,
@@ -536,6 +596,38 @@ mod tests {
         let t = n.totals();
         assert_eq!(t.detours, 0);
         assert_eq!(t.hops, 300, "always the 3-hop minimal route");
+    }
+
+    #[test]
+    fn tracing_emits_hops_without_changing_deliveries() {
+        use crate::obs::event::Event;
+        use crate::obs::Tracer;
+        let drive = |n: &mut Network| {
+            let mut out = Vec::new();
+            for i in 0..10u64 {
+                out.push(n.send(i * 100, LocaleId(0), LocaleId(3), 8 * 1024));
+            }
+            out
+        };
+        let mut plain = ring8();
+        let mut traced = ring8();
+        let tr = Arc::new(Tracer::new());
+        traced.set_tracer(Arc::clone(&tr));
+        assert_eq!(drive(&mut plain), drive(&mut traced), "recording must not perturb");
+        assert_eq!(plain.totals(), traced.totals());
+        let evs = tr.events();
+        // 10 messages x 3 hops, one enq + one deq each.
+        let enqs = evs.iter().filter(|e| matches!(e.ev, Event::HopEnq { .. })).count();
+        let deqs = evs.iter().filter(|e| matches!(e.ev, Event::HopDeq { .. })).count();
+        assert_eq!((enqs, deqs), (30, 30));
+        let waited: u64 = evs
+            .iter()
+            .filter_map(|e| match e.ev {
+                Event::HopEnq { wait_ns, .. } => Some(wait_ns),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(waited, traced.totals().queued_ns, "hop events carry all queueing");
     }
 
     #[test]

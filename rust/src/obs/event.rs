@@ -1,0 +1,280 @@
+//! The typed trace-event vocabulary: every observable transition in the
+//! substrate and the DES testbeds, stamped on the virtual clock.
+//!
+//! Events are deliberately flat (no nesting, fixed-width payloads) so one
+//! event is one JSONL line *and* one fixed-width binary record, and so the
+//! two encodings round-trip losslessly through [`crate::obs::replay`].
+
+use crate::obs::replay::{get_i64, get_u64, Val};
+
+/// Task id used for events not attributable to a workload task (link hops
+/// recorded inside the fabric, manager-side flushes, ...).
+pub const INFRA_TASK: u32 = u32::MAX;
+
+/// One timestamped observation. `t` is virtual nanoseconds on whichever
+/// clock the recording layer runs (the DES event clock in the simulators,
+/// the issuing locale's NIC clock on the live substrate).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub t: u64,
+    /// Workload task id, or [`INFRA_TASK`].
+    pub task: u32,
+    /// Locale the event is attributed to (issuer for sends, receiver for
+    /// delivers).
+    pub locale: u16,
+    pub ev: Event,
+}
+
+/// The event vocabulary. Span-bearing events (`OpBegin`/`OpEnd`) carry a
+/// span id built by [`crate::obs::span::span_id`] so an op links to the
+/// AMs, hops and epoch work recorded between its begin and end.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// A workload operation began (span opened).
+    OpBegin { span: u64 },
+    /// A workload operation completed; `ns` is its end-to-end latency.
+    OpEnd { span: u64, ns: u64 },
+    /// An active message was injected toward `dst`.
+    AmSend { dst: u16, bytes: u64 },
+    /// An active message from `src` arrived (post-fabric).
+    AmDeliver { src: u16 },
+    /// A message reached the head of link `(from, to)`'s queue after
+    /// waiting `wait_ns` behind earlier traffic.
+    HopEnq { from: u16, to: u16, wait_ns: u64 },
+    /// A message finished serializing + traversing link `(from, to)`.
+    HopDeq { from: u16, to: u16 },
+    /// An aggregation buffer flushed `n` entries (`bytes` total) to `dst`.
+    Flush { dst: u16, n: u64, bytes: u64 },
+    /// A task pinned into `epoch`.
+    Pin { epoch: u64 },
+    /// A task unpinned (became quiescent).
+    Unpin,
+    /// The global epoch advanced to `epoch`.
+    Advance { epoch: u64 },
+    /// An object was deferred for reclamation into limbo list `list`,
+    /// owned by locale `dst`.
+    Defer { dst: u16, list: u64 },
+    /// A drain freed `n` deferred objects.
+    Reclaim { n: u64 },
+    /// An object at `addr` was freed (mutation sims: immediate frees the
+    /// defer guard should have prevented surface here).
+    Free { addr: u64 },
+    /// An object at `addr` was dereferenced (mutation sims).
+    Access { addr: u64 },
+}
+
+impl Event {
+    /// Stable kind string used in the JSONL encoding and summaries.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::OpBegin { .. } => "op_begin",
+            Event::OpEnd { .. } => "op_end",
+            Event::AmSend { .. } => "am_send",
+            Event::AmDeliver { .. } => "am_deliver",
+            Event::HopEnq { .. } => "hop_enq",
+            Event::HopDeq { .. } => "hop_deq",
+            Event::Flush { .. } => "flush",
+            Event::Pin { .. } => "pin",
+            Event::Unpin => "unpin",
+            Event::Advance { .. } => "advance",
+            Event::Defer { .. } => "defer",
+            Event::Reclaim { .. } => "reclaim",
+            Event::Free { .. } => "free",
+            Event::Access { .. } => "access",
+        }
+    }
+
+    /// Stable numeric code for the binary encoding.
+    pub fn code(&self) -> u8 {
+        match self {
+            Event::OpBegin { .. } => 0,
+            Event::OpEnd { .. } => 1,
+            Event::AmSend { .. } => 2,
+            Event::AmDeliver { .. } => 3,
+            Event::HopEnq { .. } => 4,
+            Event::HopDeq { .. } => 5,
+            Event::Flush { .. } => 6,
+            Event::Pin { .. } => 7,
+            Event::Unpin => 8,
+            Event::Advance { .. } => 9,
+            Event::Defer { .. } => 10,
+            Event::Reclaim { .. } => 11,
+            Event::Free { .. } => 12,
+            Event::Access { .. } => 13,
+        }
+    }
+
+    /// Fixed-width payload for the binary encoding (unused slots are 0).
+    pub fn payload(&self) -> (u64, u64, u64) {
+        match *self {
+            Event::OpBegin { span } => (span, 0, 0),
+            Event::OpEnd { span, ns } => (span, ns, 0),
+            Event::AmSend { dst, bytes } => (dst as u64, bytes, 0),
+            Event::AmDeliver { src } => (src as u64, 0, 0),
+            Event::HopEnq { from, to, wait_ns } => (from as u64, to as u64, wait_ns),
+            Event::HopDeq { from, to } => (from as u64, to as u64, 0),
+            Event::Flush { dst, n, bytes } => (dst as u64, n, bytes),
+            Event::Pin { epoch } => (epoch, 0, 0),
+            Event::Unpin => (0, 0, 0),
+            Event::Advance { epoch } => (epoch, 0, 0),
+            Event::Defer { dst, list } => (dst as u64, list, 0),
+            Event::Reclaim { n } => (n, 0, 0),
+            Event::Free { addr } => (addr, 0, 0),
+            Event::Access { addr } => (addr, 0, 0),
+        }
+    }
+
+    /// Inverse of [`Event::code`] + [`Event::payload`].
+    pub fn from_code(code: u8, x: u64, y: u64, z: u64) -> Option<Event> {
+        Some(match code {
+            0 => Event::OpBegin { span: x },
+            1 => Event::OpEnd { span: x, ns: y },
+            2 => Event::AmSend { dst: x as u16, bytes: y },
+            3 => Event::AmDeliver { src: x as u16 },
+            4 => Event::HopEnq { from: x as u16, to: y as u16, wait_ns: z },
+            5 => Event::HopDeq { from: x as u16, to: y as u16 },
+            6 => Event::Flush { dst: x as u16, n: y, bytes: z },
+            7 => Event::Pin { epoch: x },
+            8 => Event::Unpin,
+            9 => Event::Advance { epoch: x },
+            10 => Event::Defer { dst: x as u16, list: y },
+            11 => Event::Reclaim { n: x },
+            12 => Event::Free { addr: x },
+            13 => Event::Access { addr: x },
+            _ => return None,
+        })
+    }
+}
+
+impl TraceEvent {
+    /// One flat JSON object, one line. `task` is encoded as -1 for
+    /// [`INFRA_TASK`] so the line stays a small signed integer.
+    pub fn to_json(&self) -> String {
+        let task = if self.task == INFRA_TASK { -1i64 } else { self.task as i64 };
+        let mut s = format!(
+            "{{\"t\": {}, \"task\": {}, \"loc\": {}, \"ev\": \"{}\"",
+            self.t,
+            task,
+            self.locale,
+            self.ev.kind()
+        );
+        match &self.ev {
+            Event::OpBegin { span } => s.push_str(&format!(", \"span\": {span}")),
+            Event::OpEnd { span, ns } => s.push_str(&format!(", \"span\": {span}, \"ns\": {ns}")),
+            Event::AmSend { dst, bytes } => {
+                s.push_str(&format!(", \"dst\": {dst}, \"bytes\": {bytes}"))
+            }
+            Event::AmDeliver { src } => s.push_str(&format!(", \"src\": {src}")),
+            Event::HopEnq { from, to, wait_ns } => {
+                s.push_str(&format!(", \"from\": {from}, \"to\": {to}, \"wait_ns\": {wait_ns}"))
+            }
+            Event::HopDeq { from, to } => s.push_str(&format!(", \"from\": {from}, \"to\": {to}")),
+            Event::Flush { dst, n, bytes } => {
+                s.push_str(&format!(", \"dst\": {dst}, \"n\": {n}, \"bytes\": {bytes}"))
+            }
+            Event::Pin { epoch } => s.push_str(&format!(", \"epoch\": {epoch}")),
+            Event::Unpin => {}
+            Event::Advance { epoch } => s.push_str(&format!(", \"epoch\": {epoch}")),
+            Event::Defer { dst, list } => s.push_str(&format!(", \"dst\": {dst}, \"list\": {list}")),
+            Event::Reclaim { n } => s.push_str(&format!(", \"n\": {n}")),
+            Event::Free { addr } => s.push_str(&format!(", \"addr\": {addr}")),
+            Event::Access { addr } => s.push_str(&format!(", \"addr\": {addr}")),
+        }
+        s.push('}');
+        s
+    }
+
+    /// Rebuild an event from a parsed flat-JSON line (inverse of
+    /// [`TraceEvent::to_json`]).
+    pub fn from_fields(fields: &[(String, Val)]) -> Result<TraceEvent, String> {
+        let t = get_u64(fields, "t")?;
+        let task_raw = get_i64(fields, "task")?;
+        let task = if task_raw < 0 { INFRA_TASK } else { task_raw as u32 };
+        let locale = get_u64(fields, "loc")? as u16;
+        let kind = match fields.iter().find(|(k, _)| k == "ev") {
+            Some((_, Val::S(s))) => s.as_str(),
+            _ => return Err("event line missing string field 'ev'".into()),
+        };
+        let u = |k: &str| get_u64(fields, k);
+        let ev = match kind {
+            "op_begin" => Event::OpBegin { span: u("span")? },
+            "op_end" => Event::OpEnd { span: u("span")?, ns: u("ns")? },
+            "am_send" => Event::AmSend { dst: u("dst")? as u16, bytes: u("bytes")? },
+            "am_deliver" => Event::AmDeliver { src: u("src")? as u16 },
+            "hop_enq" => Event::HopEnq {
+                from: u("from")? as u16,
+                to: u("to")? as u16,
+                wait_ns: u("wait_ns")?,
+            },
+            "hop_deq" => Event::HopDeq { from: u("from")? as u16, to: u("to")? as u16 },
+            "flush" => Event::Flush { dst: u("dst")? as u16, n: u("n")?, bytes: u("bytes")? },
+            "pin" => Event::Pin { epoch: u("epoch")? },
+            "unpin" => Event::Unpin,
+            "advance" => Event::Advance { epoch: u("epoch")? },
+            "defer" => Event::Defer { dst: u("dst")? as u16, list: u("list")? },
+            "reclaim" => Event::Reclaim { n: u("n")? },
+            "free" => Event::Free { addr: u("addr")? },
+            "access" => Event::Access { addr: u("addr")? },
+            other => return Err(format!("unknown event kind '{other}'")),
+        };
+        Ok(TraceEvent { t, task, locale, ev })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::replay::parse_flat_json;
+
+    fn samples() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent { t: 0, task: 3, locale: 1, ev: Event::OpBegin { span: 7 } },
+            TraceEvent { t: 10, task: 3, locale: 1, ev: Event::OpEnd { span: 7, ns: 10 } },
+            TraceEvent { t: 5, task: INFRA_TASK, locale: 0, ev: Event::AmSend { dst: 2, bytes: 64 } },
+            TraceEvent { t: 6, task: 0, locale: 2, ev: Event::AmDeliver { src: 0 } },
+            TraceEvent {
+                t: 7,
+                task: INFRA_TASK,
+                locale: 0,
+                ev: Event::HopEnq { from: 0, to: 1, wait_ns: 55 },
+            },
+            TraceEvent { t: 8, task: INFRA_TASK, locale: 0, ev: Event::HopDeq { from: 0, to: 1 } },
+            TraceEvent { t: 9, task: 1, locale: 1, ev: Event::Flush { dst: 3, n: 12, bytes: 192 } },
+            TraceEvent { t: 11, task: 2, locale: 0, ev: Event::Pin { epoch: 2 } },
+            TraceEvent { t: 12, task: 2, locale: 0, ev: Event::Unpin },
+            TraceEvent { t: 13, task: 2, locale: 0, ev: Event::Advance { epoch: 3 } },
+            TraceEvent { t: 14, task: 2, locale: 0, ev: Event::Defer { dst: 1, list: 0 } },
+            TraceEvent { t: 15, task: 2, locale: 0, ev: Event::Reclaim { n: 9 } },
+            TraceEvent { t: 16, task: 0, locale: 0, ev: Event::Free { addr: 0x40 } },
+            TraceEvent { t: 17, task: 1, locale: 0, ev: Event::Access { addr: 0x40 } },
+        ]
+    }
+
+    #[test]
+    fn json_round_trip_every_kind() {
+        for ev in samples() {
+            let line = ev.to_json();
+            let fields = parse_flat_json(&line).expect("parse");
+            let back = TraceEvent::from_fields(&fields).expect("decode");
+            assert_eq!(back, ev, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn binary_round_trip_every_kind() {
+        for ev in samples() {
+            let (x, y, z) = ev.ev.payload();
+            let back = Event::from_code(ev.ev.code(), x, y, z).expect("decode");
+            assert_eq!(back, ev.ev);
+        }
+    }
+
+    #[test]
+    fn codes_are_distinct() {
+        let evs = samples();
+        let mut codes: Vec<u8> = evs.iter().map(|e| e.ev.code()).collect();
+        codes.sort_unstable();
+        codes.dedup();
+        assert_eq!(codes.len(), evs.len());
+    }
+}

@@ -1,0 +1,238 @@
+//! The unified metrics registry: named counters/gauges snapshotted from
+//! the substrate's (historically scattered) counter sets.
+//!
+//! Before this module, run totals lived in three places with three
+//! shapes: [`NetTotals`](crate::fabric::NetTotals) (aggregate fabric
+//! counters), per-link [`LinkStats`](crate::fabric::LinkStats), and
+//! per-locale [`NicSnapshot`](crate::pgas::NicSnapshot)s summed by
+//! `Pgas::comm_totals`. The registry flattens all of them into ordered
+//! `(name, value)` gauges — `net.hops`, `nic3.puts`, ... — so exporters
+//! and the `trace` CLI have one uniform surface.
+//!
+//! Because the registry is derived from the *fine-grained* state (each
+//! directed link, each locale's NIC) while the legacy accessors maintain
+//! independent running totals, the two can be cross-checked:
+//! [`MetricsRegistry::verify_network`] and
+//! [`MetricsRegistry::verify_pgas`] assert the derived and legacy views
+//! agree, which is exactly the counter-drift guard the DES runners invoke
+//! under `debug_assertions`. The legacy accessors
+//! (`Network::totals`-style running sums) remain the cheap hot-path read;
+//! treat them as **deprecated for new call sites** in favour of the
+//! registry.
+
+use crate::fabric::{LinkStats, NetTotals};
+use crate::pgas::{NicSnapshot, Pgas};
+
+/// An ordered set of named `u64` gauges. Insertion order is preserved so
+/// renders and exports are deterministic.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsRegistry {
+    entries: Vec<(String, u64)>,
+}
+
+/// The 11 per-locale NIC counters, in snapshot-struct order.
+fn snapshot_fields(s: &NicSnapshot) -> [(&'static str, u64); 11] {
+    [
+        ("atomics_rdma", s.atomics_rdma),
+        ("atomics_local", s.atomics_local),
+        ("ams", s.ams),
+        ("puts", s.puts),
+        ("gets", s.gets),
+        ("bytes", s.bytes),
+        ("aggregated_ops", s.aggregated_ops),
+        ("flushes", s.flushes),
+        ("ams_rx", s.ams_rx),
+        ("virtual_ns", s.virtual_ns),
+        ("transit_ns", s.transit_ns),
+    ]
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Set gauge `name` to `v` (inserting it if new).
+    pub fn set(&mut self, name: &str, v: u64) {
+        match self.entries.iter_mut().find(|(k, _)| k == name) {
+            Some((_, slot)) => *slot = v,
+            None => self.entries.push((name.to_string(), v)),
+        }
+    }
+
+    /// Add `v` to counter `name` (inserting it at 0 if new).
+    pub fn add(&mut self, name: &str, v: u64) {
+        match self.entries.iter_mut().find(|(k, _)| k == name) {
+            Some((_, slot)) => *slot += v,
+            None => self.entries.push((name.to_string(), v)),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<u64> {
+        self.entries.iter().find(|(k, _)| k == name).map(|&(_, v)| v)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// `name = value` lines, one per gauge, in insertion order.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.entries {
+            s.push_str(&format!("{k} = {v}\n"));
+        }
+        s
+    }
+
+    /// Derive fabric gauges from per-directed-link counters. Note the
+    /// sum of per-link `msgs` is the total *hop* count (a message is
+    /// counted once per link it crosses), and per-link `bytes` likewise
+    /// accumulate once per hop.
+    pub fn from_link_stats(stats: &[LinkStats]) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        r.set("net.links_used", stats.len() as u64);
+        r.set("net.hops", stats.iter().map(|s| s.msgs).sum());
+        r.set("net.link_bytes", stats.iter().map(|s| s.bytes).sum());
+        r.set("net.max_link_busy_ns", stats.iter().map(|s| s.busy_ns).max().unwrap_or(0));
+        r.set("net.max_link_msgs", stats.iter().map(|s| s.msgs).max().unwrap_or(0));
+        r.set("net.max_link_wait_ns", stats.iter().map(|s| s.peak_wait_ns).max().unwrap_or(0));
+        r
+    }
+
+    /// Cross-check the link-derived gauges against the legacy
+    /// [`NetTotals`] running sums. Every field that is derivable from
+    /// per-link state must agree exactly; drift means a counter was
+    /// updated on one path but not the other. (`queued_ns` is *not*
+    /// derivable — links track only the peak single-message wait — and
+    /// `bytes`/`messages` count per message, not per hop.)
+    pub fn verify_network(&self, t: &NetTotals) -> Result<(), String> {
+        let want = [
+            ("net.links_used", t.links_used),
+            ("net.hops", t.hops),
+            ("net.max_link_busy_ns", t.max_link_busy_ns),
+            ("net.max_link_msgs", t.max_link_msgs),
+            ("net.max_link_wait_ns", t.max_link_wait_ns),
+        ];
+        for (name, legacy) in want {
+            let derived = self.get(name).ok_or_else(|| format!("missing gauge '{name}'"))?;
+            if derived != legacy {
+                return Err(format!(
+                    "counter drift: {name} derived from link stats = {derived}, legacy NetTotals = {legacy}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot every locale's NIC counters as `nic{loc}.{field}` gauges.
+    pub fn from_pgas(p: &Pgas) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        for loc in p.machine().locale_ids() {
+            let s = p.nic(loc).snapshot();
+            for (field, v) in snapshot_fields(&s) {
+                r.set(&format!("nic{}.{field}", loc.index()), v);
+            }
+        }
+        r
+    }
+
+    /// Cross-check the per-locale NIC gauges against the legacy summed
+    /// snapshot (`Pgas::comm_totals`): for each field, the sum over
+    /// locales must equal the total.
+    pub fn verify_pgas(&self, totals: &NicSnapshot) -> Result<(), String> {
+        for (field, legacy) in snapshot_fields(totals) {
+            let derived: u64 = self
+                .entries
+                .iter()
+                .filter(|(k, _)| k.starts_with("nic") && k.ends_with(&format!(".{field}")))
+                .map(|&(_, v)| v)
+                .sum();
+            if derived != legacy {
+                return Err(format!(
+                    "counter drift: sum of per-locale {field} = {derived}, comm_totals = {legacy}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Network, Ring};
+    use crate::pgas::{with_locale, LocaleId, Machine, NicModel, NicOp};
+    use std::sync::Arc;
+
+    #[test]
+    fn set_add_get_render() {
+        let mut r = MetricsRegistry::new();
+        r.set("a", 3);
+        r.add("a", 4);
+        r.add("b", 1);
+        assert_eq!(r.get("a"), Some(7));
+        assert_eq!(r.get("b"), Some(1));
+        assert_eq!(r.get("c"), None);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.render(), "a = 7\nb = 1\n");
+    }
+
+    #[test]
+    fn network_gauges_match_legacy_totals() {
+        let mut n = Network::new(Arc::new(Ring::new(8)));
+        for i in 0..20u64 {
+            n.send(i * 50, LocaleId((i % 8) as u16), LocaleId(((i + 3) % 8) as u16), 4_096);
+        }
+        let r = MetricsRegistry::from_link_stats(&n.link_stats());
+        r.verify_network(&n.totals()).expect("no drift on a healthy network");
+    }
+
+    #[test]
+    fn network_drift_is_detected() {
+        let mut n = Network::new(Arc::new(Ring::new(4)));
+        n.send(0, LocaleId(0), LocaleId(1), 64);
+        let mut r = MetricsRegistry::from_link_stats(&n.link_stats());
+        r.set("net.hops", 999);
+        let err = r.verify_network(&n.totals()).unwrap_err();
+        assert!(err.contains("net.hops"), "{err}");
+    }
+
+    #[test]
+    fn pgas_gauges_match_comm_totals() {
+        let p = Pgas::new(Machine::new(4, 2), NicModel::aries_no_network_atomics());
+        with_locale(LocaleId(0), || {
+            p.charge(NicOp::Atomic64, LocaleId(2));
+            p.charge(NicOp::Put(64), LocaleId(3));
+        });
+        with_locale(LocaleId(1), || {
+            p.charge(NicOp::Get(8), LocaleId(0));
+            p.charge_flush(16, 8, LocaleId(2));
+        });
+        let r = MetricsRegistry::from_pgas(&p);
+        r.verify_pgas(&p.comm_totals()).expect("no drift on a healthy substrate");
+        assert_eq!(r.get("nic1.gets"), Some(1));
+        assert_eq!(r.get("nic1.flushes"), Some(1));
+        assert_eq!(r.get("nic2.ams_rx"), Some(1), "demoted remote atomic arrives as AM");
+    }
+
+    #[test]
+    fn pgas_drift_is_detected() {
+        let p = Pgas::new(Machine::new(2, 1), NicModel::aries());
+        with_locale(LocaleId(0), || {
+            p.charge(NicOp::Get(8), LocaleId(1));
+        });
+        let mut r = MetricsRegistry::from_pgas(&p);
+        r.set("nic0.gets", 5);
+        let err = r.verify_pgas(&p.comm_totals()).unwrap_err();
+        assert!(err.contains("gets"), "{err}");
+    }
+}

@@ -1,0 +1,48 @@
+//! Observability: virtual-time tracing, span-based latency decomposition,
+//! a unified metrics registry, and trace record/replay.
+//!
+//! The paper's claims live or die on *where time goes* — NIC injection
+//! vs. route transit vs. link queueing vs. epoch stalls — so this module
+//! gives every layer of the repro one shared vocabulary for saying what
+//! happened and when:
+//!
+//! * [`event`] — the typed [`TraceEvent`] stream: op begin/end, AM
+//!   send/deliver, link hop enqueue/dequeue, aggregation flush, epoch
+//!   pin/unpin/advance, defer/reclaim, free/access. One event is one
+//!   JSONL line and one fixed-width binary record.
+//! * [`tracer`] — the zero-overhead-when-off [`Tracer`]: a bounded ring
+//!   buffer every instrumented layer records into *only when attached*
+//!   (an `Option`/`OnceCell` per layer — untraced runs execute the
+//!   pre-observability code path bit-for-bit).
+//! * [`span`] — per-op spans and the [`LatencyStats`] decomposition
+//!   `op = inject + transit + queue + epoch`, feeding per-layer
+//!   log-bucket histograms whose p50/p95/p99/p999 land in every
+//!   `BENCH_*.json` point.
+//! * [`metrics`] — the [`MetricsRegistry`]: named gauges derived from
+//!   fine-grained state (per-link, per-NIC), cross-checkable against the
+//!   legacy running totals to catch counter drift.
+//! * [`replay`] — self-describing trace files. Line 1 is the run's full
+//!   config (the schedule section); because every DES here is a pure
+//!   function of config + seed, `--trace-in` reproduces a recorded run —
+//!   including a failing `check` — deterministically.
+//!
+//! Wired through `Pgas::charge*`/`on`, `fabric::Network`,
+//! `pgas::aggregation`, `epoch::manager`, and both DES testbeds; driven
+//! from the CLI via `--trace-out`/`--trace-in` and the `trace`
+//! subcommand (`summary`, `diff`, `top-ops`). See README "Observability".
+
+pub mod event;
+pub mod metrics;
+pub mod replay;
+pub mod span;
+pub mod tracer;
+
+pub use event::{Event, TraceEvent, INFRA_TASK};
+pub use metrics::MetricsRegistry;
+pub use replay::{
+    check_from_header, epoch_from_header, header_for_check, header_for_epoch,
+    header_for_mutation, mutation_from_header, parse_trace_bytes, parse_trace_file, ParsedTrace,
+    TraceHeader, Val, TRACE_VERSION,
+};
+pub use span::{span_id, span_iter, span_task, LatencyStats};
+pub use tracer::Tracer;

@@ -1,0 +1,598 @@
+//! Trace headers, the flat-JSON parser, and record/replay.
+//!
+//! A trace file is self-describing: line 1 is a flat JSON header object
+//! holding the full run configuration (the *schedule section* — because
+//! every DES in this crate is a pure function of its config + seed, the
+//! header alone deterministically reproduces the run), and every further
+//! line is one [`TraceEvent`]. The binary alternative prefixes magic
+//! `PGTR`, keeps the same JSON header, and stores events as fixed-width
+//! little-endian records.
+//!
+//! No serde exists in this dependency-free crate, so the parser here is a
+//! deliberately minimal **flat**-JSON reader: one object per line, scalar
+//! values only (u64/i64/f64/string/bool). That is exactly the shape the
+//! exporters emit; nested JSON is out of scope.
+
+use crate::check::{CheckCfg, Collection, Mutant, SimCfg, SimKind};
+use crate::fabric::TopologyKind;
+use crate::obs::event::TraceEvent;
+use crate::pgas::NicModel;
+use crate::sim::{Adaptivity, EpochConfig, EpochWorkload, StalledTask};
+
+/// Magic prefix of the binary trace encoding.
+pub const BINARY_MAGIC: &[u8; 4] = b"PGTR";
+/// Trace format version (bumped on any schema change).
+pub const TRACE_VERSION: u64 = 1;
+
+/// A scalar JSON value as parsed from a trace line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Val {
+    U(u64),
+    I(i64),
+    F(f64),
+    S(String),
+    B(bool),
+}
+
+impl Val {
+    /// The value's JSON spelling (also used by `pgas-nb trace` to print
+    /// header fields).
+    pub fn render(&self) -> String {
+        match self {
+            Val::U(v) => v.to_string(),
+            Val::I(v) => v.to_string(),
+            Val::F(v) => format!("{v}"),
+            Val::S(s) => format!("\"{}\"", escape(s)),
+            Val::B(b) => b.to_string(),
+        }
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// The replayable schedule section of a trace: run kind (`sim` / `check` /
+/// `mutate`) plus every config field, flat. `None` options are encoded as
+/// -1 so the header stays scalar-only.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceHeader {
+    pub kind: String,
+    pub fields: Vec<(String, Val)>,
+}
+
+impl TraceHeader {
+    pub fn new(kind: &str) -> TraceHeader {
+        TraceHeader { kind: kind.to_string(), fields: Vec::new() }
+    }
+
+    pub fn u64(mut self, k: &str, v: u64) -> Self {
+        self.fields.push((k.to_string(), Val::U(v)));
+        self
+    }
+
+    /// Encode an optional value as the value or -1.
+    pub fn opt(mut self, k: &str, v: Option<u64>) -> Self {
+        let enc = match v {
+            Some(v) => Val::U(v),
+            None => Val::I(-1),
+        };
+        self.fields.push((k.to_string(), enc));
+        self
+    }
+
+    pub fn f64(mut self, k: &str, v: f64) -> Self {
+        self.fields.push((k.to_string(), Val::F(v)));
+        self
+    }
+
+    pub fn str(mut self, k: &str, v: &str) -> Self {
+        self.fields.push((k.to_string(), Val::S(v.to_string())));
+        self
+    }
+
+    pub fn bool(mut self, k: &str, v: bool) -> Self {
+        self.fields.push((k.to_string(), Val::B(v)));
+        self
+    }
+
+    /// The header line: `{"trace": "pgas-nb", "version": 1, "kind": ..., <fields>}`.
+    pub fn to_json(&self) -> String {
+        let mut s = format!(
+            "{{\"trace\": \"pgas-nb\", \"version\": {TRACE_VERSION}, \"kind\": \"{}\"",
+            escape(&self.kind)
+        );
+        for (k, v) in &self.fields {
+            s.push_str(&format!(", \"{}\": {}", escape(k), v.render()));
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Parse one flat JSON object (`{"k": v, ...}`, scalar values only).
+pub fn parse_flat_json(line: &str) -> Result<Vec<(String, Val)>, String> {
+    let line = line.trim();
+    let inner = line
+        .strip_prefix('{')
+        .and_then(|s| s.strip_suffix('}'))
+        .ok_or_else(|| format!("not a JSON object: {line:.60}"))?;
+    let mut out = Vec::new();
+    let chars: Vec<char> = inner.chars().collect();
+    let mut i = 0usize;
+    let n = chars.len();
+    let skip_ws = |i: &mut usize| {
+        while *i < n && chars[*i].is_whitespace() {
+            *i += 1;
+        }
+    };
+    let parse_string = |i: &mut usize| -> Result<String, String> {
+        if chars[*i] != '"' {
+            return Err(format!("expected '\"' at offset {i:?}"));
+        }
+        *i += 1;
+        let mut s = String::new();
+        while *i < n {
+            match chars[*i] {
+                '\\' => {
+                    *i += 1;
+                    if *i >= n {
+                        return Err("dangling escape".into());
+                    }
+                    match chars[*i] {
+                        'n' => s.push('\n'),
+                        't' => s.push('\t'),
+                        c => s.push(c),
+                    }
+                }
+                '"' => {
+                    *i += 1;
+                    return Ok(s);
+                }
+                c => s.push(c),
+            }
+            *i += 1;
+        }
+        Err("unterminated string".into())
+    };
+    loop {
+        skip_ws(&mut i);
+        if i >= n {
+            break;
+        }
+        let key = parse_string(&mut i)?;
+        skip_ws(&mut i);
+        if i >= n || chars[i] != ':' {
+            return Err(format!("expected ':' after key '{key}'"));
+        }
+        i += 1;
+        skip_ws(&mut i);
+        if i >= n {
+            return Err(format!("missing value for key '{key}'"));
+        }
+        let val = if chars[i] == '"' {
+            Val::S(parse_string(&mut i)?)
+        } else {
+            let start = i;
+            while i < n && chars[i] != ',' {
+                i += 1;
+            }
+            let tok: String = chars[start..i].iter().collect::<String>().trim().to_string();
+            match tok.as_str() {
+                "true" => Val::B(true),
+                "false" => Val::B(false),
+                _ if tok.contains('.') || tok.contains('e') || tok.contains('E') => {
+                    Val::F(tok.parse::<f64>().map_err(|e| format!("bad number '{tok}': {e}"))?)
+                }
+                _ if tok.starts_with('-') => {
+                    Val::I(tok.parse::<i64>().map_err(|e| format!("bad number '{tok}': {e}"))?)
+                }
+                _ => Val::U(tok.parse::<u64>().map_err(|e| format!("bad number '{tok}': {e}"))?),
+            }
+        };
+        out.push((key, val));
+        skip_ws(&mut i);
+        if i < n {
+            if chars[i] != ',' {
+                return Err(format!("expected ',' at offset {i}"));
+            }
+            i += 1;
+        }
+    }
+    Ok(out)
+}
+
+pub fn get_u64(fields: &[(String, Val)], k: &str) -> Result<u64, String> {
+    match fields.iter().find(|(key, _)| key == k) {
+        Some((_, Val::U(v))) => Ok(*v),
+        Some((_, Val::I(v))) if *v >= 0 => Ok(*v as u64),
+        Some((_, v)) => Err(format!("field '{k}' is not a u64: {v:?}")),
+        None => Err(format!("missing field '{k}'")),
+    }
+}
+
+pub fn get_i64(fields: &[(String, Val)], k: &str) -> Result<i64, String> {
+    match fields.iter().find(|(key, _)| key == k) {
+        Some((_, Val::I(v))) => Ok(*v),
+        Some((_, Val::U(v))) => Ok(*v as i64),
+        Some((_, v)) => Err(format!("field '{k}' is not an i64: {v:?}")),
+        None => Err(format!("missing field '{k}'")),
+    }
+}
+
+/// Decode an option encoded via [`TraceHeader::opt`].
+pub fn get_opt(fields: &[(String, Val)], k: &str) -> Result<Option<u64>, String> {
+    match get_i64(fields, k)? {
+        v if v < 0 => Ok(None),
+        v => Ok(Some(v as u64)),
+    }
+}
+
+pub fn get_f64(fields: &[(String, Val)], k: &str) -> Result<f64, String> {
+    match fields.iter().find(|(key, _)| key == k) {
+        Some((_, Val::F(v))) => Ok(*v),
+        Some((_, Val::U(v))) => Ok(*v as f64),
+        Some((_, Val::I(v))) => Ok(*v as f64),
+        Some((_, v)) => Err(format!("field '{k}' is not an f64: {v:?}")),
+        None => Err(format!("missing field '{k}'")),
+    }
+}
+
+pub fn get_str<'a>(fields: &'a [(String, Val)], k: &str) -> Result<&'a str, String> {
+    match fields.iter().find(|(key, _)| key == k) {
+        Some((_, Val::S(s))) => Ok(s),
+        Some((_, v)) => Err(format!("field '{k}' is not a string: {v:?}")),
+        None => Err(format!("missing field '{k}'")),
+    }
+}
+
+pub fn get_bool(fields: &[(String, Val)], k: &str) -> Result<bool, String> {
+    match fields.iter().find(|(key, _)| key == k) {
+        Some((_, Val::B(b))) => Ok(*b),
+        Some((_, v)) => Err(format!("field '{k}' is not a bool: {v:?}")),
+        None => Err(format!("missing field '{k}'")),
+    }
+}
+
+fn model_name(m: &NicModel) -> &'static str {
+    if m.network_atomics {
+        "aries"
+    } else {
+        "aries_no_network_atomics"
+    }
+}
+
+fn model_from_name(s: &str) -> Result<NicModel, String> {
+    match s {
+        "aries" => Ok(NicModel::aries()),
+        "aries_no_network_atomics" => Ok(NicModel::aries_no_network_atomics()),
+        other => Err(format!("unknown NIC model '{other}'")),
+    }
+}
+
+fn workload_name(w: &EpochWorkload) -> String {
+    match w {
+        EpochWorkload::DeleteReclaimEvery(k) => format!("every:{k}"),
+        EpochWorkload::DeleteReclaimAtEnd => "atend".to_string(),
+        EpochWorkload::ReadOnly => "readonly".to_string(),
+    }
+}
+
+fn workload_from_name(s: &str) -> Result<EpochWorkload, String> {
+    if let Some(k) = s.strip_prefix("every:") {
+        return Ok(EpochWorkload::DeleteReclaimEvery(
+            k.parse().map_err(|e| format!("bad workload '{s}': {e}"))?,
+        ));
+    }
+    match s {
+        "atend" => Ok(EpochWorkload::DeleteReclaimAtEnd),
+        "readonly" => Ok(EpochWorkload::ReadOnly),
+        other => Err(format!("unknown workload '{other}'")),
+    }
+}
+
+/// Header for an epoch-DES run (`sim` kind; also used by the fig9/fig10
+/// bench trace points).
+pub fn header_for_epoch(cfg: &EpochConfig) -> TraceHeader {
+    TraceHeader::new("sim")
+        .str("workload", &workload_name(&cfg.workload))
+        .str("model", model_name(&cfg.model))
+        .u64("locales", cfg.locales as u64)
+        .u64("tasks_per_locale", cfg.tasks_per_locale as u64)
+        .u64("objs_per_task", cfg.objs_per_task as u64)
+        .f64("remote_ratio", cfg.remote_ratio)
+        .bool("fcfs_local_election", cfg.fcfs_local_election)
+        .opt("slow_locale", cfg.slow_locale.map(|l| l as u64))
+        .u64("slow_factor", cfg.slow_factor)
+        .opt("stalled_task", cfg.stalled_task.as_ref().map(|s| s.task as u64))
+        .opt("stalled_hold_iters", cfg.stalled_task.as_ref().map(|s| s.hold_iters as u64))
+        .str("topology", cfg.topology.label())
+        .u64("agg_capacity", cfg.agg_capacity as u64)
+        .opt("ugal_threshold_ns", cfg.adaptive.ugal_threshold_ns)
+        .opt("flush_after_ns", cfg.adaptive.flush_after_ns)
+        .u64("backpressure_ns", cfg.adaptive.backpressure_ns)
+        .opt("hier_group", cfg.adaptive.hier_group.map(|g| g as u64))
+        .u64("seed", cfg.seed)
+}
+
+/// Rebuild the [`EpochConfig`] recorded by [`header_for_epoch`].
+pub fn epoch_from_header(fields: &[(String, Val)]) -> Result<EpochConfig, String> {
+    let stalled_task = match get_opt(fields, "stalled_task")? {
+        Some(task) => Some(StalledTask {
+            task: task as usize,
+            hold_iters: get_opt(fields, "stalled_hold_iters")?
+                .ok_or("stalled_task without stalled_hold_iters")? as usize,
+        }),
+        None => None,
+    };
+    let topo = get_str(fields, "topology")?;
+    Ok(EpochConfig {
+        workload: workload_from_name(get_str(fields, "workload")?)?,
+        model: model_from_name(get_str(fields, "model")?)?,
+        locales: get_u64(fields, "locales")? as usize,
+        tasks_per_locale: get_u64(fields, "tasks_per_locale")? as usize,
+        objs_per_task: get_u64(fields, "objs_per_task")? as usize,
+        remote_ratio: get_f64(fields, "remote_ratio")?,
+        fcfs_local_election: get_bool(fields, "fcfs_local_election")?,
+        slow_locale: get_opt(fields, "slow_locale")?.map(|l| l as usize),
+        slow_factor: get_u64(fields, "slow_factor")?,
+        stalled_task,
+        topology: TopologyKind::parse(topo).ok_or_else(|| format!("unknown topology '{topo}'"))?,
+        agg_capacity: get_u64(fields, "agg_capacity")? as usize,
+        adaptive: Adaptivity {
+            ugal_threshold_ns: get_opt(fields, "ugal_threshold_ns")?,
+            flush_after_ns: get_opt(fields, "flush_after_ns")?,
+            backpressure_ns: get_u64(fields, "backpressure_ns")?,
+            hier_group: get_opt(fields, "hier_group")?.map(|g| g as usize),
+        },
+        seed: get_u64(fields, "seed")?,
+    })
+}
+
+/// Header for a `check` run over one collection.
+pub fn header_for_check(collection: Collection, cfg: &CheckCfg) -> TraceHeader {
+    TraceHeader::new("check")
+        .str("collection", collection.label())
+        .u64("seed", cfg.seed)
+        .u64("locales", cfg.locales as u64)
+        .u64("tasks_per_locale", cfg.tasks_per_locale as u64)
+        .u64("ops_per_task", cfg.ops_per_task as u64)
+        .u64("key_space", cfg.key_space as u64)
+        .str("topology", cfg.topology.label())
+        .u64("agg_capacity", cfg.agg_capacity as u64)
+        .u64("reclaim_every", cfg.reclaim_every as u64)
+        .bool("stalled_reader", cfg.stalled_reader)
+        .opt("hier_group", cfg.hier_group.map(|g| g as u64))
+}
+
+/// Rebuild the collection + [`CheckCfg`] recorded by [`header_for_check`].
+pub fn check_from_header(fields: &[(String, Val)]) -> Result<(Collection, CheckCfg), String> {
+    let label = get_str(fields, "collection")?;
+    let collection = Collection::parse(label)
+        .ok_or_else(|| format!("unknown collection '{label}'"))?;
+    let topo = get_str(fields, "topology")?;
+    let cfg = CheckCfg {
+        seed: get_u64(fields, "seed")?,
+        locales: get_u64(fields, "locales")? as usize,
+        tasks_per_locale: get_u64(fields, "tasks_per_locale")? as usize,
+        ops_per_task: get_u64(fields, "ops_per_task")? as usize,
+        key_space: get_u64(fields, "key_space")? as usize,
+        topology: TopologyKind::parse(topo).ok_or_else(|| format!("unknown topology '{topo}'"))?,
+        agg_capacity: get_u64(fields, "agg_capacity")? as usize,
+        reclaim_every: get_u64(fields, "reclaim_every")? as usize,
+        stalled_reader: get_bool(fields, "stalled_reader")?,
+        hier_group: get_opt(fields, "hier_group")?.map(|g| g as usize),
+    };
+    Ok((collection, cfg))
+}
+
+fn mutant_from_label(s: &str) -> Result<Mutant, String> {
+    for m in [Mutant::None, Mutant::StackSplitCas, Mutant::QueueSplitCas, Mutant::SkipDeferGuard] {
+        if m.label() == s {
+            return Ok(m);
+        }
+    }
+    Err(format!("unknown mutant '{s}'"))
+}
+
+/// Header for a mutation-sim run.
+pub fn header_for_mutation(cfg: &SimCfg) -> TraceHeader {
+    TraceHeader::new("mutate")
+        .str("sim", match cfg.kind {
+            SimKind::Stack => "stack",
+            SimKind::Queue => "queue",
+        })
+        .str("mutant", cfg.mutant.label())
+        .u64("tasks", cfg.tasks as u64)
+        .u64("ops_per_task", cfg.ops_per_task as u64)
+        .u64("prepopulate", cfg.prepopulate as u64)
+        .u64("seed", cfg.seed)
+}
+
+/// Rebuild the [`SimCfg`] recorded by [`header_for_mutation`].
+pub fn mutation_from_header(fields: &[(String, Val)]) -> Result<SimCfg, String> {
+    let kind = match get_str(fields, "sim")? {
+        "stack" => SimKind::Stack,
+        "queue" => SimKind::Queue,
+        other => return Err(format!("unknown sim kind '{other}'")),
+    };
+    Ok(SimCfg {
+        kind,
+        mutant: mutant_from_label(get_str(fields, "mutant")?)?,
+        tasks: get_u64(fields, "tasks")? as usize,
+        ops_per_task: get_u64(fields, "ops_per_task")? as usize,
+        prepopulate: get_u64(fields, "prepopulate")? as usize,
+        seed: get_u64(fields, "seed")?,
+    })
+}
+
+/// A fully parsed trace file.
+#[derive(Clone, Debug)]
+pub struct ParsedTrace {
+    pub header: Vec<(String, Val)>,
+    pub events: Vec<TraceEvent>,
+}
+
+impl ParsedTrace {
+    pub fn kind(&self) -> Result<&str, String> {
+        get_str(&self.header, "kind")
+    }
+}
+
+/// Parse a trace from raw bytes — binary (`PGTR` magic) or JSONL.
+pub fn parse_trace_bytes(bytes: &[u8]) -> Result<ParsedTrace, String> {
+    if bytes.starts_with(BINARY_MAGIC) {
+        return parse_binary(bytes);
+    }
+    let text = std::str::from_utf8(bytes).map_err(|e| format!("trace is not UTF-8: {e}"))?;
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header_line = lines.next().ok_or("empty trace file")?;
+    let header = parse_flat_json(header_line)?;
+    if get_str(&header, "trace")? != "pgas-nb" {
+        return Err("not a pgas-nb trace (bad header magic)".into());
+    }
+    if get_u64(&header, "version")? != TRACE_VERSION {
+        return Err(format!("unsupported trace version (want {TRACE_VERSION})"));
+    }
+    let mut events = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let fields = parse_flat_json(line).map_err(|e| format!("event line {}: {e}", i + 2))?;
+        events.push(TraceEvent::from_fields(&fields).map_err(|e| format!("event line {}: {e}", i + 2))?);
+    }
+    Ok(ParsedTrace { header, events })
+}
+
+fn parse_binary(bytes: &[u8]) -> Result<ParsedTrace, String> {
+    let rest = &bytes[BINARY_MAGIC.len()..];
+    if rest.len() < 4 {
+        return Err("truncated binary trace (no header length)".into());
+    }
+    let hlen = u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize;
+    let rest = &rest[4..];
+    if rest.len() < hlen {
+        return Err("truncated binary trace (header)".into());
+    }
+    let header_line =
+        std::str::from_utf8(&rest[..hlen]).map_err(|e| format!("binary header not UTF-8: {e}"))?;
+    let header = parse_flat_json(header_line)?;
+    let mut events = Vec::new();
+    let mut rec = &rest[hlen..];
+    const REC: usize = 1 + 2 + 4 + 8 * 4;
+    while !rec.is_empty() {
+        if rec.len() < REC {
+            return Err("truncated binary trace (record)".into());
+        }
+        let code = rec[0];
+        let locale = u16::from_le_bytes([rec[1], rec[2]]);
+        let task = u32::from_le_bytes([rec[3], rec[4], rec[5], rec[6]]);
+        let mut words = [0u64; 4];
+        for (w, chunk) in words.iter_mut().zip(rec[7..REC].chunks_exact(8)) {
+            *w = u64::from_le_bytes(chunk.try_into().unwrap());
+        }
+        let ev = crate::obs::event::Event::from_code(code, words[1], words[2], words[3])
+            .ok_or_else(|| format!("unknown binary event code {code}"))?;
+        events.push(TraceEvent { t: words[0], task, locale, ev });
+        rec = &rec[REC..];
+    }
+    Ok(ParsedTrace { header, events })
+}
+
+/// Parse a trace file from disk (binary or JSONL, auto-detected).
+pub fn parse_trace_file(path: &str) -> Result<ParsedTrace, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("read {path}: {e}"))?;
+    parse_trace_bytes(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::EpochConfig;
+
+    #[test]
+    fn flat_json_parses_scalars() {
+        let f = parse_flat_json(
+            "{\"a\": 3, \"b\": -4, \"c\": 0.5, \"d\": \"x y\", \"e\": true, \"f\": false}",
+        )
+        .unwrap();
+        assert_eq!(get_u64(&f, "a").unwrap(), 3);
+        assert_eq!(get_i64(&f, "b").unwrap(), -4);
+        assert_eq!(get_f64(&f, "c").unwrap(), 0.5);
+        assert_eq!(get_str(&f, "d").unwrap(), "x y");
+        assert!(get_bool(&f, "e").unwrap());
+        assert!(!get_bool(&f, "f").unwrap());
+        assert!(get_u64(&f, "missing").is_err());
+    }
+
+    #[test]
+    fn flat_json_handles_escapes() {
+        let f = parse_flat_json("{\"k\": \"a\\\"b\\\\c\"}").unwrap();
+        assert_eq!(get_str(&f, "k").unwrap(), "a\"b\\c");
+    }
+
+    #[test]
+    fn epoch_header_round_trips() {
+        let cfg = EpochConfig {
+            workload: EpochWorkload::DeleteReclaimEvery(64),
+            model: NicModel::aries_no_network_atomics(),
+            locales: 8,
+            tasks_per_locale: 4,
+            objs_per_task: 2048,
+            remote_ratio: 0.5,
+            fcfs_local_election: true,
+            slow_locale: Some(2),
+            slow_factor: 8,
+            stalled_task: Some(StalledTask { task: 3, hold_iters: 17 }),
+            topology: TopologyKind::Dragonfly,
+            agg_capacity: 256,
+            adaptive: Adaptivity {
+                ugal_threshold_ns: Some(1_000),
+                flush_after_ns: Some(100_000),
+                backpressure_ns: 25_000,
+                hier_group: Some(4),
+            },
+            seed: 7,
+        };
+        let header = header_for_epoch(&cfg);
+        let fields = parse_flat_json(&header.to_json()).unwrap();
+        let back = epoch_from_header(&fields).unwrap();
+        // Spot-check every field class (EpochConfig has no PartialEq).
+        assert_eq!(workload_name(&back.workload), workload_name(&cfg.workload));
+        assert_eq!(back.locales, cfg.locales);
+        assert_eq!(back.tasks_per_locale, cfg.tasks_per_locale);
+        assert_eq!(back.objs_per_task, cfg.objs_per_task);
+        assert_eq!(back.remote_ratio, cfg.remote_ratio);
+        assert_eq!(back.fcfs_local_election, cfg.fcfs_local_election);
+        assert_eq!(back.slow_locale, cfg.slow_locale);
+        assert_eq!(back.slow_factor, cfg.slow_factor);
+        assert_eq!(back.stalled_task.map(|s| (s.task, s.hold_iters)), Some((3, 17)));
+        assert_eq!(back.topology, cfg.topology);
+        assert_eq!(back.agg_capacity, cfg.agg_capacity);
+        assert_eq!(back.adaptive, cfg.adaptive);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.model.network_atomics, cfg.model.network_atomics);
+    }
+
+    #[test]
+    fn check_header_round_trips() {
+        let cfg = CheckCfg::adaptive(42);
+        let header = header_for_check(Collection::Stack, &cfg);
+        let fields = parse_flat_json(&header.to_json()).unwrap();
+        let (coll, back) = check_from_header(&fields).unwrap();
+        assert_eq!(coll, Collection::Stack);
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn mutation_header_round_trips() {
+        let cfg = SimCfg::new(SimKind::Queue, Mutant::SkipDeferGuard, 9);
+        let header = header_for_mutation(&cfg);
+        let fields = parse_flat_json(&header.to_json()).unwrap();
+        let back = mutation_from_header(&fields).unwrap();
+        assert_eq!(back.kind, cfg.kind);
+        assert_eq!(back.mutant, cfg.mutant);
+        assert_eq!(back.tasks, cfg.tasks);
+        assert_eq!(back.ops_per_task, cfg.ops_per_task);
+        assert_eq!(back.prepopulate, cfg.prepopulate);
+        assert_eq!(back.seed, cfg.seed);
+    }
+}

@@ -1,0 +1,182 @@
+//! Span-based latency decomposition.
+//!
+//! A *span* is one workload operation: it opens at the op's first virtual
+//! instant ([`crate::obs::event::Event::OpBegin`]) and closes when the op
+//! completes (`OpEnd`). Everything the substrate did on the op's behalf
+//! in between — NIC injection stalls, fabric transit, link queueing,
+//! epoch/reclamation work — is attributed to one of four components, so
+//! end-to-end latency decomposes as
+//!
+//! ```text
+//! op = inject + transit + queue + epoch
+//! ```
+//!
+//! * **inject** — sender-visible NIC charges (the `NicModel` costs the op
+//!   itself paid to issue atomics/PUTs/GETs/AMs).
+//! * **transit** — pure (uncongested) route propagation + serialization
+//!   over the fabric for messages the op caused.
+//! * **queue** — time those messages spent queued behind other traffic on
+//!   busy links (the congestion component).
+//! * **epoch** — time spent in the epoch/reclamation protocol (pin
+//!   election, scans, drains) rather than the operation proper.
+//!
+//! Each component feeds a per-layer [`LatencyHistogram`], and the
+//! aggregate [`LatencyStats`] emits `p50/p95/p99/p999` per layer into the
+//! fig-bench JSON — the tail-latency observables ROADMAP item 3 asks for.
+//!
+//! Span ids pack `(task, iteration)` into one `u64` ([`span_id`]) so the
+//! DES needs no shared counter and ids are deterministic across runs.
+
+use crate::util::stats::LatencyHistogram;
+
+/// Build a span id from a task id and that task's operation iteration.
+#[inline]
+pub fn span_id(task: u32, iter: u64) -> u64 {
+    ((task as u64) << 32) | (iter & 0xFFFF_FFFF)
+}
+
+/// The task component of a span id.
+#[inline]
+pub fn span_task(id: u64) -> u32 {
+    (id >> 32) as u32
+}
+
+/// The iteration component of a span id.
+#[inline]
+pub fn span_iter(id: u64) -> u32 {
+    id as u32
+}
+
+/// Per-layer latency histograms over all closed spans of a run.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    /// End-to-end per-op latency.
+    pub op: LatencyHistogram,
+    /// NIC injection component.
+    pub inject: LatencyHistogram,
+    /// Pure fabric transit component.
+    pub transit: LatencyHistogram,
+    /// Link queueing (congestion) component.
+    pub queue: LatencyHistogram,
+    /// Epoch/reclamation protocol component.
+    pub epoch: LatencyHistogram,
+}
+
+impl LatencyStats {
+    pub fn new() -> LatencyStats {
+        LatencyStats::default()
+    }
+
+    /// Record one closed span, already decomposed into its components.
+    #[inline]
+    pub fn record_op(&mut self, op_ns: u64, inject_ns: u64, transit_ns: u64, queue_ns: u64, epoch_ns: u64) {
+        self.op.record(op_ns);
+        self.inject.record(inject_ns);
+        self.transit.record(transit_ns);
+        self.queue.record(queue_ns);
+        self.epoch.record(epoch_ns);
+    }
+
+    /// Merge another run's (or another locale's) stats into this one.
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.op.merge(&other.op);
+        self.inject.merge(&other.inject);
+        self.transit.merge(&other.transit);
+        self.queue.merge(&other.queue);
+        self.epoch.merge(&other.epoch);
+    }
+
+    /// Closed spans recorded.
+    pub fn count(&self) -> u64 {
+        self.op.count()
+    }
+
+    /// The per-layer percentile block embedded in every `BENCH_*.json`
+    /// point: `{"op": [p50, p95, p99, p999], "inject": [...], ...}`. All
+    /// values are integer nanoseconds (log-bucket upper bounds), so the
+    /// encoding is byte-stable across platforms.
+    pub fn json(&self) -> String {
+        fn layer(h: &LatencyHistogram) -> String {
+            format!(
+                "[{}, {}, {}, {}]",
+                h.percentile(50.0),
+                h.percentile(95.0),
+                h.percentile(99.0),
+                h.percentile(99.9)
+            )
+        }
+        format!(
+            "{{\"op\": {}, \"inject\": {}, \"transit\": {}, \"queue\": {}, \"epoch\": {}}}",
+            layer(&self.op),
+            layer(&self.inject),
+            layer(&self.transit),
+            layer(&self.queue),
+            layer(&self.epoch)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_id_round_trips() {
+        let id = span_id(7, 123_456);
+        assert_eq!(span_task(id), 7);
+        assert_eq!(span_iter(id), 123_456);
+        let top = span_id(u32::MAX - 1, u64::from(u32::MAX));
+        assert_eq!(span_task(top), u32::MAX - 1);
+        assert_eq!(span_iter(top), u32::MAX);
+    }
+
+    #[test]
+    fn span_ids_are_distinct_across_tasks_and_iters() {
+        let mut seen = std::collections::HashSet::new();
+        for task in 0..8u32 {
+            for iter in 0..64u64 {
+                assert!(seen.insert(span_id(task, iter)));
+            }
+        }
+    }
+
+    #[test]
+    fn record_and_count() {
+        let mut s = LatencyStats::new();
+        s.record_op(100, 40, 30, 20, 10);
+        s.record_op(200, 80, 60, 40, 20);
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.op.count(), 2);
+        assert_eq!(s.epoch.count(), 2);
+    }
+
+    #[test]
+    fn merge_combines_layers() {
+        let mut a = LatencyStats::new();
+        let mut b = LatencyStats::new();
+        a.record_op(100, 100, 0, 0, 0);
+        b.record_op(1_000_000, 0, 1_000_000, 0, 0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.op.percentile(99.9) >= 1_000_000);
+        assert!(a.transit.max() == 1_000_000);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let mut s = LatencyStats::new();
+        s.record_op(100, 40, 30, 20, 10);
+        let j = s.json();
+        assert!(j.starts_with("{\"op\": ["), "{j}");
+        for key in ["\"op\"", "\"inject\"", "\"transit\"", "\"queue\"", "\"epoch\""] {
+            assert!(j.contains(key), "{j} missing {key}");
+        }
+        // Empty stats must still render a complete (all-zero) block.
+        let empty = LatencyStats::new().json();
+        assert_eq!(
+            empty,
+            "{\"op\": [0, 0, 0, 0], \"inject\": [0, 0, 0, 0], \"transit\": [0, 0, 0, 0], \
+             \"queue\": [0, 0, 0, 0], \"epoch\": [0, 0, 0, 0]}"
+        );
+    }
+}

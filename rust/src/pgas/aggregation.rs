@@ -346,6 +346,21 @@ impl<'a, T> Aggregator<'a, T> {
         let pgas = &self.pgas;
         let deliver = &mut self.deliver;
         pgas.charge_flush(n, self.entry_bytes, dst);
+        // The flush event is emitted here (the semantic layer), not in
+        // `charge_flush`: the epoch manager's migration path also calls
+        // `charge_flush` and emits its own event — one flush, one event.
+        if let Some(tr) = pgas.tracer() {
+            tr.record_at(
+                pgas.local_virtual_ns(),
+                crate::obs::INFRA_TASK,
+                crate::pgas::here().index() as u16,
+                crate::obs::Event::Flush {
+                    dst: dst.index() as u16,
+                    n,
+                    bytes: n * self.entry_bytes as u64,
+                },
+            );
+        }
         pgas.on(dst, || deliver(dst, batch));
         self.flushed_items += n;
         self.flushed_batches += 1;

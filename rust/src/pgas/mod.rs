@@ -27,6 +27,7 @@ pub use wide_ptr::WidePtr;
 
 use crate::check::ReclaimAudit;
 use crate::fabric::{LinkStats, NetTotals, Network, Topology, TopologyKind};
+use crate::obs::{Event, Tracer, INFRA_TASK};
 use crossbeam_utils::CachePadded;
 use once_cell::sync::OnceCell;
 use std::sync::{Arc, Mutex};
@@ -50,6 +51,10 @@ pub struct Pgas {
     /// lifecycle machine). Set-once; a lock-free `get` per alloc/free
     /// when attached, a single atomic load when not.
     audit: OnceCell<Arc<dyn ReclaimAudit>>,
+    /// Optional trace recorder ([`crate::obs`]). Set-once, same cost
+    /// profile as `audit`: one atomic load per potential event when
+    /// detached — no event is ever constructed untraced.
+    tracer: OnceCell<Arc<Tracer>>,
 }
 
 impl Pgas {
@@ -78,6 +83,7 @@ impl Pgas {
             net: Mutex::new(Network::new(Arc::clone(&topo))),
             topo,
             audit: OnceCell::new(),
+            tracer: OnceCell::new(),
         })
     }
 
@@ -93,6 +99,21 @@ impl Pgas {
     #[inline]
     pub fn audit(&self) -> Option<&Arc<dyn ReclaimAudit>> {
         self.audit.get()
+    }
+
+    /// Attach a trace recorder (once per job; [`crate::obs`]). Remote
+    /// `on`-statements, aggregation flushes, and the epoch manager's
+    /// pin/unpin/defer/advance/reclaim transitions start emitting
+    /// events, stamped on the issuing locale's NIC clock. Returns
+    /// `false` if a tracer was already attached.
+    pub fn set_tracer(&self, t: Arc<Tracer>) -> bool {
+        self.tracer.set(t).is_ok()
+    }
+
+    /// The attached tracer, if any.
+    #[inline]
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.get()
     }
 
     /// Single-locale substrate with zero modeled latency — the default for
@@ -117,6 +138,12 @@ impl Pgas {
     }
 
     /// Aggregate fabric counters (messages, hops, transit, hottest link).
+    ///
+    /// **Deprecated for new call sites**: prefer
+    /// [`crate::obs::MetricsRegistry::from_link_stats`] over
+    /// [`Pgas::link_stats`] — gauges derived from per-link state cannot
+    /// drift from it. Kept as the cheap legacy read; the two views are
+    /// cross-checked by [`crate::obs::MetricsRegistry::verify_network`].
     pub fn network_totals(&self) -> NetTotals {
         self.net.lock().unwrap().totals()
     }
@@ -281,10 +308,28 @@ impl Pgas {
         // `charge` also counts the arrival in the target's `ams_rx` (a
         // local `on` runs inline — no AM reaches a progress thread).
         self.charge(NicOp::ActiveMessage, loc);
+        if let Some(tr) = self.tracer.get() {
+            let from = here();
+            if from != loc {
+                // Both sides stamped on the issuer's NIC clock: the live
+                // substrate has no global virtual time (see the DES
+                // testbed for delivery-time semantics).
+                let t = self.local_virtual_ns();
+                let (src, dst) = (from.index() as u16, loc.index() as u16);
+                let bytes = NicOp::ActiveMessage.payload_bytes() as u64;
+                tr.record_at(t, INFRA_TASK, src, Event::AmSend { dst, bytes });
+                tr.record_at(t, INFRA_TASK, dst, Event::AmDeliver { src });
+            }
+        }
         with_locale(loc, f)
     }
 
     /// Sum of all locales' NIC snapshots.
+    ///
+    /// **Deprecated for new call sites**: prefer
+    /// [`crate::obs::MetricsRegistry::from_pgas`], which snapshots each
+    /// locale as named gauges; this summed view is cross-checked against
+    /// it by [`crate::obs::MetricsRegistry::verify_pgas`].
     pub fn comm_totals(&self) -> NicSnapshot {
         let mut total = NicSnapshot::default();
         for nic in &self.nics {
@@ -540,6 +585,22 @@ mod tests {
         let c = auditor.counts();
         assert_eq!((c.allocs, c.frees), (1, 1));
         assert!(auditor.ok());
+    }
+
+    #[test]
+    fn tracer_records_remote_on_as_am_events() {
+        use crate::obs::{Event, Tracer};
+        let p = pgas4();
+        let tr = Arc::new(Tracer::new());
+        assert!(p.set_tracer(Arc::clone(&tr)));
+        assert!(!p.set_tracer(Arc::clone(&tr)), "set-once");
+        p.on(LocaleId(1), || ());
+        p.on(here(), || ()); // a local `on` involves no AM
+        let evs = tr.events();
+        assert_eq!(evs.len(), 2);
+        assert!(matches!(evs[0].ev, Event::AmSend { dst: 1, .. }), "{:?}", evs[0]);
+        assert!(matches!(evs[1].ev, Event::AmDeliver { src: 0 }), "{:?}", evs[1]);
+        assert_eq!(evs[0].t, evs[1].t, "both stamped on the issuer clock");
     }
 
     #[test]

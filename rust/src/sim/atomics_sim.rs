@@ -17,8 +17,11 @@
 
 use super::engine::{run, Resource, Step, VTime, Workload};
 use crate::fabric::{NetTotals, Network, TopologyKind};
+use crate::obs::span::span_id;
+use crate::obs::{Event, Tracer};
 use crate::pgas::{LocaleId, NicModel, NicOp};
 use crate::util::rng::Xoshiro256pp;
+use std::sync::Arc;
 
 /// The three Fig. 3 series.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -93,6 +96,10 @@ struct TaskState {
     rng: Xoshiro256pp,
     phase: Phase,
     locale: usize,
+    /// Operation ordinal (span accounting only; never feeds the sim).
+    iter: u64,
+    /// Virtual time the in-flight op began (CAS spans several steps).
+    span_began: VTime,
 }
 
 struct AtomicsSim {
@@ -103,6 +110,8 @@ struct AtomicsSim {
     /// In-flight messages advance hop-by-hop through this fabric.
     net: Network,
     cas_retries: u64,
+    /// Event sink; `None` keeps every hot path on the untraced code.
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl AtomicsSim {
@@ -150,18 +159,34 @@ impl Workload for AtomicsSim {
                     return Step::Done;
                 }
                 self.tasks[tid].remaining -= 1;
+                self.tasks[tid].iter += 1;
+                self.tasks[tid].span_began = now;
+                let span = span_id(tid as u32, self.tasks[tid].iter);
+                if let Some(tr) = &self.tracer {
+                    tr.record_at(now, tid as u32, locale as u16, Event::OpBegin { span });
+                }
                 let elem = self.tasks[tid].rng.next_usize(n_elems);
                 let kind = self.tasks[tid].rng.next_below(4);
                 match kind {
                     // read: one access
-                    0 => Step::ResumeAt(self.access(now, locale, elem)),
+                    0 => {
+                        let done = self.access(now, locale, elem);
+                        if let Some(tr) = &self.tracer {
+                            tr.record_at(done, tid as u32, locale as u16, Event::OpEnd { span, ns: done - now });
+                        }
+                        Step::ResumeAt(done)
+                    }
                     // write / exchange: one access, bump version
                     1 | 3 => {
                         let done = self.access(now, locale, elem);
                         self.elems[elem].1 += 1;
+                        if let Some(tr) = &self.tracer {
+                            tr.record_at(done, tid as u32, locale as u16, Event::OpEnd { span, ns: done - now });
+                        }
                         Step::ResumeAt(done)
                     }
-                    // CAS: read now, CAS on the next step
+                    // CAS: read now, CAS on the next step (span stays open
+                    // across retries until the CAS lands)
                     _ => {
                         let done = self.access(now, locale, elem);
                         let version = self.elems[elem].1;
@@ -176,6 +201,11 @@ impl Workload for AtomicsSim {
                     // success: mutate
                     self.elems[elem].1 += 1;
                     self.tasks[tid].phase = Phase::Next;
+                    if let Some(tr) = &self.tracer {
+                        let span = span_id(tid as u32, self.tasks[tid].iter);
+                        let ns = done - self.tasks[tid].span_began;
+                        tr.record_at(done, tid as u32, locale as u16, Event::OpEnd { span, ns });
+                    }
                 } else {
                     // failed CAS: re-read and retry (stay pending with the
                     // fresh version — the re-read is this same access).
@@ -191,6 +221,13 @@ impl Workload for AtomicsSim {
 
 /// Run one Fig. 3 data point.
 pub fn run_atomics(cfg: AtomicsConfig) -> AtomicsResult {
+    run_atomics_traced(cfg, None)
+}
+
+/// [`run_atomics`] with an optional event sink: per-op spans (OpBegin /
+/// OpEnd, with CAS retries folded into their op's span) plus the fabric's
+/// hop events. `None` executes the exact untraced instruction stream.
+pub fn run_atomics_traced(cfg: AtomicsConfig, tracer: Option<Arc<Tracer>>) -> AtomicsResult {
     let n_tasks = cfg.total_tasks();
     let n_elems = cfg.vars_per_locale * cfg.locales;
     let tasks = (0..n_tasks)
@@ -199,14 +236,20 @@ pub fn run_atomics(cfg: AtomicsConfig) -> AtomicsResult {
             rng: Xoshiro256pp::new(cfg.seed ^ (t as u64).wrapping_mul(0x9E37)),
             phase: Phase::Next,
             locale: t / cfg.tasks_per_locale,
+            iter: 0,
+            span_began: 0,
         })
         .collect();
-    let net = Network::new(cfg.topology.build(cfg.locales));
+    let mut net = Network::new(cfg.topology.build(cfg.locales));
+    if let Some(tr) = &tracer {
+        net.set_tracer(tr.clone());
+    }
     let mut sim = AtomicsSim {
         tasks,
         elems: (0..n_elems).map(|_| (Resource::new(), 0)).collect(),
         net,
         cas_retries: 0,
+        tracer,
         cfg,
     };
     let (makespan, _) = run(&mut sim, n_tasks);
@@ -340,6 +383,31 @@ mod tests {
             fc.makespan_ns
         );
         assert!(ring.net.hops > ring.net.messages, "ring routes average > 1 hop");
+    }
+
+    #[test]
+    fn tracing_is_zero_overhead_and_spans_cover_every_op() {
+        let m = NicModel::aries();
+        let mk = || {
+            let mut c = cfg(AtomicVariant::AtomicInt, m, 4);
+            c.topology = TopologyKind::Ring;
+            c
+        };
+        let plain = run_atomics(mk());
+        let tr = Arc::new(Tracer::new());
+        let traced = run_atomics_traced(mk(), Some(tr.clone()));
+        assert_eq!(plain.makespan_ns, traced.makespan_ns);
+        assert_eq!(plain.cas_retries, traced.cas_retries);
+        assert_eq!(plain.net, traced.net);
+        let events = tr.events();
+        let begins = events.iter().filter(|e| e.ev.kind() == "op_begin").count() as u64;
+        let ends = events.iter().filter(|e| e.ev.kind() == "op_end").count() as u64;
+        assert_eq!(begins, traced.total_ops, "one OpBegin per operation");
+        assert_eq!(ends, traced.total_ops, "every span closes (CAS retries included)");
+        assert!(
+            events.iter().any(|e| e.ev.kind() == "hop_enq"),
+            "remote accesses must surface fabric hops"
+        );
     }
 
     #[test]

@@ -28,8 +28,11 @@
 use super::engine::{run, MultiResource, Resource, Step, VTime, Workload};
 use crate::epoch::NUM_EPOCHS;
 use crate::fabric::{AdaptiveRouting, NetTotals, Network, TopologyKind};
+use crate::obs::span::{span_id, LatencyStats};
+use crate::obs::{Event, Tracer, INFRA_TASK};
 use crate::pgas::{FlushPolicy, LocaleId, NicModel, NicOp, DEFAULT_AGG_CAPACITY};
 use crate::util::rng::Xoshiro256pp;
+use std::sync::Arc;
 
 /// Which figure's workload to run.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -154,6 +157,11 @@ pub struct EpochResult {
     pub migration_flushes: u64,
     /// Fabric counters (messages, hops, transit, queueing, hottest link).
     pub net: NetTotals,
+    /// Per-op latency decomposition (op = inject + transit + queue +
+    /// epoch), log-bucket histograms with p50/p95/p99/p999. Always
+    /// populated — span accounting runs whether or not a tracer is
+    /// attached, and never touches the simulated resources or RNGs.
+    pub latency: LatencyStats,
 }
 
 /// Per-locale simulated state.
@@ -212,6 +220,19 @@ struct TaskState {
     phase: Phase,
     resume_phase: Phase, // where to go after a reclaim attempt
     rng: Xoshiro256pp,
+    // --- span accounting (observability; never feeds back into the
+    //     simulation) ---
+    /// An op span is open from the step that starts an iteration until
+    /// the task next re-enters `Pin`.
+    span_open: bool,
+    /// Virtual time the open span began.
+    span_began: VTime,
+    /// Fabric transit charged to the open span.
+    span_transit: u64,
+    /// Link queueing charged to the open span.
+    span_queued: u64,
+    /// Virtual time spent inside the tryReclaim machine for this span.
+    span_epoch: u64,
 }
 
 /// Multiplicative latency jitter (±12.5%): real fabrics have delivery
@@ -250,6 +271,11 @@ struct EpochSim {
     ams_rx: Vec<u64>,
     /// Tasks still in the main loop (for the final clear trigger).
     active: usize,
+    /// Event sink; `None` keeps every hot path on the exact pre-trace
+    /// instructions (events are neither built nor buffered).
+    tracer: Option<Arc<Tracer>>,
+    /// Per-op latency decomposition, recorded unconditionally.
+    lat: LatencyStats,
 }
 
 impl EpochSim {
@@ -353,20 +379,32 @@ impl EpochSim {
     }
 
     /// Count one received AM at `target` (the progress-thread arrival
-    /// side; mirrors `NicSnapshot::ams_rx` on the real substrate).
+    /// side; mirrors `NicSnapshot::ams_rx` on the real substrate). `now`
+    /// stamps the send/deliver trace events (issue-time convention, like
+    /// the live substrate's `Pgas::on`).
     #[inline]
-    fn rx_am(&mut self, from: usize, target: usize) {
+    fn rx_am(&mut self, now: VTime, from: usize, target: usize) {
         if from != target {
             self.ams_rx[target] += 1;
+            if let Some(tr) = &self.tracer {
+                let bytes = NicOp::ActiveMessage.payload_bytes() as u64;
+                tr.record_at(now, INFRA_TASK, from as u16, Event::AmSend { dst: target as u16, bytes });
+                tr.record_at(now, INFRA_TASK, target as u16, Event::AmDeliver { src: from as u16 });
+            }
         }
     }
 
     /// A remote 64-bit atomic arrives as an AM only when the NIC cannot
     /// execute it (mirrors `NicModel::arrives_as_am`).
     #[inline]
-    fn rx_atomic(&mut self, from: usize, target: usize) {
+    fn rx_atomic(&mut self, now: VTime, from: usize, target: usize) {
         if from != target && !self.cfg.model.network_atomics {
             self.ams_rx[target] += 1;
+            if let Some(tr) = &self.tracer {
+                let bytes = NicOp::Atomic64.payload_bytes() as u64;
+                tr.record_at(now, INFRA_TASK, from as u16, Event::AmSend { dst: target as u16, bytes });
+                tr.record_at(now, INFRA_TASK, target as u16, Event::AmDeliver { src: from as u16 });
+            }
         }
     }
 
@@ -404,11 +442,14 @@ impl EpochSim {
             .net
             .send(t, LocaleId(from as u16), LocaleId(dest as u16), n as usize * 16)
             .delivered_at;
-        self.rx_am(from, dest);
+        self.rx_am(t, from, dest);
         t = Self::am(&cfg, &mut self.jrng, &mut self.net, &mut self.locs[dest].progress_res, t, from, dest);
         t += n * cfg.model.local_atomic_ns;
         for (list, &cnt) in lists.iter().enumerate() {
             self.locs[dest].limbo[list][dest] += cnt;
+        }
+        if let Some(tr) = &self.tracer {
+            tr.record_at(t, INFRA_TASK, from as u16, Event::Flush { dst: dest as u16, n, bytes: n * 16 });
         }
         t
     }
@@ -426,7 +467,7 @@ impl EpochSim {
             if self.locs[loc].mig.iter().all(|lists| lists.iter().all(|&c| c == 0)) {
                 continue;
             }
-            self.rx_am(actor, loc);
+            self.rx_am(now, actor, loc);
             let mut t = Self::am(&cfg, &mut self.jrng, &mut self.net, &mut self.locs[loc].progress_res, now, actor, loc);
             for dest in 0..cfg.locales {
                 t = self.flush_migration(t, loc, dest);
@@ -468,7 +509,7 @@ impl EpochSim {
                     .net
                     .send(t, LocaleId(loc as u16), LocaleId(dest as u16), n as usize * 16)
                     .delivered_at;
-                self.rx_am(loc, dest);
+                self.rx_am(t, loc, dest);
                 t = Self::am(
                     &cfg,
                     &mut self.jrng,
@@ -484,12 +525,20 @@ impl EpochSim {
                 t += n * cfg.model.local_atomic_ns;
             }
         }
+        if freed > 0 {
+            if let Some(tr) = &self.tracer {
+                tr.record_at(t, INFRA_TASK, loc as u16, Event::Reclaim { n: freed });
+            }
+        }
         (t, freed, remote)
     }
 }
 
-impl Workload for EpochSim {
-    fn step(&mut self, tid: usize, now: VTime) -> Step {
+impl EpochSim {
+    /// The step machine proper — exactly the pre-observability code.
+    /// The [`Workload`] wrapper below wraps it in span accounting; the
+    /// machine itself never touches the span fields.
+    fn step_inner(&mut self, tid: usize, now: VTime) -> Step {
         let cfg = self.cfg.clone();
         let me = self.tasks[tid].locale;
         let phase = self.tasks[tid].phase;
@@ -524,6 +573,9 @@ impl Workload for EpochSim {
                 // forward (that would hide the stall from the scan).
                 if self.tasks[tid].epoch == 0 {
                     self.tasks[tid].epoch = self.locs[me].epoch;
+                }
+                if let Some(tr) = &self.tracer {
+                    tr.record_at(t3, tid as u32, me as u16, Event::Pin { epoch: self.tasks[tid].epoch });
                 }
                 self.tasks[tid].phase = if self.deleting() { Phase::Defer } else { Phase::Unpin };
                 Step::ResumeAt(t3)
@@ -563,6 +615,9 @@ impl Workload for EpochSim {
                     }
                     _ => self.locs[me].limbo[list][owner] += 1,
                 }
+                if let Some(tr) = &self.tracer {
+                    tr.record_at(t_done, tid as u32, me as u16, Event::Defer { dst: owner as u16, list: list as u64 });
+                }
                 self.tasks[tid].phase = Phase::Unpin;
                 Step::ResumeAt(t_done)
             }
@@ -574,6 +629,9 @@ impl Workload for EpochSim {
                     self.tasks[tid].epoch = 0;
                 }
                 let t = now + cfg.model.cost(NicOp::Atomic64, false); // token store
+                if let Some(tr) = &self.tracer {
+                    tr.record_at(t, tid as u32, me as u16, Event::Unpin);
+                }
                 self.tasks[tid].phase = Phase::MaybeReclaim;
                 Step::ResumeAt(t)
             }
@@ -638,7 +696,7 @@ impl Workload for EpochSim {
                 // sees the attempt (that is the whole point).
                 let g = cfg.adaptive.hier_group.expect("RGroupFlag requires hier_group");
                 let leader = Self::group_leader(me, g);
-                self.rx_atomic(me, leader);
+                self.rx_atomic(now, me, leader);
                 let t = {
                     let lead = &mut self.locs[leader];
                     let (w, p) = (&mut lead.gflag_res, &mut lead.progress_res);
@@ -656,7 +714,7 @@ impl Workload for EpochSim {
                 Step::ResumeAt(t)
             }
             Phase::RGlobalFlag => {
-                self.rx_atomic(me, 0);
+                self.rx_atomic(now, me, 0);
                 let t = {
                     let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
                     Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
@@ -667,7 +725,7 @@ impl Workload for EpochSim {
                     let mut t2 = t;
                     if let Some(g) = cfg.adaptive.hier_group {
                         let leader = Self::group_leader(me, g);
-                        self.rx_atomic(me, leader);
+                        self.rx_atomic(t2, me, leader);
                         t2 = {
                             let lead = &mut self.locs[leader];
                             let (w, p) = (&mut lead.gflag_res, &mut lead.progress_res);
@@ -685,7 +743,7 @@ impl Workload for EpochSim {
                 Step::ResumeAt(t)
             }
             Phase::RReadEpoch => {
-                self.rx_atomic(me, 0);
+                self.rx_atomic(now, me, 0);
                 let t = {
                     let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
                     Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
@@ -704,7 +762,7 @@ impl Workload for EpochSim {
                 match cfg.adaptive.hier_group {
                     None => {
                         for loc in 0..cfg.locales {
-                            self.rx_am(me, loc);
+                            self.rx_am(now, me, loc);
                             let mut t = Self::am(
                                 &cfg,
                                 &mut self.jrng,
@@ -720,7 +778,7 @@ impl Workload for EpochSim {
                     }
                     Some(g) => {
                         for leader in (0..cfg.locales).step_by(g.max(1)) {
-                            self.rx_am(me, leader);
+                            self.rx_am(now, me, leader);
                             let tl = Self::am(
                                 &cfg,
                                 &mut self.jrng,
@@ -731,7 +789,7 @@ impl Workload for EpochSim {
                                 leader,
                             );
                             for member in leader..(leader + g).min(cfg.locales) {
-                                self.rx_am(leader, member);
+                                self.rx_am(tl, leader, member);
                                 let mut t = Self::am(
                                     &cfg,
                                     &mut self.jrng,
@@ -760,13 +818,16 @@ impl Workload for EpochSim {
                 Step::ResumeAt(t_done)
             }
             Phase::RAdvance { this_epoch } => {
-                self.rx_atomic(me, 0);
+                self.rx_atomic(now, me, 0);
                 let t = {
                     let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
                     Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
                 };
                 let new_epoch = this_epoch % NUM_EPOCHS + 1;
                 self.global_epoch = new_epoch;
+                if let Some(tr) = &self.tracer {
+                    tr.record_at(t, tid as u32, me as u16, Event::Advance { epoch: new_epoch });
+                }
                 self.tasks[tid].phase = Phase::RDrain { new_epoch };
                 Step::ResumeAt(t)
             }
@@ -788,7 +849,7 @@ impl Workload for EpochSim {
                 match cfg.adaptive.hier_group {
                     None => {
                         for loc in 0..cfg.locales {
-                            self.rx_am(me, loc);
+                            self.rx_am(start, me, loc);
                             let t0 = Self::am(
                                 &cfg,
                                 &mut self.jrng,
@@ -808,7 +869,7 @@ impl Workload for EpochSim {
                     }
                     Some(g) => {
                         for leader in (0..cfg.locales).step_by(g.max(1)) {
-                            self.rx_am(me, leader);
+                            self.rx_am(start, me, leader);
                             let tl = Self::am(
                                 &cfg,
                                 &mut self.jrng,
@@ -819,7 +880,7 @@ impl Workload for EpochSim {
                                 leader,
                             );
                             for member in leader..(leader + g).min(cfg.locales) {
-                                self.rx_am(leader, member);
+                                self.rx_am(tl, leader, member);
                                 let t0 = Self::am(
                                     &cfg,
                                     &mut self.jrng,
@@ -849,7 +910,7 @@ impl Workload for EpochSim {
                 Step::ResumeAt(t_done)
             }
             Phase::RRelease { advanced: _ } => {
-                self.rx_atomic(me, 0);
+                self.rx_atomic(now, me, 0);
                 let t1 = {
                     let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
                     Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
@@ -861,7 +922,7 @@ impl Workload for EpochSim {
                 let mut t = t1;
                 if let Some(g) = cfg.adaptive.hier_group {
                     let leader = Self::group_leader(me, g);
-                    self.rx_atomic(me, leader);
+                    self.rx_atomic(t, me, leader);
                     t = {
                         let lead = &mut self.locs[leader];
                         let (w, p) = (&mut lead.gflag_res, &mut lead.progress_res);
@@ -885,7 +946,7 @@ impl Workload for EpochSim {
                 };
                 let mut t_done = start;
                 for loc in 0..cfg.locales {
-                    self.rx_am(me, loc);
+                    self.rx_am(start, me, loc);
                     let mut t = Self::am(
                         &cfg,
                         &mut self.jrng,
@@ -912,8 +973,99 @@ impl Workload for EpochSim {
     }
 }
 
+impl Workload for EpochSim {
+    /// Span accounting around [`EpochSim::step_inner`].
+    ///
+    /// An op span opens at the step that starts an iteration (the `Pin`
+    /// step that decrements `remaining`) and closes when the task next
+    /// re-enters `Pin` — by then every constituent phase of the op has
+    /// resolved. Between those points the wrapper attributes virtual
+    /// time to components:
+    ///
+    /// * **epoch** — steps taken inside the tryReclaim machine charge
+    ///   their whole duration here (their fabric crossings are already
+    ///   inside that window, so transit/queue deltas are *not* added on
+    ///   top — that would double-count);
+    /// * **transit** / **queue** — for every other phase, the fabric's
+    ///   transit and link-wait counters are sampled around the step and
+    ///   the deltas charged to the span;
+    /// * **inject** — the remainder (`op - transit - queue - epoch`):
+    ///   NIC issue, AM handler occupancy, local atomics.
+    ///
+    /// The accounting reads simulation state but never writes anything
+    /// the machine reads (no `Resource`, no RNG), so results are
+    /// bit-identical with or without a tracer attached (pinned by
+    /// `tracing_off_and_on_agree_bit_for_bit`).
+    fn step(&mut self, tid: usize, now: VTime) -> Step {
+        let phase_before = self.tasks[tid].phase;
+        let iter_before = self.tasks[tid].iter;
+        let t0 = self.net.transit_ns_total();
+        let q0 = self.net.queued_ns_total();
+        if phase_before == Phase::Pin && self.tasks[tid].span_open {
+            // The previous iteration's span ends where this Pin step
+            // begins.
+            let task = &mut self.tasks[tid];
+            task.span_open = false;
+            let op_ns = now.saturating_sub(task.span_began);
+            let (transit, queued, epoch) = (task.span_transit, task.span_queued, task.span_epoch);
+            let inject = op_ns.saturating_sub(transit + queued + epoch);
+            let id = span_id(tid as u32, task.iter as u64);
+            let loc = task.locale as u16;
+            self.lat.record_op(op_ns, inject, transit, queued, epoch);
+            if let Some(tr) = &self.tracer {
+                tr.record_at(now, tid as u32, loc, Event::OpEnd { span: id, ns: op_ns });
+            }
+        }
+        let step = self.step_inner(tid, now);
+        let dt = self.net.transit_ns_total() - t0;
+        let dq = self.net.queued_ns_total() - q0;
+        if self.tasks[tid].iter > iter_before {
+            let task = &mut self.tasks[tid];
+            task.span_open = true;
+            task.span_began = now;
+            task.span_transit = 0;
+            task.span_queued = 0;
+            task.span_epoch = 0;
+            if let Some(tr) = &self.tracer {
+                let id = span_id(tid as u32, task.iter as u64);
+                tr.record_at(now, tid as u32, task.locale as u16, Event::OpBegin { span: id });
+            }
+        }
+        if self.tasks[tid].span_open {
+            let in_reclaim = matches!(
+                phase_before,
+                Phase::RLocalFlag
+                    | Phase::RGroupFlag
+                    | Phase::RGlobalFlag
+                    | Phase::RReadEpoch
+                    | Phase::RScan { .. }
+                    | Phase::RAdvance { .. }
+                    | Phase::RDrain { .. }
+                    | Phase::RRelease { .. }
+            );
+            if in_reclaim {
+                if let Step::ResumeAt(t) = step {
+                    self.tasks[tid].span_epoch += t.saturating_sub(now);
+                }
+            } else {
+                self.tasks[tid].span_transit += dt;
+                self.tasks[tid].span_queued += dq;
+            }
+        }
+        step
+    }
+}
+
 /// Run one Figs-4–7 data point.
 pub fn run_epoch(cfg: EpochConfig) -> EpochResult {
+    run_epoch_traced(cfg, None)
+}
+
+/// [`run_epoch`] with an optional event sink. With `Some(tracer)` every
+/// op span, epoch transition, AM and link hop is recorded; with `None`
+/// the simulation executes the exact untraced instruction stream. Either
+/// way the returned [`EpochResult::latency`] is populated.
+pub fn run_epoch_traced(cfg: EpochConfig, tracer: Option<Arc<Tracer>>) -> EpochResult {
     let n_tasks = cfg.total_tasks();
     let tasks = (0..n_tasks)
         .map(|t| TaskState {
@@ -924,6 +1076,11 @@ pub fn run_epoch(cfg: EpochConfig) -> EpochResult {
             phase: Phase::Pin,
             resume_phase: Phase::Pin,
             rng: Xoshiro256pp::new(cfg.seed ^ (t as u64).wrapping_mul(0xA5A5)),
+            span_open: false,
+            span_began: 0,
+            span_transit: 0,
+            span_queued: 0,
+            span_epoch: 0,
         })
         .collect();
     if let Some(g) = cfg.adaptive.hier_group {
@@ -945,10 +1102,13 @@ pub fn run_epoch(cfg: EpochConfig) -> EpochResult {
         })
         .collect();
     let topo = cfg.topology.build(cfg.locales);
-    let net = match cfg.adaptive.ugal_threshold_ns {
+    let mut net = match cfg.adaptive.ugal_threshold_ns {
         Some(thr) => Network::with_adaptive(topo, AdaptiveRouting::new(thr, cfg.seed)),
         None => Network::new(topo),
     };
+    if let Some(tr) = &tracer {
+        net.set_tracer(tr.clone());
+    }
     let locales = cfg.locales;
     let mut sim = EpochSim {
         jrng: Xoshiro256pp::new(cfg.seed ^ 0xBEEF),
@@ -969,9 +1129,21 @@ pub fn run_epoch(cfg: EpochConfig) -> EpochResult {
         iters: 0,
         ams_rx: vec![0; locales],
         active: n_tasks,
+        tracer,
+        lat: LatencyStats::new(),
         cfg,
     };
     let (makespan, _) = run(&mut sim, n_tasks);
+    // Satellite check: the metrics registry is derived state; in debug
+    // builds assert it never drifts from the legacy fabric counters.
+    #[cfg(debug_assertions)]
+    {
+        let reg = crate::obs::MetricsRegistry::from_link_stats(&sim.net.link_stats());
+        if let Err(e) = reg.verify_network(&sim.net.totals()) {
+            panic!("metrics registry drifted from fabric counters: {e}");
+        }
+    }
+    let latency = std::mem::take(&mut sim.lat);
     EpochResult {
         makespan_ns: makespan,
         total_iters: sim.iters,
@@ -986,6 +1158,7 @@ pub fn run_epoch(cfg: EpochConfig) -> EpochResult {
         migrated: sim.migrated,
         migration_flushes: sim.migration_flushes,
         net: sim.net.totals(),
+        latency,
     }
 }
 
@@ -1391,5 +1564,110 @@ mod tests {
         // The composed run still conserves the protocol's books.
         assert!(a.freed <= a.total_iters);
         assert!(a.advances > 0);
+    }
+
+    // --- observability (tracing, spans, metrics) -----------------------
+
+    /// Attaching a tracer must not perturb the simulation: recording
+    /// reads state but never touches a `Resource` or an RNG.
+    #[test]
+    fn tracing_off_and_on_agree_bit_for_bit() {
+        let mk = || {
+            let mut c = cfg(EpochWorkload::DeleteReclaimEvery(16), 8);
+            c.tasks_per_locale = 4;
+            c.objs_per_task = 512;
+            c.remote_ratio = 0.5;
+            c.topology = TopologyKind::Dragonfly;
+            c.agg_capacity = 128;
+            c.adaptive = Adaptivity {
+                ugal_threshold_ns: Some(1_000),
+                flush_after_ns: Some(100_000),
+                backpressure_ns: 25_000,
+                hier_group: Some(4),
+            };
+            c
+        };
+        let plain = run_epoch(mk());
+        let tr = Arc::new(Tracer::new());
+        let traced = run_epoch_traced(mk(), Some(tr.clone()));
+        assert_eq!(plain.makespan_ns, traced.makespan_ns);
+        assert_eq!(plain.net, traced.net);
+        assert_eq!(plain.advances, traced.advances);
+        assert_eq!(plain.freed, traced.freed);
+        assert_eq!(plain.ams_rx_home, traced.ams_rx_home);
+        assert_eq!(plain.migrated, traced.migrated);
+        assert!(tr.recorded() > 0, "the traced run must record events");
+        // Both runs decompose identically too.
+        assert_eq!(plain.latency.json(), traced.latency.json());
+    }
+
+    /// Identical seeds ⇒ byte-identical exported traces (the determinism
+    /// contract `trace diff` and the CI trace job rely on).
+    #[test]
+    fn same_seed_traces_are_byte_identical() {
+        let mk = || {
+            let mut c = cfg(EpochWorkload::DeleteReclaimEvery(64), 4);
+            c.remote_ratio = 0.5;
+            c.topology = TopologyKind::Ring;
+            c
+        };
+        let run_one = || {
+            let tr = Arc::new(Tracer::new());
+            run_epoch_traced(mk(), Some(tr.clone()));
+            let header = crate::obs::header_for_epoch(&mk());
+            (tr.export_jsonl(&header), tr.export_binary(&header))
+        };
+        let (ja, ba) = run_one();
+        let (jb, bb) = run_one();
+        assert!(ja.lines().count() > 1);
+        assert_eq!(ja, jb);
+        assert_eq!(ba, bb);
+    }
+
+    /// Every iteration opens exactly one span and every span closes when
+    /// its task re-enters Pin (including the final exit step), so the op
+    /// histogram counts the iterations exactly.
+    #[test]
+    fn latency_spans_cover_every_iteration() {
+        for workload in [
+            EpochWorkload::ReadOnly,
+            EpochWorkload::DeleteReclaimAtEnd,
+            EpochWorkload::DeleteReclaimEvery(64),
+        ] {
+            let r = run_epoch(cfg(workload, 4));
+            assert_eq!(
+                r.latency.count(),
+                r.total_iters,
+                "one closed span per iteration under {workload:?}"
+            );
+        }
+    }
+
+    /// The span components actually discriminate: a reclaim-heavy remote
+    /// workload on a real fabric spends measurable epoch and transit
+    /// time, while read-only on the flat model reports neither.
+    #[test]
+    fn span_components_reflect_the_workload() {
+        let ro = run_epoch(cfg(EpochWorkload::ReadOnly, 4));
+        assert_eq!(ro.latency.epoch.percentile(99.0), 0, "read-only never reclaims");
+        assert_eq!(ro.latency.transit.percentile(99.0), 0, "flat model has no transit");
+        assert!(ro.latency.op.percentile(50.0) > 0);
+
+        // Per-iteration reclaim + migration flushes on a ring: epoch time
+        // shows up on nearly every op, and the ops that carry a flush pay
+        // fabric transit outside the reclaim window.
+        let mut c = cfg(EpochWorkload::DeleteReclaimEvery(1), 8);
+        c.tasks_per_locale = 8;
+        c.objs_per_task = 512;
+        c.remote_ratio = 1.0;
+        c.topology = TopologyKind::Ring;
+        c.agg_capacity = 64;
+        c.adaptive.flush_after_ns = Some(50_000);
+        let r = run_epoch(c);
+        assert!(r.migration_flushes > 0);
+        assert!(r.latency.epoch.percentile(99.9) > 0, "per-iteration reclaim must show up");
+        assert!(r.latency.transit.percentile(99.9) > 0, "flush-carrying ops cross the ring");
+        // Tail ordering is monotone by construction.
+        assert!(r.latency.op.percentile(99.9) >= r.latency.op.percentile(50.0));
     }
 }

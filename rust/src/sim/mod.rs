@@ -9,6 +9,8 @@ pub mod atomics_sim;
 pub mod engine;
 pub mod epoch_sim;
 
-pub use atomics_sim::{run_atomics, AtomicVariant, AtomicsConfig, AtomicsResult};
+pub use atomics_sim::{run_atomics, run_atomics_traced, AtomicVariant, AtomicsConfig, AtomicsResult};
 pub use engine::{run, MultiResource, Resource, Step, VTime, Workload};
-pub use epoch_sim::{run_epoch, Adaptivity, EpochConfig, EpochResult, EpochWorkload, StalledTask};
+pub use epoch_sim::{
+    run_epoch, run_epoch_traced, Adaptivity, EpochConfig, EpochResult, EpochWorkload, StalledTask,
+};

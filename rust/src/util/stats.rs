@@ -12,6 +12,7 @@ pub struct Summary {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    pub p999: f64,
 }
 
 impl Summary {
@@ -19,7 +20,17 @@ impl Summary {
     /// an all-zero summary with `n == 0`.
     pub fn of(samples: &[f64]) -> Summary {
         if samples.is_empty() {
-            return Summary { n: 0, mean: 0.0, stddev: 0.0, min: 0.0, max: 0.0, p50: 0.0, p95: 0.0, p99: 0.0 };
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                stddev: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                p999: 0.0,
+            };
         }
         let n = samples.len();
         let mean = samples.iter().sum::<f64>() / n as f64;
@@ -35,6 +46,7 @@ impl Summary {
             p50: percentile_sorted(&sorted, 50.0),
             p95: percentile_sorted(&sorted, 95.0),
             p99: percentile_sorted(&sorted, 99.0),
+            p999: percentile_sorted(&sorted, 99.9),
         }
     }
 }
@@ -100,9 +112,11 @@ impl LatencyHistogram {
     }
 
     /// Approximate percentile: returns the upper bound of the bucket that
-    /// contains the p-th ranked observation.
+    /// contains the p-th ranked observation. An all-zero sample reports 0
+    /// exactly (a layer that never queued must not report 2 ns of queueing
+    /// just because 0 shares bucket 0 with 1 ns).
     pub fn percentile(&self, p: f64) -> u64 {
-        if self.count == 0 {
+        if self.count == 0 || self.max == 0 {
             return 0;
         }
         let target = ((p / 100.0) * self.count as f64).ceil() as u64;
@@ -201,5 +215,86 @@ mod tests {
         let mut h = LatencyHistogram::new();
         h.record(0);
         assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn summary_has_p999() {
+        let samples: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let s = Summary::of(&samples);
+        assert_eq!(s.p999, 1000.0);
+        assert!(s.p999 >= s.p99 && s.p99 >= s.p95 && s.p95 >= s.p50);
+    }
+
+    #[test]
+    fn all_zero_histogram_percentile_is_zero() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record(0);
+        }
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.percentile(99.9), 0);
+    }
+
+    /// Exact nearest-rank percentile of a raw sample: rank
+    /// `max(ceil(p/100 * n), 1)`, 1-indexed — the definition
+    /// `LatencyHistogram::percentile` buckets.
+    fn exact_nearest_rank(samples: &[u64], p: f64) -> u64 {
+        let mut sorted = samples.to_vec();
+        sorted.sort_unstable();
+        let target = (((p / 100.0) * sorted.len() as f64).ceil() as usize).max(1);
+        sorted[target - 1]
+    }
+
+    #[test]
+    fn histogram_percentile_brackets_exact_nearest_rank() {
+        use crate::util::proptest::{shrink_vec, Prop};
+        // Property: for random samples (values < 2^62, so the bucket
+        // upper bound never saturates) and a spread of percentiles, the
+        // histogram estimate brackets the exact nearest-rank value:
+        //   exact <= estimate <= 2 * max(exact, 1).
+        // Checked on a single histogram AND on a merge of two halves.
+        let ps = [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0];
+        Prop::new("histogram percentile brackets nearest rank").cases(64).check(
+            |rng| {
+                let n = 1 + rng.next_usize(200);
+                (0..n)
+                    .map(|_| {
+                        // Mix magnitudes: zeros, small, and large values.
+                        match rng.next_usize(4) {
+                            0 => rng.next_below(4),
+                            1 => rng.next_below(1 << 10),
+                            2 => rng.next_below(1 << 30),
+                            _ => rng.next_below(1 << 62),
+                        }
+                    })
+                    .collect::<Vec<u64>>()
+            },
+            |samples| {
+                let mut h = LatencyHistogram::new();
+                let (mut a, mut b) = (LatencyHistogram::new(), LatencyHistogram::new());
+                for (i, &v) in samples.iter().enumerate() {
+                    h.record(v);
+                    if i % 2 == 0 {
+                        a.record(v);
+                    } else {
+                        b.record(v);
+                    }
+                }
+                a.merge(&b);
+                for &p in &ps {
+                    let exact = exact_nearest_rank(samples, p);
+                    for (tag, est) in [("single", h.percentile(p)), ("merged", a.percentile(p))] {
+                        if est < exact || est > 2 * exact.max(1) {
+                            return Err(format!(
+                                "{tag} p{p}: estimate {est} outside [{exact}, {}]",
+                                2 * exact.max(1)
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+            |samples| shrink_vec(samples, |&v| crate::util::proptest::shrink_u64(v)),
+        );
     }
 }

@@ -13,6 +13,7 @@ use crate::sim::{
     EpochWorkload,
 };
 use crate::util::table::Table;
+use crate::workloads::{run_service, OpKind, ServiceConfig};
 
 /// Sweep scale: `quick` for CI, `full` for the paper-size testbed.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -367,6 +368,82 @@ pub fn fig10_trace_point(scale: Scale) -> EpochConfig {
     cfg
 }
 
+/// The service-scenario locale sweep (smaller than the epoch sweeps:
+/// each point carries per-op span accounting for four op kinds).
+fn service_locale_sweep(scale: Scale) -> Vec<usize> {
+    match scale {
+        Scale::Quick => vec![4, 8],
+        Scale::Full => vec![4, 8, 16, 32],
+    }
+}
+
+/// One service-scenario DES point (fig 11): the Zipf-skewed session-store
+/// mix over the sharded hash table + Harris list. `clients` stays in the
+/// millions at full scale — logical sessions are multiplexed over
+/// `locales x tasks_per_locale` sim tasks, so the key *population* is
+/// production-shaped even though the task count is bounded.
+pub fn service_cfg(scale: Scale, topology: TopologyKind, locales: usize) -> ServiceConfig {
+    let quick = scale == Scale::Quick;
+    ServiceConfig {
+        model: NicModel::aries_no_network_atomics(),
+        locales,
+        tasks_per_locale: if quick { 4 } else { 8 },
+        clients: if quick { 65_536 } else { 2_097_152 },
+        ops_per_task: if quick { 600 } else { 4_000 },
+        skew: 0.99,
+        read_pct: 80,
+        put_pct: 12,
+        del_pct: 5,
+        scan_len: 16,
+        churn_every: 5_000,
+        reclaim_every: 64,
+        buckets_per_locale: 64,
+        topology,
+        seed: 23,
+    }
+}
+
+/// Fig. 11 (beyond the source paper) — the service scenario: per-op-kind
+/// tail latency of a read-mostly Zipfian session store whose op path
+/// crosses the fabric (so `transit`/`queue` span layers are finally
+/// nonzero), swept over routed topologies.
+pub fn fig11(scale: Scale) -> Table {
+    let mut t = Table::new(&[
+        "topology", "locales", "mops", "remote%", "op_p50_us", "op_p99_us", "get_p99_us",
+        "put_p99_us", "scan_p99_us", "queue_p99_us", "epoch_p99_us", "advances", "freed",
+    ]);
+    for kind in [TopologyKind::Ring, TopologyKind::Dragonfly] {
+        for &locales in &service_locale_sweep(scale) {
+            let r = run_service(service_cfg(scale, kind, locales));
+            let us = |ns: u64| format!("{:.2}", ns as f64 / 1e3);
+            t.row(&[
+                kind.label().into(),
+                locales.to_string(),
+                format!("{:.2}", r.throughput_mops),
+                format!("{:.1}", r.remote_ops as f64 * 100.0 / r.total_ops.max(1) as f64),
+                us(r.latency.op.percentile(50.0)),
+                us(r.latency.op.percentile(99.0)),
+                us(r.by_kind[OpKind::Get.index()].op.percentile(99.0)),
+                us(r.by_kind[OpKind::Put.index()].op.percentile(99.0)),
+                us(r.by_kind[OpKind::Scan.index()].op.percentile(99.0)),
+                us(r.latency.queue.percentile(99.0)),
+                us(r.latency.epoch.percentile(99.0)),
+                r.advances.to_string(),
+                r.freed.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// The representative fig 11 point recorded by `bench service
+/// --trace-out`: largest-L dragonfly — the point whose trace carries the
+/// most per-hop structure for `trace critical-path` / `trace attribute`.
+pub fn service_trace_point(scale: Scale) -> ServiceConfig {
+    let locales = *service_locale_sweep(scale).last().expect("sweep is non-empty");
+    service_cfg(scale, TopologyKind::Dragonfly, locales)
+}
+
 /// Ablation: two-level FCFS election vs direct global contention.
 pub fn ablation_election(scale: Scale) -> Table {
     let mut t = epoch_header();
@@ -418,6 +495,23 @@ mod tests {
         for kind in TopologyKind::ALL {
             assert!(csv.contains(kind.label()), "missing series {}", kind.label());
         }
+    }
+
+    #[test]
+    fn fig11_sweeps_both_topologies_and_shows_tails() {
+        let t = fig11(Scale::Quick);
+        // 2 topologies × 2 locale points.
+        assert_eq!(t.len(), 2 * 2);
+        let csv = t.to_csv();
+        assert!(csv.contains("ring"));
+        assert!(csv.contains("dragonfly"));
+    }
+
+    #[test]
+    fn service_trace_point_is_the_largest_dragonfly() {
+        let cfg = service_trace_point(Scale::Quick);
+        assert_eq!(cfg.topology, TopologyKind::Dragonfly);
+        assert_eq!(cfg.locales, 8);
     }
 
     #[test]

@@ -23,9 +23,10 @@ pub const USAGE: &str = "pgas-nb — distributed non-blocking building blocks in
 Usage: pgas-nb <subcommand> [--opts]
 
 Subcommands:
-  bench <fig3|fig4|fig5|fig6|fig7|fig9|fig10|election>   regenerate a figure
-        [--quick] [--csv] [--trace-out FILE]  (--trace-out: fig9/fig10 only —
-                                              record the figure's
+  bench <fig3|fig4|fig5|fig6|fig7|fig9|fig10|service|election>
+        [--quick] [--csv] [--trace-out FILE]  regenerate a figure
+                                              (--trace-out: fig9/fig10/service
+                                              only — record the figure's
                                               representative DES point)
   check [--seeds 1,2,3] [--collections stack,queue,list,map]
         [--locales N] [--tasks N] [--ops N] [--keys N] [--topology T]
@@ -52,6 +53,18 @@ Subcommands:
   trace <summary|top-ops|diff> <FILE> [FILE2] [--n N]
                                               inspect / compare recorded
                                               traces (JSONL or .bin)
+  trace critical-path <FILE> [--n K]          top-K slowest ops with per-hop
+                                              blame tables (critical-path
+                                              attribution; blame must conserve
+                                              >= 99% of each op's latency)
+  trace attribute <FILE>                      aggregate blame by layer / link
+                                              / issuing locale over all ops
+  trace slo <BENCH.json> [--baseline FILE] [--p99 NS] [--margin PCT]
+                                              tail-latency SLO gate: compare a
+                                              fresh BENCH_service.json against
+                                              a committed baseline (every
+                                              *_p99/_p999 metric), nonzero
+                                              exit on regression
   info                                        environment / model summary
 ";
 
@@ -115,6 +128,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "fig10" | "adaptive" => {
             emit(args, "Fig 10: congestion-adaptive fabric", &figures::fig10(scale))
         }
+        "fig11" | "service" => {
+            emit(args, "Fig 11: service-scenario tail latency", &figures::fig11(scale))
+        }
         "election" => emit(args, "Ablation: FCFS election", &figures::ablation_election(scale)),
         "all" => {
             emit(args, "Fig 3", &figures::fig3(scale));
@@ -124,6 +140,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             emit(args, "Fig 7", &figures::fig7(scale));
             emit(args, "Fig 9", &figures::fig9(scale));
             emit(args, "Fig 10", &figures::fig10(scale));
+            emit(args, "Fig 11", &figures::fig11(scale));
         }
         other => bail!("unknown figure '{other}'"),
     }
@@ -137,14 +154,48 @@ fn cmd_bench(args: &Args) -> Result<()> {
 /// invocations with the same scale write byte-identical files (the DES
 /// is a pure function of its config; pinned by the CI trace job).
 fn cmd_bench_trace(which: &str, scale: Scale, path: &str) -> Result<()> {
+    if matches!(which, "fig11" | "service") {
+        return cmd_bench_trace_service(scale, path);
+    }
     let cfg = match which {
         "fig9" | "topology" => figures::fig9_trace_point(scale),
         "fig10" | "adaptive" => figures::fig10_trace_point(scale),
-        other => bail!("--trace-out records a DES trace for fig9/fig10 only (got '{other}')"),
+        other => {
+            bail!("--trace-out records a DES trace for fig9/fig10/service only (got '{other}')")
+        }
     };
     let tr = Arc::new(Tracer::new());
     let r = run_epoch_traced(cfg.clone(), Some(Arc::clone(&tr)));
     tr.write(path, &header_for_epoch(&cfg))?;
+    println!(
+        "trace: {} events retained ({} recorded, {} overwritten) -> {path}",
+        tr.len(),
+        tr.recorded(),
+        tr.dropped()
+    );
+    println!(
+        "  point: {} locales on {}, {:.2} mops, op p50/p99 {}/{} ns",
+        cfg.locales,
+        cfg.topology.label(),
+        r.throughput_mops,
+        r.latency.op.percentile(50.0),
+        r.latency.op.percentile(99.0)
+    );
+    Ok(())
+}
+
+/// `bench service --trace-out FILE`: record the fig 11 representative
+/// point (largest-L dragonfly service scenario). The resulting trace is
+/// the input `trace critical-path` / `trace attribute` are built for —
+/// every hop and AM event carries the acting task id, so each op's
+/// latency can be blamed hop by hop.
+fn cmd_bench_trace_service(scale: Scale, path: &str) -> Result<()> {
+    use crate::obs::header_for_service;
+    use crate::workloads::run_service_traced;
+    let cfg = figures::service_trace_point(scale);
+    let tr = Arc::new(Tracer::new());
+    let r = run_service_traced(cfg.clone(), Some(Arc::clone(&tr)));
+    tr.write(path, &header_for_service(&cfg))?;
     println!(
         "trace: {} events retained ({} recorded, {} overwritten) -> {path}",
         tr.len(),
@@ -771,7 +822,26 @@ fn cmd_trace(args: &Args) -> Result<()> {
             let b = pos.get(3).ok_or_else(|| err!("usage: pgas-nb trace diff <FILE> <FILE>"))?;
             trace_diff(a, b)
         }
-        _ => bail!("usage: pgas-nb trace <summary|top-ops|diff> <FILE> [FILE2]"),
+        Some("critical-path") => {
+            let path = pos
+                .get(2)
+                .ok_or_else(|| err!("usage: pgas-nb trace critical-path <FILE> [--n K]"))?;
+            trace_critical_path(path, args.get_usize("n", 5))
+        }
+        Some("attribute") => {
+            let path =
+                pos.get(2).ok_or_else(|| err!("usage: pgas-nb trace attribute <FILE>"))?;
+            trace_attribute(path)
+        }
+        Some("slo") => {
+            let path = pos.get(2).ok_or_else(|| {
+                err!("usage: pgas-nb trace slo <BENCH.json> [--baseline FILE] [--p99 NS] [--margin PCT]")
+            })?;
+            trace_slo(args, path)
+        }
+        _ => bail!(
+            "usage: pgas-nb trace <summary|top-ops|diff|critical-path|attribute|slo> <FILE> [FILE2]"
+        ),
     }
 }
 
@@ -857,6 +927,211 @@ fn trace_top_ops(path: &str, n: usize) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+/// Attribute every completed op in the trace, or explain why none can be.
+fn attributed_ops(path: &str) -> Result<Vec<crate::obs::OpAttribution>> {
+    let parsed = crate::obs::parse_trace_file(path).map_err(|e| err!("{e}"))?;
+    let ops = crate::obs::attribute_ops(&parsed);
+    if ops.is_empty() {
+        bail!(
+            "'{path}' holds no completed op spans — record one with \
+             `bench service --trace-out {path}` (the service DES task-stamps \
+             every hop so latency can be attributed)"
+        );
+    }
+    Ok(ops)
+}
+
+/// Blame must conserve ≥ 99 % of every op's latency; less means the trace
+/// was damaged (ring-buffer overwrite, truncation, hand editing) and any
+/// blame table would be partly fiction.
+fn require_conservation(ops: &[crate::obs::OpAttribution]) -> Result<f64> {
+    use crate::obs::conservation;
+    let min = ops.iter().map(conservation).fold(1.0f64, f64::min);
+    if min < 0.99 {
+        bail!(
+            "blame conservation broke: an op has only {:.1}% of its latency \
+             attributed (trace damaged or truncated)",
+            min * 100.0
+        );
+    }
+    Ok(min)
+}
+
+/// `trace critical-path <FILE> [--n K]`: the K slowest ops, each with its
+/// per-layer / per-link blame table — *where* the tail comes from, not
+/// just how long it is.
+fn trace_critical_path(path: &str, n: usize) -> Result<()> {
+    use crate::obs::{conservation, slowest_ops, span_iter, span_task};
+    let ops = attributed_ops(path)?;
+    let min_cons = require_conservation(&ops)?;
+    let total = ops.len();
+    let top = slowest_ops(ops, n.max(1));
+    println!(
+        "critical path: top {} of {} completed ops ({path}); min conservation {:.2}%",
+        top.len(),
+        total,
+        min_cons * 100.0
+    );
+    for (i, op) in top.iter().enumerate() {
+        println!(
+            "\n#{} task {} iter {} @ locale {}: {} ns (t=[{}, {}], attributed {:.1}%)",
+            i + 1,
+            span_task(op.span),
+            span_iter(op.span),
+            op.locale,
+            op.ns,
+            op.began,
+            op.ended,
+            conservation(op) * 100.0
+        );
+        let mut t = Table::new(&["layer", "ns", "share"]);
+        for (layer, ns) in &op.blame {
+            t.row_display(&[
+                layer.label(),
+                ns.to_string(),
+                format!("{:.1}%", *ns as f64 * 100.0 / op.ns.max(1) as f64),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+/// `trace attribute <FILE>`: aggregate blame over every completed op —
+/// by layer/link, then by issuing locale.
+fn trace_attribute(path: &str) -> Result<()> {
+    use crate::obs::{aggregate_blame, blame_by_locale};
+    let ops = attributed_ops(path)?;
+    let min_cons = require_conservation(&ops)?;
+    let total_ns: u64 = ops.iter().map(|o| o.ns).sum();
+    println!(
+        "attribution over {} completed ops, {} ns total op latency ({path}); \
+         min conservation {:.2}%",
+        ops.len(),
+        total_ns,
+        min_cons * 100.0
+    );
+    let mut t = Table::new(&["layer", "ns", "share"]);
+    for (layer, ns) in aggregate_blame(&ops) {
+        t.row_display(&[
+            layer.label(),
+            ns.to_string(),
+            format!("{:.1}%", ns as f64 * 100.0 / total_ns.max(1) as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    let mut l = Table::new(&["locale", "ops", "total_ns", "mean_ns"]);
+    for (locale, n, ns) in blame_by_locale(&ops) {
+        l.row_display(&[
+            locale.to_string(),
+            n.to_string(),
+            ns.to_string(),
+            (ns / n.max(1)).to_string(),
+        ]);
+    }
+    println!("{}", l.render());
+    Ok(())
+}
+
+/// The flat point objects of a committed `BENCH_*.json` (the one-line
+/// `{"topology": ..., ...}` entries of its `points` array).
+fn parse_bench_points(path: &str) -> Result<Vec<Vec<(String, crate::obs::Val)>>> {
+    use crate::obs::replay::parse_flat_json;
+    let body = std::fs::read_to_string(path).map_err(|e| err!("read {path}: {e}"))?;
+    let mut points = Vec::new();
+    for line in body.lines() {
+        let t = line.trim();
+        if t.starts_with("{\"") {
+            points.push(
+                parse_flat_json(t.trim_end_matches(','))
+                    .map_err(|e| err!("{path}: {e}"))?,
+            );
+        }
+    }
+    if points.is_empty() {
+        bail!("no bench points found in {path} (expected BENCH_*.json)");
+    }
+    Ok(points)
+}
+
+/// `trace slo <BENCH.json> [--baseline FILE] [--p99 NS] [--margin PCT]`:
+/// the CI tail-latency gate. Every `*_p99_ns` / `*_p999_ns` metric of
+/// every fresh point is compared against the committed baseline point
+/// with the same (topology, locales); `--margin` allows a percentage
+/// headroom, `--p99` additionally caps `op_p99_ns` absolutely. Exit code
+/// is the verdict, so CI can run it directly as a failing gate.
+fn trace_slo(args: &Args, path: &str) -> Result<()> {
+    use crate::obs::replay::{get_str, get_u64};
+    let fresh = parse_bench_points(path)?;
+    let margin = args.get_u64("margin", 0);
+    let p99_cap = match args.get("p99") {
+        None => None,
+        Some(v) => {
+            Some(v.parse::<u64>().map_err(|_| err!("--p99: expected ns, got '{v}'"))?)
+        }
+    };
+    let baseline = match args.get("baseline") {
+        None => None,
+        Some(p) => Some(parse_bench_points(p)?),
+    };
+    if baseline.is_none() && p99_cap.is_none() {
+        bail!("nothing to gate: pass --baseline FILE and/or --p99 NS");
+    }
+    let mut checked = 0usize;
+    let mut regressions = 0usize;
+    for p in &fresh {
+        let topo = get_str(p, "topology").map_err(|e| err!("{path}: {e}"))?;
+        let locales = get_u64(p, "locales").map_err(|e| err!("{path}: {e}"))?;
+        if let Some(base) = &baseline {
+            let b = base
+                .iter()
+                .find(|b| {
+                    get_str(b, "topology").ok() == Some(topo)
+                        && get_u64(b, "locales").ok() == Some(locales)
+                })
+                .ok_or_else(|| {
+                    err!("baseline has no point for ({topo}, {locales} locales)")
+                })?;
+            for (k, _) in p {
+                if !(k.ends_with("_p99_ns") || k.ends_with("_p999_ns")) {
+                    continue;
+                }
+                let fv = get_u64(p, k).map_err(|e| err!("{path}: {e}"))?;
+                let bv = get_u64(b, k)
+                    .map_err(|e| err!("baseline point ({topo}, {locales}): {e}"))?;
+                checked += 1;
+                // Integer-exact: fresh > base * (1 + margin/100).
+                if fv * 100 > bv * (100 + margin) {
+                    regressions += 1;
+                    println!(
+                        "REGRESSION {topo}/{locales} {k}: {fv} ns vs baseline {bv} ns \
+                         (+{margin}% margin)"
+                    );
+                }
+            }
+        }
+        if let Some(cap) = p99_cap {
+            let v = get_u64(p, "op_p99_ns").map_err(|e| err!("{path}: {e}"))?;
+            checked += 1;
+            if v > cap {
+                regressions += 1;
+                println!("SLO BREACH {topo}/{locales} op_p99_ns: {v} ns > cap {cap} ns");
+            }
+        }
+    }
+    if regressions > 0 {
+        bail!(
+            "{regressions} of {checked} tail-latency metric(s) regressed \
+             (fresh {path} vs gate)"
+        );
+    }
+    println!(
+        "SLO gate passed: {checked} metric(s) across {} point(s) within bounds",
+        fresh.len()
+    );
     Ok(())
 }
 
@@ -1121,6 +1396,70 @@ mod tests {
         assert!(run_cli(&argv("trace summary target/trace-test/does-not-exist")).is_err());
         assert!(run_cli(&argv("sim --trace-in")).is_err());
         assert!(run_cli(&argv("check --trace-out")).is_err());
+        assert!(run_cli(&argv("trace critical-path")).is_err());
+        assert!(run_cli(&argv("trace slo")).is_err());
+    }
+
+    #[test]
+    fn bench_service_quick_runs() {
+        run_cli(&argv("bench service --quick")).unwrap();
+    }
+
+    #[test]
+    fn service_trace_feeds_critical_path_and_attribute() {
+        std::fs::create_dir_all("target/trace-test").unwrap();
+        let p = "target/trace-test/service.trace.jsonl";
+        run_cli(&argv(&format!("bench service --quick --trace-out {p}"))).unwrap();
+        run_cli(&argv(&format!("trace summary {p}"))).unwrap();
+        run_cli(&argv(&format!("trace critical-path {p} --n 3"))).unwrap();
+        run_cli(&argv(&format!("trace attribute {p}"))).unwrap();
+        // A service trace is not a sim trace — kind mismatch stays hard.
+        assert!(run_cli(&argv(&format!("sim --trace-in {p}"))).is_err());
+        // A trace with no completed op spans cannot be attributed.
+        let empty = "target/trace-test/empty.trace.jsonl";
+        std::fs::write(
+            empty,
+            "{\"trace\": \"pgas-nb\", \"version\": 1, \"kind\": \"service\"}\n",
+        )
+        .unwrap();
+        assert!(run_cli(&argv(&format!("trace critical-path {empty}"))).is_err());
+        assert!(run_cli(&argv(&format!("trace attribute {empty}"))).is_err());
+    }
+
+    #[test]
+    fn trace_slo_gates_on_baseline_and_cap() {
+        std::fs::create_dir_all("target/trace-test").unwrap();
+        let base = "target/trace-test/slo-base.json";
+        let fresh_ok = "target/trace-test/slo-ok.json";
+        let fresh_bad = "target/trace-test/slo-bad.json";
+        let point = |p99: u64, p999: u64| {
+            format!(
+                "{{\n  \"bench\": \"t\",\n  \"points\": [\n    \
+                 {{\"topology\": \"ring\", \"locales\": 4, \"op_p99_ns\": {p99}, \
+                 \"op_p999_ns\": {p999}}}\n  ]\n}}\n"
+            )
+        };
+        std::fs::write(base, point(1_000, 2_000)).unwrap();
+        std::fs::write(fresh_ok, point(1_000, 2_000)).unwrap();
+        std::fs::write(fresh_bad, point(1_500, 2_000)).unwrap();
+        run_cli(&argv(&format!("trace slo {fresh_ok} --baseline {base}"))).unwrap();
+        run_cli(&argv(&format!("trace slo {fresh_ok} --p99 1000"))).unwrap();
+        // A 50% p99 regression fails the gate; a generous margin passes it.
+        assert!(run_cli(&argv(&format!("trace slo {fresh_bad} --baseline {base}"))).is_err());
+        run_cli(&argv(&format!("trace slo {fresh_bad} --baseline {base} --margin 60"))).unwrap();
+        // Absolute cap breach fails regardless of baseline.
+        assert!(run_cli(&argv(&format!("trace slo {fresh_bad} --p99 1000"))).is_err());
+        // No gate criteria at all is an error, not a vacuous pass.
+        assert!(run_cli(&argv(&format!("trace slo {fresh_ok}"))).is_err());
+        // A fresh point with no baseline counterpart is a hard error.
+        let other = "target/trace-test/slo-other.json";
+        std::fs::write(
+            other,
+            "{\n  \"points\": [\n    {\"topology\": \"dragonfly\", \"locales\": 8, \
+             \"op_p99_ns\": 5}\n  ]\n}\n",
+        )
+        .unwrap();
+        assert!(run_cli(&argv(&format!("trace slo {other} --baseline {base}"))).is_err());
     }
 
     #[test]

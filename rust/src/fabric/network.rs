@@ -135,6 +135,11 @@ pub struct Network {
     /// Attached trace recorder; `None` (the default) skips all event
     /// construction — the zero-overhead-when-off contract.
     tracer: Option<Arc<Tracer>>,
+    /// Task id stamped onto hop events of subsequent DES sends.
+    /// [`INFRA_TASK`] by default (the epoch DES's convention); the
+    /// service DES sets the acting task around each step so
+    /// `obs::attribution` can walk an op's span through its hops.
+    cur_task: u32,
     messages: u64,
     hops: u64,
     bytes: u64,
@@ -150,6 +155,7 @@ impl Network {
             links: HashMap::new(),
             adaptive: None,
             tracer: None,
+            cur_task: INFRA_TASK,
             messages: 0,
             hops: 0,
             bytes: 0,
@@ -165,6 +171,15 @@ impl Network {
     /// runs deliver identically.
     pub fn set_tracer(&mut self, t: Arc<Tracer>) {
         self.tracer = Some(t);
+    }
+
+    /// Stamp subsequent DES sends' hop events with this task id (pass
+    /// [`INFRA_TASK`] to restore the default). Purely an event-metadata
+    /// knob: routing, queueing and every counter are unaffected, so
+    /// untraced runs and traces that never call this are byte-identical
+    /// to before the knob existed.
+    pub fn set_task(&mut self, task: u32) {
+        self.cur_task = task;
     }
 
     /// A network whose DES sends route adaptively (see the module docs).
@@ -271,6 +286,7 @@ impl Network {
         // Cloned up front (an Arc bump when tracing, a no-op when not) so
         // event emission below doesn't alias the `links` borrow.
         let tracer = if queue_at.is_some() { self.tracer.clone() } else { None };
+        let task = self.cur_task;
         let mut t = now + topo.injection_ns();
         let mut pure = topo.injection_ns();
         let mut waited = 0u64;
@@ -287,11 +303,11 @@ impl Network {
                 // makes the zero-cost crossbar exactly the flat model.
                 st.res.tally(1, 0); // count the message only
                 if let Some(tr) = &tracer {
-                    tr.record_at(t, INFRA_TASK, lf, Event::HopEnq { from: lf, to: lt, wait_ns: 0 });
+                    tr.record_at(t, task, lf, Event::HopEnq { from: lf, to: lt, wait_ns: 0 });
                 }
                 t += topo.link_ns(link);
                 if let Some(tr) = &tracer {
-                    tr.record_at(t, INFRA_TASK, lf, Event::HopDeq { from: lf, to: lt });
+                    tr.record_at(t, task, lf, Event::HopDeq { from: lf, to: lt });
                 }
             } else {
                 // Serialize onto the link (queueing behind in-flight
@@ -311,14 +327,14 @@ impl Network {
                     // reached), deq when the hop fully completed.
                     tr.record_at(
                         done_ser - ser,
-                        INFRA_TASK,
+                        task,
                         lf,
                         Event::HopEnq { from: lf, to: lt, wait_ns: wait },
                     );
                 }
                 t = done_ser + topo.link_ns(link);
                 if let Some(tr) = &tracer {
-                    tr.record_at(t, INFRA_TASK, lf, Event::HopDeq { from: lf, to: lt });
+                    tr.record_at(t, task, lf, Event::HopDeq { from: lf, to: lt });
                 }
             }
             pure += ser + topo.link_ns(link);

@@ -11,3 +11,4 @@ pub mod pgas;
 pub mod runtime;
 pub mod sim;
 pub mod util;
+pub mod workloads;

@@ -25,24 +25,35 @@
 //!   config (the schedule section); because every DES here is a pure
 //!   function of config + seed, `--trace-in` reproduces a recorded run —
 //!   including a failing `check` — deterministically.
+//! * [`attribution`] — critical-path extraction over a recorded trace:
+//!   walk each op's span through AM send/deliver, per-hop link enq/deq
+//!   and epoch/reclaim events, blaming every nanosecond on exactly one
+//!   layer or directed link, with a conservation check (attributed ==
+//!   recorded latency on an undamaged trace).
 //!
 //! Wired through `Pgas::charge*`/`on`, `fabric::Network`,
-//! `pgas::aggregation`, `epoch::manager`, and both DES testbeds; driven
+//! `pgas::aggregation`, `epoch::manager`, and the DES testbeds; driven
 //! from the CLI via `--trace-out`/`--trace-in` and the `trace`
-//! subcommand (`summary`, `diff`, `top-ops`). See README "Observability".
+//! subcommand (`summary`, `diff`, `top-ops`, `critical-path`,
+//! `attribute`, `slo`). See README "Observability".
 
+pub mod attribution;
 pub mod event;
 pub mod metrics;
 pub mod replay;
 pub mod span;
 pub mod tracer;
 
+pub use attribution::{
+    aggregate_blame, attribute_ops, blame_by_locale, conservation, slowest_ops, Layer,
+    OpAttribution,
+};
 pub use event::{Event, TraceEvent, INFRA_TASK};
 pub use metrics::MetricsRegistry;
 pub use replay::{
     check_from_header, epoch_from_header, header_for_check, header_for_epoch,
-    header_for_mutation, mutation_from_header, parse_trace_bytes, parse_trace_file, ParsedTrace,
-    TraceHeader, Val, TRACE_VERSION,
+    header_for_mutation, header_for_service, mutation_from_header, parse_trace_bytes,
+    parse_trace_file, service_from_header, ParsedTrace, TraceHeader, Val, TRACE_VERSION,
 };
 pub use span::{span_id, span_iter, span_task, LatencyStats};
 pub use tracer::Tracer;

@@ -386,6 +386,52 @@ pub fn check_from_header(fields: &[(String, Val)]) -> Result<(Collection, CheckC
     Ok((collection, cfg))
 }
 
+/// Header for a service-scenario run (`service` kind; used by the
+/// fig11 bench trace point and `bench service --trace-out`).
+pub fn header_for_service(cfg: &crate::workloads::ServiceConfig) -> TraceHeader {
+    TraceHeader::new("service")
+        .str("model", model_name(&cfg.model))
+        .u64("locales", cfg.locales as u64)
+        .u64("tasks_per_locale", cfg.tasks_per_locale as u64)
+        .u64("clients", cfg.clients as u64)
+        .u64("ops_per_task", cfg.ops_per_task as u64)
+        .f64("skew", cfg.skew)
+        .u64("read_pct", cfg.read_pct as u64)
+        .u64("put_pct", cfg.put_pct as u64)
+        .u64("del_pct", cfg.del_pct as u64)
+        .u64("scan_len", cfg.scan_len)
+        .u64("churn_every", cfg.churn_every)
+        .u64("reclaim_every", cfg.reclaim_every as u64)
+        .u64("buckets_per_locale", cfg.buckets_per_locale as u64)
+        .str("topology", cfg.topology.label())
+        .u64("seed", cfg.seed)
+}
+
+/// Rebuild the [`crate::workloads::ServiceConfig`] recorded by
+/// [`header_for_service`].
+pub fn service_from_header(
+    fields: &[(String, Val)],
+) -> Result<crate::workloads::ServiceConfig, String> {
+    let topo = get_str(fields, "topology")?;
+    Ok(crate::workloads::ServiceConfig {
+        model: model_from_name(get_str(fields, "model")?)?,
+        locales: get_u64(fields, "locales")? as usize,
+        tasks_per_locale: get_u64(fields, "tasks_per_locale")? as usize,
+        clients: get_u64(fields, "clients")? as usize,
+        ops_per_task: get_u64(fields, "ops_per_task")? as usize,
+        skew: get_f64(fields, "skew")?,
+        read_pct: get_u64(fields, "read_pct")? as u32,
+        put_pct: get_u64(fields, "put_pct")? as u32,
+        del_pct: get_u64(fields, "del_pct")? as u32,
+        scan_len: get_u64(fields, "scan_len")?,
+        churn_every: get_u64(fields, "churn_every")?,
+        reclaim_every: get_u64(fields, "reclaim_every")? as usize,
+        buckets_per_locale: get_u64(fields, "buckets_per_locale")? as usize,
+        topology: TopologyKind::parse(topo).ok_or_else(|| format!("unknown topology '{topo}'"))?,
+        seed: get_u64(fields, "seed")?,
+    })
+}
+
 fn mutant_from_label(s: &str) -> Result<Mutant, String> {
     for m in [Mutant::None, Mutant::StackSplitCas, Mutant::QueueSplitCas, Mutant::SkipDeferGuard] {
         if m.label() == s {
@@ -580,6 +626,47 @@ mod tests {
         let (coll, back) = check_from_header(&fields).unwrap();
         assert_eq!(coll, Collection::Stack);
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn service_header_round_trips() {
+        let cfg = crate::workloads::ServiceConfig {
+            model: NicModel::aries_no_network_atomics(),
+            locales: 8,
+            tasks_per_locale: 4,
+            clients: 2_097_152,
+            ops_per_task: 4_000,
+            skew: 0.99,
+            read_pct: 80,
+            put_pct: 12,
+            del_pct: 5,
+            scan_len: 16,
+            churn_every: 5_000,
+            reclaim_every: 64,
+            buckets_per_locale: 64,
+            topology: TopologyKind::Dragonfly,
+            seed: 23,
+        };
+        let header = header_for_service(&cfg);
+        let fields = parse_flat_json(&header.to_json()).unwrap();
+        assert_eq!(get_str(&fields, "kind").unwrap(), "service");
+        let back = service_from_header(&fields).unwrap();
+        assert_eq!(back.locales, cfg.locales);
+        assert_eq!(back.tasks_per_locale, cfg.tasks_per_locale);
+        assert_eq!(back.clients, cfg.clients);
+        assert_eq!(back.ops_per_task, cfg.ops_per_task);
+        assert_eq!(back.skew, cfg.skew);
+        assert_eq!(
+            (back.read_pct, back.put_pct, back.del_pct),
+            (cfg.read_pct, cfg.put_pct, cfg.del_pct)
+        );
+        assert_eq!(back.scan_len, cfg.scan_len);
+        assert_eq!(back.churn_every, cfg.churn_every);
+        assert_eq!(back.reclaim_every, cfg.reclaim_every);
+        assert_eq!(back.buckets_per_locale, cfg.buckets_per_locale);
+        assert_eq!(back.topology, cfg.topology);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.model.network_atomics, cfg.model.network_atomics);
     }
 
     #[test]

@@ -297,4 +297,65 @@ mod tests {
             |samples| shrink_vec(samples, |&v| crate::util::proptest::shrink_u64(v)),
         );
     }
+
+    #[test]
+    fn histogram_percentiles_are_monotone_and_merge_preserves_them() {
+        use crate::util::proptest::{shrink_vec, Prop};
+        // Satellite of ISSUE 8: tail order must hold on any sample —
+        // p50 <= p95 <= p99 <= p999 — and merging two halves must be
+        // indistinguishable from having recorded every value into one
+        // histogram (count, mean, max, and every reported percentile).
+        let ps = [50.0, 95.0, 99.0, 99.9];
+        Prop::new("histogram percentile monotonicity under merge").cases(64).check(
+            |rng| {
+                let n = 1 + rng.next_usize(200);
+                (0..n)
+                    .map(|_| match rng.next_usize(4) {
+                        0 => rng.next_below(4),
+                        1 => rng.next_below(1 << 10),
+                        2 => rng.next_below(1 << 30),
+                        _ => rng.next_below(1 << 62),
+                    })
+                    .collect::<Vec<u64>>()
+            },
+            |samples| {
+                let mut whole = LatencyHistogram::new();
+                let (mut a, mut b) = (LatencyHistogram::new(), LatencyHistogram::new());
+                for (i, &v) in samples.iter().enumerate() {
+                    whole.record(v);
+                    if i % 2 == 0 {
+                        a.record(v);
+                    } else {
+                        b.record(v);
+                    }
+                }
+                a.merge(&b);
+                if (a.count(), a.max()) != (whole.count(), whole.max()) {
+                    return Err(format!(
+                        "merge lost mass: ({}, {}) vs ({}, {})",
+                        a.count(),
+                        a.max(),
+                        whole.count(),
+                        whole.max()
+                    ));
+                }
+                if (a.mean() - whole.mean()).abs() > 1e-9 {
+                    return Err(format!("merge changed the mean: {} vs {}", a.mean(), whole.mean()));
+                }
+                for h in [&whole, &a] {
+                    let tails: Vec<u64> = ps.iter().map(|&p| h.percentile(p)).collect();
+                    if tails.windows(2).any(|w| w[0] > w[1]) {
+                        return Err(format!("percentiles not monotone: {tails:?}"));
+                    }
+                }
+                let single: Vec<u64> = ps.iter().map(|&p| whole.percentile(p)).collect();
+                let merged: Vec<u64> = ps.iter().map(|&p| a.percentile(p)).collect();
+                if single != merged {
+                    return Err(format!("merge moved percentiles: {single:?} vs {merged:?}"));
+                }
+                Ok(())
+            },
+            |samples| shrink_vec(samples, |&v| crate::util::proptest::shrink_u64(v)),
+        );
+    }
 }

@@ -1,0 +1,182 @@
+//! The service scenario on the **live substrate**: the same Zipfian
+//! session-store mix as [`super::service`], but executed against the real
+//! [`InterlockedHashTable`] + [`LockFreeList`] over the threaded PGAS
+//! runtime, with per-op **wall-clock** latency histograms.
+//!
+//! This is the "both the DES and the live substrate" half of ROADMAP
+//! item 3. Wall-clock numbers are interleaving-dependent, so — like the
+//! fig 8 aggregation bench — the live run is a reported artifact only;
+//! the committed `BENCH_service.json` baseline comes exclusively from
+//! the deterministic DES.
+
+use super::service::{OpKind, ServiceConfig};
+use super::zipf::{scramble, Zipfian};
+use crate::collections::{InterlockedHashTable, LockFreeList};
+use crate::epoch::{EpochManager, ReclaimPolicy};
+use crate::pgas::{coforall_locales, coforall_tasks, Machine, Pgas};
+use crate::util::rng::Xoshiro256pp;
+use crate::util::stats::LatencyHistogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Wall-clock outcome of one live service run.
+#[derive(Clone, Debug)]
+pub struct LiveServiceResult {
+    pub wall_ns: u64,
+    pub total_ops: u64,
+    pub throughput_mops: f64,
+    /// Leaked objects after the final `clear` (must be 0).
+    pub leaked: i64,
+    /// Per-op wall latency by kind, indexed by [`OpKind::index`].
+    pub by_kind: [LatencyHistogram; 4],
+}
+
+impl LiveServiceResult {
+    pub fn ops_of(&self, kind: OpKind) -> u64 {
+        self.by_kind[kind.index()].count()
+    }
+}
+
+/// Drive the session-store mix against the real collections. Reuses the
+/// DES config for the mix/skew/population knobs; `ops_per_task` here is
+/// wall-clock work, so callers typically pass a much smaller count than
+/// the DES point (threads are real, virtual time is free).
+pub fn run_service_live(cfg: &ServiceConfig, ops_per_task: usize) -> LiveServiceResult {
+    cfg_assert(cfg);
+    let machine = Machine::new(cfg.locales, cfg.tasks_per_locale);
+    let pgas = Pgas::with_topology(machine, cfg.model, cfg.topology.build(cfg.locales));
+    let zipf = Arc::new(Zipfian::new(cfg.clients, cfg.skew));
+    // Global started-op counter — drives the churn generation exactly
+    // like the DES's `ops_started`.
+    let started = Arc::new(AtomicU64::new(0));
+    let em = EpochManager::with_full_config(
+        Arc::clone(&pgas),
+        ReclaimPolicy::default(),
+        256,
+        None,
+    );
+    let table: InterlockedHashTable<u64> =
+        InterlockedHashTable::new(Arc::clone(&pgas), em.clone(), cfg.locales * cfg.buckets_per_locale);
+    let list = LockFreeList::new(Arc::clone(&pgas), em.clone());
+    // Seed the Harris-list session index with a small hot window so
+    // scans have something to walk.
+    {
+        let tok = em.register();
+        for k in 1..=cfg.scan_len.max(1) {
+            list.insert(&tok, k);
+        }
+    }
+
+    let t0 = Instant::now();
+    let per_task: Vec<Vec<[LatencyHistogram; 4]>> =
+        coforall_locales(Machine::new(cfg.locales, cfg.tasks_per_locale), |loc| {
+            coforall_tasks(cfg.tasks_per_locale, |tid| {
+                let g = loc.index() * cfg.tasks_per_locale + tid;
+                let tok = em.register();
+                let mut rng = Xoshiro256pp::new(cfg.seed ^ (g as u64).wrapping_mul(0xA5A5));
+                let mut hists = [
+                    LatencyHistogram::new(),
+                    LatencyHistogram::new(),
+                    LatencyHistogram::new(),
+                    LatencyHistogram::new(),
+                ];
+                for i in 0..ops_per_task {
+                    let n = started.fetch_add(1, Ordering::Relaxed);
+                    let gen = if cfg.churn_every > 0 { n / cfg.churn_every } else { 0 };
+                    let x = rng.next_below(100) as u32;
+                    let kind = if x < cfg.read_pct {
+                        OpKind::Get
+                    } else if x < cfg.read_pct + cfg.put_pct {
+                        OpKind::Put
+                    } else if x < cfg.read_pct + cfg.put_pct + cfg.del_pct {
+                        OpKind::Del
+                    } else {
+                        OpKind::Scan
+                    };
+                    let rank = zipf.sample(&mut rng) as u64;
+                    let key = scramble(rank ^ (gen << 40));
+                    let began = Instant::now();
+                    match kind {
+                        OpKind::Get => {
+                            table.get(&tok, key);
+                        }
+                        OpKind::Put => table.upsert(&tok, key, g as u64),
+                        OpKind::Del => {
+                            // Session end: drop the record; re-insert on
+                            // next put (upsert), so churn is real.
+                            table.remove(&tok, key);
+                        }
+                        OpKind::Scan => {
+                            // Bounded walk over the session index.
+                            list.contains(&tok, 1 + key % cfg.scan_len.max(1));
+                        }
+                    }
+                    hists[kind.index()].record(began.elapsed().as_nanos() as u64);
+                    if cfg.reclaim_every > 0 && (i + 1) % cfg.reclaim_every == 0 {
+                        tok.try_reclaim();
+                    }
+                }
+                hists
+            })
+        });
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let _ = em.clear();
+
+    let mut by_kind = [
+        LatencyHistogram::new(),
+        LatencyHistogram::new(),
+        LatencyHistogram::new(),
+        LatencyHistogram::new(),
+    ];
+    for task_hists in per_task.into_iter().flatten() {
+        for (agg, h) in by_kind.iter_mut().zip(task_hists.iter()) {
+            agg.merge(h);
+        }
+    }
+    let total_ops: u64 = by_kind.iter().map(|h| h.count()).sum();
+    LiveServiceResult {
+        wall_ns,
+        total_ops,
+        throughput_mops: if wall_ns == 0 { 0.0 } else { total_ops as f64 * 1e3 / wall_ns as f64 },
+        leaked: pgas.live_objects(),
+        by_kind,
+    }
+}
+
+fn cfg_assert(cfg: &ServiceConfig) {
+    assert!(cfg.read_pct + cfg.put_pct + cfg.del_pct <= 100, "op mix exceeds 100%");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::TopologyKind;
+    use crate::pgas::NicModel;
+
+    #[test]
+    fn live_service_smoke() {
+        let cfg = ServiceConfig {
+            model: NicModel::aries_no_network_atomics(),
+            locales: 2,
+            tasks_per_locale: 2,
+            clients: 1_000,
+            ops_per_task: 0, // DES knob unused on the live path
+            skew: 0.99,
+            read_pct: 80,
+            put_pct: 12,
+            del_pct: 5,
+            scan_len: 16,
+            churn_every: 100,
+            reclaim_every: 32,
+            buckets_per_locale: 16,
+            topology: TopologyKind::FullyConnected,
+            seed: 5,
+        };
+        let r = run_service_live(&cfg, 200);
+        assert_eq!(r.total_ops, 2 * 2 * 200);
+        assert_eq!(r.leaked, 0, "clear() must reclaim everything");
+        assert!(r.ops_of(OpKind::Get) > r.total_ops / 2, "read-mostly mix");
+        assert!(r.by_kind[OpKind::Get.index()].percentile(50.0) > 0);
+    }
+}

@@ -1,0 +1,25 @@
+//! Service-scenario workloads (ROADMAP item 3): realistic traffic shapes
+//! driven against both the DES and the live substrate.
+//!
+//! * [`zipf`] — the seeded, integer-exact Zipfian rank sampler (same
+//!   seed ⇒ same stream on every platform) plus the rank→key scramble.
+//! * [`service`] — the million-client session-store DES: read-mostly
+//!   Zipf-skewed get/put/del/scan mix over the sharded hash table +
+//!   Harris list, with key churn and epoch reclamation, where the op
+//!   path itself crosses the fabric (nonzero `transit`/`queue` span
+//!   layers). Emits the per-op-kind percentiles behind
+//!   `BENCH_service.json`.
+//! * [`live`] — the same session-store mix driven against the *real*
+//!   collections (`InterlockedHashTable` + `LockFreeList`) on the
+//!   threaded substrate: wall-clock per-op histograms, reported as a
+//!   bench artifact only (interleaving-dependent, never baselined).
+
+pub mod live;
+pub mod service;
+pub mod zipf;
+
+pub use live::{run_service_live, LiveServiceResult};
+pub use service::{
+    run_service, run_service_traced, OpKind, ServiceConfig, ServiceResult,
+};
+pub use zipf::{harmonic, scramble, Zipfian};

@@ -1,0 +1,923 @@
+//! The million-user `service` scenario (ROADMAP item 3): a Zipfian
+//! session-store driver over the interlocked hash table + Harris list,
+//! run as a DES so every tail-latency number is a deterministic function
+//! of config + seed.
+//!
+//! Simulated tasks multiplex a population of logical clients
+//! ([`ServiceConfig::clients`] — millions at full scale): each iteration
+//! draws a session by Zipf rank, scrambles it to a key, and executes one
+//! op of a read-mostly mix against the key's **home shard** — `get`
+//! (session read), `put` (session update, a bucket CAS), `del` (session
+//! end: unlink + `defer_delete` into limbo), `scan` (a bounded Harris
+//! list walk on the home's index). Unlike the fig4–7 epoch loops, the
+//! *op path itself* crosses the fabric — request and reply are real
+//! [`Network::send`]s that queue on busy links — so the
+//! `inject+transit+queue+epoch` span decomposition finally reads nonzero
+//! outside the tryReclaim machine, and skew-induced hot-spot queueing
+//! shows up in the per-op-kind p99/p999 the service bench reports.
+//!
+//! Key churn: every [`ServiceConfig::churn_every`] started ops the whole
+//! rank→key mapping rotates (a generation counter feeds the scramble),
+//! so the hot set drifts across shards the way real session populations
+//! do. Deletions feed the epoch machinery: every
+//! [`ServiceConfig::reclaim_every`] iterations a task runs a tryReclaim
+//! election/scan/advance/drain, whose scatter traffic rides the same
+//! fabric as the service ops it contends with.
+//!
+//! Tracing: with a tracer attached the sim stamps **the acting task id**
+//! onto its AM and link-hop events (the epoch DES records those at
+//! `INFRA_TASK`), which is what lets `obs::attribution` walk one op's
+//! span through its hops and blame every nanosecond — see
+//! `rust/src/obs/attribution.rs`.
+
+use super::zipf::{scramble, Zipfian};
+use crate::epoch::NUM_EPOCHS;
+use crate::fabric::{NetTotals, Network, TopologyKind};
+use crate::obs::span::{span_id, LatencyStats};
+use crate::obs::{Event, Tracer, INFRA_TASK};
+use crate::pgas::{LocaleId, NicModel, NicOp};
+use crate::sim::{run, MultiResource, Resource, Step, VTime, Workload};
+use crate::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+/// The four service operations, in fixed report order.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// Session read: hash-table `get` on the home shard.
+    Get,
+    /// Session update: hash-table `upsert` (bucket-word CAS).
+    Put,
+    /// Session end: `remove` + `defer_delete` (feeds limbo/reclaim).
+    Del,
+    /// Bounded Harris-list walk on the home's session index.
+    Scan,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 4] = [OpKind::Get, OpKind::Put, OpKind::Del, OpKind::Scan];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::Get => "get",
+            OpKind::Put => "put",
+            OpKind::Del => "del",
+            OpKind::Scan => "scan",
+        }
+    }
+
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            OpKind::Get => 0,
+            OpKind::Put => 1,
+            OpKind::Del => 2,
+            OpKind::Scan => 3,
+        }
+    }
+}
+
+/// Configuration of one service run. Like every DES config here, the
+/// result is a pure function of this struct (seed included).
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub model: NicModel,
+    pub locales: usize,
+    pub tasks_per_locale: usize,
+    /// Logical client/session population — the Zipf rank space. Millions
+    /// at full scale; each sim task serves whichever client its next
+    /// draw lands on.
+    pub clients: usize,
+    /// Iterations (service ops) per sim task.
+    pub ops_per_task: usize,
+    /// Zipf skew `s` (0 = uniform; YCSB-style stores use ≈ 0.99).
+    pub skew: f64,
+    /// Op mix, in percent; `get` = `read_pct`, remainder after
+    /// `read_pct + put_pct + del_pct` is `scan`.
+    pub read_pct: u32,
+    pub put_pct: u32,
+    pub del_pct: u32,
+    /// Nodes a `scan` walks on the home's list index.
+    pub scan_len: u64,
+    /// Rotate the rank→key mapping every this many started ops
+    /// (0 = stable keys, no churn).
+    pub churn_every: u64,
+    /// Each task attempts `tryReclaim` every this many iterations
+    /// (0 = never; deletions then just accumulate in limbo).
+    pub reclaim_every: usize,
+    /// Hash-bucket serialization points per locale (the shard's word
+    /// granularity — smaller = more same-bucket contention).
+    pub buckets_per_locale: usize,
+    pub topology: TopologyKind,
+    pub seed: u64,
+}
+
+impl ServiceConfig {
+    pub fn total_tasks(&self) -> usize {
+        self.locales * self.tasks_per_locale
+    }
+
+    fn assert_valid(&self) {
+        assert!(self.locales > 0 && self.tasks_per_locale > 0);
+        assert!(self.clients > 0 && self.buckets_per_locale > 0);
+        assert!(
+            self.read_pct + self.put_pct + self.del_pct <= 100,
+            "op mix percentages exceed 100"
+        );
+    }
+}
+
+/// Result of one service run.
+#[derive(Clone, Debug)]
+pub struct ServiceResult {
+    pub makespan_ns: VTime,
+    pub total_ops: u64,
+    pub throughput_mops: f64,
+    /// Ops whose home shard was remote (crossed the fabric twice).
+    pub remote_ops: u64,
+    pub advances: u64,
+    pub lost_elections: u64,
+    pub not_quiescent: u64,
+    pub freed: u64,
+    /// Active messages received across all locales.
+    pub ams_rx_total: u64,
+    pub net: NetTotals,
+    /// Aggregate per-op decomposition (op = inject + transit + queue +
+    /// epoch) — the block every `BENCH_*.json` point carries.
+    pub latency: LatencyStats,
+    /// The same decomposition split by op kind, indexed by
+    /// [`OpKind::index`]; `by_kind[i].count()` is that kind's op count.
+    pub by_kind: [LatencyStats; 4],
+}
+
+struct SLoc {
+    epoch: u64,
+    flag: bool,
+    flag_res: Resource,
+    epoch_res: Resource,
+    limbo_res: Resource,
+    /// The Harris-list index head — scans serialize their walk set-up
+    /// here (reads are lock-free but the head word still ping-pongs).
+    list_res: Resource,
+    /// Per-bucket hash words: the shard's serialization granularity.
+    buckets: Vec<Resource>,
+    progress_res: MultiResource,
+    /// limbo[list][owner_locale] = deferred-session count.
+    limbo: Vec<Vec<u64>>,
+}
+
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+enum SPhase {
+    Pin,
+    Work,
+    Unpin,
+    MaybeReclaim,
+    // --- tryReclaim machine (two-level FCFS election, as in the paper) ---
+    RFlag,
+    RGlobal,
+    RScan { this_epoch: u64 },
+    RDrain { new_epoch: u64 },
+    RRelease,
+    Finished,
+}
+
+struct STask {
+    locale: usize,
+    remaining: usize,
+    iter: usize,
+    epoch: u64, // token epoch (0 = quiescent)
+    phase: SPhase,
+    /// The in-flight op, chosen at `Pin`.
+    kind: OpKind,
+    home: usize,
+    key: u64,
+    rng: Xoshiro256pp,
+    // --- span accounting (never feeds back into the simulation) ---
+    span_open: bool,
+    span_began: VTime,
+    span_transit: u64,
+    span_queued: u64,
+    span_epoch: u64,
+}
+
+/// Multiplicative latency jitter (±12.5%), same form as the epoch DES.
+#[inline]
+fn jitter(rng: &mut Xoshiro256pp, ns: VTime) -> VTime {
+    if ns == 0 {
+        return 0;
+    }
+    ns * (896 + rng.next_below(257)) / 1024
+}
+
+struct ServiceSim {
+    cfg: ServiceConfig,
+    zipf: Zipfian,
+    jrng: Xoshiro256pp,
+    global_epoch: u64,
+    global_flag: bool,
+    global_res: Resource,
+    net: Network,
+    locs: Vec<SLoc>,
+    tasks: Vec<STask>,
+    // stats
+    ops_started: u64,
+    remote_ops: u64,
+    advances: u64,
+    lost_elections: u64,
+    not_quiescent: u64,
+    freed: u64,
+    ams_rx: Vec<u64>,
+    active: usize,
+    tracer: Option<Arc<Tracer>>,
+    lat: LatencyStats,
+    lat_kind: [LatencyStats; 4],
+}
+
+impl ServiceSim {
+    /// Draw the next op for `tid`: kind from the mix, session from the
+    /// Zipf law, key from the (churn-rotated) scramble of its rank.
+    fn choose_op(&mut self, tid: usize) {
+        let cfg = &self.cfg;
+        let gen = if cfg.churn_every > 0 { self.ops_started / cfg.churn_every } else { 0 };
+        let x = self.tasks[tid].rng.next_below(100) as u32;
+        let kind = if x < cfg.read_pct {
+            OpKind::Get
+        } else if x < cfg.read_pct + cfg.put_pct {
+            OpKind::Put
+        } else if x < cfg.read_pct + cfg.put_pct + cfg.del_pct {
+            OpKind::Del
+        } else {
+            OpKind::Scan
+        };
+        let rank = self.zipf.sample(&mut self.tasks[tid].rng) as u64;
+        let key = scramble(rank ^ (gen << 40));
+        let task = &mut self.tasks[tid];
+        task.kind = kind;
+        task.key = key;
+        task.home = (key % self.cfg.locales as u64) as usize;
+    }
+
+    /// One 64-bit atomic on a word local to the issuing locale.
+    fn op64_local(cfg: &ServiceConfig, rng: &mut Xoshiro256pp, word: &mut Resource, now: VTime) -> VTime {
+        if cfg.model.network_atomics {
+            let latency = jitter(rng, cfg.model.rdma_atomic_ns);
+            let occ = cfg.model.rdma_occupancy_ns.min(latency);
+            word.acquire(now, occ) - occ + latency
+        } else {
+            word.acquire(now, cfg.model.local_atomic_ns)
+        }
+    }
+
+    /// One 128-bit (DCAS) atomic on a local word.
+    fn op128_local(cfg: &ServiceConfig, word: &mut Resource, now: VTime) -> VTime {
+        word.acquire(now, cfg.model.local_dcas_ns)
+    }
+
+    /// A 64-bit atomic issued from `from` on a word living on `target`
+    /// (the reclaim machine's flag/epoch traffic). Same shape as the
+    /// epoch DES: fabric out, AM demotion when the NIC lacks network
+    /// atomics, pure reverse transit back.
+    #[allow(clippy::too_many_arguments)]
+    fn op64(
+        cfg: &ServiceConfig,
+        rng: &mut Xoshiro256pp,
+        net: &mut Network,
+        word: &mut Resource,
+        pool: &mut MultiResource,
+        now: VTime,
+        from: usize,
+        target: usize,
+    ) -> VTime {
+        let remote = from != target;
+        let (now, back) = if remote {
+            let (f, t) = (LocaleId(from as u16), LocaleId(target as u16));
+            let d = net.send(now, f, t, NicOp::Atomic64.payload_bytes());
+            (d.delivered_at, net.topology().transit_ns(t, f, 8))
+        } else {
+            (now, 0)
+        };
+        if cfg.model.network_atomics {
+            let latency = jitter(rng, cfg.model.rdma_atomic_ns);
+            let occ = cfg.model.rdma_occupancy_ns.min(latency);
+            return word.acquire(now, occ) - occ + latency + back;
+        }
+        if remote {
+            let occ = cfg.model.am_occupancy_ns;
+            let handled = pool.acquire(now, occ);
+            let w = word.acquire(handled, cfg.model.local_atomic_ns);
+            return w + jitter(rng, cfg.model.am_ns.saturating_sub(occ)) + back;
+        }
+        word.acquire(now, cfg.model.local_atomic_ns)
+    }
+
+    /// An AM handled by one of `target`'s handler threads (reclaim-era
+    /// fan-out; pure reverse transit for the ack).
+    fn am(
+        cfg: &ServiceConfig,
+        rng: &mut Xoshiro256pp,
+        net: &mut Network,
+        res: &mut MultiResource,
+        now: VTime,
+        from: usize,
+        target: usize,
+    ) -> VTime {
+        let remote = from != target;
+        let (now, back) = if remote {
+            let (f, t) = (LocaleId(from as u16), LocaleId(target as u16));
+            let d = net.send(now, f, t, NicOp::ActiveMessage.payload_bytes());
+            (d.delivered_at, net.topology().transit_ns(t, f, 8))
+        } else {
+            (now, 0)
+        };
+        let latency = jitter(rng, cfg.model.cost(NicOp::ActiveMessage, remote));
+        let occupancy = if remote { cfg.model.am_occupancy_ns.min(latency) } else { latency };
+        res.acquire(now, occupancy) - occupancy + latency + back
+    }
+
+    /// Count one received AM at `target` and stamp send/deliver events
+    /// with the acting task (issue-time convention for the pair).
+    #[inline]
+    fn rx_am(&mut self, now: VTime, task: u32, from: usize, target: usize) {
+        if from != target {
+            self.ams_rx[target] += 1;
+            if let Some(tr) = &self.tracer {
+                let bytes = NicOp::ActiveMessage.payload_bytes() as u64;
+                tr.record_at(now, task, from as u16, Event::AmSend { dst: target as u16, bytes });
+                tr.record_at(now, task, target as u16, Event::AmDeliver { src: from as u16 });
+            }
+        }
+    }
+
+    /// A remote atomic demoted to an AM (no network atomics on the NIC).
+    #[inline]
+    fn rx_atomic(&mut self, now: VTime, task: u32, from: usize, target: usize) {
+        if from != target && !self.cfg.model.network_atomics {
+            self.ams_rx[target] += 1;
+            if let Some(tr) = &self.tracer {
+                let bytes = NicOp::Atomic64.payload_bytes() as u64;
+                tr.record_at(now, task, from as u16, Event::AmSend { dst: target as u16, bytes });
+                tr.record_at(now, task, target as u16, Event::AmDeliver { src: from as u16 });
+            }
+        }
+    }
+
+    /// Request/reply payloads and the home-side bucket hold per op kind.
+    fn shape_of(cfg: &ServiceConfig, kind: OpKind) -> (usize, usize, u64, u64) {
+        let atomic = cfg.model.local_atomic_ns;
+        let dcas = cfg.model.local_dcas_ns;
+        match kind {
+            // (req_bytes, reply_bytes, bucket_hold_ns, walk_ns)
+            OpKind::Get => (16, 16, atomic, 0),
+            OpKind::Put => (32, 8, dcas, 0),
+            OpKind::Del => (16, 8, dcas, 0),
+            OpKind::Scan => (16, cfg.scan_len as usize * 16, atomic, cfg.scan_len * atomic),
+        }
+    }
+
+    /// Execute the session-store op proper against the home shard.
+    ///
+    /// Remote path — and this is the point of the whole scenario — is a
+    /// *real* round trip: request [`Network::send`] (queueing per hop),
+    /// AM handler occupancy (+ list walk for scans), the bucket-word
+    /// hold, then the **reply as a second real send** rather than the
+    /// epoch DES's pure reverse-transit shortcut. Both directions
+    /// therefore land in the span's `transit`/`queue` layers and leave
+    /// per-hop events a trace walker can blame.
+    fn service_op(&mut self, tid: usize, now: VTime) -> VTime {
+        let cfg = self.cfg.clone();
+        let task = &self.tasks[tid];
+        let (me, home, key, kind) = (task.locale, task.home, task.key, task.kind);
+        let (req_bytes, reply_bytes, hold, walk) = Self::shape_of(&cfg, kind);
+        let bucket = ((key / cfg.locales as u64) % cfg.buckets_per_locale as u64) as usize;
+        if home == me {
+            let t0 = if kind == OpKind::Scan {
+                Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].list_res, now) + walk
+            } else {
+                now
+            };
+            return self.locs[me].buckets[bucket].acquire(t0, hold);
+        }
+        self.remote_ops += 1;
+        self.ams_rx[home] += 1;
+        let (f, h) = (LocaleId(me as u16), LocaleId(home as u16));
+        if let Some(tr) = &self.tracer {
+            tr.record_at(now, tid as u32, me as u16, Event::AmSend { dst: home as u16, bytes: req_bytes as u64 });
+        }
+        let d = self.net.send(now, f, h, req_bytes);
+        if let Some(tr) = &self.tracer {
+            tr.record_at(d.delivered_at, tid as u32, home as u16, Event::AmDeliver { src: me as u16 });
+        }
+        // Handler: occupancy on one of the home's AM threads (a scan
+        // walks the list while holding its thread), then the bucket word.
+        let occ = cfg.model.am_occupancy_ns + walk;
+        let handled = if kind == OpKind::Scan {
+            let t = self.locs[home].progress_res.acquire(d.delivered_at, occ);
+            Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[home].list_res, t - walk) + walk
+        } else {
+            self.locs[home].progress_res.acquire(d.delivered_at, occ)
+        };
+        let w = self.locs[home].buckets[bucket].acquire(handled, hold);
+        let t_reply = w + jitter(&mut self.jrng, cfg.model.am_ns.saturating_sub(cfg.model.am_occupancy_ns));
+        if let Some(tr) = &self.tracer {
+            tr.record_at(t_reply, tid as u32, home as u16, Event::AmSend { dst: me as u16, bytes: reply_bytes as u64 });
+        }
+        let d2 = self.net.send(t_reply, h, f, reply_bytes);
+        if let Some(tr) = &self.tracer {
+            tr.record_at(d2.delivered_at, tid as u32, me as u16, Event::AmDeliver { src: home as u16 });
+        }
+        d2.delivered_at
+    }
+
+    /// Drain one locale's expired limbo list (pop + per-owner scatter),
+    /// exactly the epoch DES's shape. Returns the completion time.
+    fn drain_loc(&mut self, now: VTime, task: u32, loc: usize, list_idx: usize) -> VTime {
+        let cfg = self.cfg.clone();
+        let mut t = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[loc].limbo_res, now);
+        let counts = std::mem::replace(&mut self.locs[loc].limbo[list_idx], vec![0; cfg.locales]);
+        let mut freed = 0u64;
+        for (owner, &n) in counts.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            freed += n;
+            t += n * cfg.model.local_dcas_ns; // node-pool recycling
+            if owner != loc {
+                let put = cfg.model.cost(NicOp::Put(n as usize * 16), true);
+                t += put;
+                t = self
+                    .net
+                    .send(t, LocaleId(loc as u16), LocaleId(owner as u16), n as usize * 16)
+                    .delivered_at;
+                self.rx_am(t, task, loc, owner);
+                t = Self::am(
+                    &cfg,
+                    &mut self.jrng,
+                    &mut self.net,
+                    &mut self.locs[owner].progress_res,
+                    t,
+                    loc,
+                    owner,
+                );
+                t += n * cfg.model.local_atomic_ns;
+            } else {
+                t += n * cfg.model.local_atomic_ns;
+            }
+        }
+        if freed > 0 {
+            self.freed += freed;
+            if let Some(tr) = &self.tracer {
+                tr.record_at(t, task, loc as u16, Event::Reclaim { n: freed });
+            }
+        }
+        t
+    }
+
+    /// The step machine proper; the [`Workload`] impl wraps it in span
+    /// accounting and never leaks back into it.
+    fn step_inner(&mut self, tid: usize, now: VTime) -> Step {
+        let cfg = self.cfg.clone();
+        let me = self.tasks[tid].locale;
+        match self.tasks[tid].phase {
+            SPhase::Pin => {
+                if self.tasks[tid].remaining == 0 {
+                    self.tasks[tid].epoch = 0;
+                    self.active -= 1;
+                    self.tasks[tid].phase = SPhase::Finished;
+                    return Step::Done;
+                }
+                self.tasks[tid].remaining -= 1;
+                self.tasks[tid].iter += 1;
+                self.choose_op(tid);
+                self.ops_started += 1;
+                // pin = read locale epoch + token store + re-validate.
+                let t1 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].epoch_res, now);
+                let t2 = t1 + cfg.model.cost(NicOp::Atomic64, false);
+                let t3 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].epoch_res, t2);
+                if self.tasks[tid].epoch == 0 {
+                    self.tasks[tid].epoch = self.locs[me].epoch;
+                }
+                if let Some(tr) = &self.tracer {
+                    tr.record_at(t3, tid as u32, me as u16, Event::Pin { epoch: self.tasks[tid].epoch });
+                }
+                self.tasks[tid].phase = SPhase::Work;
+                Step::ResumeAt(t3)
+            }
+            SPhase::Work => {
+                let mut t = self.service_op(tid, now);
+                if self.tasks[tid].kind == OpKind::Del {
+                    // defer_delete at the issuing locale, owner = home
+                    // (the unlinked node lives on the home shard).
+                    let t1 = Self::op128_local(&cfg, &mut self.locs[me].limbo_res, t);
+                    let t2 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].limbo_res, t1);
+                    let epoch = self.tasks[tid].epoch;
+                    let list = ((epoch - 1) % NUM_EPOCHS) as usize;
+                    let owner = self.tasks[tid].home;
+                    self.locs[me].limbo[list][owner] += 1;
+                    if let Some(tr) = &self.tracer {
+                        tr.record_at(t2, tid as u32, me as u16, Event::Defer { dst: owner as u16, list: list as u64 });
+                    }
+                    t = t2;
+                }
+                self.tasks[tid].phase = SPhase::Unpin;
+                Step::ResumeAt(t)
+            }
+            SPhase::Unpin => {
+                self.tasks[tid].epoch = 0;
+                let t = now + cfg.model.cost(NicOp::Atomic64, false); // token store
+                if let Some(tr) = &self.tracer {
+                    tr.record_at(t, tid as u32, me as u16, Event::Unpin);
+                }
+                self.tasks[tid].phase = SPhase::MaybeReclaim;
+                Step::ResumeAt(t)
+            }
+            SPhase::MaybeReclaim => {
+                let due = cfg.reclaim_every > 0 && self.tasks[tid].iter % cfg.reclaim_every == 0;
+                self.tasks[tid].phase = if due { SPhase::RFlag } else { SPhase::Pin };
+                Step::ResumeAt(now)
+            }
+            SPhase::RFlag => {
+                let t = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].flag_res, now);
+                if self.locs[me].flag {
+                    self.lost_elections += 1;
+                    self.tasks[tid].phase = SPhase::Pin;
+                } else {
+                    self.locs[me].flag = true;
+                    self.tasks[tid].phase = SPhase::RGlobal;
+                }
+                Step::ResumeAt(t)
+            }
+            SPhase::RGlobal => {
+                // The global flag doubles as the epoch read (fetch-style
+                // atomic at the global home, locale 0).
+                self.rx_atomic(now, tid as u32, me, 0);
+                let t = {
+                    let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
+                    Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
+                };
+                if self.global_flag {
+                    self.lost_elections += 1;
+                    let t2 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].flag_res, t);
+                    self.locs[me].flag = false;
+                    self.tasks[tid].phase = SPhase::Pin;
+                    return Step::ResumeAt(t2);
+                }
+                self.global_flag = true;
+                self.tasks[tid].phase = SPhase::RScan { this_epoch: self.global_epoch };
+                Step::ResumeAt(t)
+            }
+            SPhase::RScan { this_epoch } => {
+                // Quiescence scan: one AM per locale, in parallel.
+                let mut t_done = now;
+                for loc in 0..cfg.locales {
+                    self.rx_am(now, tid as u32, me, loc);
+                    let mut t = Self::am(
+                        &cfg,
+                        &mut self.jrng,
+                        &mut self.net,
+                        &mut self.locs[loc].progress_res,
+                        now,
+                        me,
+                        loc,
+                    );
+                    t += cfg.tasks_per_locale as u64 * cfg.model.local_atomic_ns;
+                    t_done = t_done.max(t);
+                }
+                let safe = self.tasks.iter().all(|t| t.epoch == 0 || t.epoch == this_epoch);
+                if !safe {
+                    self.not_quiescent += 1;
+                    self.tasks[tid].phase = SPhase::RRelease;
+                } else {
+                    self.tasks[tid].phase = SPhase::RDrain { new_epoch: this_epoch + 1 };
+                }
+                Step::ResumeAt(t_done)
+            }
+            SPhase::RDrain { new_epoch } => {
+                // Publish the new epoch at the global home...
+                self.rx_atomic(now, tid as u32, me, 0);
+                let t0 = {
+                    let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
+                    Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
+                };
+                self.global_epoch = new_epoch;
+                self.advances += 1;
+                if let Some(tr) = &self.tracer {
+                    tr.record_at(t0, tid as u32, me as u16, Event::Advance { epoch: new_epoch });
+                }
+                // ...then per locale: publish + drain the expired list.
+                let list_idx = ((new_epoch - 1) % NUM_EPOCHS) as usize;
+                let mut t_done = t0;
+                for loc in 0..cfg.locales {
+                    self.rx_am(t0, tid as u32, me, loc);
+                    let mut t = Self::am(
+                        &cfg,
+                        &mut self.jrng,
+                        &mut self.net,
+                        &mut self.locs[loc].progress_res,
+                        t0,
+                        me,
+                        loc,
+                    );
+                    t = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[loc].epoch_res, t);
+                    self.locs[loc].epoch = new_epoch;
+                    t = self.drain_loc(t, tid as u32, loc, list_idx);
+                    t_done = t_done.max(t);
+                }
+                self.tasks[tid].phase = SPhase::RRelease;
+                Step::ResumeAt(t_done)
+            }
+            SPhase::RRelease => {
+                self.rx_atomic(now, tid as u32, me, 0);
+                let t = {
+                    let (g, l0) = (&mut self.global_res, &mut self.locs[0].progress_res);
+                    Self::op64(&cfg, &mut self.jrng, &mut self.net, g, l0, now, me, 0)
+                };
+                self.global_flag = false;
+                let t2 = Self::op64_local(&cfg, &mut self.jrng, &mut self.locs[me].flag_res, t);
+                self.locs[me].flag = false;
+                self.tasks[tid].phase = SPhase::Pin;
+                Step::ResumeAt(t2)
+            }
+            SPhase::Finished => Step::Done,
+        }
+    }
+}
+
+impl Workload for ServiceSim {
+    /// Span accounting around [`ServiceSim::step_inner`], the same
+    /// contract as the epoch DES: a span opens at the `Pin` step that
+    /// starts an iteration and closes when the task next re-enters
+    /// `Pin`; reclaim-machine steps charge their whole duration to the
+    /// `epoch` layer, every other step charges the fabric's
+    /// transit/queue deltas, and `inject` is the remainder.
+    fn step(&mut self, tid: usize, now: VTime) -> Step {
+        let phase_before = self.tasks[tid].phase;
+        let iter_before = self.tasks[tid].iter;
+        let t0 = self.net.transit_ns_total();
+        let q0 = self.net.queued_ns_total();
+        if phase_before == SPhase::Pin && self.tasks[tid].span_open {
+            let task = &mut self.tasks[tid];
+            task.span_open = false;
+            let op_ns = now.saturating_sub(task.span_began);
+            let (transit, queued, epoch) = (task.span_transit, task.span_queued, task.span_epoch);
+            // Satellite of ISSUE 8: the decomposition must be a true
+            // partition of the op — layers may never exceed the total,
+            // so with inject as the remainder they sum to it exactly.
+            debug_assert!(
+                transit + queued + epoch <= op_ns,
+                "span layers exceed the op: transit {transit} + queue {queued} + epoch {epoch} > op {op_ns}"
+            );
+            let inject = op_ns.saturating_sub(transit + queued + epoch);
+            debug_assert_eq!(
+                inject + transit + queued + epoch,
+                op_ns,
+                "span layers must sum to the op's total latency"
+            );
+            let id = span_id(tid as u32, task.iter as u64);
+            let loc = task.locale as u16;
+            let kind = task.kind;
+            self.lat.record_op(op_ns, inject, transit, queued, epoch);
+            self.lat_kind[kind.index()].record_op(op_ns, inject, transit, queued, epoch);
+            if let Some(tr) = &self.tracer {
+                tr.record_at(now, tid as u32, loc, Event::OpEnd { span: id, ns: op_ns });
+            }
+        }
+        // Stamp this task onto every fabric event its step records — the
+        // hook `obs::attribution` keys per-op blame on. Reset afterwards
+        // so infra conventions hold for anything outside a task step.
+        self.net.set_task(tid as u32);
+        let step = self.step_inner(tid, now);
+        self.net.set_task(INFRA_TASK);
+        let dt = self.net.transit_ns_total() - t0;
+        let dq = self.net.queued_ns_total() - q0;
+        if self.tasks[tid].iter > iter_before {
+            let task = &mut self.tasks[tid];
+            task.span_open = true;
+            task.span_began = now;
+            task.span_transit = 0;
+            task.span_queued = 0;
+            task.span_epoch = 0;
+            if let Some(tr) = &self.tracer {
+                let id = span_id(tid as u32, task.iter as u64);
+                tr.record_at(now, tid as u32, task.locale as u16, Event::OpBegin { span: id });
+            }
+        }
+        if self.tasks[tid].span_open {
+            let in_reclaim = matches!(
+                phase_before,
+                SPhase::RFlag
+                    | SPhase::RGlobal
+                    | SPhase::RScan { .. }
+                    | SPhase::RDrain { .. }
+                    | SPhase::RRelease
+            );
+            if in_reclaim {
+                if let Step::ResumeAt(t) = step {
+                    self.tasks[tid].span_epoch += t.saturating_sub(now);
+                }
+            } else {
+                self.tasks[tid].span_transit += dt;
+                self.tasks[tid].span_queued += dq;
+            }
+        }
+        step
+    }
+}
+
+/// Run one service data point.
+pub fn run_service(cfg: ServiceConfig) -> ServiceResult {
+    run_service_traced(cfg, None)
+}
+
+/// [`run_service`] with an optional event sink. Tracing never perturbs
+/// the simulation — traced and untraced same-seed runs produce identical
+/// results (pinned by tests here and in `rust/tests/obs.rs`).
+pub fn run_service_traced(cfg: ServiceConfig, tracer: Option<Arc<Tracer>>) -> ServiceResult {
+    cfg.assert_valid();
+    let n_tasks = cfg.total_tasks();
+    let tasks = (0..n_tasks)
+        .map(|t| STask {
+            locale: t / cfg.tasks_per_locale,
+            remaining: cfg.ops_per_task,
+            iter: 0,
+            epoch: 0,
+            phase: SPhase::Pin,
+            kind: OpKind::Get,
+            home: 0,
+            key: 0,
+            rng: Xoshiro256pp::new(cfg.seed ^ (t as u64).wrapping_mul(0xA5A5)),
+            span_open: false,
+            span_began: 0,
+            span_transit: 0,
+            span_queued: 0,
+            span_epoch: 0,
+        })
+        .collect();
+    let locs = (0..cfg.locales)
+        .map(|_| SLoc {
+            epoch: 1,
+            flag: false,
+            flag_res: Resource::new(),
+            epoch_res: Resource::new(),
+            limbo_res: Resource::new(),
+            list_res: Resource::new(),
+            buckets: (0..cfg.buckets_per_locale).map(|_| Resource::new()).collect(),
+            progress_res: MultiResource::new(cfg.model.am_handlers),
+            limbo: vec![vec![0; cfg.locales]; NUM_EPOCHS as usize],
+        })
+        .collect();
+    let mut net = Network::new(cfg.topology.build(cfg.locales));
+    if let Some(tr) = &tracer {
+        net.set_tracer(tr.clone());
+    }
+    let locales = cfg.locales;
+    let zipf = Zipfian::new(cfg.clients, cfg.skew);
+    let mut sim = ServiceSim {
+        zipf,
+        jrng: Xoshiro256pp::new(cfg.seed ^ 0xBEEF),
+        global_epoch: 1,
+        global_flag: false,
+        global_res: Resource::new(),
+        net,
+        locs,
+        tasks,
+        ops_started: 0,
+        remote_ops: 0,
+        advances: 0,
+        lost_elections: 0,
+        not_quiescent: 0,
+        freed: 0,
+        ams_rx: vec![0; locales],
+        active: n_tasks,
+        tracer,
+        lat: LatencyStats::new(),
+        lat_kind: [LatencyStats::new(), LatencyStats::new(), LatencyStats::new(), LatencyStats::new()],
+        cfg,
+    };
+    let (makespan, _) = run(&mut sim, n_tasks);
+    #[cfg(debug_assertions)]
+    {
+        let reg = crate::obs::MetricsRegistry::from_link_stats(&sim.net.link_stats());
+        if let Err(e) = reg.verify_network(&sim.net.totals()) {
+            panic!("metrics registry drifted from fabric counters: {e}");
+        }
+    }
+    let latency = std::mem::take(&mut sim.lat);
+    let by_kind = std::mem::take(&mut sim.lat_kind);
+    ServiceResult {
+        makespan_ns: makespan,
+        total_ops: sim.ops_started,
+        throughput_mops: if makespan == 0 {
+            0.0
+        } else {
+            sim.ops_started as f64 * 1e3 / makespan as f64
+        },
+        remote_ops: sim.remote_ops,
+        advances: sim.advances,
+        lost_elections: sim.lost_elections,
+        not_quiescent: sim.not_quiescent,
+        freed: sim.freed,
+        ams_rx_total: sim.ams_rx.iter().sum(),
+        net: sim.net.totals(),
+        latency,
+        by_kind,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn small_cfg() -> ServiceConfig {
+        ServiceConfig {
+            model: NicModel::aries_no_network_atomics(),
+            locales: 4,
+            tasks_per_locale: 4,
+            clients: 10_000,
+            ops_per_task: 200,
+            skew: 0.99,
+            read_pct: 80,
+            put_pct: 12,
+            del_pct: 5,
+            scan_len: 16,
+            churn_every: 500,
+            reclaim_every: 64,
+            buckets_per_locale: 32,
+            topology: TopologyKind::Dragonfly,
+            seed: 23,
+        }
+    }
+
+    #[test]
+    fn same_seed_is_deterministic() {
+        let (a, b) = (run_service(small_cfg()), run_service(small_cfg()));
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+        assert_eq!(a.total_ops, b.total_ops);
+        assert_eq!(a.net.messages, b.net.messages);
+        assert_eq!(a.net.queued_ns, b.net.queued_ns);
+        assert_eq!(a.latency.json(), b.latency.json());
+    }
+
+    /// The headline of the scenario: service ops cross the fabric in the
+    /// op path, so transit AND queue finally read nonzero (satellite of
+    /// ISSUE 8; the epoch benches only ever charged fabric time to the
+    /// `epoch` layer).
+    #[test]
+    fn op_path_has_nonzero_transit_and_queue() {
+        let r = run_service(small_cfg());
+        assert!(r.remote_ops > 0, "zipfian keys must land on remote shards");
+        assert!(r.latency.transit.percentile(50.0) > 0, "median op crosses the fabric");
+        assert!(r.latency.queue.percentile(99.0) > 0, "hot-spot skew must queue on links");
+        assert!(r.net.queued_ns > 0);
+    }
+
+    #[test]
+    fn op_mix_and_counts_are_conserved() {
+        let r = run_service(small_cfg());
+        let per_kind: u64 = r.by_kind.iter().map(|s| s.count()).sum();
+        assert_eq!(per_kind, r.total_ops, "every span closes and is kind-attributed");
+        assert_eq!(r.latency.count(), r.total_ops);
+        let gets = r.by_kind[OpKind::Get.index()].count();
+        assert!(gets * 100 > r.total_ops * 60, "read-mostly mix: gets dominate");
+        assert!(r.by_kind[OpKind::Scan.index()].count() > 0, "scans present");
+        assert!(r.freed > 0, "deletions must eventually reclaim");
+        assert!(r.advances > 0);
+    }
+
+    #[test]
+    fn traced_run_matches_untraced_bit_for_bit() {
+        let plain = run_service(small_cfg());
+        let tr = Arc::new(Tracer::new());
+        let traced = run_service_traced(small_cfg(), Some(Arc::clone(&tr)));
+        assert!(tr.recorded() > 0);
+        assert_eq!(plain.makespan_ns, traced.makespan_ns);
+        assert_eq!(plain.net.messages, traced.net.messages);
+        assert_eq!(plain.net.queued_ns, traced.net.queued_ns);
+        assert_eq!(plain.latency.json(), traced.latency.json());
+    }
+
+    /// Fabric hop events carry the acting task id (not `INFRA_TASK`) —
+    /// the contract `obs::attribution` walks spans by.
+    #[test]
+    fn hop_events_are_task_stamped() {
+        let tr = Arc::new(Tracer::new());
+        run_service_traced(small_cfg(), Some(Arc::clone(&tr)));
+        let evs = tr.events();
+        let stamped = evs
+            .iter()
+            .filter(|e| matches!(e.ev, Event::HopEnq { .. }) && e.task != INFRA_TASK)
+            .count();
+        assert!(stamped > 0, "service hops must be attributable to a task");
+        assert!(evs.iter().any(|e| matches!(e.ev, Event::OpBegin { .. })));
+        assert!(evs.iter().any(|e| matches!(e.ev, Event::Reclaim { .. })));
+    }
+
+    #[test]
+    fn churn_rotates_the_hot_set() {
+        let mut with = small_cfg();
+        with.churn_every = 200;
+        let mut without = small_cfg();
+        without.churn_every = 0;
+        // Different key mappings ⇒ different traffic pattern; both are
+        // individually deterministic.
+        assert_ne!(run_service(with).net.bytes, run_service(without).net.bytes);
+    }
+}

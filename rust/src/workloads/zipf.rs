@@ -1,0 +1,172 @@
+//! Seeded Zipfian rank sampling for the service workload.
+//!
+//! Rank `r` (0-based; rank 0 is the hottest key) is drawn with
+//! probability proportional to `(r + 1)^{-s}`, the classic Zipf law —
+//! rank 0's share is `1 / H_{N,s}` where `H_{N,s} = Σ_{i=1..N} i^{-s}`
+//! is the generalized harmonic number. YCSB-style session stores are
+//! benchmarked at `s ≈ 0.99`; `s = 0` degenerates to uniform.
+//!
+//! The sampler is **integer-exact**: weights are truncated to 32.32
+//! fixed point at construction (the only floating-point step, and
+//! `powf` is correctly rounded on every platform we target), prefix
+//! sums are u64, and each draw is one [`Xoshiro256pp::next_below`] +
+//! binary search. Same seed ⇒ same rank stream, bit-for-bit, on every
+//! platform — the property the service bench's committed baseline and
+//! the trace byte-identity tests lean on.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Fixed-point scale for the per-rank weights (32.32).
+const WEIGHT_ONE: f64 = 4_294_967_296.0; // 2^32
+
+/// A Zipf(s) distribution over ranks `0..n`, sampled in O(log n).
+#[derive(Clone, Debug)]
+pub struct Zipfian {
+    /// `cum[r]` = Σ_{i<=r} w_i with `w_i = trunc((i+1)^{-s} · 2^32)`,
+    /// clamped to ≥ 1 so every rank stays reachable.
+    cum: Vec<u64>,
+    s: f64,
+}
+
+impl Zipfian {
+    /// Distribution over `n` ranks with skew `s` (`s = 0` is uniform).
+    pub fn new(n: usize, s: f64) -> Zipfian {
+        assert!(n > 0, "Zipfian needs at least one rank");
+        assert!(s >= 0.0 && s.is_finite(), "skew must be a finite non-negative number");
+        let mut cum = Vec::with_capacity(n);
+        let mut total = 0u64;
+        for i in 0..n {
+            // Truncation (not rounding) keeps the table reproducible in
+            // any language with IEEE doubles and correctly-rounded pow.
+            let w = (((i + 1) as f64).powf(-s) * WEIGHT_ONE) as u64;
+            total += w.max(1);
+            cum.push(total);
+        }
+        Zipfian { cum, s }
+    }
+
+    /// Number of ranks.
+    pub fn n(&self) -> usize {
+        self.cum.len()
+    }
+
+    /// The configured skew `s`.
+    pub fn skew(&self) -> f64 {
+        self.s
+    }
+
+    /// Total fixed-point weight (the sample space of each draw).
+    pub fn total_weight(&self) -> u64 {
+        *self.cum.last().expect("n > 0")
+    }
+
+    /// This rank's exact sampling probability (weight / total). For rank
+    /// 0 this is the fixed-point rendering of `1 / H_{N,s}`.
+    pub fn rank_probability(&self, rank: usize) -> f64 {
+        let lo = if rank == 0 { 0 } else { self.cum[rank - 1] };
+        (self.cum[rank] - lo) as f64 / self.total_weight() as f64
+    }
+
+    /// Draw one rank: a single uniform draw below the total weight, then
+    /// binary search in the prefix sums.
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> usize {
+        let x = rng.next_below(self.total_weight());
+        self.cum.partition_point(|&c| c <= x)
+    }
+}
+
+/// Generalized harmonic number `H_{n,s}` — the normalizer the Zipf law
+/// divides by; tests compare `rank_probability(0)` against `1 / H_{n,s}`.
+pub fn harmonic(n: usize, s: f64) -> f64 {
+    (1..=n).map(|i| (i as f64).powf(-s)).sum()
+}
+
+/// Bijective 64-bit scramble (the SplitMix64 finalizer): maps a rank to a
+/// session key so that adjacent hot ranks scatter across locales instead
+/// of pinning the whole head of the distribution onto `rank % locales`.
+pub fn scramble(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite: same seed ⇒ same stream, different seed ⇒ different.
+    #[test]
+    fn seeded_determinism() {
+        let z = Zipfian::new(10_000, 0.99);
+        let draw = |seed: u64| {
+            let mut rng = Xoshiro256pp::new(seed);
+            (0..2_000).map(|_| z.sample(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(42), draw(42), "same seed must replay the same rank stream");
+        assert_ne!(draw(42), draw(43), "different seeds must diverge");
+    }
+
+    /// Satellite: rank-1 empirical frequency lands within tolerance of
+    /// the law's `1 / H_{N,s}`.
+    #[test]
+    fn rank1_frequency_matches_harmonic_normalizer() {
+        let (n, s) = (100_000, 0.99);
+        let z = Zipfian::new(n, s);
+        let expect = 1.0 / harmonic(n, s);
+        // The fixed-point table itself must render the law almost
+        // exactly (truncation error is ~2^-32 per weight).
+        assert!(
+            (z.rank_probability(0) - expect).abs() < 1e-6,
+            "table probability {} vs 1/H = {}",
+            z.rank_probability(0),
+            expect
+        );
+        let mut rng = Xoshiro256pp::new(7);
+        let draws = 200_000u64;
+        let hits = (0..draws).filter(|_| z.sample(&mut rng) == 0).count() as f64;
+        let got = hits / draws as f64;
+        // 200k draws at p≈0.088: ±10% relative is > 15 sigma of slack.
+        assert!(
+            (got - expect).abs() / expect < 0.10,
+            "rank-1 frequency {got} strays from 1/H = {expect}"
+        );
+    }
+
+    /// Frequencies must be non-increasing in rank, and s = 0 uniform.
+    #[test]
+    fn law_shape() {
+        let z = Zipfian::new(64, 1.2);
+        for r in 1..z.n() {
+            assert!(
+                z.rank_probability(r) <= z.rank_probability(r - 1),
+                "rank {r} more probable than rank {}",
+                r - 1
+            );
+        }
+        let u = Zipfian::new(64, 0.0);
+        let p = u.rank_probability(0);
+        for r in 0..u.n() {
+            assert!((u.rank_probability(r) - p).abs() < 1e-12, "s=0 must be uniform");
+        }
+    }
+
+    /// Every rank stays reachable even under extreme skew (the `max(1)`
+    /// clamp), and sampling never strays out of range.
+    #[test]
+    fn tail_ranks_reachable() {
+        let z = Zipfian::new(1_000, 4.0);
+        assert!(z.rank_probability(999) > 0.0);
+        let mut rng = Xoshiro256pp::new(1);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < z.n());
+        }
+    }
+
+    #[test]
+    fn scramble_is_bijective_on_a_window() {
+        use std::collections::HashSet;
+        let seen: HashSet<u64> = (0..10_000u64).map(scramble).collect();
+        assert_eq!(seen.len(), 10_000, "finalizer must not collide");
+    }
+}

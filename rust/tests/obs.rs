@@ -13,10 +13,12 @@
 
 use pgas_nb::fabric::TopologyKind;
 use pgas_nb::obs::{
-    epoch_from_header, header_for_epoch, parse_trace_bytes, Event, MetricsRegistry, Tracer,
+    attribute_ops, conservation, epoch_from_header, header_for_epoch, header_for_service,
+    parse_trace_bytes, service_from_header, Event, MetricsRegistry, Tracer,
 };
 use pgas_nb::pgas::NicModel;
 use pgas_nb::sim::{run_epoch_traced, Adaptivity, EpochConfig, EpochWorkload};
+use pgas_nb::workloads::{run_service_traced, ServiceConfig};
 use std::sync::Arc;
 
 /// The fig9-quick shape (largest point) — remote-heavy reclamation over a
@@ -111,6 +113,68 @@ fn same_seed_traces_export_byte_identically() {
         let pb = parse_trace_bytes(&ba).expect("binary parses");
         assert_eq!(pj.events, pb.events);
         assert!(!pj.events.is_empty());
+    }
+}
+
+/// A service-bench trace point small enough for a test but with every
+/// event class present (fabric crossings, churn, reclamation).
+fn service_like() -> ServiceConfig {
+    ServiceConfig {
+        model: NicModel::aries_no_network_atomics(),
+        locales: 4,
+        tasks_per_locale: 4,
+        clients: 10_000,
+        ops_per_task: 200,
+        skew: 0.99,
+        read_pct: 80,
+        put_pct: 12,
+        del_pct: 5,
+        scan_len: 16,
+        churn_every: 500,
+        reclaim_every: 64,
+        buckets_per_locale: 32,
+        topology: TopologyKind::Dragonfly,
+        seed: 23,
+    }
+}
+
+/// Satellite of ISSUE 8: two same-seed `bench service --trace-out` runs
+/// are byte-identical, the header alone round-trips the config, and the
+/// critical-path walker conserves >= 99% of every sampled op's latency
+/// on the recorded trace.
+#[test]
+fn service_traces_export_byte_identically_and_attribute_conservatively() {
+    let cfg = service_like();
+    let go = || {
+        let tr = Arc::new(Tracer::new());
+        run_service_traced(cfg.clone(), Some(Arc::clone(&tr)));
+        tr
+    };
+    let (a, b) = (go(), go());
+    let header = header_for_service(&cfg);
+    let ja = a.export_jsonl(&header);
+    assert_eq!(ja, b.export_jsonl(&header), "service JSONL must be byte-identical");
+    let ba = a.export_binary(&header);
+    assert_eq!(ba, b.export_binary(&header), "service binary must be byte-identical");
+
+    let parsed = parse_trace_bytes(ja.as_bytes()).expect("service trace parses");
+    assert_eq!(parsed.kind().unwrap(), "service");
+    let back = service_from_header(&parsed.header).expect("header rebuilds the config");
+    assert_eq!(back.seed, cfg.seed);
+    assert_eq!(back.clients, cfg.clients);
+    assert_eq!(back.topology, cfg.topology);
+
+    let ops = attribute_ops(&parsed);
+    assert!(ops.len() > 1_000, "only {} attributed ops", ops.len());
+    for op in &ops {
+        let c = conservation(op);
+        assert!(
+            c >= 0.99 && op.attributed_ns <= op.ns,
+            "span {}: conservation {c} (attributed {} of {} ns)",
+            op.span,
+            op.attributed_ns,
+            op.ns
+        );
     }
 }
 

@@ -21,6 +21,7 @@
 
 use pgas_nb::coordinator::figures::fig10_adaptive;
 use pgas_nb::fabric::TopologyKind;
+use pgas_nb::fault::FaultPlan;
 use pgas_nb::pgas::NicModel;
 use pgas_nb::sim::{run_epoch, Adaptivity, EpochConfig, EpochResult, EpochWorkload};
 use pgas_nb::util::bench::BenchRunner;
@@ -56,6 +57,7 @@ fn run_point(kind: TopologyKind, adaptive: bool, locales: usize, objs_per_task: 
         topology: kind,
         agg_capacity: 256,
         adaptive: if adaptive { fig10_adaptive() } else { Adaptivity::default() },
+        faults: FaultPlan::none(),
         seed: 31,
     };
     Point { kind, adaptive, locales, r: run_epoch(cfg) }

@@ -1,0 +1,181 @@
+//! **Fig 12** (beyond the source paper): the chaos sweep. The fig 9
+//! remote-heavy reclamation workload runs on the dragonfly under
+//! escalating fault schedules — faults-off control, 2% and 15% fabric
+//! chaos (drops with retransmit, duplicate deliveries, bounded
+//! reorders), a mid-run tail-locale crash survived via pin-lease
+//! expiry, and a hierarchical-group-leader crash *under* chaos that
+//! additionally forces a deterministic re-election. All schedules come
+//! from `figures::fig12_cases`, so the CLI table (`pgas-nb bench
+//! fig12`) and this bench emit identical numbers.
+//!
+//! Acceptance, asserted on every run:
+//! * the control run observes zero fault activity and never touches the
+//!   elastic-epoch machinery (lease expiries, flag steals, re-elections);
+//! * chaos runs inject faults yet reclamation still frees objects and
+//!   epochs still advance — and every run's conservation invariant
+//!   (`deferred == freed + limbo_left + lost_to_crash`) holds;
+//! * with the tail locale crashed while holding a pin, the lease expires,
+//!   an advance lands after the crash (finite recovery time), and the
+//!   crashed locale's limbo is accounted as lost, not leaked;
+//! * the crashed group leader is replaced (re-elections > 0);
+//! * the heaviest chaos point is bit-deterministic: a second run with
+//!   the same plan reproduces makespan, counters and fabric totals.
+//!
+//! Emits machine-readable `BENCH_fault.json` next to the human table
+//! (a CI artifact diffed against `baselines/BENCH_fault.json`).
+
+use pgas_nb::coordinator::figures::{fig12_cases, fig12_locale_sweep, Scale, FIG12_FAULT_SEED};
+use pgas_nb::sim::{run_epoch, EpochResult};
+use pgas_nb::util::bench::BenchRunner;
+use pgas_nb::util::table::Table;
+
+struct Point {
+    series: &'static str,
+    locales: usize,
+    r: EpochResult,
+}
+
+fn json_point(pt: &Point) -> String {
+    let r = &pt.r;
+    format!(
+        "    {{\"series\": \"{}\", \"locales\": {}, \"makespan_ns\": {}, \"mops\": {:.4}, \
+         \"dropped\": {}, \"dup\": {}, \"reordered\": {}, \"fault_ns\": {}, \
+         \"deferred\": {}, \"freed\": {}, \"limbo_left\": {}, \"lost_to_crash\": {}, \
+         \"lease_expiries\": {}, \"flag_steals\": {}, \"reelections\": {}, \
+         \"recovery_ns\": {}, \"advances\": {}, \"lat\": {}}}",
+        pt.series,
+        pt.locales,
+        r.makespan_ns,
+        r.throughput_mops,
+        r.net.faults_dropped,
+        r.net.faults_dup,
+        r.net.faults_reordered,
+        r.net.fault_ns,
+        r.deferred,
+        r.freed,
+        r.limbo_left,
+        r.lost_to_crash,
+        r.lease_expiries,
+        r.flag_steals,
+        r.reelections,
+        r.recovery_ns.map_or_else(|| "null".into(), |ns| ns.to_string()),
+        r.advances,
+        r.latency.json(),
+    )
+}
+
+fn main() {
+    let mut b = BenchRunner::new("Fig 12: chaos sweep & crash recovery");
+    let scale = if b.quick() { Scale::Quick } else { Scale::Full };
+
+    let mut t = Table::new(&[
+        "series",
+        "locales",
+        "makespan_ms",
+        "mops",
+        "dropped",
+        "dup",
+        "reord",
+        "freed",
+        "lost_crash",
+        "lease_exp",
+        "reelect",
+        "recovery_ms",
+    ]);
+    let mut points: Vec<Point> = Vec::new();
+    for &locales in &fig12_locale_sweep(scale) {
+        for (series, cfg) in fig12_cases(scale, locales) {
+            let r = run_epoch(cfg);
+            b.record_virtual(&format!("L={locales} {series}"), r.total_iters, r.makespan_ns as f64);
+            t.row(&[
+                series.into(),
+                locales.to_string(),
+                format!("{:.2}", r.makespan_ns as f64 / 1e6),
+                format!("{:.2}", r.throughput_mops),
+                r.net.faults_dropped.to_string(),
+                r.net.faults_dup.to_string(),
+                r.net.faults_reordered.to_string(),
+                r.freed.to_string(),
+                r.lost_to_crash.to_string(),
+                r.lease_expiries.to_string(),
+                r.reelections.to_string(),
+                r.recovery_ns
+                    .map(|ns| format!("{:.2}", ns as f64 / 1e6))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+            points.push(Point { series, locales, r });
+        }
+    }
+
+    println!("\n=== Fig 12: fault schedules on the dragonfly ===");
+    println!("{}", t.render());
+    b.finish();
+
+    // The acceptance invariants, checked on every run:
+    let get = |series: &str, locales: usize| {
+        &points.iter().find(|p| p.series == series && p.locales == locales).unwrap().r
+    };
+    for &locales in &fig12_locale_sweep(scale) {
+        let quiet = get("none", locales);
+        assert_eq!(
+            quiet.net.faults_dropped
+                + quiet.net.faults_dup
+                + quiet.net.faults_reordered
+                + quiet.net.fault_ns,
+            0,
+            "faults-off control observed fault activity"
+        );
+        assert_eq!(
+            quiet.lease_expiries + quiet.flag_steals + quiet.reelections + quiet.lost_to_crash,
+            0,
+            "faults-off control touched the elastic-epoch machinery"
+        );
+        for series in ["chaos-20k", "chaos-150k"] {
+            let r = get(series, locales);
+            assert!(
+                r.net.faults_dropped + r.net.faults_dup + r.net.faults_reordered > 0,
+                "{series}: chaos plan injected nothing"
+            );
+            assert!(r.freed > 0 && r.advances > 0, "{series}: reclamation starved under chaos");
+        }
+        let crashed = get("crash+lease", locales);
+        assert!(crashed.lease_expiries > 0, "the dead locale's pin was never expired");
+        assert!(crashed.recovery_ns.is_some(), "no epoch advance after the tail crash");
+        assert!(crashed.lost_to_crash > 0, "crashed locale should strand its limbo");
+        let leader = get("crash+chaos-50k", locales);
+        assert!(leader.reelections > 0, "crashed group leader was never replaced");
+        assert!(leader.recovery_ns.is_some(), "no epoch advance after the leader crash");
+    }
+    // Bit-determinism of the heaviest chaos point: same plan, same run.
+    let last = *fig12_locale_sweep(scale).last().unwrap();
+    let (_, cfg) = fig12_cases(scale, last).remove(2);
+    let again = run_epoch(cfg);
+    let first = get("chaos-150k", last);
+    assert_eq!(first.makespan_ns, again.makespan_ns, "chaos rerun must be deterministic");
+    assert_eq!(first.net, again.net, "chaos rerun fabric totals must match");
+    assert_eq!(
+        (first.deferred, first.freed, first.advances),
+        (again.deferred, again.freed, again.advances),
+        "chaos rerun protocol counters must match"
+    );
+    let largest = *fig12_locale_sweep(scale).last().unwrap();
+    println!(
+        "\nL={largest}: crash+lease recovered in {:.2} ms (lease expiries {}), \
+         leader crash re-elected {} time(s) under 5% chaos",
+        get("crash+lease", largest).recovery_ns.unwrap_or(0) as f64 / 1e6,
+        get("crash+lease", largest).lease_expiries,
+        get("crash+chaos-50k", largest).reelections,
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"fig12_fault\",\n  \"model\": \"aries_no_network_atomics\",\n  \
+         \"workload\": \"reclaim_every_64_remote50_dragonfly\",\n  \"fault_seed\": {},\n  \
+         \"points\": [\n{}\n  ]\n}}\n",
+        FIG12_FAULT_SEED,
+        points.iter().map(json_point).collect::<Vec<_>>().join(",\n")
+    );
+    match std::fs::write("BENCH_fault.json", &json) {
+        Ok(()) => println!("[wrote BENCH_fault.json]"),
+        Err(e) => eprintln!("[could not write BENCH_fault.json: {e}]"),
+    }
+}

@@ -12,6 +12,7 @@
 //! (a CI artifact alongside `BENCH_aggregation.json`).
 
 use pgas_nb::fabric::TopologyKind;
+use pgas_nb::fault::FaultPlan;
 use pgas_nb::pgas::{NicModel, DEFAULT_AGG_CAPACITY};
 use pgas_nb::sim::{run_epoch, Adaptivity, EpochConfig, EpochResult, EpochWorkload};
 use pgas_nb::util::bench::BenchRunner;
@@ -38,6 +39,7 @@ fn run_point(kind: TopologyKind, locales: usize, objs_per_task: usize) -> Point 
         topology: kind,
         agg_capacity: DEFAULT_AGG_CAPACITY,
         adaptive: Adaptivity::default(),
+        faults: FaultPlan::none(),
         seed: 29,
     };
     Point { kind, locales, r: run_epoch(cfg) }

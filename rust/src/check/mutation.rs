@@ -25,6 +25,19 @@
 //!   re-reads after the stall: a use-after-free the reclamation auditor
 //!   must flag.
 //!
+//! Two **fault-masking** mutations model bugs the fault plane
+//! ([`crate::fault`]) would smoke out — protocols that look correct
+//! until the fabric duplicates a message or a lease clock runs fast:
+//!
+//! * [`Mutant::DupDefer`] — a duplicated `Defer` active message is
+//!   applied twice (no sequence dedup at the home locale): the same
+//!   node is retired twice and later freed twice, a double-free the
+//!   auditor must flag.
+//! * [`Mutant::EagerLeaseExpiry`] — the reclaimer "expires" the lease of
+//!   readers that are alive and well and frees retired nodes under
+//!   their open pins: a premature free (and, via the stalled reader, a
+//!   use-after-free) the auditor must flag.
+//!
 //! `Mutant::None` runs the faithful decomposition and must pass both
 //! checks — the self-test's control arm.
 
@@ -45,6 +58,8 @@ pub enum Mutant {
     StackSplitCas,
     QueueSplitCas,
     SkipDeferGuard,
+    DupDefer,
+    EagerLeaseExpiry,
 }
 
 impl Mutant {
@@ -54,6 +69,8 @@ impl Mutant {
             Mutant::StackSplitCas => "stack-split-cas",
             Mutant::QueueSplitCas => "queue-split-cas",
             Mutant::SkipDeferGuard => "skip-defer-guard",
+            Mutant::DupDefer => "dup-defer",
+            Mutant::EagerLeaseExpiry => "eager-lease-expiry",
         }
     }
 }
@@ -190,6 +207,9 @@ struct Sim {
     /// Retired-but-not-freed addresses (freed after the run, like a
     /// final `clear`).
     limbo: Vec<u64>,
+    /// Retires so far — drives [`Mutant::DupDefer`]'s deterministic
+    /// "every Nth defer AM arrives twice" schedule.
+    retires: u64,
     tasks: Vec<TaskSt>,
     history: History,
     /// Event sink; `None` keeps the schedule machinery on the exact
@@ -259,17 +279,47 @@ impl Sim {
     }
 
     fn retire_or_free(&mut self, now: VTime, addr: u64) {
-        if self.cfg.mutant == Mutant::SkipDeferGuard {
-            // The injected bug: bypass the epoch deferral entirely.
-            self.auditor.on_free(wp(addr));
-            if let Some(tr) = &self.tracer {
-                tr.record_at(T_BASE + now, INFRA_TASK, 0, Event::Free { addr });
+        match self.cfg.mutant {
+            Mutant::SkipDeferGuard => {
+                // The injected bug: bypass the epoch deferral entirely.
+                self.auditor.on_free(wp(addr));
+                if let Some(tr) = &self.tracer {
+                    tr.record_at(T_BASE + now, INFRA_TASK, 0, Event::Free { addr });
+                }
             }
-        } else {
-            self.auditor.on_retire(wp(addr), 1);
-            self.limbo.push(addr);
-            if let Some(tr) = &self.tracer {
-                tr.record_at(T_BASE + now, INFRA_TASK, 0, Event::Defer { dst: 0, list: 0 });
+            Mutant::DupDefer => {
+                // The injected bug: the defer AM for every 4th retire is
+                // duplicated by the fabric and the home locale applies it
+                // twice — no sequence dedup. The node is retired twice
+                // now and freed twice at the final clear.
+                self.retires += 1;
+                let copies = if self.retires % 4 == 0 { 2 } else { 1 };
+                for _ in 0..copies {
+                    self.auditor.on_retire(wp(addr), 1);
+                    self.limbo.push(addr);
+                    if let Some(tr) = &self.tracer {
+                        tr.record_at(T_BASE + now, INFRA_TASK, 0, Event::Defer { dst: 0, list: 0 });
+                    }
+                }
+            }
+            Mutant::EagerLeaseExpiry => {
+                // The injected bug: the home treats every reader's lease
+                // as already expired and reclaims immediately — the
+                // retiring task's own pin (and any stalled reader's) is
+                // still open when the free lands.
+                self.auditor.on_retire(wp(addr), 1);
+                self.auditor.on_free(wp(addr));
+                if let Some(tr) = &self.tracer {
+                    tr.record_at(T_BASE + now, INFRA_TASK, 0, Event::Defer { dst: 0, list: 0 });
+                    tr.record_at(T_BASE + now, INFRA_TASK, 0, Event::Free { addr });
+                }
+            }
+            _ => {
+                self.auditor.on_retire(wp(addr), 1);
+                self.limbo.push(addr);
+                if let Some(tr) = &self.tracer {
+                    tr.record_at(T_BASE + now, INFRA_TASK, 0, Event::Defer { dst: 0, list: 0 });
+                }
             }
         }
     }
@@ -561,8 +611,9 @@ pub fn run_sim_traced(cfg: &SimCfg, tracer: Option<Arc<Tracer>>) -> SimRun {
             let mut i = 0;
             while i < cfg.ops_per_task {
                 let v = (t as u64) * 100_000 + i as u64 + 1;
-                let stalled_reader =
-                    cfg.kind == SimKind::Stack && cfg.mutant == Mutant::SkipDeferGuard && t == 0;
+                let stalled_reader = cfg.kind == SimKind::Stack
+                    && matches!(cfg.mutant, Mutant::SkipDeferGuard | Mutant::EagerLeaseExpiry)
+                    && t == 0;
                 let (wr, rd) = match cfg.kind {
                     SimKind::Stack => (SimOp::Push(v), SimOp::Pop),
                     SimKind::Queue => (SimOp::Enq(v), SimOp::Deq),
@@ -606,6 +657,7 @@ pub fn run_sim_traced(cfg: &SimCfg, tracer: Option<Arc<Tracer>>) -> SimRun {
         head,
         tail,
         limbo: Vec::new(),
+        retires: 0,
         tasks,
         history,
         tracer,
@@ -643,6 +695,10 @@ pub enum Detector {
     NonLinearizable,
     /// The auditor reports a use-after-free.
     UseAfterFree,
+    /// The auditor reports a double free (or double retire).
+    DoubleFree,
+    /// The auditor reports a free under a still-open pin session.
+    PrematureFree,
 }
 
 /// Scan seeds until `det` fires for the given mutant; returns the first
@@ -672,6 +728,16 @@ pub fn first_seed_detected_by(
                 .violations()
                 .iter()
                 .any(|v| v.kind == ViolationKind::UseAfterFree),
+            Detector::DoubleFree => run
+                .auditor
+                .violations()
+                .iter()
+                .any(|v| v.kind == ViolationKind::DoubleFree),
+            Detector::PrematureFree => run
+                .auditor
+                .violations()
+                .iter()
+                .any(|v| v.kind == ViolationKind::PrematureFree),
         };
         if hit {
             return Some(seed);
@@ -751,6 +817,54 @@ mod tests {
         assert!(
             v.iter().any(|v| v.kind == ViolationKind::UseAfterFree),
             "expected a use-after-free, got {v:?}"
+        );
+    }
+
+    #[test]
+    fn dup_defer_detected_as_double_free() {
+        // A duplicated Defer AM applied twice double-retires immediately
+        // — seed 0 suffices; the bug is schedule-independent.
+        let seed = first_seed_detected_by(SimKind::Stack, Mutant::DupDefer, 5, Detector::DoubleFree)
+            .expect("dup-defer must be caught within 5 seeds");
+        let run = run_sim(&SimCfg::new(SimKind::Stack, Mutant::DupDefer, seed));
+        assert!(run
+            .auditor
+            .violations()
+            .iter()
+            .any(|v| v.kind == ViolationKind::DoubleFree && v.detail.contains("double retire")));
+        // The history itself stays linearizable: without the auditor the
+        // bug is invisible, which is exactly what makes it fault-masking.
+        assert!(check_history(run.model, &run.history).is_ok());
+    }
+
+    #[test]
+    fn eager_lease_expiry_detected_as_premature_free_and_uaf() {
+        // Freeing under the retiring task's own open pin is premature on
+        // the very first reclaim, whatever the schedule...
+        let seed = first_seed_detected_by(
+            SimKind::Stack,
+            Mutant::EagerLeaseExpiry,
+            5,
+            Detector::PrematureFree,
+        )
+        .expect("eager lease expiry must be caught within 5 seeds");
+        let run = run_sim(&SimCfg::new(SimKind::Stack, Mutant::EagerLeaseExpiry, seed));
+        assert!(run
+            .auditor
+            .violations()
+            .iter()
+            .any(|v| v.kind == ViolationKind::PrematureFree));
+        // ...and with the stalled pinned reader in the schedule, the
+        // "expired" reader's re-read manifests as a real use-after-free.
+        assert!(
+            first_seed_detected_by(
+                SimKind::Stack,
+                Mutant::EagerLeaseExpiry,
+                20,
+                Detector::UseAfterFree,
+            )
+            .is_some(),
+            "a stalled reader must eventually re-read a node freed under its lease"
         );
     }
 

@@ -7,13 +7,14 @@
 //! points — is the reproduction target. See EXPERIMENTS.md.
 
 use crate::fabric::TopologyKind;
+use crate::fault::{CrashAt, FaultPlan};
 use crate::pgas::{NicModel, DEFAULT_AGG_CAPACITY};
 use crate::sim::{
     run_atomics, run_epoch, Adaptivity, AtomicVariant, AtomicsConfig, EpochConfig, EpochResult,
-    EpochWorkload,
+    EpochWorkload, StalledTask,
 };
 use crate::util::table::Table;
-use crate::workloads::{run_service, OpKind, ServiceConfig};
+use crate::workloads::{run_service, OpKind, ServiceConfig, ServiceMix};
 
 /// Sweep scale: `quick` for CI, `full` for the paper-size testbed.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -183,6 +184,7 @@ fn epoch_cfg(scale: Scale, workload: EpochWorkload, na: bool, locales: usize) ->
         topology: TopologyKind::default(),
         agg_capacity: DEFAULT_AGG_CAPACITY,
         adaptive: Adaptivity::default(),
+        faults: FaultPlan::none(),
         seed: 7,
     }
 }
@@ -399,6 +401,7 @@ pub fn service_cfg(scale: Scale, topology: TopologyKind, locales: usize) -> Serv
         reclaim_every: 64,
         buckets_per_locale: 64,
         topology,
+        mix: ServiceMix::Session,
         seed: 23,
     }
 }
@@ -408,13 +411,23 @@ pub fn service_cfg(scale: Scale, topology: TopologyKind, locales: usize) -> Serv
 /// crosses the fabric (so `transit`/`queue` span layers are finally
 /// nonzero), swept over routed topologies.
 pub fn fig11(scale: Scale) -> Table {
+    fig11_mix(scale, ServiceMix::Session)
+}
+
+/// [`fig11`] under an explicit traffic shape (`bench service --mix
+/// social`): the social-graph variant keeps the op population and sweep
+/// identical but draws every scan's walk length from the power-law
+/// fan-out, so the scan/queue tails stretch while p50 barely moves.
+pub fn fig11_mix(scale: Scale, mix: ServiceMix) -> Table {
     let mut t = Table::new(&[
         "topology", "locales", "mops", "remote%", "op_p50_us", "op_p99_us", "get_p99_us",
         "put_p99_us", "scan_p99_us", "queue_p99_us", "epoch_p99_us", "advances", "freed",
     ]);
     for kind in [TopologyKind::Ring, TopologyKind::Dragonfly] {
         for &locales in &service_locale_sweep(scale) {
-            let r = run_service(service_cfg(scale, kind, locales));
+            let mut cfg = service_cfg(scale, kind, locales);
+            cfg.mix = mix;
+            let r = run_service(cfg);
             let us = |ns: u64| format!("{:.2}", ns as f64 / 1e3);
             t.row(&[
                 kind.label().into(),
@@ -442,6 +455,148 @@ pub fn fig11(scale: Scale) -> Table {
 pub fn service_trace_point(scale: Scale) -> ServiceConfig {
     let locales = *service_locale_sweep(scale).last().expect("sweep is non-empty");
     service_cfg(scale, TopologyKind::Dragonfly, locales)
+}
+
+/// The fig 12 locale points. The crash series kill locale `locales-1`
+/// (tail) and locale `hier_group` (the second group's leader), so the
+/// sweep starts at 8 to keep both distinct from each other and from the
+/// global home at locale 0.
+pub fn fig12_locale_sweep(scale: Scale) -> Vec<usize> {
+    match scale {
+        Scale::Quick => vec![8, 16],
+        Scale::Full => vec![8, 16, 32],
+    }
+}
+
+/// Seed of the fig 12 fault stream. Fixed (not a CLI knob) so the bench
+/// is a pure function of scale and its JSON can be diffed against the
+/// committed `baselines/BENCH_fault.json`.
+pub const FIG12_FAULT_SEED: u64 = 1;
+
+/// The five fault schedules the fig 12 chaos sweep runs at one locale
+/// count, shared between the CLI table and the bench target so both
+/// emit identical numbers. `none` is the faults-off control (must stay
+/// bit-identical to the fault-free substrate); `chaos-20k`/`chaos-150k`
+/// shake the fabric only (drops, dups, reorders at 2% and 15%);
+/// `crash+lease` kills the tail locale mid-run while one of its tasks
+/// holds a pin, so only lease expiry can unblock the advance;
+/// `crash+chaos-50k` kills a hierarchical group leader *under* chaos
+/// with the adaptive knobs on, forcing a re-election on top of
+/// retransmits and duplicate deliveries.
+pub fn fig12_cases(scale: Scale, locales: usize) -> Vec<(&'static str, EpochConfig)> {
+    let quick = scale == Scale::Quick;
+    let seed = FIG12_FAULT_SEED;
+    let base = EpochConfig {
+        workload: EpochWorkload::DeleteReclaimEvery(64),
+        model: NicModel::aries_no_network_atomics(),
+        locales,
+        tasks_per_locale: if quick { 4 } else { 8 },
+        objs_per_task: if quick { 512 } else { 2_048 },
+        remote_ratio: 0.5,
+        fcfs_local_election: true,
+        slow_locale: None,
+        slow_factor: 8,
+        stalled_task: None,
+        topology: TopologyKind::Dragonfly,
+        agg_capacity: DEFAULT_AGG_CAPACITY,
+        adaptive: Adaptivity::default(),
+        faults: FaultPlan::none(),
+        seed: 11,
+    };
+    // The stalled pin wedges every advance until lease expiry, and a
+    // wedged run (no drains) finishes in ~100us at quick scale — so the
+    // crash must land early and the lease must expire well before the
+    // survivors run out of scan attempts.
+    let crash_tail = CrashAt { locale: (locales - 1) as u16, at_ns: 30_000 };
+    // Locale 4 leads the second hierarchical group (group size 4);
+    // killing it forces a re-election, not just lease expiry.
+    let crash_leader = CrashAt { locale: 4, at_ns: 300_000 };
+    // A task on the doomed locale holds its first pin forever: the dead
+    // pin that only lease expiry can clear.
+    let pin_on = |c: CrashAt, b: &EpochConfig| {
+        Some(StalledTask { task: c.locale as usize * b.tasks_per_locale, hold_iters: usize::MAX })
+    };
+    vec![
+        ("none", base.clone()),
+        ("chaos-20k", EpochConfig { faults: FaultPlan::chaos(20_000, seed), ..base.clone() }),
+        ("chaos-150k", EpochConfig { faults: FaultPlan::chaos(150_000, seed), ..base.clone() }),
+        (
+            "crash+lease",
+            EpochConfig {
+                faults: FaultPlan {
+                    crash: Some(crash_tail),
+                    lease_ns: 25_000,
+                    ..FaultPlan::none()
+                },
+                stalled_task: pin_on(crash_tail, &base),
+                ..base.clone()
+            },
+        ),
+        (
+            "crash+chaos-50k",
+            EpochConfig {
+                faults: FaultPlan {
+                    crash: Some(crash_leader),
+                    lease_ns: 150_000,
+                    ..FaultPlan::chaos(50_000, seed ^ 0xC4A5)
+                },
+                stalled_task: pin_on(crash_leader, &base),
+                adaptive: Adaptivity {
+                    hier_group: Some(4),
+                    flush_after_ns: Some(30_000),
+                    ..Adaptivity::default()
+                },
+                ..base
+            },
+        ),
+    ]
+}
+
+/// Fig. 12 (beyond the source paper) — the chaos sweep: the fig 9
+/// reclamation workload on the dragonfly under escalating fault
+/// schedules, from faults-off control through fabric chaos to mid-run
+/// locale crashes survived via lease expiry and leader re-election.
+/// `recovery_ms` is virtual time from the crash to the first epoch
+/// advance at or after it.
+pub fn fig12(scale: Scale) -> Table {
+    let mut t = Table::new(&[
+        "series",
+        "locales",
+        "mops",
+        "makespan_ms",
+        "dropped",
+        "dup",
+        "reord",
+        "fault_ms",
+        "freed",
+        "lost_crash",
+        "lease_exp",
+        "reelect",
+        "recovery_ms",
+    ]);
+    for &locales in &fig12_locale_sweep(scale) {
+        for (series, cfg) in fig12_cases(scale, locales) {
+            let r = run_epoch(cfg);
+            t.row(&[
+                series.into(),
+                locales.to_string(),
+                format!("{:.2}", r.throughput_mops),
+                format!("{:.2}", r.makespan_ns as f64 / 1e6),
+                r.net.faults_dropped.to_string(),
+                r.net.faults_dup.to_string(),
+                r.net.faults_reordered.to_string(),
+                format!("{:.2}", r.net.fault_ns as f64 / 1e6),
+                r.freed.to_string(),
+                r.lost_to_crash.to_string(),
+                r.lease_expiries.to_string(),
+                r.reelections.to_string(),
+                r.recovery_ns
+                    .map(|ns| format!("{:.2}", ns as f64 / 1e6))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    t
 }
 
 /// Ablation: two-level FCFS election vs direct global contention.
@@ -512,6 +667,34 @@ mod tests {
         let cfg = service_trace_point(Scale::Quick);
         assert_eq!(cfg.topology, TopologyKind::Dragonfly);
         assert_eq!(cfg.locales, 8);
+    }
+
+    #[test]
+    fn fig12_cases_control_is_inert_and_crashes_avoid_the_home() {
+        for &locales in &[8usize, 16] {
+            let cases = fig12_cases(Scale::Quick, locales);
+            assert_eq!(cases.len(), 5);
+            assert!(cases[0].1.faults.is_none(), "first series is the faults-off control");
+            for (series, cfg) in &cases {
+                if let Some(c) = cfg.faults.crash {
+                    assert_ne!(c.locale, 0, "{series}: the global home cannot crash");
+                    assert!((c.locale as usize) < locales);
+                    assert!(cfg.faults.lease_ns > 0, "{series}: a crash without a lease wedges");
+                    let pin = cfg.stalled_task.expect("crash series pin a task on the doomed locale");
+                    assert_eq!(pin.task / cfg.tasks_per_locale, c.locale as usize);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig12_quick_sweeps_all_series_and_recovers() {
+        let t = fig12(Scale::Quick);
+        assert_eq!(t.len(), 5 * 2);
+        let csv = t.to_csv();
+        for s in ["none", "chaos-20k", "chaos-150k", "crash+lease", "crash+chaos-50k"] {
+            assert!(csv.contains(s), "missing series {s}");
+        }
     }
 
     #[test]

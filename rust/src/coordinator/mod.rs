@@ -6,11 +6,13 @@ pub mod figures;
 use crate::collections::{InterlockedHashTable, LockFreeQueue, LockFreeStack};
 use crate::epoch::{EpochManager, ReclaimPolicy};
 use crate::fabric::TopologyKind;
+use crate::fault::{CrashAt, FaultPlan};
 use crate::pgas::{coforall_locales, coforall_tasks, LocaleId, Machine, NicModel, Pgas};
 use crate::obs::{header_for_epoch, Tracer};
 use crate::runtime::SharedReclaimScan;
 use crate::sim::{run_epoch_traced, Adaptivity, EpochConfig, EpochWorkload};
 use crate::util::cli::Args;
+use crate::workloads::ServiceMix;
 use crate::util::table::{fmt_ops, Table};
 use crate::util::error::Result;
 use crate::{bail, err};
@@ -23,15 +25,21 @@ pub const USAGE: &str = "pgas-nb — distributed non-blocking building blocks in
 Usage: pgas-nb <subcommand> [--opts]
 
 Subcommands:
-  bench <fig3|fig4|fig5|fig6|fig7|fig9|fig10|service|election>
+  bench <fig3|fig4|fig5|fig6|fig7|fig9|fig10|service|fig12|election>
         [--quick] [--csv] [--trace-out FILE]  regenerate a figure
                                               (--trace-out: fig9/fig10/service
                                               only — record the figure's
                                               representative DES point)
+        [--mix session|social]                service only: traffic shape
+                                              (social = power-law fan-out
+                                              scans)
   check [--seeds 1,2,3] [--collections stack,queue,list,map]
         [--locales N] [--tasks N] [--ops N] [--keys N] [--topology T]
         [--agg-capacity N] [--reclaim-every K] [--stall] [--adversarial]
         [--adaptive] [--out DIR] [--mutate]
+        [--faults [--fault-seed N]]           fault-schedule gate: chaos,
+                                              crash+lease recovery, leader
+                                              re-election, determinism
         [--trace-out FILE] [--trace-in FILE]
                                               linearizability & reclamation-
                                               safety checker (see README
@@ -46,6 +54,10 @@ Subcommands:
         [--agg-capacity N] [--ugal-threshold NS] [--flush-after NS]
         [--backpressure NS] [--hier-group G]
         [--no-network-atomics]
+        [--faults PPM] [--fault-seed N] [--crash-at LOC:NS] [--lease NS]
+                                              fault schedule: chaos mix at
+                                              PPM, locale crash at a virtual
+                                              time, pin-lease duration
         [--trace-out FILE] [--trace-in FILE]  custom DES testbed point;
                                               --trace-in deterministically
                                               replays a recorded trace and
@@ -72,6 +84,55 @@ Subcommands:
 /// a new `TopologyKind` variant is exposed automatically.
 fn topology_choices() -> Vec<&'static str> {
     TopologyKind::ALL.iter().map(|k| k.label()).collect()
+}
+
+/// Parse the fault-schedule flags shared by `sim`, `bench fig12` and
+/// `check --faults`: `--faults RATE_PPM` (the reference chaos mix),
+/// `--fault-seed N`, `--crash-at LOCALE:VTIME_NS`, `--lease NS`.
+/// All absent → [`FaultPlan::none`], which is guaranteed inert.
+fn fault_plan_from_args(args: &Args) -> Result<FaultPlan> {
+    let mut plan = match args.get("faults") {
+        Some(v) => {
+            let ppm: u32 = v
+                .parse()
+                .map_err(|_| err!("--faults expects a chaos rate in ppm (got '{v}')"))?;
+            FaultPlan::chaos(ppm, 0)
+        }
+        None => FaultPlan::none(),
+    };
+    plan.seed = args.get_u64("fault-seed", 0);
+    plan.lease_ns = args.get_u64("lease", 0);
+    if let Some(v) = args.get("crash-at") {
+        let (l, t) = v
+            .split_once(':')
+            .ok_or_else(|| err!("--crash-at expects LOCALE:VTIME_NS (got '{v}')"))?;
+        let locale: u16 =
+            l.parse().map_err(|_| err!("--crash-at locale must be a u16 (got '{l}')"))?;
+        let at_ns: u64 =
+            t.parse().map_err(|_| err!("--crash-at time must be a u64 ns (got '{t}')"))?;
+        if locale == 0 {
+            bail!("--crash-at: locale 0 is the global-epoch home and cannot crash");
+        }
+        plan.crash = Some(CrashAt { locale, at_ns });
+        if plan.lease_ns == 0 {
+            // A crash without leases wedges reclamation by design (the
+            // strict scan waits on the dead pin forever). Demanding an
+            // explicit --lease 0 keeps that a choice, not an accident.
+            bail!("--crash-at without --lease NS never recovers; pass --lease (e.g. 200000)");
+        }
+    }
+    Ok(plan)
+}
+
+/// Parse `--mix session|social` for `bench fig11`/`service`. Any other
+/// figure rejects the flag rather than silently ignoring a requested mix.
+fn service_mix_from_args(args: &Args, which: &str) -> Result<ServiceMix> {
+    let Some(v) = args.get("mix") else { return Ok(ServiceMix::Session) };
+    if !matches!(which, "fig11" | "service") {
+        bail!("--mix applies to the service scenario only (bench service --mix social)");
+    }
+    ServiceMix::parse(v)
+        .ok_or_else(|| err!("unknown service mix '{v}' (choose from session, social)"))
 }
 
 fn parse_topology(args: &Args) -> TopologyKind {
@@ -112,8 +173,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if args.flag("trace-out") && args.get("trace-out").is_none() {
         bail!("--trace-out requires a value (a trace file path)");
     }
+    let mix = service_mix_from_args(args, which)?;
     if let Some(path) = args.get("trace-out") {
-        return cmd_bench_trace(which, scale, path);
+        return cmd_bench_trace(which, scale, path, mix);
     }
     let t0 = Instant::now();
     match which {
@@ -129,7 +191,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
             emit(args, "Fig 10: congestion-adaptive fabric", &figures::fig10(scale))
         }
         "fig11" | "service" => {
-            emit(args, "Fig 11: service-scenario tail latency", &figures::fig11(scale))
+            let title = match mix {
+                ServiceMix::Session => "Fig 11: service-scenario tail latency".to_string(),
+                other => format!("Fig 11: service-scenario tail latency ({} mix)", other.label()),
+            };
+            emit(args, &title, &figures::fig11_mix(scale, mix))
+        }
+        "fig12" | "fault" => {
+            emit(args, "Fig 12: chaos sweep & crash recovery", &figures::fig12(scale))
         }
         "election" => emit(args, "Ablation: FCFS election", &figures::ablation_election(scale)),
         "all" => {
@@ -141,6 +210,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             emit(args, "Fig 9", &figures::fig9(scale));
             emit(args, "Fig 10", &figures::fig10(scale));
             emit(args, "Fig 11", &figures::fig11(scale));
+            emit(args, "Fig 12", &figures::fig12(scale));
         }
         other => bail!("unknown figure '{other}'"),
     }
@@ -153,9 +223,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
 /// and write the trace — JSONL, or binary when FILE ends in `.bin`. Two
 /// invocations with the same scale write byte-identical files (the DES
 /// is a pure function of its config; pinned by the CI trace job).
-fn cmd_bench_trace(which: &str, scale: Scale, path: &str) -> Result<()> {
+fn cmd_bench_trace(which: &str, scale: Scale, path: &str, mix: ServiceMix) -> Result<()> {
     if matches!(which, "fig11" | "service") {
-        return cmd_bench_trace_service(scale, path);
+        return cmd_bench_trace_service(scale, path, mix);
     }
     let cfg = match which {
         "fig9" | "topology" => figures::fig9_trace_point(scale),
@@ -189,10 +259,11 @@ fn cmd_bench_trace(which: &str, scale: Scale, path: &str) -> Result<()> {
 /// the input `trace critical-path` / `trace attribute` are built for —
 /// every hop and AM event carries the acting task id, so each op's
 /// latency can be blamed hop by hop.
-fn cmd_bench_trace_service(scale: Scale, path: &str) -> Result<()> {
+fn cmd_bench_trace_service(scale: Scale, path: &str, mix: ServiceMix) -> Result<()> {
     use crate::obs::header_for_service;
     use crate::workloads::run_service_traced;
-    let cfg = figures::service_trace_point(scale);
+    let mut cfg = figures::service_trace_point(scale);
+    cfg.mix = mix;
     let tr = Arc::new(Tracer::new());
     let r = run_service_traced(cfg.clone(), Some(Arc::clone(&tr)));
     tr.write(path, &header_for_service(&cfg))?;
@@ -241,6 +312,9 @@ fn cmd_check(args: &Args) -> Result<()> {
     }
     if let Some(path) = args.get("trace-in") {
         return cmd_check_replay(path);
+    }
+    if args.flag("faults") {
+        return cmd_check_faults(args);
     }
 
     // `check` takes no operands beyond the subcommand; a stray one is
@@ -493,6 +567,11 @@ fn cmd_check_mutate(out_dir: &str) -> Result<()> {
         (SimKind::Stack, Mutant::StackSplitCas, Detector::NonLinearizable, "non-linearizable"),
         (SimKind::Queue, Mutant::QueueSplitCas, Detector::NonLinearizable, "non-linearizable"),
         (SimKind::Stack, Mutant::SkipDeferGuard, Detector::UseAfterFree, "use-after-free"),
+        // Fault-masking arms: protocol bugs only the fault plane would
+        // surface — a duplicated defer AM applied without dedup, and a
+        // lease clock that expires live readers.
+        (SimKind::Stack, Mutant::DupDefer, Detector::DoubleFree, "double-free"),
+        (SimKind::Stack, Mutant::EagerLeaseExpiry, Detector::PrematureFree, "premature-free"),
     ];
     // Controls first, once per structure, over the SAME seed range the
     // mutants are hunted over: a checker false-positive anywhere in that
@@ -545,6 +624,230 @@ fn cmd_check_mutate(out_dir: &str) -> Result<()> {
     println!("\n=== mutation self-test ===\n{}", t.render());
     if escaped > 0 {
         bail!("{escaped} mutant(s) escaped the checker");
+    }
+    Ok(())
+}
+
+/// `check --faults`: the fault-schedule gate. Drives the epoch DES under
+/// a battery of chaos / crash / brownout schedules and judges the
+/// elastic-epoch invariants on each: reclamation conservation
+/// (`deferred == freed + limbo_left + lost_to_crash` — also a hard
+/// assert inside every run), post-crash recovery via lease expiry,
+/// leader re-election when a group leader dies, and bit-identical
+/// reproduction on a second run of the same schedule. The control arm
+/// (an empty plan) must observe zero fault activity. `--fault-seed`
+/// re-seeds the chaos stream so CI can mix fixed and randomized runs.
+fn cmd_check_faults(args: &Args) -> Result<()> {
+    use crate::fault::{Brownout, CrashAt, FaultPlan};
+    use crate::sim::{run_epoch, Adaptivity, EpochConfig, EpochResult, EpochWorkload, StalledTask};
+
+    // The gate is a fixed battery; suite knobs would be silently ignored
+    // and let a user believe a customized fault run happened.
+    for opt in [
+        "seeds", "collections", "ops", "keys", "topology", "agg-capacity", "reclaim-every",
+        "trace-out", "out",
+    ] {
+        if args.get(opt).is_some() || args.flag(opt) {
+            bail!("--faults runs a fixed battery; --{opt} does not apply (drop it)");
+        }
+    }
+    for f in ["mutate", "adversarial", "adaptive", "stall"] {
+        if args.flag(f) {
+            bail!("--faults and --{f} are separate gates; run them as separate invocations");
+        }
+    }
+    if let Some(v) = args.get("faults") {
+        if v != "true" {
+            bail!("--faults is a flag and takes no value (got '{v}')");
+        }
+    }
+    let fault_seed: u64 = check_knob(args, "fault-seed", 1)?;
+    let locales: usize = check_knob(args, "locales", 8)?;
+    let tasks: usize = check_knob(args, "tasks", 4)?;
+    if locales < 6 || tasks == 0 {
+        // The battery crashes locale `locales/2` (a hier group leader)
+        // and `locales-1`; both must exist and be distinct from home.
+        bail!("--locales must be at least 6 and --tasks at least 1");
+    }
+
+    let base = EpochConfig {
+        workload: EpochWorkload::DeleteReclaimEvery(64),
+        model: NicModel::aries_no_network_atomics(),
+        locales,
+        tasks_per_locale: tasks,
+        objs_per_task: 512,
+        remote_ratio: 0.5,
+        fcfs_local_election: true,
+        slow_locale: None,
+        slow_factor: 8,
+        stalled_task: None,
+        topology: TopologyKind::Ring,
+        agg_capacity: crate::pgas::DEFAULT_AGG_CAPACITY,
+        adaptive: Adaptivity::default(),
+        faults: FaultPlan::none(),
+        seed: 11,
+    };
+    // Early crash + short lease: the stalled pin wedges every advance
+    // until expiry, and a wedged run (no drains) is short — the crash
+    // must land inside it with room for post-expiry scans after.
+    let crash_tail = CrashAt { locale: (locales - 1) as u16, at_ns: 30_000 };
+    // locales/2 leads the second hierarchical group (group size 4), so
+    // killing it forces a re-election, not just lease expiry.
+    let crash_leader = CrashAt { locale: (locales / 2) as u16, at_ns: 300_000 };
+    // A task on the doomed locale holds its first pin forever: the dead
+    // pin that only lease expiry can clear.
+    let pin_on = |c: CrashAt| Some(StalledTask { task: c.locale as usize * tasks, hold_iters: usize::MAX });
+
+    type Judge = fn(&EpochResult) -> Result<()>;
+    let quiet: Judge = |r| {
+        if r.net.faults_dropped + r.net.faults_dup + r.net.faults_reordered + r.net.fault_ns != 0 {
+            bail!("faults-off run observed fault activity");
+        }
+        if r.lease_expiries + r.flag_steals + r.reelections + r.lost_to_crash != 0 {
+            bail!("faults-off run touched the elastic-epoch machinery");
+        }
+        Ok(())
+    };
+    let chaotic: Judge = |r| {
+        if r.net.faults_dropped + r.net.faults_dup + r.net.faults_reordered == 0 {
+            bail!("chaos plan injected nothing");
+        }
+        if r.freed == 0 || r.advances == 0 {
+            bail!("reclamation starved under chaos (freed {}, advances {})", r.freed, r.advances);
+        }
+        Ok(())
+    };
+    let browned: Judge = |r| {
+        if r.net.fault_ns == 0 {
+            bail!("brownout window added no delay");
+        }
+        Ok(())
+    };
+    let recovered: Judge = |r| {
+        if r.lease_expiries == 0 {
+            bail!("the dead locale's pin was never expired");
+        }
+        if r.recovery_ns.is_none() {
+            bail!("no epoch advance after the crash");
+        }
+        if r.lost_to_crash == 0 {
+            bail!("crashed locale should strand its limbo");
+        }
+        Ok(())
+    };
+    let reelected: Judge = |r| {
+        if r.recovery_ns.is_none() {
+            bail!("no epoch advance after the leader crash");
+        }
+        if r.reelections == 0 {
+            bail!("crashed group leader was never replaced");
+        }
+        Ok(())
+    };
+
+    let mut cases: Vec<(&str, EpochConfig, Judge)> = vec![
+        ("control-off", base.clone(), quiet),
+        (
+            "chaos-light",
+            EpochConfig { faults: FaultPlan::chaos(20_000, fault_seed), ..base.clone() },
+            chaotic,
+        ),
+        (
+            "chaos-heavy",
+            EpochConfig { faults: FaultPlan::chaos(150_000, fault_seed), ..base.clone() },
+            chaotic,
+        ),
+        (
+            "brownout",
+            EpochConfig {
+                faults: FaultPlan {
+                    brownout: Some(Brownout {
+                        locale: 2,
+                        from_ns: 0,
+                        until_ns: 500_000,
+                        factor: 4,
+                    }),
+                    ..FaultPlan::none()
+                },
+                ..base.clone()
+            },
+            browned,
+        ),
+        (
+            "crash-lease",
+            EpochConfig {
+                faults: FaultPlan { crash: Some(crash_tail), lease_ns: 25_000, ..FaultPlan::none() },
+                stalled_task: pin_on(crash_tail),
+                ..base.clone()
+            },
+            recovered,
+        ),
+        (
+            "crash-leader-chaos",
+            EpochConfig {
+                faults: FaultPlan {
+                    crash: Some(crash_leader),
+                    lease_ns: 150_000,
+                    ..FaultPlan::chaos(50_000, fault_seed ^ 0xC4A5)
+                },
+                stalled_task: pin_on(crash_leader),
+                adaptive: Adaptivity {
+                    hier_group: Some(4),
+                    flush_after_ns: Some(30_000),
+                    ..Adaptivity::default()
+                },
+                ..base.clone()
+            },
+            reelected,
+        ),
+    ];
+
+    println!("check --faults: fault-seed {fault_seed}, {locales} locales x {tasks} tasks");
+    let mut t = Table::new(&[
+        "plan", "freed", "lost", "injected", "lease_exp", "steals", "reelect", "recovery_us",
+        "verdict",
+    ]);
+    let mut failures = 0usize;
+    for (name, cfg, judge) in cases.drain(..) {
+        let r = run_epoch(cfg.clone());
+        // Conservation is a hard in-run assert; restate it here so the
+        // gate's own table is self-evidencing.
+        let conserved = r.deferred == r.freed + r.limbo_left + r.lost_to_crash;
+        // Same schedule, second run: the fault plane must be a pure
+        // function of the plan (its RNG stream is dedicated).
+        let r2 = run_epoch(cfg);
+        let reproduced = (r.makespan_ns, r.total_iters, r.freed, r.advances)
+            == (r2.makespan_ns, r2.total_iters, r2.freed, r2.advances)
+            && (r.lease_expiries, r.flag_steals, r.reelections, r.lost_to_crash)
+                == (r2.lease_expiries, r2.flag_steals, r2.reelections, r2.lost_to_crash)
+            && r.net == r2.net;
+        let verdict = if !conserved {
+            failures += 1;
+            "LEAKED".to_string()
+        } else if !reproduced {
+            failures += 1;
+            "NONDETERMINISTIC".to_string()
+        } else if let Err(e) = judge(&r) {
+            failures += 1;
+            format!("FAILED: {e}")
+        } else {
+            "ok".to_string()
+        };
+        t.row_display(&[
+            name.to_string(),
+            r.freed.to_string(),
+            r.lost_to_crash.to_string(),
+            (r.net.faults_dropped + r.net.faults_dup + r.net.faults_reordered).to_string(),
+            r.lease_expiries.to_string(),
+            r.flag_steals.to_string(),
+            r.reelections.to_string(),
+            r.recovery_ns.map_or("-".to_string(), |ns| (ns / 1_000).to_string()),
+            verdict,
+        ]);
+    }
+    emit(args, "fault-schedule gate", &t);
+    if failures > 0 {
+        bail!("{failures} fault schedule(s) failed the gate");
     }
     Ok(())
 }
@@ -704,6 +1007,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         backpressure_ns: args.get_u64("backpressure", 0),
         hier_group: args.get("hier-group").and_then(|v| v.parse::<usize>().ok()).filter(|&g| g >= 1),
     };
+    let faults = fault_plan_from_args(args)?;
     let mut t = Table::new(&[
         "locales", "mops", "advances", "lost_local", "lost_global", "freed", "queued_ms",
         "detours", "ams_rx_home", "op_p50_us", "op_p99_us",
@@ -728,6 +1032,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
             agg_capacity: args
                 .get_usize("agg-capacity", crate::pgas::aggregation::default_capacity()),
             adaptive,
+            faults,
             seed: args.get_u64("seed", 7),
         };
         let tracer = trace_out.map(|_| Arc::new(Tracer::new()));
@@ -745,6 +1050,21 @@ fn cmd_sim(args: &Args) -> Result<()> {
             format!("{:.2}", r.latency.op.percentile(50.0) as f64 / 1e3),
             format!("{:.2}", r.latency.op.percentile(99.0) as f64 / 1e3),
         ]);
+        if !faults.is_none() {
+            println!(
+                "faults: dropped={} dup={} reordered={} fault_ms={:.2} lease_expiries={} \
+                 flag_steals={} reelections={} lost_to_crash={} recovery_us={}",
+                r.net.faults_dropped,
+                r.net.faults_dup,
+                r.net.faults_reordered,
+                r.net.fault_ns as f64 / 1e6,
+                r.lease_expiries,
+                r.flag_steals,
+                r.reelections,
+                r.lost_to_crash,
+                r.recovery_ns.map_or_else(|| "-".into(), |v| format!("{:.1}", v as f64 / 1e3)),
+            );
+        }
         if let (Some(p), Some(tr)) = (trace_out, &tracer) {
             tr.write(p, &header_for_epoch(&cfg))?;
             println!(

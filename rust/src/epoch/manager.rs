@@ -143,6 +143,9 @@ pub struct ManagerStats {
     pub migrated: AtomicU64,
     /// Aggregation-buffer flushes that performed those migrations.
     pub migration_flushes: AtomicU64,
+    /// Pin leases the quiescence scan expired on excluded locales
+    /// (elastic epochs: each dead pin is expired exactly once).
+    pub lease_expiries: AtomicU64,
 }
 
 /// A snapshot of [`ManagerStats`].
@@ -157,6 +160,7 @@ pub struct StatsSnapshot {
     pub freed_remote: u64,
     pub migrated: u64,
     pub migration_flushes: u64,
+    pub lease_expiries: u64,
     pub deferred: u64,
     pub pins: u64,
 }
@@ -226,6 +230,15 @@ struct EmShared {
     global_home: LocaleId,
     global_epoch: AtomicU64,
     global_flag: AtomicBool,
+    /// Pin-lease duration in virtual ns (0 = leases off, the default).
+    /// When on, every `pin` stamps `now + lease_ns` on its token, and the
+    /// quiescence scan may treat a stale pin on an excluded locale whose
+    /// lease has run out as quiescent. Leases are pure bookkeeping: with
+    /// no locale excluded the scan semantics are unchanged.
+    lease_ns: AtomicU64,
+    /// Locales the fault detector declared dead (`expire_locale`). The
+    /// scan skips their *expired* stale pins; live-lease pins still veto.
+    excluded: Box<[AtomicBool]>,
     inst: Privatized<LocaleInstance>,
     stats: ManagerStats,
     /// Optional PJRT reclaim-scan executable: when set (and the token
@@ -304,6 +317,8 @@ impl EpochManager {
                 global_home: LocaleId(0),
                 global_epoch: AtomicU64::new(1),
                 global_flag: AtomicBool::new(false),
+                lease_ns: AtomicU64::new(0),
+                excluded: (0..machine.locales).map(|_| AtomicBool::new(false)).collect(),
                 inst: Privatized::new(machine, |loc| {
                     LocaleInstance::new(loc, machine.locales, agg_capacity)
                 }),
@@ -329,6 +344,53 @@ impl EpochManager {
     /// The hierarchical-advance group size, if configured.
     pub fn hier_group(&self) -> Option<usize> {
         self.sh.hier_group
+    }
+
+    /// Enable (ns > 0) or disable (0) lease-based pins. Affects pins made
+    /// after the call; leases are inert until a locale is excluded via
+    /// [`Self::expire_locale`].
+    pub fn set_lease_ns(&self, ns: u64) {
+        self.sh.lease_ns.store(ns, Ordering::SeqCst);
+    }
+
+    /// The configured pin-lease duration (0 = leases off).
+    pub fn lease_ns(&self) -> u64 {
+        self.sh.lease_ns.load(Ordering::SeqCst)
+    }
+
+    /// Declare `loc` dead: the quiescence scan stops waiting for its
+    /// pins once their leases run out (each expiry is counted and traced
+    /// exactly once). A pin whose lease is still running keeps vetoing —
+    /// exclusion never overrides a live lease, it only stops waiting for
+    /// a dead one. Returns `false` (and does nothing) when leases are
+    /// off, `loc` is the global epoch home, or `loc` is out of range:
+    /// excluding the home would orphan the global epoch object itself,
+    /// and exclusion without leases would discard *live* pins.
+    pub fn expire_locale(&self, loc: LocaleId) -> bool {
+        let sh = &self.sh;
+        if sh.lease_ns.load(Ordering::SeqCst) == 0
+            || loc == sh.global_home
+            || loc.index() >= sh.excluded.len()
+        {
+            return false;
+        }
+        sh.excluded[loc.index()].store(true, Ordering::SeqCst);
+        true
+    }
+
+    /// Readmit a previously excluded locale to the scan quorum (the
+    /// elastic half of elastic epochs: a recovered locale re-joins by
+    /// simply pinning again — fresh pins carry fresh leases).
+    pub fn revive_locale(&self, loc: LocaleId) {
+        if loc.index() < self.sh.excluded.len() {
+            self.sh.excluded[loc.index()].store(false, Ordering::SeqCst);
+        }
+    }
+
+    /// Is `loc` currently excluded from the scan quorum?
+    pub fn is_excluded(&self, loc: LocaleId) -> bool {
+        loc.index() < self.sh.excluded.len()
+            && self.sh.excluded[loc.index()].load(Ordering::SeqCst)
     }
 
     /// The leader of `loc`'s group (the first locale of its contiguous
@@ -405,6 +467,7 @@ impl EpochManager {
             freed_remote: s.freed_remote.load(Ordering::Relaxed),
             migrated: s.migrated.load(Ordering::Relaxed),
             migration_flushes: s.migration_flushes.load(Ordering::Relaxed),
+            lease_expiries: s.lease_expiries.load(Ordering::Relaxed),
             deferred,
             pins,
         }
@@ -616,7 +679,10 @@ impl EpochManager {
     fn quiescence_scan(&self, this_epoch: u64) -> bool {
         let sh = &self.sh;
         let machine = sh.pgas.machine();
-        if let Some(scanner) = sh.scanner.get() {
+        let lease_on = sh.lease_ns.load(Ordering::SeqCst) > 0;
+        let any_excluded =
+            lease_on && sh.excluded.iter().any(|x| x.load(Ordering::SeqCst));
+        if let Some(scanner) = sh.scanner.get().filter(|_| !any_excluded) {
             let shape = scanner.shape();
             if machine.locales <= shape.locales {
                 // Gather each locale's token-epoch row with ONE bulk GET
@@ -647,12 +713,44 @@ impl EpochManager {
             }
         }
         let scan_locale = |loc: LocaleId| {
+            let excluded = any_excluded && sh.excluded[loc.index()].load(Ordering::SeqCst);
             let inst = sh.inst.on_locale(loc);
+            let mut ordinal = 0u64;
             inst.tokens.scan(|t: &Token| {
                 // One atomic read per token, charged locally on `loc`.
                 sh.pgas.charge(NicOp::Atomic64, loc);
                 let le = t.local_epoch.load(Ordering::SeqCst);
-                !(le != QUIESCENT && le != this_epoch)
+                ordinal += 1;
+                if le == QUIESCENT || le == this_epoch {
+                    return true;
+                }
+                if excluded {
+                    // The locale was declared dead: its stale pin vetoes
+                    // only while the lease is still running. The CAS
+                    // retires the deadline so each lease is expired (and
+                    // counted) exactly once.
+                    let now = sh.pgas.local_virtual_ns();
+                    let d = t.lease_deadline.load(Ordering::SeqCst);
+                    if now >= d {
+                        if d != 0
+                            && t.lease_deadline
+                                .compare_exchange(d, 0, Ordering::SeqCst, Ordering::SeqCst)
+                                .is_ok()
+                        {
+                            sh.stats.lease_expiries.fetch_add(1, Ordering::Relaxed);
+                            if let Some(tr) = sh.pgas.tracer() {
+                                tr.record_at(
+                                    now,
+                                    INFRA_TASK,
+                                    loc.index() as u16,
+                                    Event::LeaseExpire { task: ordinal - 1, epoch: le },
+                                );
+                            }
+                        }
+                        return true;
+                    }
+                }
+                false
             })
         };
         match sh.hier_group {
@@ -787,6 +885,13 @@ impl EpochToken {
     pub fn pin(&self) {
         let sh = &self.mgr.sh;
         let tok = self.token();
+        // Refresh the pin lease on every pin, re-pins included — pure
+        // bookkeeping (no charge): with leases off nothing is written.
+        let lease = sh.lease_ns.load(Ordering::SeqCst);
+        if lease > 0 {
+            tok.lease_deadline
+                .store(sh.pgas.local_virtual_ns().saturating_add(lease), Ordering::SeqCst);
+        }
         if tok.local_epoch.load(Ordering::SeqCst) != QUIESCENT {
             return;
         }
@@ -847,6 +952,9 @@ impl EpochToken {
         // sees the token still pinned and aborts conservatively; safety
         // never depends on observing an unpin promptly.
         self.token().local_epoch.store(QUIESCENT, Ordering::Release);
+        // A quiescent token needs no lease; clearing keeps a recycled
+        // token from carrying a dead holder's deadline.
+        self.token().lease_deadline.store(0, Ordering::Release);
     }
 
     pub fn is_pinned(&self) -> bool {
@@ -1406,5 +1514,90 @@ mod tests {
         let s = em.stats();
         assert_eq!(s.deferred, 4 * 500);
         assert_eq!(s.freed, 4 * 500);
+    }
+
+    #[test]
+    fn expire_locale_requires_leases_and_never_the_home() {
+        let em = EpochManager::new(pgas(2));
+        // Leases off: exclusion would discard live pins — refused.
+        assert!(!em.expire_locale(LocaleId(1)));
+        em.set_lease_ns(1_000);
+        assert!(em.expire_locale(LocaleId(1)));
+        assert!(em.is_excluded(LocaleId(1)));
+        // The global home hosts the epoch object itself — never excludable.
+        assert!(!em.expire_locale(LocaleId(0)));
+        assert!(!em.is_excluded(LocaleId(0)));
+        em.revive_locale(LocaleId(1));
+        assert!(!em.is_excluded(LocaleId(1)));
+    }
+
+    #[test]
+    fn expired_lease_on_excluded_locale_unblocks_the_advance() {
+        let p = pgas(2);
+        let em = EpochManager::new(Arc::clone(&p));
+        // A tiny lease: by the time a scan runs, virtual time has moved
+        // far past the pin's deadline.
+        em.set_lease_ns(1);
+        let dead = with_locale(LocaleId(1), || em.register());
+        with_locale(LocaleId(1), || dead.pin()); // pinned in epoch 1
+        assert!(em.try_reclaim().advanced(), "same-epoch pin does not block");
+        // The pin is now one epoch stale and its holder is "dead": without
+        // exclusion the advance stays blocked forever.
+        assert_eq!(em.try_reclaim(), ReclaimOutcome::NotQuiescent);
+        assert!(em.expire_locale(LocaleId(1)));
+        assert!(em.try_reclaim().advanced(), "expired lease must stop vetoing the scan");
+        assert_eq!(em.stats().lease_expiries, 1, "each dead pin expires exactly once");
+        // Subsequent advances keep working without re-expiring anything.
+        assert!(em.try_reclaim().advanced());
+        assert_eq!(em.stats().lease_expiries, 1);
+    }
+
+    #[test]
+    fn live_lease_keeps_vetoing_even_on_an_excluded_locale() {
+        let p = pgas(2);
+        let em = EpochManager::new(Arc::clone(&p));
+        // A lease far beyond any virtual time this test reaches: the pin
+        // stays protected even after its locale is declared dead.
+        em.set_lease_ns(u64::MAX / 2);
+        let tok = with_locale(LocaleId(1), || em.register());
+        with_locale(LocaleId(1), || tok.pin());
+        assert!(em.try_reclaim().advanced());
+        assert!(em.expire_locale(LocaleId(1)));
+        // Exclusion never overrides a running lease — safety first.
+        assert_eq!(em.try_reclaim(), ReclaimOutcome::NotQuiescent);
+        assert_eq!(em.stats().lease_expiries, 0);
+        // The "dead" holder turns out to be alive: it unpins, and the
+        // protocol proceeds with no expiry ever having fired.
+        with_locale(LocaleId(1), || tok.unpin());
+        assert!(em.try_reclaim().advanced());
+        assert_eq!(em.stats().lease_expiries, 0);
+    }
+
+    #[test]
+    fn lease_expiry_preserves_deferred_reclamation_conservation() {
+        // Objects deferred by the dead locale before it "crashed" are
+        // still drained by later advances: exclusion affects who blocks
+        // the scan, never which limbo lists get drained.
+        let p = pgas(2);
+        let em = EpochManager::new(Arc::clone(&p));
+        em.set_lease_ns(1);
+        let dead = with_locale(LocaleId(1), || em.register());
+        with_locale(LocaleId(1), || {
+            dead.pin();
+            for i in 0..8u64 {
+                dead.defer_delete(p.alloc(LocaleId((i % 2) as u16), i));
+            }
+        });
+        assert!(em.try_reclaim().advanced());
+        assert_eq!(em.try_reclaim(), ReclaimOutcome::NotQuiescent);
+        assert!(em.expire_locale(LocaleId(1)));
+        let mut advances = 0;
+        while p.live_objects() > 0 && advances < 8 {
+            if em.try_reclaim().advanced() {
+                advances += 1;
+            }
+        }
+        assert_eq!(p.live_objects(), 0, "the dead locale's deferrals still drain");
+        assert_eq!(em.stats().freed, 8);
     }
 }

@@ -20,6 +20,12 @@ pub const QUIESCENT: u64 = 0;
 pub struct Token {
     /// 0 = quiescent; otherwise the epoch (1..=3) the holder is pinned in.
     pub local_epoch: AtomicU64,
+    /// Virtual-ns deadline of the holder's pin lease (0 = no lease).
+    /// Stamped by `pin` when the manager runs with leases enabled; the
+    /// quiescence scan may treat a stale pin on an *excluded* locale as
+    /// quiescent once this deadline has passed (elastic epochs — a dead
+    /// locale must not block the advance forever).
+    pub lease_deadline: AtomicU64,
     /// Link in the insert-only allocated list (never changes once set).
     alloc_next: AtomicUsize,
     /// Link in the free stack (valid only while the token is free).
@@ -30,6 +36,7 @@ impl Token {
     fn new() -> Token {
         Token {
             local_epoch: AtomicU64::new(QUIESCENT),
+            lease_deadline: AtomicU64::new(0),
             alloc_next: AtomicUsize::new(0),
             free_next: AtomicUsize::new(0),
         }
@@ -96,6 +103,7 @@ impl TokenRegistry {
     /// Unregister: unpin if needed and push back onto the free stack.
     pub fn unregister(&self, tok: &Token) {
         tok.local_epoch.store(QUIESCENT, Ordering::SeqCst);
+        tok.lease_deadline.store(0, Ordering::SeqCst);
         loop {
             let snap = self.free_head.read_aba();
             tok.free_next.store(snap.word as usize, Ordering::Release);
@@ -179,6 +187,19 @@ mod tests {
         reg.unregister(t);
         let t2 = reg.register();
         assert!(!t2.is_pinned(), "recycled token must come back quiescent");
+    }
+
+    #[test]
+    fn unregister_clears_lease_deadline() {
+        // A recycled token must not inherit the previous holder's lease:
+        // a stale deadline could veto (or worse, prematurely unblock) a
+        // scan on behalf of a task that no longer exists.
+        let reg = TokenRegistry::new();
+        let t = reg.register();
+        t.lease_deadline.store(123_456, Ordering::SeqCst);
+        reg.unregister(t);
+        let t2 = reg.register();
+        assert_eq!(t2.lease_deadline.load(Ordering::SeqCst), 0);
     }
 
     #[test]

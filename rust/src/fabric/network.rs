@@ -37,6 +37,7 @@
 //! not exist and every pre-adaptive trace is reproduced exactly.
 
 use super::topology::{ser_ns, Link, Route, Topology};
+use crate::fault::{FaultPlan, FaultState, MAX_RETRANSMITS};
 use crate::obs::event::{Event, INFRA_TASK};
 use crate::obs::Tracer;
 use crate::pgas::topology::LocaleId;
@@ -58,6 +59,10 @@ pub struct Delivery {
     pub hops: u32,
     /// Total time spent queued behind other messages on busy links.
     pub waited_ns: u64,
+    /// Fault-injected delay folded into `delivered_at` (retransmit
+    /// timeouts, reorder delay, brownout inflation). Always 0 without an
+    /// armed [`FaultPlan`].
+    pub fault_ns: u64,
 }
 
 /// Per-directed-link counters (a snapshot; see [`Network::link_stats`]).
@@ -106,6 +111,15 @@ pub struct NetTotals {
     pub max_link_wait_ns: u64,
     /// Messages that took a non-minimal (UGAL) route.
     pub detours: u64,
+    /// Copies lost by the fault plane (each burned fabric bandwidth and
+    /// cost the sender a retransmit timeout).
+    pub faults_dropped: u64,
+    /// Messages the fault plane delivered twice.
+    pub faults_dup: u64,
+    /// Messages the fault plane delayed past later traffic.
+    pub faults_reordered: u64,
+    /// Total fault-injected delay (see [`Delivery::fault_ns`]).
+    pub fault_ns: u64,
 }
 
 /// Configuration of the congestion-adaptive (UGAL) routing decision.
@@ -132,6 +146,13 @@ pub struct Network {
     links: HashMap<(u16, u16), LinkState>,
     /// UGAL decision state; `None` = minimal-only (the default).
     adaptive: Option<(AdaptiveRouting, Xoshiro256pp)>,
+    /// Chaos state; `None` (the default) means the DES send path is
+    /// instruction-identical to a fault-free build.
+    faults: Option<FaultState>,
+    /// The duplicate copy's delivery, if the last faulty send rolled a
+    /// dup — consumed by [`Network::take_dup`] so the DES can re-invoke
+    /// the (idempotent) handler.
+    pending_dup: Option<Delivery>,
     /// Attached trace recorder; `None` (the default) skips all event
     /// construction — the zero-overhead-when-off contract.
     tracer: Option<Arc<Tracer>>,
@@ -154,6 +175,8 @@ impl Network {
             topo,
             links: HashMap::new(),
             adaptive: None,
+            faults: None,
+            pending_dup: None,
             tracer: None,
             cur_task: INFRA_TASK,
             messages: 0,
@@ -231,11 +254,96 @@ impl Network {
         detour
     }
 
+    /// Arm the fabric half of a fault plan on the DES send path. A plan
+    /// whose fabric half is empty (`!plan.any_fabric()`, including
+    /// [`FaultPlan::none`]) is a complete no-op: no fault stream is
+    /// constructed, nothing is ever drawn, and sends stay bit-identical
+    /// to a fault-free build.
+    pub fn set_faults(&mut self, plan: FaultPlan) {
+        if plan.any_fabric() {
+            self.faults = Some(FaultState::new(plan));
+        }
+    }
+
+    /// The duplicate copy's delivery, if the most recent [`Network::send`]
+    /// rolled a duplication fault. The DES consumes this to re-run the
+    /// receive handler, which therefore must be idempotent.
+    pub fn take_dup(&mut self) -> Option<Delivery> {
+        self.pending_dup.take()
+    }
+
     /// DES path: inject a `bytes`-long message at virtual time `now` and
     /// advance it hop by hop with per-link queueing. `from == to` is a
-    /// no-op delivered immediately (the fabric is not involved).
+    /// no-op delivered immediately (the fabric is not involved). With an
+    /// armed fault plan the send may be dropped (retransmitted after a
+    /// timeout), duplicated (see [`Network::take_dup`]), reordered
+    /// (delayed) or browned out — all drawn from the dedicated fault
+    /// stream, never from the routing RNG.
     pub fn send(&mut self, now: VTime, from: LocaleId, to: LocaleId, bytes: usize) -> Delivery {
-        self.route_message(Some(now), from, to, bytes)
+        if self.faults.is_none() || from == to {
+            return self.route_message(Some(now), from, to, bytes);
+        }
+        self.send_faulty(now, from, to, bytes)
+    }
+
+    fn roll_fault(&mut self, ppm: u32) -> bool {
+        self.faults.as_mut().is_some_and(|fs| fs.roll(ppm))
+    }
+
+    fn emit_fault(&self, t: VTime, from: LocaleId, ev: Event) {
+        if let Some(tr) = &self.tracer {
+            tr.record_at(t, self.cur_task, from.0, ev);
+        }
+    }
+
+    /// The faulty DES send. Roll order is fixed (drops, then dup, then
+    /// reorder) so the draw schedule — and hence the whole trace — is a
+    /// pure function of the plan and its seed.
+    fn send_faulty(&mut self, now: VTime, from: LocaleId, to: LocaleId, bytes: usize) -> Delivery {
+        let plan = self.faults.as_ref().expect("checked in send").plan;
+        let mut inject = now;
+        let mut fault_ns = 0u64;
+        let mut attempt = 0u64;
+        // A dropped copy still burns fabric bandwidth end to end (it is
+        // lost at the destination NIC); the sender retransmits after the
+        // modeled timeout. Bounded so a pathological plan terminates.
+        while attempt < MAX_RETRANSMITS as u64 && self.roll_fault(plan.drop_ppm) {
+            attempt += 1;
+            self.faults.as_mut().expect("faulty path").drops += 1;
+            self.route_message(Some(inject), from, to, bytes);
+            self.emit_fault(inject, from, Event::FaultDrop { dst: to.0, attempt });
+            let timeout = plan.retransmit_ns.max(1);
+            inject += timeout;
+            fault_ns += timeout;
+        }
+        let mut d = self.route_message(Some(inject), from, to, bytes);
+        if self.roll_fault(plan.dup_ppm) {
+            self.faults.as_mut().expect("faulty path").dups += 1;
+            let dup = self.route_message(Some(inject), from, to, bytes);
+            self.pending_dup = Some(dup);
+            self.emit_fault(inject, from, Event::FaultDup { dst: to.0 });
+        }
+        if self.roll_fault(plan.reorder_ppm) {
+            let delay =
+                self.faults.as_mut().expect("faulty path").delay_below(plan.reorder_window_ns);
+            self.faults.as_mut().expect("faulty path").reorders += 1;
+            d.delivered_at += delay;
+            fault_ns += delay;
+            self.emit_fault(inject, from, Event::FaultReorder { dst: to.0, delay_ns: delay });
+        }
+        if let Some(b) = plan.brownout {
+            if b.applies(now, from.0, to.0) {
+                // NIC brownout: the endpoint runs `factor`x slow, so the
+                // whole pure transit inflates. Link queues are untouched
+                // (the slowdown is at the NIC, not on the wire).
+                let extra = d.transit_ns.saturating_mul(b.factor - 1);
+                d.delivered_at += extra;
+                fault_ns += extra;
+            }
+        }
+        d.fault_ns = fault_ns;
+        self.faults.as_mut().expect("faulty path").fault_ns += fault_ns;
+        d
     }
 
     /// Live-substrate path: tally the route (per-link and aggregate
@@ -344,7 +452,13 @@ impl Network {
         self.bytes += bytes as u64;
         self.transit_ns += pure;
         self.queued_ns += waited;
-        Delivery { delivered_at: t, transit_ns: pure, hops: route.len() as u32, waited_ns: waited }
+        Delivery {
+            delivered_at: t,
+            transit_ns: pure,
+            hops: route.len() as u32,
+            waited_ns: waited,
+            fault_ns: 0,
+        }
     }
 
     /// Cumulative pure transit over all messages so far (cheap running
@@ -402,6 +516,12 @@ impl Network {
             detours: self.detours,
             ..NetTotals::default()
         };
+        if let Some(fs) = &self.faults {
+            t.faults_dropped = fs.drops;
+            t.faults_dup = fs.dups;
+            t.faults_reordered = fs.reorders;
+            t.fault_ns = fs.fault_ns;
+        }
         for st in self.links.values() {
             t.links_used += 1;
             t.max_link_busy_ns = t.max_link_busy_ns.max(st.res.busy());
@@ -644,6 +764,96 @@ mod tests {
             })
             .sum();
         assert_eq!(waited, traced.totals().queued_ns, "hop events carry all queueing");
+    }
+
+    #[test]
+    fn empty_fault_plan_leaves_sends_bit_identical() {
+        use crate::fault::FaultPlan;
+        let mut plain = ring8();
+        let mut armed = ring8();
+        armed.set_faults(FaultPlan::none());
+        for i in 0..40u64 {
+            let (f, t) = (LocaleId((i % 8) as u16), LocaleId(((i * 3 + 1) % 8) as u16));
+            assert_eq!(plain.send(i * 50, f, t, 4_096), armed.send(i * 50, f, t, 4_096));
+        }
+        assert_eq!(plain.totals(), armed.totals());
+        assert_eq!(armed.totals().faults_dropped, 0);
+    }
+
+    #[test]
+    fn certain_drop_retransmits_boundedly_and_charges_the_fabric() {
+        use crate::fault::{FaultPlan, MAX_RETRANSMITS};
+        let mut n = ring8();
+        n.set_faults(FaultPlan {
+            drop_ppm: 1_000_000,
+            retransmit_ns: 5_000,
+            seed: 3,
+            ..FaultPlan::none()
+        });
+        let d = n.send(0, LocaleId(0), LocaleId(1), 64);
+        let t = n.totals();
+        assert_eq!(t.faults_dropped, MAX_RETRANSMITS as u64, "bounded retransmits");
+        assert_eq!(d.fault_ns, MAX_RETRANSMITS as u64 * 5_000);
+        assert!(d.delivered_at >= d.fault_ns, "timeouts delay the delivery");
+        assert_eq!(t.messages, MAX_RETRANSMITS as u64 + 1, "lost copies burn bandwidth");
+        assert_eq!(t.fault_ns, d.fault_ns);
+    }
+
+    #[test]
+    fn certain_dup_surfaces_the_second_delivery() {
+        use crate::fault::FaultPlan;
+        let mut n = ring8();
+        n.set_faults(FaultPlan { dup_ppm: 1_000_000, seed: 4, ..FaultPlan::none() });
+        assert!(n.take_dup().is_none());
+        let d = n.send(100, LocaleId(0), LocaleId(2), 1_024);
+        let dup = n.take_dup().expect("certain dup");
+        assert!(n.take_dup().is_none(), "consumed");
+        assert_eq!(dup.hops, d.hops);
+        assert!(dup.delivered_at >= d.delivered_at, "copy queues behind the original");
+        assert_eq!(n.totals().faults_dup, 1);
+        assert_eq!(n.totals().messages, 2);
+    }
+
+    #[test]
+    fn reorder_and_brownout_delay_without_touching_queues() {
+        use crate::fault::{Brownout, FaultPlan};
+        let mut n = ring8();
+        n.set_faults(FaultPlan {
+            reorder_ppm: 1_000_000,
+            reorder_window_ns: 256,
+            brownout: Some(Brownout { locale: 2, from_ns: 0, until_ns: u64::MAX, factor: 3 }),
+            seed: 5,
+            ..FaultPlan::none()
+        });
+        let base = ring8().send(0, LocaleId(0), LocaleId(2), 4_096);
+        let d = n.send(0, LocaleId(0), LocaleId(2), 4_096);
+        assert_eq!(d.transit_ns, base.transit_ns, "pure transit is unchanged");
+        assert_eq!(d.waited_ns, base.waited_ns, "no queueing injected");
+        let expect_brownout = base.transit_ns * 2; // (factor - 1) x transit
+        assert!(d.fault_ns > expect_brownout && d.fault_ns <= expect_brownout + 256);
+        assert_eq!(d.delivered_at, base.delivered_at + d.fault_ns);
+        assert_eq!(n.totals().faults_reordered, 1);
+        // Off-window / off-locale messages are untouched.
+        let far = n.send(0, LocaleId(4), LocaleId(5), 4_096);
+        assert!(far.fault_ns <= 256, "only the reorder roll applies off-locale");
+    }
+
+    #[test]
+    fn same_fault_seed_is_bit_identical_different_seed_diverges() {
+        use crate::fault::FaultPlan;
+        let run = |seed: u64| {
+            let mut n = ring8();
+            n.set_faults(FaultPlan::chaos(200_000, seed));
+            let mut sum = 0u64;
+            for i in 0..200u64 {
+                let (f, t) = (LocaleId((i % 8) as u16), LocaleId(((i * 5 + 2) % 8) as u16));
+                sum += n.send(i * 20, f, t, 2_048).delivered_at;
+                n.take_dup();
+            }
+            (sum, n.totals())
+        };
+        assert_eq!(run(77), run(77));
+        assert_ne!(run(77).1, run(78).1, "the fault stream really is seeded");
     }
 
     #[test]

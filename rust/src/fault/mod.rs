@@ -1,0 +1,266 @@
+//! Deterministic fault plane: chaos under the fabric, crash/lease
+//! schedules for the epoch protocol.
+//!
+//! A [`FaultPlan`] describes one fault schedule: per-send probabilities
+//! for dropping / duplicating / reordering active messages, an optional
+//! NIC brownout window (a latency multiplier on every message touching
+//! one locale for a while), an optional hard [`CrashAt`] event, and the
+//! pin-lease duration the elastic epoch protocol uses to expire a dead
+//! locale. Everything is driven by a **dedicated [`SplitMix64`]
+//! stream** seeded from [`FaultPlan::seed`] — the workload, routing and
+//! jitter RNGs are never touched, and with [`FaultPlan::none`] (the
+//! default everywhere) the fault stream is never even constructed, so
+//! faults-off traces stay byte-identical to the committed `baselines/`.
+//!
+//! The fabric half ([`FaultState`], consumed by
+//! [`crate::fabric::Network::send`]) models:
+//!
+//! * **drop** — the copy in flight is lost (it still burns fabric
+//!   bandwidth); the sender retransmits after
+//!   [`FaultPlan::retransmit_ns`]. Bounded by [`MAX_RETRANSMITS`].
+//! * **duplicate** — a second copy crosses the fabric; the receiver's
+//!   handlers must be idempotent (the DES re-invokes them; protocol
+//!   state must not double-apply — that is exactly what the
+//!   `DupDefer` fault-masking mutant checks).
+//! * **reorder** — delivery is delayed by a bounded random amount so a
+//!   later send can overtake, per the PGAS reordering semantics of
+//!   arXiv:1307.6590.
+//! * **brownout** — within `[from_ns, until_ns)` any message with an
+//!   endpoint at the browned-out locale sees its transit multiplied.
+//!
+//! The crash/lease half is interpreted by the DES
+//! ([`crate::sim::run_epoch`]) and the live manager
+//! ([`crate::epoch::EpochManager`]): a crashed locale stops stepping
+//! and holds its pins forever; the global home may expire its lease
+//! [`FaultPlan::lease_ns`] virtual nanoseconds after the pin and
+//! exclude the locale from the scan quorum, so epochs keep advancing
+//! with O(live-locales) participation. A lease is only ever expired
+//! for a locale that stopped answering (crashed) — the elastic scan
+//! never expires a live pin, which `lease_expiry_requires_a_crash`
+//! pins down.
+
+use crate::sim::engine::VTime;
+use crate::util::rng::SplitMix64;
+
+/// Retransmit attempts are bounded so a 100%-drop plan still terminates
+/// (the final attempt is forced through).
+pub const MAX_RETRANSMITS: u32 = 8;
+
+/// One brownout window: messages touching `locale` within
+/// `[from_ns, until_ns)` have their pure transit multiplied by `factor`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Brownout {
+    pub locale: u16,
+    pub from_ns: VTime,
+    pub until_ns: VTime,
+    /// Latency multiplier (`2` = twice as slow). `factor <= 1` is inert.
+    pub factor: u64,
+}
+
+impl Brownout {
+    /// Does this window slow a `from -> to` message injected at `now`?
+    pub fn applies(&self, now: VTime, from: u16, to: u16) -> bool {
+        self.factor > 1
+            && now >= self.from_ns
+            && now < self.until_ns
+            && (from == self.locale || to == self.locale)
+    }
+}
+
+/// A hard locale crash at a virtual time: its tasks stop stepping, its
+/// pins are never released, and messages addressed to it after the
+/// crash go unanswered.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct CrashAt {
+    pub locale: u16,
+    pub at_ns: VTime,
+}
+
+/// A complete, seeded fault schedule. [`FaultPlan::none`] is the
+/// default everywhere and is guaranteed draw-free.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Per-send drop probability, parts per million.
+    pub drop_ppm: u32,
+    /// Per-send duplicate probability, parts per million.
+    pub dup_ppm: u32,
+    /// Per-send reorder probability, parts per million.
+    pub reorder_ppm: u32,
+    /// Modeled sender retransmit timeout per dropped copy.
+    pub retransmit_ns: u64,
+    /// Max extra delivery delay of a reordered message (uniform in
+    /// `[1, reorder_window_ns]`).
+    pub reorder_window_ns: u64,
+    pub brownout: Option<Brownout>,
+    pub crash: Option<CrashAt>,
+    /// Pin-lease duration for the elastic epoch scan; `0` keeps the
+    /// strict (paper) scan that waits on every locale forever.
+    pub lease_ns: u64,
+    /// Seed of the dedicated fault stream (`--fault-seed`).
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// The empty schedule: no chaos, no crash, no leases, no RNG.
+    pub const fn none() -> FaultPlan {
+        FaultPlan {
+            drop_ppm: 0,
+            dup_ppm: 0,
+            reorder_ppm: 0,
+            retransmit_ns: 0,
+            reorder_window_ns: 0,
+            brownout: None,
+            crash: None,
+            lease_ns: 0,
+            seed: 0,
+        }
+    }
+
+    /// Does the fabric half have anything to do? When false the
+    /// [`crate::fabric::Network`] never constructs a [`FaultState`], so
+    /// the send path is instruction-identical to a fault-free build.
+    pub fn any_fabric(&self) -> bool {
+        self.drop_ppm > 0
+            || self.dup_ppm > 0
+            || self.reorder_ppm > 0
+            || self.brownout.is_some()
+    }
+
+    /// Does the schedule touch the epoch protocol (crash or leases)?
+    pub fn any_protocol(&self) -> bool {
+        self.crash.is_some() || self.lease_ns > 0
+    }
+
+    pub fn is_none(&self) -> bool {
+        !self.any_fabric() && !self.any_protocol()
+    }
+
+    /// The reference chaos mix used by `check --faults` and the fig12
+    /// sweep: `rate_ppm` for drops, half of it for dups and reorders,
+    /// with timeout/window sized to a few link-serialization times.
+    pub fn chaos(rate_ppm: u32, seed: u64) -> FaultPlan {
+        FaultPlan {
+            drop_ppm: rate_ppm,
+            dup_ppm: rate_ppm / 2,
+            reorder_ppm: rate_ppm / 2,
+            retransmit_ns: 20_000,
+            reorder_window_ns: 4_096,
+            seed,
+            ..FaultPlan::none()
+        }
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::none()
+    }
+}
+
+/// Live fault-stream state plus injection counters. Owned by the
+/// [`crate::fabric::Network`] when (and only when) the plan's fabric
+/// half is active.
+#[derive(Clone, Debug)]
+pub struct FaultState {
+    pub plan: FaultPlan,
+    rng: SplitMix64,
+    pub drops: u64,
+    pub dups: u64,
+    pub reorders: u64,
+    /// Total fault-injected delay (retransmits + reorder + brownout).
+    pub fault_ns: u64,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> FaultState {
+        // Salted so a fault stream never aliases a workload stream even
+        // under `--fault-seed` == `--seed`.
+        FaultState { plan, rng: SplitMix64::new(plan.seed ^ 0xFA17_5EED), drops: 0, dups: 0, reorders: 0, fault_ns: 0 }
+    }
+
+    /// Bernoulli trial at `ppm` parts per million. Draw-free when
+    /// `ppm == 0`, so a plan that only drops never consumes dup draws
+    /// (and the draw schedule is a pure function of the plan).
+    pub fn roll(&mut self, ppm: u32) -> bool {
+        ppm > 0 && self.rng.next_u64() % 1_000_000 < ppm as u64
+    }
+
+    /// Uniform in `[1, bound]` (used for the reorder delay).
+    pub fn delay_below(&mut self, bound: u64) -> u64 {
+        if bound == 0 {
+            return 0;
+        }
+        1 + self.rng.next_u64() % bound
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_inert_and_default() {
+        let p = FaultPlan::none();
+        assert!(p.is_none());
+        assert!(!p.any_fabric());
+        assert!(!p.any_protocol());
+        assert_eq!(p, FaultPlan::default());
+    }
+
+    #[test]
+    fn chaos_mix_is_fabric_only() {
+        let p = FaultPlan::chaos(10_000, 9);
+        assert!(p.any_fabric());
+        assert!(!p.any_protocol());
+        assert_eq!(p.dup_ppm, 5_000);
+        let with_crash =
+            FaultPlan { crash: Some(CrashAt { locale: 2, at_ns: 1_000 }), lease_ns: 50_000, ..p };
+        assert!(with_crash.any_protocol());
+    }
+
+    #[test]
+    fn fault_stream_is_deterministic_and_dedicated() {
+        let plan = FaultPlan::chaos(500_000, 42);
+        let mut a = FaultState::new(plan);
+        let mut b = FaultState::new(plan);
+        for _ in 0..1_000 {
+            assert_eq!(a.roll(plan.drop_ppm), b.roll(plan.drop_ppm));
+            assert_eq!(a.delay_below(4_096), b.delay_below(4_096));
+        }
+        // Salting: the stream differs from a bare SplitMix64 on the seed,
+        // so `--fault-seed N` never aliases a workload stream seeded N.
+        let mut bare = SplitMix64::new(42);
+        let mut salted = SplitMix64::new(42 ^ 0xFA17_5EED);
+        assert_ne!(bare.next_u64(), salted.next_u64());
+    }
+
+    #[test]
+    fn zero_ppm_is_draw_free() {
+        let mut fs = FaultState::new(FaultPlan::chaos(1_000, 7));
+        let before = fs.rng.clone();
+        assert!(!fs.roll(0));
+        // The RNG must not have advanced.
+        let mut after = fs.rng.clone();
+        let mut b = before;
+        assert_eq!(b.next_u64(), after.next_u64());
+    }
+
+    #[test]
+    fn brownout_window_and_endpoints() {
+        let b = Brownout { locale: 3, from_ns: 100, until_ns: 200, factor: 4 };
+        assert!(b.applies(100, 3, 1));
+        assert!(b.applies(199, 0, 3));
+        assert!(!b.applies(200, 3, 1), "window is half-open");
+        assert!(!b.applies(99, 3, 1));
+        assert!(!b.applies(150, 0, 1), "other locales unaffected");
+        let inert = Brownout { factor: 1, ..b };
+        assert!(!inert.applies(150, 3, 1));
+    }
+
+    #[test]
+    fn roll_rates_are_roughly_right() {
+        let mut fs = FaultState::new(FaultPlan::chaos(250_000, 11));
+        let hits = (0..100_000).filter(|_| fs.roll(250_000)).count();
+        assert!((23_000..27_000).contains(&hits), "hits={hits}");
+    }
+}

@@ -6,6 +6,7 @@ pub mod collections;
 pub mod coordinator;
 pub mod epoch;
 pub mod fabric;
+pub mod fault;
 pub mod obs;
 pub mod pgas;
 pub mod runtime;

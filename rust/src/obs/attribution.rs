@@ -273,11 +273,12 @@ mod tests {
     use crate::obs::replay::parse_trace_bytes;
     use crate::obs::{TraceHeader, Tracer};
     use crate::pgas::NicModel;
-    use crate::workloads::{run_service_traced, ServiceConfig};
+    use crate::workloads::{run_service_traced, ServiceConfig, ServiceMix};
     use std::sync::Arc;
 
     fn traced_cfg() -> ServiceConfig {
         ServiceConfig {
+            mix: ServiceMix::Session,
             model: NicModel::aries_no_network_atomics(),
             locales: 4,
             tasks_per_locale: 4,

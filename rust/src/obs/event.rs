@@ -61,6 +61,22 @@ pub enum Event {
     Free { addr: u64 },
     /// An object at `addr` was dereferenced (mutation sims).
     Access { addr: u64 },
+    /// The fault plane dropped the in-flight copy toward `dst`;
+    /// `attempt` counts retransmissions of this message so far.
+    FaultDrop { dst: u16, attempt: u64 },
+    /// The fault plane duplicated the message toward `dst`.
+    FaultDup { dst: u16 },
+    /// The fault plane delayed the message toward `dst` by `delay_ns`
+    /// so later traffic can overtake it.
+    FaultReorder { dst: u16, delay_ns: u64 },
+    /// Locale `locale` crashed (its tasks stop stepping; pins stay).
+    Crash { locale: u16 },
+    /// The global home expired the pin lease of `task` (pinned in
+    /// `epoch`) and excluded it from the scan quorum.
+    LeaseExpire { task: u64, epoch: u64 },
+    /// Group `group`'s advance leader was re-elected to `leader` after
+    /// the previous leader crashed.
+    Reelect { group: u64, leader: u64 },
 }
 
 impl Event {
@@ -81,6 +97,12 @@ impl Event {
             Event::Reclaim { .. } => "reclaim",
             Event::Free { .. } => "free",
             Event::Access { .. } => "access",
+            Event::FaultDrop { .. } => "fault_drop",
+            Event::FaultDup { .. } => "fault_dup",
+            Event::FaultReorder { .. } => "fault_reorder",
+            Event::Crash { .. } => "crash",
+            Event::LeaseExpire { .. } => "lease_expire",
+            Event::Reelect { .. } => "reelect",
         }
     }
 
@@ -101,6 +123,12 @@ impl Event {
             Event::Reclaim { .. } => 11,
             Event::Free { .. } => 12,
             Event::Access { .. } => 13,
+            Event::FaultDrop { .. } => 14,
+            Event::FaultDup { .. } => 15,
+            Event::FaultReorder { .. } => 16,
+            Event::Crash { .. } => 17,
+            Event::LeaseExpire { .. } => 18,
+            Event::Reelect { .. } => 19,
         }
     }
 
@@ -121,6 +149,12 @@ impl Event {
             Event::Reclaim { n } => (n, 0, 0),
             Event::Free { addr } => (addr, 0, 0),
             Event::Access { addr } => (addr, 0, 0),
+            Event::FaultDrop { dst, attempt } => (dst as u64, attempt, 0),
+            Event::FaultDup { dst } => (dst as u64, 0, 0),
+            Event::FaultReorder { dst, delay_ns } => (dst as u64, delay_ns, 0),
+            Event::Crash { locale } => (locale as u64, 0, 0),
+            Event::LeaseExpire { task, epoch } => (task, epoch, 0),
+            Event::Reelect { group, leader } => (group, leader, 0),
         }
     }
 
@@ -141,6 +175,12 @@ impl Event {
             11 => Event::Reclaim { n: x },
             12 => Event::Free { addr: x },
             13 => Event::Access { addr: x },
+            14 => Event::FaultDrop { dst: x as u16, attempt: y },
+            15 => Event::FaultDup { dst: x as u16 },
+            16 => Event::FaultReorder { dst: x as u16, delay_ns: y },
+            17 => Event::Crash { locale: x as u16 },
+            18 => Event::LeaseExpire { task: x, epoch: y },
+            19 => Event::Reelect { group: x, leader: y },
             _ => return None,
         })
     }
@@ -179,6 +219,22 @@ impl TraceEvent {
             Event::Reclaim { n } => s.push_str(&format!(", \"n\": {n}")),
             Event::Free { addr } => s.push_str(&format!(", \"addr\": {addr}")),
             Event::Access { addr } => s.push_str(&format!(", \"addr\": {addr}")),
+            Event::FaultDrop { dst, attempt } => {
+                s.push_str(&format!(", \"dst\": {dst}, \"attempt\": {attempt}"))
+            }
+            Event::FaultDup { dst } => s.push_str(&format!(", \"dst\": {dst}")),
+            Event::FaultReorder { dst, delay_ns } => {
+                s.push_str(&format!(", \"dst\": {dst}, \"delay_ns\": {delay_ns}"))
+            }
+            Event::Crash { locale } => s.push_str(&format!(", \"locale\": {locale}")),
+            // Key is `expired`, not `task`: the line's top-level `task`
+            // field is the recording task (the home's scanner).
+            Event::LeaseExpire { task, epoch } => {
+                s.push_str(&format!(", \"expired\": {task}, \"epoch\": {epoch}"))
+            }
+            Event::Reelect { group, leader } => {
+                s.push_str(&format!(", \"group\": {group}, \"leader\": {leader}"))
+            }
         }
         s.push('}');
         s
@@ -215,6 +271,14 @@ impl TraceEvent {
             "reclaim" => Event::Reclaim { n: u("n")? },
             "free" => Event::Free { addr: u("addr")? },
             "access" => Event::Access { addr: u("addr")? },
+            "fault_drop" => Event::FaultDrop { dst: u("dst")? as u16, attempt: u("attempt")? },
+            "fault_dup" => Event::FaultDup { dst: u("dst")? as u16 },
+            "fault_reorder" => {
+                Event::FaultReorder { dst: u("dst")? as u16, delay_ns: u("delay_ns")? }
+            }
+            "crash" => Event::Crash { locale: u("locale")? as u16 },
+            "lease_expire" => Event::LeaseExpire { task: u("expired")?, epoch: u("epoch")? },
+            "reelect" => Event::Reelect { group: u("group")?, leader: u("leader")? },
             other => return Err(format!("unknown event kind '{other}'")),
         };
         Ok(TraceEvent { t, task, locale, ev })
@@ -247,6 +311,27 @@ mod tests {
             TraceEvent { t: 15, task: 2, locale: 0, ev: Event::Reclaim { n: 9 } },
             TraceEvent { t: 16, task: 0, locale: 0, ev: Event::Free { addr: 0x40 } },
             TraceEvent { t: 17, task: 1, locale: 0, ev: Event::Access { addr: 0x40 } },
+            TraceEvent {
+                t: 18,
+                task: INFRA_TASK,
+                locale: 0,
+                ev: Event::FaultDrop { dst: 3, attempt: 1 },
+            },
+            TraceEvent { t: 19, task: INFRA_TASK, locale: 0, ev: Event::FaultDup { dst: 3 } },
+            TraceEvent {
+                t: 20,
+                task: INFRA_TASK,
+                locale: 0,
+                ev: Event::FaultReorder { dst: 3, delay_ns: 512 },
+            },
+            TraceEvent { t: 21, task: INFRA_TASK, locale: 2, ev: Event::Crash { locale: 2 } },
+            TraceEvent {
+                t: 22,
+                task: 0,
+                locale: 0,
+                ev: Event::LeaseExpire { task: 9, epoch: 2 },
+            },
+            TraceEvent { t: 23, task: 0, locale: 0, ev: Event::Reelect { group: 1, leader: 5 } },
         ]
     }
 

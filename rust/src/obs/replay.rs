@@ -15,6 +15,7 @@
 
 use crate::check::{CheckCfg, Collection, Mutant, SimCfg, SimKind};
 use crate::fabric::TopologyKind;
+use crate::fault::{Brownout, CrashAt, FaultPlan};
 use crate::obs::event::TraceEvent;
 use crate::pgas::NicModel;
 use crate::sim::{Adaptivity, EpochConfig, EpochWorkload, StalledTask};
@@ -291,10 +292,99 @@ fn workload_from_name(s: &str) -> Result<EpochWorkload, String> {
     }
 }
 
+/// `get_u64` that treats a missing field as `default` — used for the
+/// fault-plan fields, which are only written when a schedule is active so
+/// faults-off headers stay byte-identical to pre-fault recordings.
+fn get_u64_or(fields: &[(String, Val)], k: &str, default: u64) -> Result<u64, String> {
+    if fields.iter().any(|(key, _)| key == k) {
+        get_u64(fields, k)
+    } else {
+        Ok(default)
+    }
+}
+
+/// `get_str` that treats a missing field as `default` (same rationale;
+/// the service `mix` is written only when off-default, so pre-mix
+/// recordings decode as the session mix they actually ran).
+fn get_str_or<'a>(fields: &'a [(String, Val)], k: &str, default: &'a str) -> &'a str {
+    match fields.iter().find(|(key, _)| key == k) {
+        Some((_, Val::S(s))) => s,
+        _ => default,
+    }
+}
+
+/// `get_opt` that treats a missing field as `None` (same rationale).
+fn get_opt_or_none(fields: &[(String, Val)], k: &str) -> Result<Option<u64>, String> {
+    if fields.iter().any(|(key, _)| key == k) {
+        get_opt(fields, k)
+    } else {
+        Ok(None)
+    }
+}
+
+/// Append the non-empty parts of a fault plan to a header.
+fn push_fault_fields(mut h: TraceHeader, f: &FaultPlan) -> TraceHeader {
+    if f.is_none() {
+        return h;
+    }
+    h = h
+        .u64("fault_drop_ppm", f.drop_ppm as u64)
+        .u64("fault_dup_ppm", f.dup_ppm as u64)
+        .u64("fault_reorder_ppm", f.reorder_ppm as u64)
+        .u64("fault_retransmit_ns", f.retransmit_ns)
+        .u64("fault_reorder_window_ns", f.reorder_window_ns)
+        .u64("fault_lease_ns", f.lease_ns)
+        .u64("fault_seed", f.seed)
+        .opt("fault_crash_locale", f.crash.map(|c| c.locale as u64))
+        .opt("fault_crash_at_ns", f.crash.map(|c| c.at_ns));
+    if let Some(b) = f.brownout {
+        h = h
+            .u64("fault_brownout_locale", b.locale as u64)
+            .u64("fault_brownout_from_ns", b.from_ns)
+            .u64("fault_brownout_until_ns", b.until_ns)
+            .u64("fault_brownout_factor", b.factor);
+    }
+    h
+}
+
+/// Rebuild the [`FaultPlan`] recorded by [`push_fault_fields`] (an absent
+/// set of fields is [`FaultPlan::none`]).
+fn fault_plan_from_fields(fields: &[(String, Val)]) -> Result<FaultPlan, String> {
+    let crash = match get_opt_or_none(fields, "fault_crash_locale")? {
+        Some(locale) => Some(CrashAt {
+            locale: locale as u16,
+            at_ns: get_opt_or_none(fields, "fault_crash_at_ns")?
+                .ok_or("fault_crash_locale without fault_crash_at_ns")?,
+        }),
+        None => None,
+    };
+    let brownout = if fields.iter().any(|(k, _)| k == "fault_brownout_locale") {
+        Some(Brownout {
+            locale: get_u64(fields, "fault_brownout_locale")? as u16,
+            from_ns: get_u64(fields, "fault_brownout_from_ns")?,
+            until_ns: get_u64(fields, "fault_brownout_until_ns")?,
+            factor: get_u64(fields, "fault_brownout_factor")?,
+        })
+    } else {
+        None
+    };
+    Ok(FaultPlan {
+        drop_ppm: get_u64_or(fields, "fault_drop_ppm", 0)? as u32,
+        dup_ppm: get_u64_or(fields, "fault_dup_ppm", 0)? as u32,
+        reorder_ppm: get_u64_or(fields, "fault_reorder_ppm", 0)? as u32,
+        retransmit_ns: get_u64_or(fields, "fault_retransmit_ns", 0)?,
+        reorder_window_ns: get_u64_or(fields, "fault_reorder_window_ns", 0)?,
+        brownout,
+        crash,
+        lease_ns: get_u64_or(fields, "fault_lease_ns", 0)?,
+        seed: get_u64_or(fields, "fault_seed", 0)?,
+    })
+}
+
 /// Header for an epoch-DES run (`sim` kind; also used by the fig9/fig10
 /// bench trace points).
 pub fn header_for_epoch(cfg: &EpochConfig) -> TraceHeader {
-    TraceHeader::new("sim")
+    let h = TraceHeader::new("sim")
         .str("workload", &workload_name(&cfg.workload))
         .str("model", model_name(&cfg.model))
         .u64("locales", cfg.locales as u64)
@@ -312,7 +402,8 @@ pub fn header_for_epoch(cfg: &EpochConfig) -> TraceHeader {
         .opt("flush_after_ns", cfg.adaptive.flush_after_ns)
         .u64("backpressure_ns", cfg.adaptive.backpressure_ns)
         .opt("hier_group", cfg.adaptive.hier_group.map(|g| g as u64))
-        .u64("seed", cfg.seed)
+        .u64("seed", cfg.seed);
+    push_fault_fields(h, &cfg.faults)
 }
 
 /// Rebuild the [`EpochConfig`] recorded by [`header_for_epoch`].
@@ -345,6 +436,7 @@ pub fn epoch_from_header(fields: &[(String, Val)]) -> Result<EpochConfig, String
             backpressure_ns: get_u64(fields, "backpressure_ns")?,
             hier_group: get_opt(fields, "hier_group")?.map(|g| g as usize),
         },
+        faults: fault_plan_from_fields(fields)?,
         seed: get_u64(fields, "seed")?,
     })
 }
@@ -389,7 +481,7 @@ pub fn check_from_header(fields: &[(String, Val)]) -> Result<(Collection, CheckC
 /// Header for a service-scenario run (`service` kind; used by the
 /// fig11 bench trace point and `bench service --trace-out`).
 pub fn header_for_service(cfg: &crate::workloads::ServiceConfig) -> TraceHeader {
-    TraceHeader::new("service")
+    let h = TraceHeader::new("service")
         .str("model", model_name(&cfg.model))
         .u64("locales", cfg.locales as u64)
         .u64("tasks_per_locale", cfg.tasks_per_locale as u64)
@@ -404,7 +496,12 @@ pub fn header_for_service(cfg: &crate::workloads::ServiceConfig) -> TraceHeader 
         .u64("reclaim_every", cfg.reclaim_every as u64)
         .u64("buckets_per_locale", cfg.buckets_per_locale as u64)
         .str("topology", cfg.topology.label())
-        .u64("seed", cfg.seed)
+        .u64("seed", cfg.seed);
+    // Written only off-default so pre-mix recordings stay byte-identical.
+    if cfg.mix != crate::workloads::ServiceMix::Session {
+        return h.str("mix", cfg.mix.label());
+    }
+    h
 }
 
 /// Rebuild the [`crate::workloads::ServiceConfig`] recorded by
@@ -428,12 +525,24 @@ pub fn service_from_header(
         reclaim_every: get_u64(fields, "reclaim_every")? as usize,
         buckets_per_locale: get_u64(fields, "buckets_per_locale")? as usize,
         topology: TopologyKind::parse(topo).ok_or_else(|| format!("unknown topology '{topo}'"))?,
+        mix: {
+            let label = get_str_or(fields, "mix", "session");
+            crate::workloads::ServiceMix::parse(label)
+                .ok_or_else(|| format!("unknown service mix '{label}'"))?
+        },
         seed: get_u64(fields, "seed")?,
     })
 }
 
 fn mutant_from_label(s: &str) -> Result<Mutant, String> {
-    for m in [Mutant::None, Mutant::StackSplitCas, Mutant::QueueSplitCas, Mutant::SkipDeferGuard] {
+    for m in [
+        Mutant::None,
+        Mutant::StackSplitCas,
+        Mutant::QueueSplitCas,
+        Mutant::SkipDeferGuard,
+        Mutant::DupDefer,
+        Mutant::EagerLeaseExpiry,
+    ] {
         if m.label() == s {
             return Ok(m);
         }
@@ -596,6 +705,12 @@ mod tests {
                 backpressure_ns: 25_000,
                 hier_group: Some(4),
             },
+            faults: FaultPlan {
+                brownout: Some(Brownout { locale: 1, from_ns: 5_000, until_ns: 9_000, factor: 3 }),
+                crash: Some(CrashAt { locale: 5, at_ns: 250_000 }),
+                lease_ns: 40_000,
+                ..FaultPlan::chaos(10_000, 99)
+            },
             seed: 7,
         };
         let header = header_for_epoch(&cfg);
@@ -614,8 +729,35 @@ mod tests {
         assert_eq!(back.topology, cfg.topology);
         assert_eq!(back.agg_capacity, cfg.agg_capacity);
         assert_eq!(back.adaptive, cfg.adaptive);
+        assert_eq!(back.faults, cfg.faults);
         assert_eq!(back.seed, cfg.seed);
         assert_eq!(back.model.network_atomics, cfg.model.network_atomics);
+    }
+
+    #[test]
+    fn faults_off_header_has_no_fault_fields_and_decodes_to_none() {
+        let cfg = EpochConfig {
+            workload: EpochWorkload::ReadOnly,
+            model: NicModel::aries_no_network_atomics(),
+            locales: 2,
+            tasks_per_locale: 1,
+            objs_per_task: 4,
+            remote_ratio: 0.0,
+            fcfs_local_election: true,
+            slow_locale: None,
+            slow_factor: 8,
+            stalled_task: None,
+            topology: TopologyKind::default(),
+            agg_capacity: 64,
+            adaptive: Adaptivity::default(),
+            faults: FaultPlan::none(),
+            seed: 1,
+        };
+        let json = header_for_epoch(&cfg).to_json();
+        // Pre-fault recordings replay unchanged: no fault_* keys at all.
+        assert!(!json.contains("fault_"), "faults-off header must not mention faults: {json}");
+        let back = epoch_from_header(&parse_flat_json(&json).unwrap()).unwrap();
+        assert!(back.faults.is_none());
     }
 
     #[test]
@@ -645,10 +787,15 @@ mod tests {
             reclaim_every: 64,
             buckets_per_locale: 64,
             topology: TopologyKind::Dragonfly,
+            mix: crate::workloads::ServiceMix::Session,
             seed: 23,
         };
         let header = header_for_service(&cfg);
-        let fields = parse_flat_json(&header.to_json()).unwrap();
+        let json = header.to_json();
+        // The default mix is written nowhere: pre-mix recordings replay
+        // byte-identically (same contract as the fault_* fields).
+        assert!(!json.contains("mix"), "session-mix header must not mention the mix: {json}");
+        let fields = parse_flat_json(&json).unwrap();
         assert_eq!(get_str(&fields, "kind").unwrap(), "service");
         let back = service_from_header(&fields).unwrap();
         assert_eq!(back.locales, cfg.locales);
@@ -665,8 +812,19 @@ mod tests {
         assert_eq!(back.reclaim_every, cfg.reclaim_every);
         assert_eq!(back.buckets_per_locale, cfg.buckets_per_locale);
         assert_eq!(back.topology, cfg.topology);
+        assert_eq!(back.mix, crate::workloads::ServiceMix::Session);
         assert_eq!(back.seed, cfg.seed);
         assert_eq!(back.model.network_atomics, cfg.model.network_atomics);
+
+        // Off-default mix is written and round-trips.
+        let social =
+            crate::workloads::ServiceConfig { mix: crate::workloads::ServiceMix::Social, ..cfg };
+        let fields = parse_flat_json(&header_for_service(&social).to_json()).unwrap();
+        assert_eq!(get_str(&fields, "mix").unwrap(), "social");
+        assert_eq!(
+            service_from_header(&fields).unwrap().mix,
+            crate::workloads::ServiceMix::Social
+        );
     }
 
     #[test]

@@ -565,10 +565,12 @@ mod tests {
         for i in 0..64u64 {
             agg.buffer(LocaleId(2), i);
         }
-        let n = p.network_totals();
+        let m = crate::obs::MetricsRegistry::from_link_stats(&p.link_stats());
         // One bulk transfer + one companion AM crossed the fabric — not
-        // 64 per-op messages.
-        assert_eq!(n.messages, 2);
+        // 64 per-op messages: every link on the shared 0->2 route saw
+        // exactly two.
+        assert_eq!(m.get("net.max_link_msgs"), Some(2));
+        assert_eq!(m.get("net.links_used"), Some(2));
         let topo = p.topology();
         let am_bytes = crate::pgas::NicOp::ActiveMessage.payload_bytes();
         let expect = topo.transit_ns(LocaleId(0), LocaleId(2), 64 * 8)

@@ -26,7 +26,7 @@ pub use topology::{LocaleId, Machine};
 pub use wide_ptr::WidePtr;
 
 use crate::check::ReclaimAudit;
-use crate::fabric::{LinkStats, NetTotals, Network, Topology, TopologyKind};
+use crate::fabric::{LinkStats, Network, Topology, TopologyKind};
 use crate::obs::{Event, Tracer, INFRA_TASK};
 use crossbeam_utils::CachePadded;
 use once_cell::sync::OnceCell;
@@ -137,18 +137,11 @@ impl Pgas {
         &self.topo
     }
 
-    /// Aggregate fabric counters (messages, hops, transit, hottest link).
-    ///
-    /// **Deprecated for new call sites**: prefer
-    /// [`crate::obs::MetricsRegistry::from_link_stats`] over
-    /// [`Pgas::link_stats`] — gauges derived from per-link state cannot
-    /// drift from it. Kept as the cheap legacy read; the two views are
-    /// cross-checked by [`crate::obs::MetricsRegistry::verify_network`].
-    pub fn network_totals(&self) -> NetTotals {
-        self.net.lock().unwrap().totals()
-    }
-
     /// Per-directed-link counters, sorted by `(from, to)`.
+    /// For aggregate fabric gauges, derive a
+    /// [`crate::obs::MetricsRegistry::from_link_stats`] from these —
+    /// gauges computed from per-link state cannot drift from it (the
+    /// former `network_totals()` accessor was removed for that reason).
     pub fn link_stats(&self) -> Vec<LinkStats> {
         self.net.lock().unwrap().link_stats()
     }
@@ -499,9 +492,10 @@ mod tests {
         let t = p.comm_totals();
         assert_eq!(t.transit_ns, 0);
         assert_eq!(t.virtual_ns, base.cost(NicOp::Get(8), true) + base.am_ns);
-        let n = p.network_totals();
-        assert_eq!(n.transit_ns, 0);
-        assert_eq!(n.messages, 2, "routes are still observable");
+        let m = crate::obs::MetricsRegistry::from_link_stats(&p.link_stats());
+        assert_eq!(m.get("net.max_link_busy_ns"), Some(0), "zero-cost links never busy");
+        // Each message is one hop on the crossbar, so routes stay observable.
+        assert_eq!(m.get("net.hops"), Some(2));
         unsafe { p.free(g) };
     }
 
@@ -533,11 +527,12 @@ mod tests {
                 + ring.topology().transit_ns(LocaleId(0), LocaleId(1), 256)
         );
         // Per-link accounting: 4 hops to L4 plus 1 hop to L1.
-        let n = ring.network_totals();
-        assert_eq!(n.messages, 2);
-        assert_eq!(n.hops, 5);
-        // 0->4 crosses {0->1, 1->2, 2->3, 3->4}; 0->1 reuses the first.
-        assert_eq!(ring.link_stats().len(), 4);
+        let m = crate::obs::MetricsRegistry::from_link_stats(&ring.link_stats());
+        assert_eq!(m.get("net.hops"), Some(5));
+        // 0->4 crosses {0->1, 1->2, 2->3, 3->4}; 0->1 reuses the first,
+        // so both messages show up on the hottest link.
+        assert_eq!(m.get("net.links_used"), Some(4));
+        assert_eq!(m.get("net.max_link_msgs"), Some(2));
         // Transit is attributed to the issuing NIC.
         assert_eq!(ring.nic(LocaleId(0)).snapshot().transit_ns, tr.transit_ns);
     }
@@ -564,9 +559,11 @@ mod tests {
         with_locale(LocaleId(1), || {
             p.charge_flush(64, 16, LocaleId(2));
         });
-        let n = p.network_totals();
-        assert_eq!(n.messages, 1, "a flush is one bulk message per route, not 64");
-        assert_eq!(n.bytes, 64 * 16);
+        let m = crate::obs::MetricsRegistry::from_link_stats(&p.link_stats());
+        assert_eq!(m.get("net.max_link_msgs"), Some(1), "one bulk message per route, not 64");
+        let hops = m.get("net.hops").unwrap();
+        assert!(hops >= 1);
+        assert_eq!(m.get("net.link_bytes"), Some(64 * 16 * hops), "full payload once per hop");
         assert_eq!(
             p.comm_totals().transit_ns,
             p.topology().transit_ns(LocaleId(1), LocaleId(2), 64 * 16)

@@ -171,6 +171,7 @@ mod tests {
             reclaim_every: 32,
             buckets_per_locale: 16,
             topology: TopologyKind::FullyConnected,
+            mix: super::service::ServiceMix::Session,
             seed: 5,
         };
         let r = run_service_live(&cfg, 200);

@@ -20,6 +20,6 @@ pub mod zipf;
 
 pub use live::{run_service_live, LiveServiceResult};
 pub use service::{
-    run_service, run_service_traced, OpKind, ServiceConfig, ServiceResult,
+    run_service, run_service_traced, OpKind, ServiceConfig, ServiceMix, ServiceResult,
 };
 pub use zipf::{harmonic, scramble, Zipfian};

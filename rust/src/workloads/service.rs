@@ -76,6 +76,47 @@ impl OpKind {
     }
 }
 
+/// Which traffic shape the driver generates. The default `session` mix
+/// is the original YCSB-style store; `social` models a social-graph
+/// service: the same get/put/del skeleton, but every `scan` is a
+/// neighborhood walk whose length is drawn from a **power-law fan-out**
+/// (a second Zipfian, over degrees instead of ranks) — most vertices
+/// have a handful of edges, a celebrity few have thousands, and those
+/// super-node scans are what stretches the p999. The fan-out draw is
+/// gated on the mix, so `session` runs stay byte-identical to builds
+/// that predate this enum.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum ServiceMix {
+    #[default]
+    Session,
+    Social,
+}
+
+impl ServiceMix {
+    pub const ALL: [ServiceMix; 2] = [ServiceMix::Session, ServiceMix::Social];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ServiceMix::Session => "session",
+            ServiceMix::Social => "social",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ServiceMix> {
+        ServiceMix::ALL.into_iter().find(|m| m.label() == s)
+    }
+}
+
+/// Exponent of the social fan-out law. Out-degree distributions of real
+/// social graphs are power laws with exponents just above 1 (heavier
+/// than the 0.99 key skew), so the degree Zipfian uses a fixed 1.2.
+const SOCIAL_FANOUT_SKEW: f64 = 1.2;
+
+/// The social fan-out population is `scan_len * 64` possible degrees:
+/// `scan_len` keeps its meaning as the *typical* walk scale while the
+/// tail reaches 64x it for the rare super-node.
+const SOCIAL_FANOUT_SPREAD: usize = 64;
+
 /// Configuration of one service run. Like every DES config here, the
 /// result is a pure function of this struct (seed included).
 #[derive(Clone, Debug)]
@@ -108,6 +149,9 @@ pub struct ServiceConfig {
     /// granularity — smaller = more same-bucket contention).
     pub buckets_per_locale: usize,
     pub topology: TopologyKind,
+    /// Traffic shape (`--mix`); [`ServiceMix::Session`] is the default
+    /// and reproduces the pre-mix driver bit for bit.
+    pub mix: ServiceMix,
     pub seed: u64,
 }
 
@@ -190,6 +234,9 @@ struct STask {
     kind: OpKind,
     home: usize,
     key: u64,
+    /// Walk length of the in-flight op if it is a `scan`: `scan_len`
+    /// under the session mix, a power-law degree draw under `social`.
+    fanout: u64,
     rng: Xoshiro256pp,
     // --- span accounting (never feeds back into the simulation) ---
     span_open: bool,
@@ -211,6 +258,9 @@ fn jitter(rng: &mut Xoshiro256pp, ns: VTime) -> VTime {
 struct ServiceSim {
     cfg: ServiceConfig,
     zipf: Zipfian,
+    /// Degree sampler of the social mix; `None` under `session`, so the
+    /// default mix never even constructs it (let alone draws from it).
+    fan: Option<Zipfian>,
     jrng: Xoshiro256pp,
     global_epoch: u64,
     global_flag: bool,
@@ -250,9 +300,17 @@ impl ServiceSim {
         };
         let rank = self.zipf.sample(&mut self.tasks[tid].rng) as u64;
         let key = scramble(rank ^ (gen << 40));
+        // Social scans walk the scanned vertex's neighborhood: draw its
+        // out-degree from the power law. Gated on mix AND kind, so the
+        // session mix (and every non-scan op) consumes zero fan draws.
+        let fanout = match (&self.fan, kind) {
+            (Some(fan), OpKind::Scan) => 1 + fan.sample(&mut self.tasks[tid].rng) as u64,
+            _ => cfg.scan_len,
+        };
         let task = &mut self.tasks[tid];
         task.kind = kind;
         task.key = key;
+        task.fanout = fanout;
         task.home = (key % self.cfg.locales as u64) as usize;
     }
 
@@ -361,7 +419,10 @@ impl ServiceSim {
     }
 
     /// Request/reply payloads and the home-side bucket hold per op kind.
-    fn shape_of(cfg: &ServiceConfig, kind: OpKind) -> (usize, usize, u64, u64) {
+    /// `scan_len` is the in-flight op's walk length — the config value
+    /// under the session mix, the task's power-law degree draw under
+    /// `social` (super-node scans reply big and walk long).
+    fn shape_of(cfg: &ServiceConfig, kind: OpKind, scan_len: u64) -> (usize, usize, u64, u64) {
         let atomic = cfg.model.local_atomic_ns;
         let dcas = cfg.model.local_dcas_ns;
         match kind {
@@ -369,7 +430,7 @@ impl ServiceSim {
             OpKind::Get => (16, 16, atomic, 0),
             OpKind::Put => (32, 8, dcas, 0),
             OpKind::Del => (16, 8, dcas, 0),
-            OpKind::Scan => (16, cfg.scan_len as usize * 16, atomic, cfg.scan_len * atomic),
+            OpKind::Scan => (16, scan_len as usize * 16, atomic, scan_len * atomic),
         }
     }
 
@@ -386,7 +447,7 @@ impl ServiceSim {
         let cfg = self.cfg.clone();
         let task = &self.tasks[tid];
         let (me, home, key, kind) = (task.locale, task.home, task.key, task.kind);
-        let (req_bytes, reply_bytes, hold, walk) = Self::shape_of(&cfg, kind);
+        let (req_bytes, reply_bytes, hold, walk) = Self::shape_of(&cfg, kind, task.fanout);
         let bucket = ((key / cfg.locales as u64) % cfg.buckets_per_locale as u64) as usize;
         if home == me {
             let t0 = if kind == OpKind::Scan {
@@ -743,6 +804,7 @@ pub fn run_service_traced(cfg: ServiceConfig, tracer: Option<Arc<Tracer>>) -> Se
             kind: OpKind::Get,
             home: 0,
             key: 0,
+            fanout: cfg.scan_len,
             rng: Xoshiro256pp::new(cfg.seed ^ (t as u64).wrapping_mul(0xA5A5)),
             span_open: false,
             span_began: 0,
@@ -770,8 +832,16 @@ pub fn run_service_traced(cfg: ServiceConfig, tracer: Option<Arc<Tracer>>) -> Se
     }
     let locales = cfg.locales;
     let zipf = Zipfian::new(cfg.clients, cfg.skew);
+    let fan = match cfg.mix {
+        ServiceMix::Session => None,
+        ServiceMix::Social => Some(Zipfian::new(
+            (cfg.scan_len as usize * SOCIAL_FANOUT_SPREAD).max(2),
+            SOCIAL_FANOUT_SKEW,
+        )),
+    };
     let mut sim = ServiceSim {
         zipf,
+        fan,
         jrng: Xoshiro256pp::new(cfg.seed ^ 0xBEEF),
         global_epoch: 1,
         global_flag: false,
@@ -842,6 +912,7 @@ mod tests {
             reclaim_every: 64,
             buckets_per_locale: 32,
             topology: TopologyKind::Dragonfly,
+            mix: ServiceMix::Session,
             seed: 23,
         }
     }
@@ -908,6 +979,56 @@ mod tests {
         assert!(stamped > 0, "service hops must be attributable to a task");
         assert!(evs.iter().any(|e| matches!(e.ev, Event::OpBegin { .. })));
         assert!(evs.iter().any(|e| matches!(e.ev, Event::Reclaim { .. })));
+    }
+
+    #[test]
+    fn social_mix_is_deterministic_and_heavier_tailed_than_session() {
+        let mut social = small_cfg();
+        social.mix = ServiceMix::Social;
+        let (a, b) = (run_service(social.clone()), run_service(social.clone()));
+        assert_eq!(a.makespan_ns, b.makespan_ns, "social mix must stay deterministic");
+        assert_eq!(a.latency.json(), b.latency.json());
+        let session = run_service(small_cfg());
+        // Same op population either way — the mix draw itself is shared.
+        assert_eq!(a.total_ops, session.total_ops);
+        let scan = |r: &ServiceResult, p: f64| r.by_kind[OpKind::Scan.index()].op.percentile(p);
+        // The power-law fan-out stretches the scan tail far beyond the
+        // fixed-length session walk while the typical scan stays cheap:
+        // p999/p50 dispersion must grow under the social mix.
+        let (s_spread, a_spread) =
+            (scan(&session, 99.9) as f64 / scan(&session, 50.0).max(1) as f64,
+             scan(&a, 99.9) as f64 / scan(&a, 50.0).max(1) as f64);
+        assert!(
+            a_spread > s_spread,
+            "social scan dispersion must exceed session: {a_spread:.2} vs {s_spread:.2}"
+        );
+    }
+
+    #[test]
+    fn session_mix_never_constructs_the_fan_sampler() {
+        // The byte-identity contract of the default mix: a session run
+        // consumes exactly the same RNG draws as before the mix existed,
+        // which holds structurally because the degree sampler is never
+        // built. Spot-check the observable consequence: scan replies are
+        // always scan_len nodes, never a power-law draw.
+        let cfg = small_cfg();
+        let r = run_service(cfg.clone());
+        assert!(r.by_kind[OpKind::Scan.index()].count() > 0);
+        let social = ServiceConfig { mix: ServiceMix::Social, ..cfg };
+        assert_ne!(
+            run_service(social).net.bytes,
+            r.net.bytes,
+            "variable fan-out must change scan reply traffic"
+        );
+    }
+
+    #[test]
+    fn mix_labels_round_trip() {
+        for m in ServiceMix::ALL {
+            assert_eq!(ServiceMix::parse(m.label()), Some(m));
+        }
+        assert_eq!(ServiceMix::parse("nope"), None);
+        assert_eq!(ServiceMix::default(), ServiceMix::Session);
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! backward compatibility of the zero-cost crossbar with the pre-fabric
 //! flat model, and emergent congestion under the DES testbed.
 
-use pgas_nb::fabric::{Dragonfly, FullyConnected, Ring, Topology, TopologyKind};
+use pgas_nb::fabric::{Dragonfly, FullyConnected, Network, Ring, Topology, TopologyKind};
+use pgas_nb::obs::MetricsRegistry;
 use pgas_nb::pgas::{with_locale, LocaleId, Machine, NicModel, NicOp, Pgas};
 use pgas_nb::sim::{run_epoch, EpochConfig, EpochWorkload};
 use pgas_nb::util::proptest::{shrink_usize, Prop};
@@ -300,7 +301,8 @@ fn flat_zero_pgas_charges_exactly_the_nic_model() {
         + model.am_ns; // on-statement
     assert_eq!(t.virtual_ns, expect);
     assert_eq!(t.transit_ns, 0, "zero-cost fabric adds no transit");
-    assert_eq!(p.network_totals().queued_ns, 0);
+    let m = MetricsRegistry::from_link_stats(&p.link_stats());
+    assert_eq!(m.get("net.max_link_wait_ns"), Some(0), "zero-cost fabric never queues");
     unsafe { p.free(g) };
 }
 
@@ -320,6 +322,7 @@ fn flat_zero_des_equals_default_and_other_topologies_differ() {
         topology: kind,
         agg_capacity: pgas_nb::pgas::DEFAULT_AGG_CAPACITY,
         adaptive: pgas_nb::sim::Adaptivity::default(),
+        faults: pgas_nb::fault::FaultPlan::none(),
         seed: 3,
     };
     let flat = run_epoch(cfg(TopologyKind::FlatZero));
@@ -374,6 +377,7 @@ fn hot_spot_queues_on_ring_but_not_on_crossbar_links() {
         topology: kind,
         agg_capacity: pgas_nb::pgas::DEFAULT_AGG_CAPACITY,
         adaptive: pgas_nb::sim::Adaptivity::default(),
+        faults: pgas_nb::fault::FaultPlan::none(),
         seed: 9,
     };
     let ring = run_epoch(cfg(TopologyKind::Ring));
@@ -393,26 +397,18 @@ fn hot_spot_queues_on_ring_but_not_on_crossbar_links() {
 
 #[test]
 fn live_substrate_link_counters_balance() {
-    // Per-link message counts must sum to the total hop count.
-    let p = Pgas::with_topology(
-        Machine::new(8, 2),
-        NicModel::aries_no_network_atomics(),
-        TopologyKind::Dragonfly.build(8),
-    );
-    with_locale(LocaleId(0), || {
-        for t in 1..8u16 {
-            p.charge(NicOp::Atomic64, LocaleId(t));
-        }
-    });
-    let totals = p.network_totals();
+    // Per-link message counts must sum to the total hop count: the
+    // link-derived gauges and the running `NetTotals` sums are two
+    // accounting paths over the same traffic and must agree exactly.
+    let mut n = Network::new(TopologyKind::Dragonfly.build(8));
+    for t in 1..8u16 {
+        n.send(0, LocaleId(0), LocaleId(t), 8);
+    }
+    let totals = n.totals();
     assert_eq!(totals.messages, 7);
-    let per_link: u64 = p.link_stats().iter().map(|s| s.msgs).sum();
-    assert_eq!(per_link, totals.hops);
-    assert_eq!(
-        p.comm_totals().transit_ns,
-        totals.transit_ns,
-        "issuer attribution and network totals agree"
-    );
+    let m = MetricsRegistry::from_link_stats(&n.link_stats());
+    assert_eq!(m.get("net.hops"), Some(totals.hops));
+    m.verify_network(&totals).expect("no drift between accounting paths");
 }
 
 #[test]

@@ -12,6 +12,7 @@
 //!   agrees with the legacy running totals (no counter drift).
 
 use pgas_nb::fabric::TopologyKind;
+use pgas_nb::fault::FaultPlan;
 use pgas_nb::obs::{
     attribute_ops, conservation, epoch_from_header, header_for_epoch, header_for_service,
     parse_trace_bytes, service_from_header, Event, MetricsRegistry, Tracer,
@@ -38,6 +39,7 @@ fn fig9_like() -> EpochConfig {
         topology: TopologyKind::Dragonfly,
         agg_capacity: 1_024,
         adaptive: Adaptivity::default(),
+        faults: FaultPlan::none(),
         seed: 29,
     }
 }
@@ -64,6 +66,7 @@ fn fig10_like() -> EpochConfig {
             backpressure_ns: 25_000,
             hier_group: Some(4),
         },
+        faults: FaultPlan::none(),
         seed: 31,
     }
 }
@@ -134,6 +137,7 @@ fn service_like() -> ServiceConfig {
         reclaim_every: 64,
         buckets_per_locale: 32,
         topology: TopologyKind::Dragonfly,
+        mix: pgas_nb::workloads::ServiceMix::Session,
         seed: 23,
     }
 }

@@ -2,10 +2,16 @@
 //! in-crate mini framework (`util::proptest`).
 
 use pgas_nb::atomics::{AbaCell, AtomicObject, AtomicU128, LocalAtomicObject};
+use pgas_nb::coordinator::figures::{service_cfg, Scale};
 use pgas_nb::epoch::{EpochManager, LimboList, NodePool, ReclaimPolicy};
-use pgas_nb::pgas::{GlobalPtr, LocaleId, Machine, NicModel, Pgas, WidePtr};
+use pgas_nb::fabric::TopologyKind;
+use pgas_nb::fault::{CrashAt, FaultPlan};
+use pgas_nb::obs::{header_for_epoch, Tracer};
+use pgas_nb::pgas::{GlobalPtr, LocaleId, Machine, NicModel, Pgas, WidePtr, DEFAULT_AGG_CAPACITY};
+use pgas_nb::sim::{run_epoch, run_epoch_traced, Adaptivity, EpochConfig, EpochWorkload, StalledTask};
 use pgas_nb::util::proptest::{shrink_u64, shrink_vec, Prop};
 use pgas_nb::util::rng::Xoshiro256pp;
+use pgas_nb::workloads::run_service;
 use std::sync::Arc;
 
 #[test]
@@ -282,6 +288,212 @@ fn prop_atomic_object_sequential_oracle() {
             }
             for o in objs {
                 unsafe { p.free(o) };
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_same_fault_seed_traces_are_byte_identical() {
+    // ∀ (chaos rate, fault seed), with or without a crash+lease schedule:
+    // two runs of the same faulty config export byte-identical JSONL
+    // traces and identical results. Fault injection rides a dedicated
+    // seeded stream, so chaos must be exactly as deterministic as the
+    // fault-free DES.
+    Prop::new("same fault seed => byte-identical traces").cases(6).check_noshrink(
+        |rng| (1 + rng.next_below(150_000) as u32, rng.next_u64()),
+        |&(rate_ppm, fault_seed)| {
+            let crash = fault_seed % 2 == 0;
+            let cfg = EpochConfig {
+                workload: EpochWorkload::DeleteReclaimEvery(32),
+                model: NicModel::aries_no_network_atomics(),
+                locales: 4,
+                tasks_per_locale: 2,
+                objs_per_task: 96,
+                remote_ratio: 0.5,
+                fcfs_local_election: true,
+                slow_locale: None,
+                slow_factor: 8,
+                // Pin the doomed locale's first task so the crash point is
+                // reachable on every draw of the schedule knobs.
+                stalled_task: crash.then_some(StalledTask { task: 6, hold_iters: usize::MAX }),
+                topology: TopologyKind::Ring,
+                agg_capacity: DEFAULT_AGG_CAPACITY,
+                adaptive: Adaptivity::default(),
+                faults: FaultPlan {
+                    crash: crash.then_some(CrashAt { locale: 3, at_ns: 150_000 }),
+                    lease_ns: if crash { 80_000 } else { 0 },
+                    ..FaultPlan::chaos(rate_ppm, fault_seed)
+                },
+                seed: 7,
+            };
+            let go = |cfg: &EpochConfig| {
+                let tr = Arc::new(Tracer::new());
+                let r = run_epoch_traced(cfg.clone(), Some(Arc::clone(&tr)));
+                (tr.export_jsonl(&header_for_epoch(cfg)), r)
+            };
+            let (ja, ra) = go(&cfg);
+            let (jb, rb) = go(&cfg);
+            if ja != jb {
+                return Err(format!(
+                    "rate={rate_ppm}ppm seed={fault_seed:#x}: trace bytes diverged"
+                ));
+            }
+            if ra.makespan_ns != rb.makespan_ns || ra.net != rb.net || ra.freed != rb.freed {
+                return Err(format!(
+                    "rate={rate_ppm}ppm seed={fault_seed:#x}: results diverged"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn faults_off_reproduces_the_committed_baselines_bit_for_bit() {
+    // One representative point from each committed quick-mode baseline,
+    // recomputed in-process with `FaultPlan::none()`: landing the fault
+    // plane must leave fault-free runs byte-identical to the artifacts
+    // generated before it existed. (cargo runs tests with cwd = rust/,
+    // so the committed artifacts live at ../baselines/.)
+    let baseline = |name: &str| {
+        std::fs::read_to_string(format!("../baselines/{name}"))
+            .unwrap_or_else(|e| panic!("reading baselines/{name}: {e}"))
+    };
+
+    // BENCH_topology.json: the fig9 quick dragonfly L=8 point.
+    let r = run_epoch(EpochConfig {
+        workload: EpochWorkload::DeleteReclaimEvery(256),
+        model: NicModel::aries_no_network_atomics(),
+        locales: 8,
+        tasks_per_locale: 8,
+        objs_per_task: 1_024,
+        remote_ratio: 0.5,
+        fcfs_local_election: true,
+        slow_locale: None,
+        slow_factor: 8,
+        stalled_task: None,
+        topology: TopologyKind::Dragonfly,
+        agg_capacity: DEFAULT_AGG_CAPACITY,
+        adaptive: Adaptivity::default(),
+        faults: FaultPlan::none(),
+        seed: 29,
+    });
+    let needle = format!(
+        "{{\"topology\": \"dragonfly\", \"locales\": 8, \"makespan_ns\": {}, \"mops\": {:.4}, \
+         \"net_messages\": {}, \"net_hops\": {}, \"net_bytes\": {}",
+        r.makespan_ns, r.throughput_mops, r.net.messages, r.net.hops, r.net.bytes,
+    );
+    assert!(
+        baseline("BENCH_topology.json").contains(&needle),
+        "BENCH_topology.json no longer contains the faults-off point:\n{needle}"
+    );
+
+    // BENCH_adaptive.json: the fig10 quick minimal+fixed ring L=8 point.
+    let r = run_epoch(EpochConfig {
+        workload: EpochWorkload::DeleteReclaimEvery(1),
+        model: NicModel::aries_no_network_atomics(),
+        locales: 8,
+        tasks_per_locale: 8,
+        objs_per_task: 512,
+        remote_ratio: 0.5,
+        fcfs_local_election: true,
+        slow_locale: None,
+        slow_factor: 8,
+        stalled_task: None,
+        topology: TopologyKind::Ring,
+        agg_capacity: 256,
+        adaptive: Adaptivity::default(),
+        faults: FaultPlan::none(),
+        seed: 31,
+    });
+    let needle = format!(
+        "{{\"mode\": \"minimal+fixed\", \"topology\": \"ring\", \"locales\": 8, \
+         \"makespan_ns\": {}, \"mops\": {:.4}, \"max_link_wait_ns\": {}, \"queued_ns\": {}, \
+         \"detours\": 0",
+        r.makespan_ns, r.throughput_mops, r.net.max_link_wait_ns, r.net.queued_ns,
+    );
+    assert!(
+        baseline("BENCH_adaptive.json").contains(&needle),
+        "BENCH_adaptive.json no longer contains the faults-off point:\n{needle}"
+    );
+
+    // BENCH_service.json: the fig11 quick ring L=4 point (the service
+    // config carries its own FaultPlan-free path and the default mix).
+    let r = run_service(service_cfg(Scale::Quick, TopologyKind::Ring, 4));
+    let needle = format!(
+        "{{\"topology\": \"ring\", \"locales\": 4, \"makespan_ns\": {}, \"mops\": {:.4}, \
+         \"ops\": {}, \"remote_ops\": {}, \"advances\": {}, \"freed\": {}",
+        r.makespan_ns, r.throughput_mops, r.total_ops, r.remote_ops, r.advances, r.freed,
+    );
+    assert!(
+        baseline("BENCH_service.json").contains(&needle),
+        "BENCH_service.json no longer contains the faults-off point:\n{needle}"
+    );
+}
+
+#[test]
+fn prop_lease_never_expires_a_live_pin() {
+    // ∀ op sequences and lease durations: while every locale is live (no
+    // `expire_locale` call), lease bookkeeping is inert — zero expiries,
+    // and accounting identical to a lease-free manager running the same
+    // sequence. Expiry is only legal against an excluded (crashed) locale.
+    Prop::new("leases are inert while the holder lives").cases(40).check_noshrink(
+        |rng| {
+            let lease = 1 + rng.next_below(1 << 20);
+            let n = rng.next_usize(120);
+            let ops = (0..n).map(|_| rng.next_below(5) as u8).collect::<Vec<u8>>();
+            (lease, ops)
+        },
+        |&(lease, ref ops)| {
+            let run = |lease_ns: u64| {
+                let p = Pgas::new(Machine::new(2, 1), NicModel::aries_no_network_atomics());
+                let em = EpochManager::new(Arc::clone(&p));
+                em.set_lease_ns(lease_ns);
+                let tok = em.register();
+                let mut deferred: u64 = 0;
+                for (i, op) in ops.iter().enumerate() {
+                    match op {
+                        0 => tok.pin(),
+                        1 => tok.unpin(),
+                        2 => {
+                            if tok.is_pinned() {
+                                tok.defer_delete(p.alloc(LocaleId((i % 2) as u16), i as u64));
+                                deferred += 1;
+                            }
+                        }
+                        _ => {
+                            tok.try_reclaim();
+                        }
+                    }
+                }
+                tok.unpin();
+                drop(tok);
+                em.clear();
+                (em.stats(), deferred, p.live_objects())
+            };
+            let (leased, d1, live1) = run(lease);
+            let (bare, d2, live2) = run(0);
+            if leased.lease_expiries != 0 {
+                return Err(format!(
+                    "{} lease expiries with every locale live",
+                    leased.lease_expiries
+                ));
+            }
+            if live1 != 0 || live2 != 0 {
+                return Err(format!("leaked objects ({live1} leased, {live2} bare)"));
+            }
+            if leased.freed != d1 || d1 != d2 {
+                return Err(format!(
+                    "lease bookkeeping perturbed reclamation: freed {} of {d1}",
+                    leased.freed
+                ));
+            }
+            if (leased.advances, leased.freed, leased.deferred)
+                != (bare.advances, bare.freed, bare.deferred)
+            {
+                return Err("leased and lease-free managers diverged".into());
             }
             Ok(())
         },

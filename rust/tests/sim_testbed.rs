@@ -3,6 +3,7 @@
 //! deterministic, and degrade sanely under failure injection.
 
 use pgas_nb::fabric::TopologyKind;
+use pgas_nb::fault::FaultPlan;
 use pgas_nb::pgas::{NicModel, DEFAULT_AGG_CAPACITY};
 use pgas_nb::sim::{
     run_atomics, run_epoch, Adaptivity, AtomicVariant, AtomicsConfig, EpochConfig, EpochWorkload,
@@ -36,6 +37,7 @@ fn ecfg(workload: EpochWorkload, locales: usize) -> EpochConfig {
         topology: TopologyKind::default(),
         agg_capacity: DEFAULT_AGG_CAPACITY,
         adaptive: Adaptivity::default(),
+        faults: FaultPlan::none(),
         seed: 11,
     }
 }

@@ -18,8 +18,11 @@
 //!   regressed back to zero).
 //!
 //! Also drives the same mix briefly against the *live* substrate (real
-//! `InterlockedHashTable` + `LockFreeList` on threads) — printed as a
-//! table only, never baselined: wall-clock numbers are
+//! `InterlockedHashTable` + `LockFreeList`) on **both** execution
+//! backends (`des` inline and `threads`-as-locales), printing measured
+//! `wall_ns` next to the modeled `virtual_ns` and asserting per-kind
+//! op-count conservation against a DES run of the same shape — printed
+//! as a table only, never baselined: wall-clock numbers are
 //! interleaving-dependent.
 //!
 //! Emits machine-readable `BENCH_service.json` (flat per-point keys so
@@ -27,10 +30,11 @@
 
 use pgas_nb::coordinator::figures::{service_cfg, Scale};
 use pgas_nb::fabric::TopologyKind;
+use pgas_nb::pgas::ExecKind;
 use pgas_nb::util::bench::BenchRunner;
 use pgas_nb::util::stats::LatencyHistogram;
 use pgas_nb::util::table::Table;
-use pgas_nb::workloads::{run_service, run_service_live, OpKind, ServiceResult};
+use pgas_nb::workloads::{run_service, run_service_live_on, OpKind, ServiceConfig, ServiceResult};
 
 struct Point {
     kind: TopologyKind,
@@ -169,38 +173,56 @@ fn main() {
         "skewed homes must contend on links: queue p99 must be nonzero"
     );
 
-    // The same mix against the live substrate (threads + real
-    // collections). Wall-clock latency is scheduling noise; only the
-    // deterministic invariants are asserted.
+    // The same mix against the live substrate (real collections) on BOTH
+    // execution backends. Wall-clock latency is scheduling noise; what is
+    // deterministic — and asserted — is the logical op mix: each task's
+    // RNG stream never observes scheduling, so the per-kind op counts
+    // must match a DES run of the same (seed, locales, tasks, ops) shape
+    // exactly, on either backend (the conservation check).
     let mut live_cfg = service_cfg(Scale::Quick, TopologyKind::FullyConnected, 2);
     live_cfg.tasks_per_locale = 2;
     let live_ops = if b.quick() { 150 } else { 1_000 };
-    let lr = run_service_live(&live_cfg, live_ops);
-    let mut lt = Table::new(&["kind", "ops", "p50_us", "p99_us"]);
-    for (kind, name) in [
-        (OpKind::Get, "get"),
-        (OpKind::Put, "put"),
-        (OpKind::Del, "del"),
-        (OpKind::Scan, "scan"),
-    ] {
-        let h = &lr.by_kind[kind.index()];
-        lt.row(&[
-            name.into(),
-            h.count().to_string(),
-            format!("{:.2}", h.percentile(50.0) as f64 / 1e3),
-            format!("{:.2}", h.percentile(99.0) as f64 / 1e3),
-        ]);
+    let des_ref = run_service(ServiceConfig { ops_per_task: live_ops, ..live_cfg.clone() });
+    let mut lt = Table::new(&["backend", "kind", "ops", "wall_p50_us", "wall_p99_us"]);
+    for backend in ExecKind::ALL {
+        let lr = run_service_live_on(&live_cfg, live_ops, backend);
+        for (kind, name) in [
+            (OpKind::Get, "get"),
+            (OpKind::Put, "put"),
+            (OpKind::Del, "del"),
+            (OpKind::Scan, "scan"),
+        ] {
+            let h = &lr.by_kind[kind.index()];
+            lt.row(&[
+                backend.label().into(),
+                name.into(),
+                h.count().to_string(),
+                format!("{:.2}", h.percentile(50.0) as f64 / 1e3),
+                format!("{:.2}", h.percentile(99.0) as f64 / 1e3),
+            ]);
+        }
+        println!(
+            "live[{}]: {} ops, wall {:.2} ms vs modeled {:.2} ms, {} leaked, \
+             arena banked/reused {}/{}",
+            backend.label(),
+            lr.total_ops,
+            lr.wall_ns as f64 / 1e6,
+            lr.virtual_ns as f64 / 1e6,
+            lr.leaked,
+            lr.arena_banked,
+            lr.arena_reused,
+        );
+        assert_eq!(lr.leaked, 0, "live clear() must reclaim every session");
+        assert_eq!(lr.total_ops as usize, 2 * 2 * live_ops);
+        assert_eq!(
+            lr.kind_counts(),
+            des_ref.kind_counts(),
+            "live-vs-DES op-count conservation must hold on the {} backend",
+            backend.label()
+        );
     }
-    println!("\n=== live substrate (wall clock; never baselined) ===");
+    println!("\n=== live substrate, both backends (wall clock; never baselined) ===");
     println!("{}", lt.render());
-    println!(
-        "live: {} ops in {:.2} ms, {} leaked",
-        lr.total_ops,
-        lr.wall_ns as f64 / 1e6,
-        lr.leaked
-    );
-    assert_eq!(lr.leaked, 0, "live clear() must reclaim every session");
-    assert_eq!(lr.total_ops as usize, 2 * 2 * live_ops);
 
     let cfg = service_cfg(scale, TopologyKind::Dragonfly, last);
     let json = format!(

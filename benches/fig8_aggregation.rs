@@ -8,11 +8,19 @@
 //! (`virtual_ns`) drops with it; the new `aggregated_ops`/`flushes` NIC
 //! counters prove the coalescing happened.
 //!
+//! The capacity sweep runs on the deterministic DES backend
+//! (bit-identical to the committed baselines); a representative point
+//! then re-runs on the threads-as-locales backend with an op-count
+//! conservation assert, printing measured `wall_ms` next to the modeled
+//! virtual time. Wall-clock is interleaving-dependent and never
+//! baselined.
+//!
 //! Emits machine-readable `BENCH_aggregation.json` next to the human
 //! table (the perf-trajectory seed for CI).
 
 use pgas_nb::epoch::{EpochManager, ReclaimPolicy};
-use pgas_nb::pgas::{coforall_locales, LocaleId, Machine, NicModel, NicSnapshot, Pgas};
+use pgas_nb::fabric::TopologyKind;
+use pgas_nb::pgas::{coforall_locales, ExecKind, LocaleId, Machine, NicModel, NicSnapshot, Pgas};
 use pgas_nb::util::bench::BenchRunner;
 use pgas_nb::util::table::Table;
 use std::sync::Arc;
@@ -22,18 +30,28 @@ struct Point {
     locales: usize,
     capacity: usize,
     ops: u64,
+    freed: u64,
     wall_ns: u64,
     comm: NicSnapshot,
     advances: u64,
     migrated: u64,
     migration_flushes: u64,
+    arena_banked: u64,
+    arena_reused: u64,
 }
 
 /// Every locale defers `objs_per_locale` objects owned by *other*
 /// locales (rotating owner), reclaiming periodically — the hot remote
-/// path of the epoch manager.
-fn run_point(locales: usize, capacity: usize, objs_per_locale: usize) -> Point {
-    let p = Pgas::new(Machine::new(locales, 2), NicModel::aries_no_network_atomics());
+/// path of the epoch manager. Runs on either execution backend: the
+/// sweep stays on `Des` (bit-identical to the committed baselines), the
+/// conservation point re-runs on `Threads`.
+fn run_point(locales: usize, capacity: usize, objs_per_locale: usize, backend: ExecKind) -> Point {
+    let p = Pgas::with_backend(
+        Machine::new(locales, 2),
+        NicModel::aries_no_network_atomics(),
+        TopologyKind::FlatZero.build(locales),
+        backend,
+    );
     let em = EpochManager::with_config(Arc::clone(&p), ReclaimPolicy::default(), capacity);
     let t0 = Instant::now();
     coforall_locales(p.machine(), |loc| {
@@ -55,15 +73,19 @@ fn run_point(locales: usize, capacity: usize, objs_per_locale: usize) -> Point {
     let s = em.stats();
     let ops = (locales * objs_per_locale) as u64;
     assert_eq!(s.freed, ops, "every deferral reclaimed exactly once");
+    let (arena_banked, arena_reused) = p.arena_stats();
     Point {
         locales,
         capacity,
         ops,
+        freed: s.freed,
         wall_ns,
         comm: p.comm_totals(),
         advances: s.advances,
         migrated: s.migrated,
         migration_flushes: s.migration_flushes,
+        arena_banked,
+        arena_reused,
     }
 }
 
@@ -103,12 +125,13 @@ fn main() {
         "agg_ops",
         "flushes",
         "am_reduction",
+        "wall_ms",
     ]);
     let mut points: Vec<Point> = Vec::new();
     for &locales in &locale_counts {
         let mut baseline_ams = 0u64;
         for &capacity in &capacities {
-            let pt = run_point(locales, capacity, objs_per_locale);
+            let pt = run_point(locales, capacity, objs_per_locale, ExecKind::Des);
             b.record_virtual(
                 &format!("L={locales} cap={capacity} remote defer_delete"),
                 pt.ops,
@@ -127,6 +150,7 @@ fn main() {
                 pt.comm.aggregated_ops.to_string(),
                 pt.comm.flushes.to_string(),
                 format!("{reduction:.1}x"),
+                format!("{:.2}", pt.wall_ns as f64 / 1e6),
             ]);
             points.push(pt);
         }
@@ -146,6 +170,28 @@ fn main() {
         best.comm.ams,
         base.comm.virtual_ns as f64 / 1e6,
         best.comm.virtual_ns as f64 / 1e6,
+    );
+
+    // The representative point again on the threads-as-locales backend:
+    // real progress threads and per-locale arenas, with wall-clock next
+    // to the modeled time charged by the same NIC path. The logical
+    // workload is schedule-independent, so ops and freed must match the
+    // DES run exactly (op-count conservation) and nothing may leak
+    // (run_point asserts live_objects == 0 on both backends).
+    let des_ref = points.iter().find(|p| p.locales == 4 && p.capacity == 256).unwrap();
+    let live = run_point(4, 256, objs_per_locale, ExecKind::Threads);
+    assert_eq!(live.ops, des_ref.ops, "threads backend must run the same logical ops");
+    assert_eq!(live.freed, des_ref.freed, "every deferral reclaimed once on either backend");
+    assert!(live.arena_banked > 0, "threads backend banks freed blocks in locale arenas");
+    println!(
+        "\n=== threads backend (L=4, cap 256; wall clock, never baselined) ===\n\
+         ops {} freed {}  wall {:.2} ms vs modeled {:.2} ms  arena banked/reused {}/{}",
+        live.ops,
+        live.freed,
+        live.wall_ns as f64 / 1e6,
+        live.comm.virtual_ns as f64 / 1e6,
+        live.arena_banked,
+        live.arena_reused,
     );
 
     let json = format!(

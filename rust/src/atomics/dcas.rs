@@ -39,8 +39,9 @@ pub fn dcas_is_lock_free() -> bool {
 const STRIPES: usize = 64;
 
 fn stripe_for(addr: usize) -> &'static Mutex<()> {
-    use once_cell::sync::Lazy;
-    static LOCKS: Lazy<Vec<Mutex<()>>> = Lazy::new(|| (0..STRIPES).map(|_| Mutex::new(())).collect());
+    use std::sync::LazyLock;
+    static LOCKS: LazyLock<Vec<Mutex<()>>> =
+        LazyLock::new(|| (0..STRIPES).map(|_| Mutex::new(())).collect());
     // Mix the address so adjacent words hit different stripes.
     let h = (addr >> 4).wrapping_mul(0x9E3779B97F4A7C15usize);
     &LOCKS[(h >> 58) as usize % STRIPES]

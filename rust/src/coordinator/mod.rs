@@ -7,12 +7,12 @@ use crate::collections::{InterlockedHashTable, LockFreeQueue, LockFreeStack};
 use crate::epoch::{EpochManager, ReclaimPolicy};
 use crate::fabric::TopologyKind;
 use crate::fault::{CrashAt, FaultPlan};
-use crate::pgas::{coforall_locales, coforall_tasks, LocaleId, Machine, NicModel, Pgas};
+use crate::pgas::{coforall_locales, coforall_tasks, ExecKind, LocaleId, Machine, NicModel, Pgas};
 use crate::obs::{header_for_epoch, Tracer};
 use crate::runtime::SharedReclaimScan;
 use crate::sim::{run_epoch_traced, Adaptivity, EpochConfig, EpochWorkload};
 use crate::util::cli::Args;
-use crate::workloads::ServiceMix;
+use crate::workloads::{run_service, run_service_live_on, OpKind, ServiceConfig, ServiceMix};
 use crate::util::table::{fmt_ops, Table};
 use crate::util::error::Result;
 use crate::{bail, err};
@@ -33,6 +33,14 @@ Subcommands:
         [--mix session|social]                service only: traffic shape
                                               (social = power-law fan-out
                                               scans)
+        [--backend des|threads]               service only: des (default)
+                                              regenerates the DES figure;
+                                              threads runs the live mix on
+                                              both execution backends —
+                                              measured wall_ms next to
+                                              modeled virtual_ms, per-kind
+                                              op counts checked against
+                                              the DES (conservation)
   check [--seeds 1,2,3] [--collections stack,queue,list,map]
         [--locales N] [--tasks N] [--ops N] [--keys N] [--topology T]
         [--agg-capacity N] [--reclaim-every K] [--stall] [--adversarial]
@@ -135,6 +143,18 @@ fn service_mix_from_args(args: &Args, which: &str) -> Result<ServiceMix> {
         .ok_or_else(|| err!("unknown service mix '{v}' (choose from session, social)"))
 }
 
+/// Parse `--backend des|threads` for `bench fig11`/`service`. Every other
+/// figure is DES-only by construction (the committed baselines pin the
+/// deterministic schedule), so they reject the flag rather than silently
+/// running something the caller did not ask for.
+fn backend_from_args(args: &Args, which: &str) -> Result<ExecKind> {
+    let Some(v) = args.get("backend") else { return Ok(ExecKind::Des) };
+    if !matches!(which, "fig11" | "service") {
+        bail!("--backend applies to the service scenario only (bench service --backend threads)");
+    }
+    ExecKind::parse(v).ok_or_else(|| err!("unknown backend '{v}' (choose from des, threads)"))
+}
+
 fn parse_topology(args: &Args) -> TopologyKind {
     let choices = topology_choices();
     TopologyKind::parse(args.get_choice("topology", &choices, TopologyKind::FlatZero.label()))
@@ -174,7 +194,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
         bail!("--trace-out requires a value (a trace file path)");
     }
     let mix = service_mix_from_args(args, which)?;
+    let backend = backend_from_args(args, which)?;
     if let Some(path) = args.get("trace-out") {
+        if backend == ExecKind::Threads {
+            bail!("--trace-out records the deterministic DES; it cannot trace the threads backend");
+        }
         return cmd_bench_trace(which, scale, path, mix);
     }
     let t0 = Instant::now();
@@ -191,11 +215,21 @@ fn cmd_bench(args: &Args) -> Result<()> {
             emit(args, "Fig 10: congestion-adaptive fabric", &figures::fig10(scale))
         }
         "fig11" | "service" => {
-            let title = match mix {
-                ServiceMix::Session => "Fig 11: service-scenario tail latency".to_string(),
-                other => format!("Fig 11: service-scenario tail latency ({} mix)", other.label()),
-            };
-            emit(args, &title, &figures::fig11_mix(scale, mix))
+            if backend == ExecKind::Threads {
+                let title = format!(
+                    "Fig 11: live service mix on both backends ({} mix, conservation-checked)",
+                    mix.label()
+                );
+                emit(args, &title, &bench_service_live(scale, mix)?)
+            } else {
+                let title = match mix {
+                    ServiceMix::Session => "Fig 11: service-scenario tail latency".to_string(),
+                    other => {
+                        format!("Fig 11: service-scenario tail latency ({} mix)", other.label())
+                    }
+                };
+                emit(args, &title, &figures::fig11_mix(scale, mix))
+            }
         }
         "fig12" | "fault" => {
             emit(args, "Fig 12: chaos sweep & crash recovery", &figures::fig12(scale))
@@ -282,6 +316,56 @@ fn cmd_bench_trace_service(scale: Scale, path: &str, mix: ServiceMix) -> Result<
         r.latency.op.percentile(99.0)
     );
     Ok(())
+}
+
+/// `bench service --backend threads`: the live session-store mix against
+/// the real collections on *both* execution backends, one row each —
+/// measured `wall_ms` next to the modeled `virtual_ms` charged by the
+/// same `NicModel`. Before anything is printed, each live run's per-kind
+/// op counts are checked against a DES run of the same `(seed, locales,
+/// tasks, ops)` shape: the mix is drawn from per-task RNG streams that
+/// never observe scheduling, so any divergence is a bug, not noise.
+fn bench_service_live(scale: Scale, mix: ServiceMix) -> Result<Table> {
+    let live_ops = if scale == Scale::Quick { 150 } else { 1_000 };
+    let mut cfg = figures::service_cfg(scale, TopologyKind::FullyConnected, 2);
+    cfg.tasks_per_locale = 2; // threads are real here — keep the fleet small
+    cfg.mix = mix;
+    let des = run_service(ServiceConfig { ops_per_task: live_ops, ..cfg.clone() });
+    let mut t = Table::new(&[
+        "backend", "ops", "get", "put", "del", "scan", "wall_ms", "virtual_ms", "mops_wall",
+        "leaked", "arena_banked", "arena_reused",
+    ]);
+    for backend in ExecKind::ALL {
+        let r = run_service_live_on(&cfg, live_ops, backend);
+        if r.kind_counts() != des.kind_counts() {
+            bail!(
+                "op-count conservation violated: {} backend drew {:?} (get/put/del/scan), \
+                 the DES drew {:?}",
+                backend.label(),
+                r.kind_counts(),
+                des.kind_counts()
+            );
+        }
+        if r.leaked != 0 {
+            bail!("{} backend leaked {} objects after clear()", backend.label(), r.leaked);
+        }
+        let ms = |ns: u64| format!("{:.2}", ns as f64 / 1e6);
+        t.row(&[
+            r.backend.label().into(),
+            r.total_ops.to_string(),
+            r.ops_of(OpKind::Get).to_string(),
+            r.ops_of(OpKind::Put).to_string(),
+            r.ops_of(OpKind::Del).to_string(),
+            r.ops_of(OpKind::Scan).to_string(),
+            ms(r.wall_ns),
+            ms(r.virtual_ns),
+            format!("{:.2}", r.throughput_mops),
+            r.leaked.to_string(),
+            r.arena_banked.to_string(),
+            r.arena_reused.to_string(),
+        ]);
+    }
+    Ok(t)
 }
 
 /// Strictly parse a numeric `check` knob: absent → default, present but
@@ -1592,6 +1676,32 @@ mod tests {
     #[test]
     fn bench_unknown_fig_errors() {
         assert!(run_cli(&argv("bench fig99")).is_err());
+    }
+
+    #[test]
+    fn bench_service_threads_backend_runs_conservation_checked() {
+        // End-to-end: live runs on both backends, per-kind op counts
+        // asserted against the DES inside `bench_service_live`.
+        run_cli(&argv("bench service --quick --backend threads")).unwrap();
+    }
+
+    #[test]
+    fn bench_backend_rejected_off_the_service_scenario() {
+        assert!(run_cli(&argv("bench fig9 --quick --backend threads")).is_err());
+        assert!(run_cli(&argv("bench fig9 --quick --backend des")).is_err());
+    }
+
+    #[test]
+    fn bench_unknown_backend_is_a_hard_error() {
+        assert!(run_cli(&argv("bench service --quick --backend fibers")).is_err());
+    }
+
+    #[test]
+    fn bench_backend_threads_refuses_trace_out() {
+        assert!(run_cli(&argv(
+            "bench service --quick --backend threads --trace-out target/never-written.jsonl"
+        ))
+        .is_err());
     }
 
     #[test]

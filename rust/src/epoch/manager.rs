@@ -74,9 +74,9 @@ use crate::obs::{Event, INFRA_TASK};
 use crate::pgas::aggregation::{charge_batch, default_capacity, AggBuffer};
 use crate::pgas::{here, Aggregator, ErasedPtr, GlobalPtr, LocaleId, NicOp, Pgas, Privatized};
 use crate::runtime::SharedReclaimScan;
-use once_cell::sync::OnceCell;
 use std::ptr::NonNull;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
 use std::sync::{Arc, Mutex};
 
 /// Number of rotating epochs/limbo lists (paper: e-1, e, e+1).
@@ -245,7 +245,7 @@ struct EmShared {
     /// population fits its shape), the quiescence scan runs as one bulk
     /// GET per locale + a fused XLA reduction instead of per-token
     /// atomic reads. See `runtime::reclaim_scan`.
-    scanner: OnceCell<SharedReclaimScan>,
+    scanner: OnceLock<SharedReclaimScan>,
 }
 
 impl Drop for EmShared {
@@ -323,7 +323,7 @@ impl EpochManager {
                     LocaleInstance::new(loc, machine.locales, agg_capacity)
                 }),
                 stats: ManagerStats::default(),
-                scanner: OnceCell::new(),
+                scanner: OnceLock::new(),
             }),
         }
     }
@@ -573,7 +573,7 @@ impl EpochManager {
         let (mut freed, mut remote) = (0usize, 0usize);
         for loc in machine.locale_ids() {
             let inst = sh.inst.on_locale(loc);
-            let (f, r) = sh.pgas.on(loc, || self.drain_and_scatter(inst, reclaim_idx));
+            let (f, r) = sh.pgas.on_am(loc, || self.drain_and_scatter(inst, reclaim_idx));
             freed += f;
             remote += r;
         }
@@ -592,14 +592,14 @@ impl EpochManager {
         match sh.hier_group {
             None => {
                 for loc in machine.locale_ids() {
-                    sh.pgas.on(loc, || publish(loc));
+                    sh.pgas.on_am(loc, || publish(loc));
                 }
             }
             Some(g) => {
                 for leader in self.group_leaders(g) {
-                    sh.pgas.on(leader, || {
+                    sh.pgas.on_am(leader, || {
                         for member in self.group_members(leader, g) {
-                            sh.pgas.on(member, || publish(member));
+                            sh.pgas.on_am(member, || publish(member));
                         }
                     });
                 }
@@ -623,7 +623,7 @@ impl EpochManager {
             if sh.inst.on_locale(loc).defer_agg.lock().unwrap().is_empty() {
                 continue;
             }
-            migrated += sh.pgas.on(loc, || {
+            migrated += sh.pgas.on_am(loc, || {
                 let batches = sh.inst.on_locale(loc).defer_agg.lock().unwrap().take_all();
                 let mut n = 0usize;
                 for (dst, batch) in batches {
@@ -663,7 +663,7 @@ impl EpochManager {
                 },
             );
         }
-        sh.pgas.on(dst, || {
+        sh.pgas.on_am(dst, || {
             let di = sh.inst.on_locale(dst);
             for d in batch {
                 // One wait-free push per entry, local to the destination.
@@ -756,7 +756,7 @@ impl EpochManager {
         match sh.hier_group {
             None => {
                 for loc in machine.locale_ids() {
-                    if !sh.pgas.on(loc, || scan_locale(loc)) {
+                    if !sh.pgas.on_am(loc, || scan_locale(loc)) {
                         return false;
                     }
                 }
@@ -767,9 +767,9 @@ impl EpochManager {
                 // intra-group `on`s land on the leader's neighbours, not
                 // on the elected locale or `global_home`.
                 for leader in self.group_leaders(g) {
-                    let safe = sh.pgas.on(leader, || {
+                    let safe = sh.pgas.on_am(leader, || {
                         for member in self.group_members(leader, g) {
-                            if !sh.pgas.on(member, || scan_locale(member)) {
+                            if !sh.pgas.on_am(member, || scan_locale(member)) {
                                 return false;
                             }
                         }
@@ -828,7 +828,7 @@ impl EpochManager {
         self.flush_deferred();
         let (mut freed, mut remote) = (0usize, 0usize);
         for loc in sh.pgas.machine().locale_ids() {
-            let (f, r) = sh.pgas.on(loc, || {
+            let (f, r) = sh.pgas.on_am(loc, || {
                 let inst = sh.inst.on_locale(loc);
                 let (mut n, mut rem) = (0, 0);
                 for idx in 0..NUM_EPOCHS as usize {

@@ -87,7 +87,7 @@ pub const DEFAULT_AGG_CAPACITY: usize = 1024;
 /// else [`DEFAULT_AGG_CAPACITY`]. Read once per process — aggregators are
 /// constructed on hot batched paths.
 pub fn default_capacity() -> usize {
-    static CONFIGURED: once_cell::sync::Lazy<usize> = once_cell::sync::Lazy::new(|| {
+    static CONFIGURED: std::sync::LazyLock<usize> = std::sync::LazyLock::new(|| {
         std::env::var("PGAS_NB_AGG_CAPACITY")
             .ok()
             .and_then(|v| v.parse::<usize>().ok())

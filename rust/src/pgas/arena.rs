@@ -1,0 +1,147 @@
+//! Per-locale heap arenas for the threads-as-locales backend.
+//!
+//! Under [`super::exec::ExecKind::Threads`] each locale owns an arena of
+//! recycled allocation blocks: a reclaimed object's destructor runs, but
+//! its memory stays with the owning locale and is handed to the next
+//! same-layout allocation there instead of going back to the host
+//! allocator. This is the PGAS ownership story made physical — a block
+//! never migrates between locales — and it shortcuts the
+//! malloc/free round trip on the epoch-reclamation hot path, where nodes
+//! of a handful of layouts churn constantly.
+//!
+//! Bins are keyed by the *exact* `(size, align)` of the erased allocation
+//! ([`super::heap::ErasedPtr`] carries the layout), so a recycled block is
+//! always layout-correct for the allocation it serves. ZSTs own no block
+//! and are never recycled. Each bin is capped so a burst of frees cannot
+//! pin unbounded memory; overflow falls through to the real deallocator.
+
+use super::topology::LocaleId;
+use std::alloc::Layout;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Retained blocks per `(size, align)` bin per locale. Beyond this, frees
+/// go to the host allocator.
+const MAX_PER_BIN: usize = 4096;
+
+/// One recycle arena per locale. Thread-safe: any task or progress thread
+/// may allocate from / free to any locale's arena (remote frees are
+/// scattered home by the epoch plane before they get here, so in practice
+/// traffic is locale-local).
+pub(crate) struct LocaleArenas {
+    bins: Vec<Mutex<HashMap<(u32, u32), Vec<u64>>>>,
+    recycled: AtomicU64,
+    reused: AtomicU64,
+}
+
+impl LocaleArenas {
+    pub fn new(locales: usize) -> LocaleArenas {
+        LocaleArenas {
+            bins: (0..locales).map(|_| Mutex::new(HashMap::new())).collect(),
+            recycled: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+        }
+    }
+
+    /// Take a recycled block of exactly `(size, align)` from `loc`'s
+    /// arena, if one is banked. The returned address is uninitialized
+    /// memory owned by the caller.
+    pub fn take(&self, loc: LocaleId, size: u32, align: u32) -> Option<u64> {
+        if size == 0 {
+            return None;
+        }
+        let addr =
+            self.bins[loc.index()].lock().unwrap().get_mut(&(size, align)).and_then(Vec::pop);
+        if addr.is_some() {
+            self.reused.fetch_add(1, Ordering::Relaxed);
+        }
+        addr
+    }
+
+    /// Bank an uninitialized block (destructor already run) in `loc`'s
+    /// arena. Returns false — caller must deallocate — when the bin is
+    /// full or the block is zero-sized.
+    pub fn recycle(&self, loc: LocaleId, addr: u64, size: u32, align: u32) -> bool {
+        if size == 0 {
+            return false;
+        }
+        let mut bins = self.bins[loc.index()].lock().unwrap();
+        let bin = bins.entry((size, align)).or_default();
+        if bin.len() >= MAX_PER_BIN {
+            return false;
+        }
+        bin.push(addr);
+        self.recycled.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// (blocks banked, banked blocks reused) so far — diagnostics.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.recycled.load(Ordering::Relaxed), self.reused.load(Ordering::Relaxed))
+    }
+}
+
+impl Drop for LocaleArenas {
+    /// Return every banked block to the host allocator.
+    fn drop(&mut self) {
+        for bins in &mut self.bins {
+            for ((size, align), addrs) in bins.get_mut().unwrap().drain() {
+                for addr in addrs {
+                    unsafe {
+                        std::alloc::dealloc(
+                            addr as *mut u8,
+                            Layout::from_size_align_unchecked(size as usize, align as usize),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_from_empty_is_none() {
+        let a = LocaleArenas::new(2);
+        assert_eq!(a.take(LocaleId(0), 8, 8), None);
+        assert_eq!(a.stats(), (0, 0));
+    }
+
+    #[test]
+    fn recycle_then_take_round_trips_exact_layout() {
+        let a = LocaleArenas::new(2);
+        let addr = crate::pgas::heap::raw_alloc(7u64);
+        assert!(a.recycle(LocaleId(1), addr, 8, 8));
+        // A different layout must not see the block.
+        assert_eq!(a.take(LocaleId(1), 16, 8), None);
+        // A different locale must not see the block.
+        assert_eq!(a.take(LocaleId(0), 8, 8), None);
+        assert_eq!(a.take(LocaleId(1), 8, 8), Some(addr));
+        assert_eq!(a.stats(), (1, 1));
+        unsafe {
+            std::alloc::dealloc(addr as *mut u8, Layout::from_size_align(8, 8).unwrap());
+        }
+    }
+
+    #[test]
+    fn zero_sized_blocks_are_refused() {
+        let a = LocaleArenas::new(1);
+        assert!(!a.recycle(LocaleId(0), 0x10, 0, 1));
+        assert_eq!(a.take(LocaleId(0), 0, 1), None);
+    }
+
+    #[test]
+    fn drop_returns_banked_blocks() {
+        // Exercised for leak detection (miri/asan would flag a lost
+        // block): bank a real allocation and let the arena drop it.
+        let a = LocaleArenas::new(1);
+        let addr = crate::pgas::heap::raw_alloc(3u32);
+        // Destructor of a u32 is trivial; the block is bank-ready as-is.
+        assert!(a.recycle(LocaleId(0), addr, 4, 4));
+        drop(a);
+    }
+}

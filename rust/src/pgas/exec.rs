@@ -1,0 +1,289 @@
+//! Execution backends: how an `on`-statement's body actually runs.
+//!
+//! The substrate has always charged modeled costs (`virtual_ns`) for every
+//! remote operation; what differed across PRs was *where the body
+//! executes*. This module makes that an explicit, swappable backend behind
+//! [`crate::pgas::Pgas`]:
+//!
+//! * [`ExecKind::Des`] / [`InlineExec`] — the deterministic default. The
+//!   issuing task's OS thread temporarily adopts the target locale's
+//!   context and runs the body inline. Bit-identical to every committed
+//!   baseline; the PR 3 linearizability checker and the DES testbed
+//!   depend on this determinism.
+//! * [`ExecKind::Threads`] / [`ThreadsExec`] — threads-as-locales. Each
+//!   locale owns a progress OS thread; an AM to a remote locale is a real
+//!   MPSC handoff to that locale's thread, which executes the body in its
+//!   own context while the issuer blocks for the reply (the synchronous
+//!   `on`-statement contract). Remote operations still go through the
+//!   same `NicModel`/fabric charging path, so modeled `virtual_ns` and
+//!   measured `wall_ns` are reported side by side.
+//!
+//! ## Deadlock freedom (threads backend)
+//!
+//! Two fast paths run an AM inline on the current thread instead of
+//! handing it off: delivery to the locale the thread already represents,
+//! and any AM issued *from inside an AM handler*. The second is the load-
+//! bearing one: the epoch plane's migration and hierarchical advance paths
+//! issue depth-2 `on` chains (elected locale → group leader → member).
+//! With nested AMs inlined on the borrowed progress thread, no progress
+//! thread ever blocks on another progress thread, so the wait graph is
+//! worker → (at most one) progress thread and cannot cycle. This mirrors
+//! GASNet's shared-memory "fast AM" path, where a handler executes
+//! directly in the target segment when it is mapped locally.
+
+use super::task::{here, with_locale};
+use super::topology::LocaleId;
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+/// Which execution backend a [`crate::pgas::Pgas`] instance runs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum ExecKind {
+    /// Deterministic inline execution (the discrete-event default).
+    Des,
+    /// Threads-as-locales: one progress OS thread per locale, AMs are an
+    /// MPSC handoff.
+    Threads,
+}
+
+impl ExecKind {
+    pub const ALL: [ExecKind; 2] = [ExecKind::Des, ExecKind::Threads];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ExecKind::Des => "des",
+            ExecKind::Threads => "threads",
+        }
+    }
+
+    /// Parse a CLI `--backend` value.
+    pub fn parse(s: &str) -> Option<ExecKind> {
+        match s {
+            "des" => Some(ExecKind::Des),
+            "threads" => Some(ExecKind::Threads),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ExecKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// The backend contract: execute an erased AM body with the locale
+/// context set to `loc`, completing before return (the synchronous
+/// `on`-statement). Object-safe so `Pgas` can hold `Box<dyn Execution>`.
+pub(crate) trait Execution: Send + Sync {
+    fn kind(&self) -> ExecKind;
+
+    /// Run `body` at `loc`. A panic inside the body resurfaces on the
+    /// calling thread on both backends.
+    fn run_am(&self, loc: LocaleId, body: &mut (dyn FnMut() + Send));
+}
+
+/// The DES backend: the body runs inline on the issuing thread with the
+/// locale context switched — exactly the pre-backend behaviour.
+pub(crate) struct InlineExec;
+
+impl Execution for InlineExec {
+    fn kind(&self) -> ExecKind {
+        ExecKind::Des
+    }
+
+    fn run_am(&self, loc: LocaleId, body: &mut (dyn FnMut() + Send)) {
+        with_locale(loc, || body());
+    }
+}
+
+thread_local! {
+    /// True on a thread while it executes AM handler bodies (the progress
+    /// threads set it for their lifetime). Nested AMs issued under it run
+    /// inline — see the module docs on deadlock freedom.
+    static IN_AM_HANDLER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// One handed-off AM: an erased pointer to the caller's stack-borrowed
+/// body plus the reply channel. Sound to send because the issuer blocks
+/// on `done` until the handler finishes, so the borrow outlives the use,
+/// and the underlying closure is `Send`.
+struct Job {
+    body: *mut (dyn FnMut() + Send),
+    done: Sender<std::thread::Result<()>>,
+}
+
+unsafe impl Send for Job {}
+
+/// Threads-as-locales: one progress thread per locale, owning that
+/// locale's context for its lifetime, draining an MPSC queue of AMs.
+pub(crate) struct ThreadsExec {
+    /// One sender per locale; drained (closing the channels) on drop.
+    txs: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadsExec {
+    pub fn new(locales: usize) -> ThreadsExec {
+        assert!(locales >= 1 && locales <= u16::MAX as usize);
+        let mut txs = Vec::with_capacity(locales);
+        let mut handles = Vec::with_capacity(locales);
+        for loc in 0..locales {
+            let (tx, rx) = channel::<Job>();
+            let handle = std::thread::Builder::new()
+                .name(format!("locale-{loc}"))
+                .spawn(move || {
+                    with_locale(LocaleId(loc as u16), || {
+                        IN_AM_HANDLER.set(true);
+                        for job in rx.iter() {
+                            // Catch so one panicking AM body kills neither
+                            // the locale thread nor unrelated callers; the
+                            // issuer rethrows it on its own thread.
+                            let r = catch_unwind(AssertUnwindSafe(|| unsafe { (*job.body)() }));
+                            let _ = job.done.send(r);
+                        }
+                    });
+                })
+                .expect("spawn locale progress thread");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        ThreadsExec { txs, handles }
+    }
+}
+
+impl Execution for ThreadsExec {
+    fn kind(&self) -> ExecKind {
+        ExecKind::Threads
+    }
+
+    fn run_am(&self, loc: LocaleId, body: &mut (dyn FnMut() + Send)) {
+        // Fast paths (shared-memory AM): delivery to the current locale,
+        // or a nested AM issued from inside a handler, runs inline on the
+        // borrowed thread. The latter keeps the wait graph acyclic.
+        if loc == here() || IN_AM_HANDLER.get() {
+            with_locale(loc, || body());
+            return;
+        }
+        let (done_tx, done_rx) = channel();
+        let job = Job { body: body as *mut _, done: done_tx };
+        self.txs[loc.index()].send(job).expect("locale progress thread exited");
+        match done_rx.recv().expect("locale progress thread dropped an AM") {
+            Ok(()) => {}
+            Err(panic) => resume_unwind(panic),
+        }
+    }
+}
+
+impl Drop for ThreadsExec {
+    fn drop(&mut self) {
+        // Closing every sender ends each progress thread's receive loop.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn exec_kind_labels_round_trip() {
+        for k in ExecKind::ALL {
+            assert_eq!(ExecKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(ExecKind::parse("qthreads"), None);
+    }
+
+    #[test]
+    fn inline_exec_switches_locale_context() {
+        let e = InlineExec;
+        let mut seen = LocaleId(0);
+        e.run_am(LocaleId(3), &mut || seen = here());
+        assert_eq!(seen, LocaleId(3));
+        assert_eq!(here(), LocaleId(0));
+    }
+
+    #[test]
+    fn threads_exec_runs_body_on_target_locale_thread() {
+        let e = ThreadsExec::new(4);
+        let seen = AtomicU64::new(u64::MAX);
+        e.run_am(LocaleId(2), &mut || {
+            seen.store(here().index() as u64, Ordering::SeqCst);
+        });
+        assert_eq!(seen.load(Ordering::SeqCst), 2);
+        // The issuer's own context is untouched.
+        assert_eq!(here(), LocaleId(0));
+    }
+
+    #[test]
+    fn threads_exec_local_delivery_is_inline() {
+        let e = ThreadsExec::new(2);
+        let issuer = std::thread::current().id();
+        let mut same_thread = false;
+        e.run_am(LocaleId(0), &mut || {
+            same_thread = std::thread::current().id() == issuer;
+        });
+        assert!(same_thread, "local delivery must not cross threads");
+    }
+
+    #[test]
+    fn threads_exec_nested_am_runs_inline_on_handler() {
+        // The epoch plane's depth-2 pattern: AM to locale 1 whose body
+        // issues an AM to locale 2. The nested body must run on locale
+        // 1's borrowed thread (context 2), not deadlock on a handoff.
+        let e = ThreadsExec::new(3);
+        let nested_ctx = AtomicU64::new(u64::MAX);
+        e.run_am(LocaleId(1), &mut || {
+            let inner_issuer = std::thread::current().id();
+            let mut inline = false;
+            e.run_am(LocaleId(2), &mut || {
+                inline = std::thread::current().id() == inner_issuer;
+                nested_ctx.store(here().index() as u64, Ordering::SeqCst);
+            });
+            assert!(inline, "nested AM must run inline on the handler thread");
+        });
+        assert_eq!(nested_ctx.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn threads_exec_propagates_panics_and_survives() {
+        let e = ThreadsExec::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            e.run_am(LocaleId(1), &mut || panic!("am body exploded"));
+        }));
+        assert!(caught.is_err(), "handler panic must resurface at the issuer");
+        // The progress thread survived the panic and keeps serving.
+        let ok = AtomicU64::new(0);
+        e.run_am(LocaleId(1), &mut || {
+            ok.store(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn threads_exec_serves_concurrent_issuers() {
+        let e = ThreadsExec::new(4);
+        let hits = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let e = &e;
+                let hits = &hits;
+                s.spawn(move || {
+                    for i in 0..50u64 {
+                        let dst = LocaleId((1 + (t + i) % 3) as u16);
+                        e.run_am(dst, &mut || {
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 8 * 50);
+    }
+}

@@ -98,21 +98,38 @@ impl<T> GlobalPtr<T> {
     }
 
     /// Type-erase for the limbo lists: keeps the wide pointer plus a
-    /// monomorphized dropper so reclamation can free without knowing `T`.
+    /// monomorphized destructor *and the allocation's layout*, so
+    /// reclamation can free — or hand the block to a locale arena for
+    /// reuse — without knowing `T`.
     pub fn erase(self) -> ErasedPtr {
         unsafe fn drop_impl<T>(addr: u64) {
-            drop(unsafe { Box::from_raw(addr as *mut T) });
+            unsafe { std::ptr::drop_in_place(addr as *mut T) };
         }
-        ErasedPtr { wide: self.wide, dropper: drop_impl::<T> }
+        assert!(
+            std::mem::size_of::<T>() <= u32::MAX as usize,
+            "global allocations larger than 4 GiB are not erasable"
+        );
+        ErasedPtr {
+            wide: self.wide,
+            drop_only: drop_impl::<T>,
+            size: std::mem::size_of::<T>() as u32,
+            align: std::mem::align_of::<T>() as u32,
+        }
     }
 }
 
-/// A type-erased global pointer with its destructor; what limbo lists and
-/// scatter lists carry.
+/// A type-erased global pointer with its destructor and allocation layout;
+/// what limbo lists and scatter lists carry. Destructor and deallocation
+/// are split so the threads backend's per-locale arenas can run the
+/// destructor, keep the block, and hand it to the next same-layout
+/// allocation on that locale.
 #[derive(Copy, Clone)]
 pub struct ErasedPtr {
     pub wide: WidePtr,
-    dropper: unsafe fn(u64),
+    /// `ptr::drop_in_place::<T>` — destructor only, never deallocates.
+    drop_only: unsafe fn(u64),
+    size: u32,
+    align: u32,
 }
 
 unsafe impl Send for ErasedPtr {}
@@ -129,11 +146,39 @@ impl ErasedPtr {
         self.wide.locale
     }
 
-    /// Run the destructor. Safety: object live, not aliased, correct type
-    /// (guaranteed by construction via [`GlobalPtr::erase`]); must be
-    /// called at most once.
+    /// Allocation size in bytes (0 for ZSTs, which own no block).
+    pub(crate) fn size(&self) -> u32 {
+        self.size
+    }
+
+    pub(crate) fn align(&self) -> u32 {
+        self.align
+    }
+
+    /// Run the destructor and release the block — semantically identical
+    /// to dropping the original `Box<T>`. Safety: object live, not
+    /// aliased, correct type (guaranteed by construction via
+    /// [`GlobalPtr::erase`]); must be called at most once.
     pub unsafe fn drop_in_place(self) {
-        unsafe { (self.dropper)(self.wide.addr) }
+        unsafe {
+            (self.drop_only)(self.wide.addr);
+            if self.size > 0 {
+                std::alloc::dealloc(
+                    self.wide.addr as *mut u8,
+                    std::alloc::Layout::from_size_align_unchecked(
+                        self.size as usize,
+                        self.align as usize,
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Run only the destructor, leaving the block allocated so a locale
+    /// arena can recycle it. Safety: as [`Self::drop_in_place`], and the
+    /// caller takes ownership of the (now uninitialized) block.
+    pub(crate) unsafe fn drop_value_only(self) {
+        unsafe { (self.drop_only)(self.wide.addr) }
     }
 }
 
@@ -156,6 +201,13 @@ pub(crate) fn raw_alloc<T>(value: T) -> u64 {
     let addr = Box::into_raw(Box::new(value)) as u64;
     assert_eq!(addr & !ADDR_MASK, 0, "host allocation exceeds 48-bit address space");
     addr
+}
+
+/// Write `value` into a recycled block at `addr`. Safety: the block must
+/// be uninitialized (destructor already run), of `T`'s exact layout —
+/// guaranteed by the arena's exact-`(size, align)` bins.
+pub(crate) unsafe fn raw_write_at<T>(addr: u64, value: T) {
+    unsafe { std::ptr::write(addr as *mut T, value) };
 }
 
 #[cfg(test)]
@@ -204,6 +256,41 @@ mod tests {
         let p: GlobalPtr<u64> = GlobalPtr::from_wide(WidePtr::new(LocaleId(0), addr));
         assert_eq!(unsafe { *p.deref() }, 0xFEED);
         unsafe { p.erase().drop_in_place() };
+    }
+
+    #[test]
+    fn erase_splits_destructor_from_deallocation() {
+        let addr = raw_alloc(41u64);
+        let p: GlobalPtr<u64> = GlobalPtr::from_wide(WidePtr::new(LocaleId(1), addr));
+        let e = p.erase();
+        assert_eq!(e.size(), 8);
+        assert_eq!(e.align(), 8);
+        // Destructor-only leaves the block allocated: reuse it for a new
+        // value, then free it for real through the full path.
+        unsafe { e.drop_value_only() };
+        unsafe { raw_write_at(addr, 42u64) };
+        assert_eq!(unsafe { *p.deref() }, 42);
+        unsafe { p.erase().drop_in_place() };
+    }
+
+    #[test]
+    fn zero_sized_allocations_erase_and_drop() {
+        use std::sync::atomic::AtomicUsize;
+        static ZDROPS: AtomicUsize = AtomicUsize::new(0);
+        struct Z;
+        impl Drop for Z {
+            fn drop(&mut self) {
+                ZDROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        // A boxed ZST never allocates; the erased pointer records size 0
+        // and drop_in_place must run the destructor without deallocating.
+        let addr = raw_alloc(Z);
+        let p: GlobalPtr<Z> = GlobalPtr::from_wide(WidePtr::new(LocaleId(0), addr));
+        let e = p.erase();
+        assert_eq!(e.size(), 0);
+        unsafe { e.drop_in_place() };
+        assert_eq!(ZDROPS.load(Ordering::SeqCst), 1);
     }
 
     #[test]

@@ -10,6 +10,8 @@
 //! zero-cost crossbar reproduces the flat model exactly.
 
 pub mod aggregation;
+mod arena;
+pub mod exec;
 pub mod heap;
 pub mod nic;
 pub mod privatized;
@@ -18,6 +20,7 @@ pub mod topology;
 pub mod wide_ptr;
 
 pub use aggregation::{AggBuffer, Aggregator, FlushPolicy, PutAggregator, DEFAULT_AGG_CAPACITY};
+pub use exec::ExecKind;
 pub use heap::{ErasedPtr, GlobalPtr, HeapStats};
 pub use nic::{Fabric, Nic, NicModel, NicOp, NicSnapshot};
 pub use privatized::Privatized;
@@ -28,9 +31,8 @@ pub use wide_ptr::WidePtr;
 use crate::check::ReclaimAudit;
 use crate::fabric::{LinkStats, Network, Topology, TopologyKind};
 use crate::obs::{Event, Tracer, INFRA_TASK};
-use crossbeam_utils::CachePadded;
-use once_cell::sync::OnceCell;
-use std::sync::{Arc, Mutex};
+use crate::util::cache_pad::CachePadded;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// One PGAS "job": a machine shape, a NIC per locale, heap accounting per
 /// locale, an interconnect fabric, and the communication primitives.
@@ -50,11 +52,18 @@ pub struct Pgas {
     /// Optional reclamation auditor (the `check` subsystem's shadow
     /// lifecycle machine). Set-once; a lock-free `get` per alloc/free
     /// when attached, a single atomic load when not.
-    audit: OnceCell<Arc<dyn ReclaimAudit>>,
+    audit: OnceLock<Arc<dyn ReclaimAudit>>,
     /// Optional trace recorder ([`crate::obs`]). Set-once, same cost
     /// profile as `audit`: one atomic load per potential event when
     /// detached — no event is ever constructed untraced.
-    tracer: OnceCell<Arc<Tracer>>,
+    tracer: OnceLock<Arc<Tracer>>,
+    /// How AM bodies execute: inline (the DES default, deterministic) or
+    /// handed to per-locale progress threads ([`ExecKind::Threads`]).
+    exec: Box<dyn exec::Execution>,
+    /// Per-locale recycle arenas — threads backend only (`None` under
+    /// DES, where allocation behaviour must stay bit-identical to the
+    /// committed baselines).
+    arenas: Option<arena::LocaleArenas>,
 }
 
 impl Pgas {
@@ -68,6 +77,21 @@ impl Pgas {
     /// additionally record a route through `topo`, accruing per-link
     /// counters and per-NIC `transit_ns`.
     pub fn with_topology(machine: Machine, model: NicModel, topo: Arc<dyn Topology>) -> Arc<Pgas> {
+        Pgas::with_backend(machine, model, topo, ExecKind::Des)
+    }
+
+    /// Substrate with an explicit [execution backend](exec): `Des` runs AM
+    /// bodies inline (deterministic, the default everywhere), `Threads`
+    /// gives each locale a progress OS thread and its own heap arena —
+    /// AMs become real MPSC handoffs and `wall_ns` becomes meaningful,
+    /// while every remote operation still charges the same modeled
+    /// `virtual_ns` through the NIC/fabric path.
+    pub fn with_backend(
+        machine: Machine,
+        model: NicModel,
+        topo: Arc<dyn Topology>,
+        backend: ExecKind,
+    ) -> Arc<Pgas> {
         assert_eq!(
             topo.locales(),
             machine.locales,
@@ -75,6 +99,14 @@ impl Pgas {
             topo.locales(),
             machine.locales
         );
+        let exec: Box<dyn exec::Execution> = match backend {
+            ExecKind::Des => Box::new(exec::InlineExec),
+            ExecKind::Threads => Box::new(exec::ThreadsExec::new(machine.locales)),
+        };
+        let arenas = match backend {
+            ExecKind::Des => None,
+            ExecKind::Threads => Some(arena::LocaleArenas::new(machine.locales)),
+        };
         Arc::new(Pgas {
             machine,
             model,
@@ -82,9 +114,23 @@ impl Pgas {
             heaps: machine.locale_ids().map(|_| CachePadded::new(HeapStats::default())).collect(),
             net: Mutex::new(Network::new(Arc::clone(&topo))),
             topo,
-            audit: OnceCell::new(),
-            tracer: OnceCell::new(),
+            audit: OnceLock::new(),
+            tracer: OnceLock::new(),
+            exec,
+            arenas,
         })
+    }
+
+    /// The execution backend this job runs.
+    #[inline]
+    pub fn backend(&self) -> ExecKind {
+        self.exec.kind()
+    }
+
+    /// `(blocks banked, banked blocks reused)` by the locale arenas —
+    /// `(0, 0)` under the DES backend, which has none.
+    pub fn arena_stats(&self) -> (u64, u64) {
+        self.arenas.as_ref().map_or((0, 0), |a| a.stats())
     }
 
     /// Attach a reclamation auditor (once per job). Every subsequent
@@ -248,9 +294,23 @@ impl Pgas {
     }
 
     /// Allocate `value` on locale `loc` (Chapel `on loc { new unmanaged T }`).
+    /// Under the threads backend this first tries `loc`'s arena for a
+    /// recycled same-layout block, so reclamation feeds allocation without
+    /// a host malloc/free round trip.
     pub fn alloc<T>(&self, loc: LocaleId, value: T) -> GlobalPtr<T> {
         assert!(self.machine.contains(loc), "allocation on unknown locale");
-        let addr = heap::raw_alloc(value);
+        let recycled = self.arenas.as_ref().and_then(|a| {
+            let size = u32::try_from(std::mem::size_of::<T>()).ok()?;
+            let align = u32::try_from(std::mem::align_of::<T>()).ok()?;
+            a.take(loc, size, align)
+        });
+        let addr = match recycled {
+            Some(addr) => {
+                unsafe { heap::raw_write_at(addr, value) };
+                addr
+            }
+            None => heap::raw_alloc(value),
+        };
         self.heaps[loc.index()].allocs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let wide = WidePtr::new(loc, addr);
         if let Some(a) = self.audit.get() {
@@ -279,7 +339,27 @@ impl Pgas {
         if let Some(a) = self.audit.get() {
             a.on_free(e.wide);
         }
-        unsafe { e.drop_in_place() }
+        match &self.arenas {
+            // Threads backend: run the destructor, bank the block with
+            // the owning locale's arena for the next same-layout alloc.
+            Some(ar) => unsafe {
+                e.drop_value_only();
+                if !ar.recycle(e.locale(), e.wide.addr, e.size(), e.align()) {
+                    // Bin full (or ZST): release to the host allocator —
+                    // the destructor already ran, so raw-dealloc only.
+                    if e.size() > 0 {
+                        std::alloc::dealloc(
+                            e.wide.addr as *mut u8,
+                            std::alloc::Layout::from_size_align_unchecked(
+                                e.size() as usize,
+                                e.align() as usize,
+                            ),
+                        );
+                    }
+                }
+            },
+            None => unsafe { e.drop_in_place() },
+        }
     }
 
     /// One-sided GET of a `Copy` value.
@@ -294,10 +374,9 @@ impl Pgas {
         unsafe { std::ptr::write_volatile(dst.addr() as *mut T, value) }
     }
 
-    /// Execute `f` "on" locale `loc` (Chapel `on` statement / active
-    /// message): charged as an AM, run with the locale context switched —
-    /// the substrate analogue of the target's progress thread running it.
-    pub fn on<R>(&self, loc: LocaleId, f: impl FnOnce() -> R) -> R {
+    /// Charge and trace one AM toward `loc` (shared by [`Self::on`] and
+    /// [`Self::on_am`], so both backends account identically).
+    fn charge_am(&self, loc: LocaleId) {
         // `charge` also counts the arrival in the target's `ams_rx` (a
         // local `on` runs inline — no AM reaches a progress thread).
         self.charge(NicOp::ActiveMessage, loc);
@@ -314,7 +393,33 @@ impl Pgas {
                 tr.record_at(t, INFRA_TASK, dst, Event::AmDeliver { src });
             }
         }
+    }
+
+    /// Execute `f` "on" locale `loc` (Chapel `on` statement / active
+    /// message): charged as an AM, run inline with the locale context
+    /// switched — the shared-memory fast path, identical on both
+    /// backends. `Send` bodies that should reach the target's progress
+    /// thread under the threads backend use [`Self::on_am`].
+    pub fn on<R>(&self, loc: LocaleId, f: impl FnOnce() -> R) -> R {
+        self.charge_am(loc);
         with_locale(loc, f)
+    }
+
+    /// Execute `f` "on" locale `loc` through the execution backend:
+    /// charged and traced exactly like [`Self::on`], but under
+    /// [`ExecKind::Threads`] the body is handed to `loc`'s progress
+    /// thread over an MPSC channel and the issuer blocks for the reply
+    /// (the synchronous `on`-statement contract). Under [`ExecKind::Des`]
+    /// this is bit-identical to [`Self::on`]. The epoch plane routes all
+    /// of its migration/advance AMs through here.
+    pub fn on_am<R: Send>(&self, loc: LocaleId, f: impl FnOnce() -> R + Send) -> R {
+        self.charge_am(loc);
+        let mut f = Some(f);
+        let mut out = None;
+        self.exec.run_am(loc, &mut || {
+            out = Some((f.take().expect("AM body ran twice"))());
+        });
+        out.expect("AM body did not run")
     }
 
     /// Sum of all locales' NIC snapshots.
@@ -613,5 +718,129 @@ mod tests {
         let t = p.comm_totals();
         assert_eq!(t.aggregated_ops, 64);
         assert_eq!(t.flushes, 1);
+    }
+
+    fn pgas4_threads() -> Arc<Pgas> {
+        Pgas::with_backend(
+            Machine::new(4, 2),
+            NicModel::aries_no_network_atomics(),
+            TopologyKind::FlatZero.build(4),
+            ExecKind::Threads,
+        )
+    }
+
+    #[test]
+    fn default_backend_is_des_with_no_arena() {
+        let p = pgas4();
+        assert_eq!(p.backend(), ExecKind::Des);
+        assert_eq!(p.arena_stats(), (0, 0));
+        let g = p.alloc(LocaleId(1), 5u64);
+        unsafe { p.free(g) };
+        assert_eq!(p.arena_stats(), (0, 0), "DES never banks blocks");
+    }
+
+    #[test]
+    fn threads_backend_on_am_runs_in_target_context() {
+        let p = pgas4_threads();
+        assert_eq!(p.backend(), ExecKind::Threads);
+        assert_eq!(p.on_am(LocaleId(2), here), LocaleId(2));
+        assert_eq!(here(), LocaleId(0), "issuer context restored");
+    }
+
+    #[test]
+    fn threads_backend_charges_identically_to_des() {
+        // The modeled-cost plane is backend-independent: the same op
+        // sequence must produce the same virtual_ns / AM counters whether
+        // bodies run inline or on progress threads.
+        let issue = |p: &Arc<Pgas>| {
+            let g = p.alloc(LocaleId(3), 7u64);
+            p.get(g);
+            p.put(g, 9);
+            p.on_am(LocaleId(1), || ());
+            p.on_am(LocaleId(0), || ()); // local: no handoff, no ams_rx
+            p.charge(NicOp::Atomic64, LocaleId(2));
+            unsafe { p.free(g) };
+        };
+        let des = pgas4();
+        let thr = pgas4_threads();
+        issue(&des);
+        issue(&thr);
+        let (a, b) = (des.comm_totals(), thr.comm_totals());
+        assert_eq!(a.virtual_ns, b.virtual_ns);
+        assert_eq!(a.ams, b.ams);
+        assert_eq!(a.ams_rx, b.ams_rx);
+        assert_eq!(a.gets, b.gets);
+        assert_eq!(a.puts, b.puts);
+        assert_eq!(a.atomics_rdma, b.atomics_rdma);
+        assert_eq!(thr.live_objects(), 0);
+    }
+
+    #[test]
+    fn threads_backend_arena_recycles_same_layout_blocks() {
+        let p = pgas4_threads();
+        let g1 = p.alloc(LocaleId(2), 11u64);
+        let addr1 = g1.addr();
+        unsafe { p.free(g1) };
+        // The freed block is banked, and the next same-layout alloc on
+        // the same locale reuses it.
+        assert_eq!(p.arena_stats(), (1, 0));
+        let g2 = p.alloc(LocaleId(2), 13u64);
+        assert_eq!(g2.addr(), addr1, "same-layout alloc reuses the banked block");
+        assert_eq!(p.arena_stats(), (1, 1));
+        // A different locale allocates fresh.
+        let g3 = p.alloc(LocaleId(1), 17u64);
+        assert_ne!(g3.addr(), addr1);
+        assert_eq!(p.get(g2), 13);
+        unsafe { p.free(g2) };
+        unsafe { p.free(g3) };
+        assert_eq!(p.live_objects(), 0, "heap accounting survives recycling");
+    }
+
+    #[test]
+    fn threads_backend_arena_runs_destructors_on_recycle() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D(#[allow(dead_code)] u64);
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let p = pgas4_threads();
+        let g = p.alloc(LocaleId(1), D(1));
+        unsafe { p.free(g) };
+        assert_eq!(DROPS.load(Ordering::SeqCst), 1, "recycle still runs the destructor");
+        let g2 = p.alloc(LocaleId(1), D(2));
+        unsafe { p.free(g2) };
+        assert_eq!(DROPS.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn threads_backend_audit_sees_recycled_lifecycles() {
+        use crate::check::ReclaimAuditor;
+        // Address reuse is the hard case for the shadow lifecycle: the
+        // auditor must see free-then-alloc at the same address as two
+        // clean lifecycles, not a use-after-free.
+        let p = pgas4_threads();
+        let auditor = Arc::new(ReclaimAuditor::new());
+        assert!(p.set_audit(Arc::clone(&auditor) as Arc<dyn ReclaimAudit>));
+        let g1 = p.alloc(LocaleId(1), 5u64);
+        unsafe { p.free(g1) };
+        let g2 = p.alloc(LocaleId(1), 6u64);
+        unsafe { p.free(g2) };
+        let c = auditor.counts();
+        assert_eq!((c.allocs, c.frees), (2, 2));
+        assert!(auditor.ok());
+    }
+
+    #[test]
+    fn threads_backend_on_am_panic_propagates_to_issuer() {
+        let p = pgas4_threads();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.on_am(LocaleId(1), || panic!("remote body failed"));
+        }));
+        assert!(r.is_err());
+        // The locale thread survives and keeps serving AMs.
+        assert_eq!(p.on_am(LocaleId(1), || 41 + 1), 42);
     }
 }

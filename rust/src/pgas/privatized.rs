@@ -11,7 +11,7 @@
 
 use super::task::here;
 use super::topology::{LocaleId, Machine};
-use crossbeam_utils::CachePadded;
+use crate::util::cache_pad::CachePadded;
 use std::sync::Arc;
 
 /// A per-locale replicated instance table plus the record-wrapped handle

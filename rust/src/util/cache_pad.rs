@@ -1,0 +1,71 @@
+//! A minimal stand-in for `crossbeam_utils::CachePadded`, so the crate
+//! carries zero external dependencies (see README "Dependencies").
+//!
+//! 128-byte alignment covers the common cases: 64-byte lines with
+//! adjacent-line prefetchers (Intel spatial prefetcher pulls pairs) and
+//! the 128-byte lines on Apple silicon / POWER. Crossbeam picks the same
+//! figure on x86_64/aarch64.
+
+/// Pads and aligns `T` to 128 bytes so two neighboring values never share
+/// a cache line (no false sharing between per-locale NIC/heap counters).
+#[derive(Debug, Default)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> CachePadded<T> {
+        CachePadded { value }
+    }
+
+    /// Consume the padding wrapper, returning the inner value.
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> CachePadded<T> {
+        CachePadded::new(value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::CachePadded;
+
+    #[test]
+    fn padded_values_do_not_share_a_line() {
+        let pair = [CachePadded::new(0u64), CachePadded::new(1u64)];
+        assert!(std::mem::align_of::<CachePadded<u64>>() >= 128);
+        assert!(std::mem::size_of::<CachePadded<u64>>() >= 128);
+        let a = &pair[0] as *const _ as usize;
+        let b = &pair[1] as *const _ as usize;
+        assert!(b - a >= 128);
+    }
+
+    #[test]
+    fn deref_reaches_the_inner_value() {
+        let mut v = CachePadded::new(7u32);
+        assert_eq!(*v, 7);
+        *v = 9;
+        assert_eq!(v.into_inner(), 9);
+    }
+}

@@ -4,6 +4,7 @@
 //! `proptest`.
 
 pub mod bench;
+pub mod cache_pad;
 pub mod cli;
 pub mod error;
 pub mod proptest;

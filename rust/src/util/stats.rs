@@ -36,7 +36,11 @@ impl Summary {
         let mean = samples.iter().sum::<f64>() / n as f64;
         let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): a single NaN sample (e.g. a
+        // 0/0 throughput from a degenerate point) must not panic the whole
+        // report. NaNs sort above +inf under the IEEE total order, so they
+        // land at the top of the sorted slice and only perturb `max`.
+        sorted.sort_by(f64::total_cmp);
         Summary {
             n,
             mean,
@@ -86,7 +90,9 @@ impl LatencyHistogram {
         let idx = 63u32.saturating_sub(nanos.max(1).leading_zeros()) as usize;
         self.buckets[idx] += 1;
         self.count += 1;
-        self.sum += nanos;
+        // Saturating: two `record(u64::MAX)` calls must not wrap `sum` (the
+        // mean degrades toward the ceiling instead of going nonsensical).
+        self.sum = self.sum.saturating_add(nanos);
         self.max = self.max.max(nanos);
     }
 
@@ -95,7 +101,7 @@ impl LatencyHistogram {
             *a += b;
         }
         self.count += other.count;
-        self.sum += other.sum;
+        self.sum = self.sum.saturating_add(other.sum);
         self.max = self.max.max(other.max);
     }
 
@@ -215,6 +221,58 @@ mod tests {
         let mut h = LatencyHistogram::new();
         h.record(0);
         assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn summary_tolerates_nan_samples() {
+        // A NaN sample (0/0 throughput on a degenerate point) must not
+        // panic Summary::of. Under total_cmp NaN sorts above +inf, so the
+        // finite percentiles are untouched; only max picks it up.
+        let s = Summary::of(&[3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn histogram_record_zero_lands_in_bucket_zero() {
+        // Pin the lower edge: record(0) is clamped into bucket 0 (shared
+        // with 1 ns), counts once, adds nothing to the sum.
+        let mut h = LatencyHistogram::new();
+        h.record(0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(100.0), 0);
+        h.record(0);
+        h.record(1);
+        // 0 and 1 share bucket 0; max now nonzero so the percentile
+        // reports the bucket's upper bound.
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.percentile(50.0), 2);
+    }
+
+    #[test]
+    fn histogram_record_u64_max_saturates() {
+        // Pin the upper edge: u64::MAX lands in the top bucket, the
+        // percentile stays representable (1<<63), and a second record
+        // saturates the running sum instead of wrapping it.
+        let mut h = LatencyHistogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(h.percentile(99.9), 1u64 << 63);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum, u64::MAX);
+        assert!(h.mean() > 0.0);
+        // Merging a saturated histogram saturates too.
+        let mut other = LatencyHistogram::new();
+        other.record(u64::MAX);
+        h.merge(&other);
+        assert_eq!(h.sum, u64::MAX);
+        assert_eq!(h.count(), 3);
     }
 
     #[test]

@@ -3,17 +3,28 @@
 //! [`InterlockedHashTable`] + [`LockFreeList`] over the threaded PGAS
 //! runtime, with per-op **wall-clock** latency histograms.
 //!
-//! This is the "both the DES and the live substrate" half of ROADMAP
-//! item 3. Wall-clock numbers are interleaving-dependent, so — like the
-//! fig 8 aggregation bench — the live run is a reported artifact only;
-//! the committed `BENCH_service.json` baseline comes exclusively from
-//! the deterministic DES.
+//! The run is parameterized by the [execution backend](crate::pgas::exec):
+//! under [`ExecKind::Des`] AM bodies run inline (the historical
+//! behaviour), under [`ExecKind::Threads`] each locale owns a progress
+//! thread and a heap arena and the epoch plane's AMs are real MPSC
+//! handoffs. Either way every remote operation charges the same modeled
+//! cost, so the result reports modeled `virtual_ns` **and** measured
+//! `wall_ns` side by side.
+//!
+//! Wall-clock numbers are interleaving-dependent, so — like the fig 8
+//! aggregation bench — the live run is a reported artifact only; the
+//! committed `BENCH_service.json` baseline comes exclusively from the
+//! deterministic DES. What *is* schedule-independent is the logical op
+//! mix: task `g` on either substrate seeds its RNG identically and
+//! draws in the same order (kind, session rank, then — Social scans
+//! only — a fan-out), so per-kind op counts must match the DES run
+//! exactly. The fig 11 bench asserts that conservation.
 
-use super::service::{OpKind, ServiceConfig};
+use super::service::{OpKind, ServiceConfig, ServiceMix};
 use super::zipf::{scramble, Zipfian};
 use crate::collections::{InterlockedHashTable, LockFreeList};
 use crate::epoch::{EpochManager, ReclaimPolicy};
-use crate::pgas::{coforall_locales, coforall_tasks, Machine, Pgas};
+use crate::pgas::{coforall_locales, coforall_tasks, ExecKind, Machine, Pgas};
 use crate::util::rng::Xoshiro256pp;
 use crate::util::stats::LatencyHistogram;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -23,11 +34,21 @@ use std::time::Instant;
 /// Wall-clock outcome of one live service run.
 #[derive(Clone, Debug)]
 pub struct LiveServiceResult {
+    /// Which execution backend ran the job.
+    pub backend: ExecKind,
+    /// Measured wall-clock time of the op loop.
     pub wall_ns: u64,
+    /// Modeled time: the sum of every locale's NIC virtual clock — the
+    /// same quantity the DES reports, charged by the same model.
+    pub virtual_ns: u64,
     pub total_ops: u64,
     pub throughput_mops: f64,
     /// Leaked objects after the final `clear` (must be 0).
     pub leaked: i64,
+    /// `(blocks banked, banked blocks reused)` by the locale arenas —
+    /// nonzero only under the threads backend.
+    pub arena_banked: u64,
+    pub arena_reused: u64,
     /// Per-op wall latency by kind, indexed by [`OpKind::index`].
     pub by_kind: [LatencyHistogram; 4],
 }
@@ -36,17 +57,50 @@ impl LiveServiceResult {
     pub fn ops_of(&self, kind: OpKind) -> u64 {
         self.by_kind[kind.index()].count()
     }
+
+    /// Logical op counts by kind — the quantity conserved between a live
+    /// run and a DES run of the same `(seed, locales, tasks, ops)` shape.
+    pub fn kind_counts(&self) -> [u64; 4] {
+        [
+            self.by_kind[0].count(),
+            self.by_kind[1].count(),
+            self.by_kind[2].count(),
+            self.by_kind[3].count(),
+        ]
+    }
 }
 
-/// Drive the session-store mix against the real collections. Reuses the
-/// DES config for the mix/skew/population knobs; `ops_per_task` here is
-/// wall-clock work, so callers typically pass a much smaller count than
-/// the DES point (threads are real, virtual time is free).
+/// Drive the session-store mix against the real collections on the
+/// default (DES / inline) backend. See [`run_service_live_on`].
 pub fn run_service_live(cfg: &ServiceConfig, ops_per_task: usize) -> LiveServiceResult {
+    run_service_live_on(cfg, ops_per_task, ExecKind::Des)
+}
+
+/// Drive the session-store mix against the real collections on an
+/// explicit execution backend. Reuses the DES config for the
+/// mix/skew/population knobs; `ops_per_task` here is wall-clock work, so
+/// callers typically pass a much smaller count than the DES point
+/// (threads are real, virtual time is free).
+pub fn run_service_live_on(
+    cfg: &ServiceConfig,
+    ops_per_task: usize,
+    backend: ExecKind,
+) -> LiveServiceResult {
     cfg_assert(cfg);
     let machine = Machine::new(cfg.locales, cfg.tasks_per_locale);
-    let pgas = Pgas::with_topology(machine, cfg.model, cfg.topology.build(cfg.locales));
+    let pgas = Pgas::with_backend(machine, cfg.model, cfg.topology.build(cfg.locales), backend);
     let zipf = Arc::new(Zipfian::new(cfg.clients, cfg.skew));
+    // Social scans draw the scanned vertex's out-degree from the same
+    // power law as the DES — constructed identically so the RNG draw
+    // sequence (and therefore the op mix) matches draw for draw.
+    let fan = match cfg.mix {
+        ServiceMix::Session => None,
+        ServiceMix::Social => Some(Zipfian::new(
+            (cfg.scan_len as usize * super::service::SOCIAL_FANOUT_SPREAD).max(2),
+            super::service::SOCIAL_FANOUT_SKEW,
+        )),
+    };
+    let fan = Arc::new(fan);
     // Global started-op counter — drives the churn generation exactly
     // like the DES's `ops_started`.
     let started = Arc::new(AtomicU64::new(0));
@@ -96,6 +150,12 @@ pub fn run_service_live(cfg: &ServiceConfig, ops_per_task: usize) -> LiveService
                     };
                     let rank = zipf.sample(&mut rng) as u64;
                     let key = scramble(rank ^ (gen << 40));
+                    // Same gate as the DES `choose_op`: only a Social
+                    // scan consumes a fan draw.
+                    let fanout = match (fan.as_ref(), kind) {
+                        (Some(f), OpKind::Scan) => 1 + f.sample(&mut rng) as u64,
+                        _ => cfg.scan_len,
+                    };
                     let began = Instant::now();
                     match kind {
                         OpKind::Get => {
@@ -108,8 +168,9 @@ pub fn run_service_live(cfg: &ServiceConfig, ops_per_task: usize) -> LiveService
                             table.remove(&tok, key);
                         }
                         OpKind::Scan => {
-                            // Bounded walk over the session index.
-                            list.contains(&tok, 1 + key % cfg.scan_len.max(1));
+                            // Bounded walk over the session index; Social
+                            // fan-outs probe deeper into the window.
+                            list.contains(&tok, 1 + key % fanout.max(1).min(cfg.scan_len.max(1)));
                         }
                     }
                     hists[kind.index()].record(began.elapsed().as_nanos() as u64);
@@ -122,6 +183,8 @@ pub fn run_service_live(cfg: &ServiceConfig, ops_per_task: usize) -> LiveService
         });
     let wall_ns = t0.elapsed().as_nanos() as u64;
     let _ = em.clear();
+    let virtual_ns = pgas.comm_totals().virtual_ns;
+    let (arena_banked, arena_reused) = pgas.arena_stats();
 
     let mut by_kind = [
         LatencyHistogram::new(),
@@ -136,10 +199,14 @@ pub fn run_service_live(cfg: &ServiceConfig, ops_per_task: usize) -> LiveService
     }
     let total_ops: u64 = by_kind.iter().map(|h| h.count()).sum();
     LiveServiceResult {
+        backend,
         wall_ns,
+        virtual_ns,
         total_ops,
         throughput_mops: if wall_ns == 0 { 0.0 } else { total_ops as f64 * 1e3 / wall_ns as f64 },
         leaked: pgas.live_objects(),
+        arena_banked,
+        arena_reused,
         by_kind,
     }
 }
@@ -154,9 +221,8 @@ mod tests {
     use crate::fabric::TopologyKind;
     use crate::pgas::NicModel;
 
-    #[test]
-    fn live_service_smoke() {
-        let cfg = ServiceConfig {
+    fn smoke_cfg() -> ServiceConfig {
+        ServiceConfig {
             model: NicModel::aries_no_network_atomics(),
             locales: 2,
             tasks_per_locale: 2,
@@ -171,13 +237,55 @@ mod tests {
             reclaim_every: 32,
             buckets_per_locale: 16,
             topology: TopologyKind::FullyConnected,
-            mix: super::service::ServiceMix::Session,
+            mix: ServiceMix::Session,
             seed: 5,
-        };
-        let r = run_service_live(&cfg, 200);
+        }
+    }
+
+    #[test]
+    fn live_service_smoke() {
+        let r = run_service_live(&smoke_cfg(), 200);
+        assert_eq!(r.backend, ExecKind::Des);
         assert_eq!(r.total_ops, 2 * 2 * 200);
         assert_eq!(r.leaked, 0, "clear() must reclaim everything");
         assert!(r.ops_of(OpKind::Get) > r.total_ops / 2, "read-mostly mix");
         assert!(r.by_kind[OpKind::Get.index()].percentile(50.0) > 0);
+        assert!(r.virtual_ns > 0, "modeled cost accrues on the live path too");
+        assert_eq!((r.arena_banked, r.arena_reused), (0, 0), "no arena under DES");
+    }
+
+    #[test]
+    fn live_service_threads_backend_smoke() {
+        let r = run_service_live_on(&smoke_cfg(), 200, ExecKind::Threads);
+        assert_eq!(r.backend, ExecKind::Threads);
+        assert_eq!(r.total_ops, 2 * 2 * 200);
+        assert_eq!(r.leaked, 0, "clear() must reclaim everything");
+        assert!(r.virtual_ns > 0, "modeled virtual time alongside wall time");
+        assert!(r.wall_ns > 0);
+    }
+
+    #[test]
+    fn live_kind_counts_conserved_across_backends() {
+        // The op mix is drawn from per-task RNG streams seeded by (seed,
+        // g) and a kind draw that never depends on scheduling, so both
+        // backends — and the DES — must agree per kind, not just in total.
+        let cfg = smoke_cfg();
+        let a = run_service_live_on(&cfg, 150, ExecKind::Des);
+        let b = run_service_live_on(&cfg, 150, ExecKind::Threads);
+        assert_eq!(a.kind_counts(), b.kind_counts());
+        let des =
+            crate::workloads::run_service(ServiceConfig { ops_per_task: 150, ..cfg });
+        assert_eq!(a.kind_counts(), des.kind_counts(), "live vs DES conservation");
+    }
+
+    #[test]
+    fn live_social_mix_runs_and_conserves() {
+        let cfg = ServiceConfig { mix: ServiceMix::Social, ..smoke_cfg() };
+        let live = run_service_live_on(&cfg, 120, ExecKind::Threads);
+        assert_eq!(live.total_ops, 2 * 2 * 120);
+        assert_eq!(live.leaked, 0);
+        let des =
+            crate::workloads::run_service(ServiceConfig { ops_per_task: 120, ..cfg });
+        assert_eq!(live.kind_counts(), des.kind_counts(), "fan draws stay in lockstep");
     }
 }

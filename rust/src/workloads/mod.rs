@@ -10,15 +10,18 @@
 //!   layers). Emits the per-op-kind percentiles behind
 //!   `BENCH_service.json`.
 //! * [`live`] — the same session-store mix driven against the *real*
-//!   collections (`InterlockedHashTable` + `LockFreeList`) on the
-//!   threaded substrate: wall-clock per-op histograms, reported as a
-//!   bench artifact only (interleaving-dependent, never baselined).
+//!   collections (`InterlockedHashTable` + `LockFreeList`) on either
+//!   execution backend (`--backend des|threads`): wall-clock per-op
+//!   histograms next to the modeled `virtual_ns`, reported as a bench
+//!   artifact only (interleaving-dependent, never baselined) — but with
+//!   per-kind op counts that must match the DES exactly (the
+//!   conservation check).
 
 pub mod live;
 pub mod service;
 pub mod zipf;
 
-pub use live::{run_service_live, LiveServiceResult};
+pub use live::{run_service_live, run_service_live_on, LiveServiceResult};
 pub use service::{
     run_service, run_service_traced, OpKind, ServiceConfig, ServiceMix, ServiceResult,
 };

@@ -110,12 +110,12 @@ impl ServiceMix {
 /// Exponent of the social fan-out law. Out-degree distributions of real
 /// social graphs are power laws with exponents just above 1 (heavier
 /// than the 0.99 key skew), so the degree Zipfian uses a fixed 1.2.
-const SOCIAL_FANOUT_SKEW: f64 = 1.2;
+pub(crate) const SOCIAL_FANOUT_SKEW: f64 = 1.2;
 
 /// The social fan-out population is `scan_len * 64` possible degrees:
 /// `scan_len` keeps its meaning as the *typical* walk scale while the
 /// tail reaches 64x it for the rare super-node.
-const SOCIAL_FANOUT_SPREAD: usize = 64;
+pub(crate) const SOCIAL_FANOUT_SPREAD: usize = 64;
 
 /// Configuration of one service run. Like every DES config here, the
 /// result is a pure function of this struct (seed included).
@@ -191,6 +191,23 @@ pub struct ServiceResult {
     /// The same decomposition split by op kind, indexed by
     /// [`OpKind::index`]; `by_kind[i].count()` is that kind's op count.
     pub by_kind: [LatencyStats; 4],
+}
+
+impl ServiceResult {
+    /// Logical op counts by kind. The mix is drawn from per-task RNG
+    /// streams whose seeding and draw order the live runner mirrors
+    /// exactly, so for the same `(seed, locales, tasks, ops_per_task)`
+    /// these must equal [`super::LiveServiceResult::kind_counts`] on
+    /// either backend — the conservation check fig 11 and the `backend`
+    /// CI job assert.
+    pub fn kind_counts(&self) -> [u64; 4] {
+        [
+            self.by_kind[0].count(),
+            self.by_kind[1].count(),
+            self.by_kind[2].count(),
+            self.by_kind[3].count(),
+        ]
+    }
 }
 
 struct SLoc {
